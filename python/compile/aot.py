@@ -1,0 +1,142 @@
+"""AOT compile path: lower every L2 program to HLO *text* + manifest.json.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file``, compiles on the PJRT CPU
+client, and executes.  Python never runs at train time.
+
+Why HLO text and not ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids; the image's xla_extension 0.5.1 rejects them
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_desc(args):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype.name)} for a in args]
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, args, meta: dict):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        self.entries.append(
+            {
+                "name": name,
+                "path": path,
+                "inputs": _io_desc(args),
+                "outputs": _io_desc(list(outs)),
+                "meta": meta,
+            }
+        )
+        print(f"  {name}: {len(text)} chars, {len(args)} inputs")
+
+    def finish(self):
+        manifest = {
+            "format": 1,
+            "jax_version": jax.__version__,
+            "programs": self.entries,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote {len(self.entries)} programs -> {self.out_dir}/manifest.json")
+
+
+# (N, D) shard shapes for grad/loss; (N, D, M) for inner epochs.
+# The small set is what rust integration tests use; the larger ones are the
+# cov-like dense production path of the examples/benches.
+GRAD_SHAPES = [(256, 64), (2048, 64), (1024, 256)]
+EPOCH_SHAPES = [(256, 64, 64), (2048, 64, 512)]
+STEP_SHAPES = [(256, 64), (2048, 64)]
+
+
+def build(out_dir: str) -> None:
+    b = Builder(out_dir)
+    for model in M.MODELS:
+        for (n, d) in GRAD_SHAPES:
+            x, y, w = spec((n, d)), spec((n,)), spec((d,))
+            b.emit(
+                f"shard_grad_{model}_{n}x{d}",
+                M.make_shard_grad(model),
+                (x, y, w),
+                {"kind": "shard_grad", "model": model, "n": n, "d": d},
+            )
+            b.emit(
+                f"shard_loss_{model}_{n}x{d}",
+                M.make_shard_loss(model),
+                (x, y, w),
+                {"kind": "shard_loss", "model": model, "n": n, "d": d},
+            )
+        for (n, d, m) in EPOCH_SHAPES:
+            x, y, w = spec((n, d)), spec((n,)), spec((d,))
+            u0, z, idx, scal = spec((d,)), spec((d,)), spec((m,), I32), spec((3,))
+            b.emit(
+                f"inner_epoch_{model}_{n}x{d}_m{m}",
+                M.make_inner_epoch(model, tile=d),
+                (x, y, w, u0, z, idx, scal),
+                {
+                    "kind": "inner_epoch",
+                    "model": model,
+                    "n": n,
+                    "d": d,
+                    "m_inner": m,
+                },
+            )
+        for (n, d) in STEP_SHAPES:
+            x, y, v = spec((n, d)), spec((n,)), spec((d,))
+            scal = spec((4,))
+            b.emit(
+                f"prox_full_step_{model}_{n}x{d}",
+                M.make_prox_full_step(model),
+                (x, y, v, scal),
+                {"kind": "prox_full_step", "model": model, "n": n, "d": d},
+            )
+    b.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

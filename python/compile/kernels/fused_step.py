@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused variance-reduced prox step (the inner-loop hot-spot).
+
+One pSCOPE inner iteration over the parameter vector::
+
+    v      = coeff * x + z                       # VR data gradient
+    u_next = soft_threshold((1 - eta*lam1) * u - eta * v,  eta * lam2)
+
+On the paper's CPU cluster this is the memory-bound core of Algorithm 1
+(three d-length streams in, one out, a handful of flops per element).  The
+TPU adaptation (DESIGN.md §3) tiles ``d`` into VMEM-resident blocks with a
+1-D grid; each block does one fused read->fma->shrink->write pass, so HBM
+traffic is exactly 4 streams and the schedule is expressed by the BlockSpec
+index map rather than threadblocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both testing and the
+AOT artifacts.  Real-TPU efficiency is *estimated* in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the parameter dimension.  8 KiB of f32 per input stream —
+# small enough that u/x/z tiles plus the output tile fit comfortably in a
+# 16 MiB VMEM with double buffering (4 streams * 2 buffers * 8 KiB << VMEM),
+# large enough to amortize grid overhead.  See EXPERIMENTS.md §Perf for the
+# sweep.
+TILE_D = 2048
+
+
+def _fused_step_kernel(u_ref, x_ref, z_ref, scal_ref, o_ref):
+    """Per-tile fused update.  scal_ref holds [coeff, eta, lam1, lam2]."""
+    coeff = scal_ref[0]
+    eta = scal_ref[1]
+    lam1 = scal_ref[2]
+    lam2 = scal_ref[3]
+    v = coeff * x_ref[...] + z_ref[...]
+    d = (1.0 - eta * lam1) * u_ref[...] - eta * v
+    thr = eta * lam2
+    o_ref[...] = jnp.sign(d) * jnp.maximum(jnp.abs(d) - thr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def fused_prox_step(u, x, z, coeff, eta, lam1, lam2, *, tile: int = TILE_D):
+    """Fused VR prox step via Pallas.  u, x, z: (d,) f32; scalars f32.
+
+    d must be a multiple of ``tile`` (the AOT path pads; tests exercise both
+    exact and padded shapes).
+    """
+    d = u.shape[0]
+    assert d % tile == 0, f"d={d} not a multiple of tile={tile}"
+    scal = jnp.stack(
+        [
+            jnp.asarray(coeff, jnp.float32),
+            jnp.asarray(eta, jnp.float32),
+            jnp.asarray(lam1, jnp.float32),
+            jnp.asarray(lam2, jnp.float32),
+        ]
+    )
+    grid = (d // tile,)
+    return pl.pallas_call(
+        _fused_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            # scalars: whole (4,) vector visible to every tile
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(u, x, z, scal)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for every Pallas kernel and for the L2 model programs.
+
+This is the correctness ground truth of the whole stack:
+
+* pytest checks each Pallas kernel (fused prox step, soft-threshold,
+  shard-gradient) against the functions here with ``assert_allclose``;
+* the rust engine is cross-checked against HLO artifacts lowered from the
+  L2 model, which itself is checked against these references;
+* hypothesis sweeps shapes / dtypes / regularization ranges.
+
+Conventions (shared with the rust side — see DESIGN.md §7):
+
+* The *data gradient* ``z = (1/n) sum_i h_i'(x_i . w) x_i`` carries **no**
+  regularization term.  The L2 penalty ``lam1`` enters each inner step as the
+  multiplicative decay ``(1 - eta*lam1) * u`` and the L1 penalty ``lam2``
+  through the proximal (soft-threshold) mapping.  This matches Algorithm 2
+  and Lemma 11 of the paper, and is what makes the lazy recovery rules exact.
+* Logistic loss: ``h(a; y) = log(1 + exp(-y a))`` with labels y in {-1, +1};
+  ``h'(a; y) = -y * sigmoid(-y a) = -y / (1 + exp(y a))``.
+* Lasso: ``h(a; y) = 0.5 * (a - y)^2``; ``h'(a; y) = a - y``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Element losses
+# ---------------------------------------------------------------------------
+
+def logistic_h(a, y):
+    """log(1 + exp(-y a)), numerically stable (softplus form)."""
+    return jnp.logaddexp(0.0, -y * a)
+
+
+def logistic_hprime(a, y):
+    """d/da log(1 + exp(-y a)) = -y * sigmoid(-y a)."""
+    return -y / (1.0 + jnp.exp(y * a))
+
+
+def lasso_h(a, y):
+    return 0.5 * (a - y) ** 2
+
+
+def lasso_hprime(a, y):
+    return a - y
+
+
+# ---------------------------------------------------------------------------
+# Proximal operator
+# ---------------------------------------------------------------------------
+
+def soft_threshold(v, thr):
+    """prox of thr*||.||_1: sign(v) * max(|v| - thr, 0)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - thr, 0.0)
+
+
+def fused_prox_step(u, x, z, coeff, eta, lam1, lam2):
+    """One pSCOPE inner step, fused (the L1 kernel's contract).
+
+    v = coeff * x + z          (variance-reduced data gradient)
+    u <- prox_{eta*lam2*||.||_1}((1 - eta*lam1) * u - eta * v)
+    """
+    d = (1.0 - eta * lam1) * u - eta * (coeff * x + z)
+    return soft_threshold(d, eta * lam2)
+
+
+# ---------------------------------------------------------------------------
+# Shard-level programs (the L2 model contracts)
+# ---------------------------------------------------------------------------
+
+def shard_grad_logistic(x_mat, y, w):
+    """sum_i h'(x_i . w; y_i) x_i over the shard (raw sum, no 1/n, no reg)."""
+    a = x_mat @ w
+    c = -y / (1.0 + jnp.exp(y * a))
+    return x_mat.T @ c
+
+
+def shard_grad_lasso(x_mat, y, w):
+    a = x_mat @ w
+    return x_mat.T @ (a - y)
+
+
+def shard_loss_logistic(x_mat, y, w):
+    a = x_mat @ w
+    return jnp.sum(jnp.logaddexp(0.0, -y * a))
+
+
+def shard_loss_lasso(x_mat, y, w):
+    a = x_mat @ w
+    return 0.5 * jnp.sum((a - y) ** 2)
+
+
+def inner_epoch(x_mat, y, w_t, z, idx, eta, lam1, lam2, model="logistic"):
+    """M prox-SVRG inner steps (python loop reference; L2 uses lax.scan).
+
+    x_mat: (N, D) dense shard; idx: (M,) int32 sampled rows; z: (D,) data
+    gradient at w_t (already averaged over the FULL dataset by the master).
+    Returns u_M.
+    """
+    hprime = {
+        "logistic": logistic_hprime,
+        "lasso": lasso_hprime,
+    }[model]
+    u = w_t
+    for m in range(int(idx.shape[0])):
+        i = idx[m]
+        x = x_mat[i]
+        coeff = hprime(x @ u, y[i]) - hprime(x @ w_t, y[i])
+        u = fused_prox_step(u, x, z, coeff, eta, lam1, lam2)
+    return u

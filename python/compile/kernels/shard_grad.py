@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled shard gradient  g = X^T c  (c = elementwise h').
+
+This is the epoch-start hot-spot of Algorithm 1: every worker computes
+``z_k = sum_{i in D_k} h'(x_i . w) x_i`` before the inner loop.  The
+reduction is expressed as a 2-D grid of (TILE_N x TILE_D) tile matmuls so a
+real TPU lowering drives the MXU ((1,TILE_N)@(TILE_N,TILE_D) per tile);
+the output d-tile is revisited across the n-grid dimension and accumulated
+in place (zero-initialized at the first n-tile via ``pl.when``), which is
+the Pallas idiom for an HBM->VMEM reduction schedule.
+
+The elementwise ``c = h'(a; y)`` is computed by the caller (L2 model):
+keeping the kernel loss-agnostic lets logistic and lasso share it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+TILE_D = 256
+
+
+def _shard_grad_kernel(x_ref, c_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (1, TILE_N) @ (TILE_N, TILE_D) -> (1, TILE_D); accumulate into o.
+    c_row = c_ref[...].reshape((1, -1))
+    o_ref[...] += jnp.dot(c_row, x_ref[...]).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_d"))
+def shard_grad(x_mat, c, *, tile_n: int = TILE_N, tile_d: int = TILE_D):
+    """g = X^T c via tiled Pallas reduction.  X: (N, D) f32, c: (N,) f32."""
+    n, d = x_mat.shape
+    assert n % tile_n == 0 and d % tile_d == 0, (n, d, tile_n, tile_d)
+    return pl.pallas_call(
+        _shard_grad_kernel,
+        grid=(n // tile_n, d // tile_d),
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_d), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_n,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(x_mat, c)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: blocked soft-threshold (proximal mapping of lam*||.||_1).
+
+Used by the master-side dense prox (baseline FISTA / pGD artifacts) and as
+the smallest self-contained Pallas example in the repo.  Same tiling scheme
+as fused_step.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 2048
+
+
+def _softthresh_kernel(v_ref, thr_ref, o_ref):
+    v = v_ref[...]
+    thr = thr_ref[0]
+    o_ref[...] = jnp.sign(v) * jnp.maximum(jnp.abs(v) - thr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def soft_threshold(v, thr, *, tile: int = TILE_D):
+    """Elementwise prox of thr*||.||_1 over a (d,) f32 vector via Pallas."""
+    d = v.shape[0]
+    assert d % tile == 0, f"d={d} not a multiple of tile={tile}"
+    thr_arr = jnp.asarray(thr, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _softthresh_kernel,
+        grid=(d // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(v, thr_arr)

@@ -1,0 +1,142 @@
+"""L2: JAX compute graphs for pSCOPE dense-shard workers.
+
+Three program families, each a jit-able pure function that calls the L1
+Pallas kernels (so they lower into the same HLO module):
+
+* ``make_shard_grad(model)``   — ``z_k = sum_i h'(x_i.w) x_i``  (Alg. 1 l.12)
+* ``make_shard_loss(model)``   — ``sum_i h(x_i.w; y_i)``        (objective)
+* ``make_inner_epoch(model)``  — M fused prox-SVRG steps via ``lax.scan``
+                                 (Alg. 1 l.14-18 / Alg. 2), sampled indices
+                                 passed in as an int32 tensor so the program
+                                 is shape-static and AOT-compilable.
+
+Shapes are static per artifact; ``aot.py`` lowers one HLO module per
+(model, N, D[, M]) combination and records them in the manifest.  The rust
+runtime (rust/src/runtime/) loads + compiles each once and executes them on
+the worker hot path; python never runs at train time.
+
+Regularization convention: see kernels/ref.py — ``z`` is the pure data
+gradient; lam1 enters via (1 - eta*lam1) decay, lam2 via the prox.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import fused_step, shard_grad as shard_grad_k
+
+MODELS = ("logistic", "lasso")
+
+
+def _hprime(model, a, y):
+    if model == "logistic":
+        return -y / (1.0 + jnp.exp(y * a))
+    if model == "lasso":
+        return a - y
+    raise ValueError(f"unknown model {model!r}")
+
+
+def _h(model, a, y):
+    if model == "logistic":
+        return jnp.logaddexp(0.0, -y * a)
+    if model == "lasso":
+        return 0.5 * (a - y) ** 2
+    raise ValueError(f"unknown model {model!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shard gradient / loss
+# ---------------------------------------------------------------------------
+
+def make_shard_grad(model: str, *, use_pallas: bool = True):
+    """Return f(X, y, w) -> (g,) with g = sum_i h'(x_i.w; y_i) x_i.
+
+    The raw sum (no 1/n, no regularization) — the master divides by the
+    global n and the regularization is applied inside the inner step, which
+    keeps this artifact reusable for any (lam1, lam2).
+    """
+
+    def f(x_mat, y, w):
+        a = x_mat @ w
+        c = _hprime(model, a, y)
+        if use_pallas and x_mat.shape[0] % shard_grad_k.TILE_N == 0 and \
+                x_mat.shape[1] % shard_grad_k.TILE_D == 0:
+            g = shard_grad_k.shard_grad(x_mat, c)
+        else:
+            g = x_mat.T @ c
+        return (g,)
+
+    return f
+
+
+def make_shard_loss(model: str):
+    """Return f(X, y, w) -> (loss_sum,) with loss_sum = sum_i h(x_i.w; y_i)."""
+
+    def f(x_mat, y, w):
+        a = x_mat @ w
+        return (jnp.sum(_h(model, a, y)),)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Inner epoch (the worker-side autonomous local learning of the CALL frame)
+# ---------------------------------------------------------------------------
+
+def make_inner_epoch(model: str, *, use_pallas: bool = True, tile: int | None = None):
+    """Return f(X, y, w_t, u0, z, idx, scal) -> (u_M,).
+
+    scal = [eta, lam1, lam2] as an f32[3] tensor (runtime-tunable without
+    recompiling).  idx: int32[M] sampled row indices.  ``u0`` is the inner
+    iterate the scan starts from — separate from the SVRG anchor ``w_t`` so
+    the rust runtime can chain several M-step artifact calls inside one
+    outer epoch (pass u0 = w_t for the first call, then the previous output).
+    The scan carries only ``u`` — X, y, w_t, z are closed over as scan
+    constants, so XLA keeps them resident and the per-step cost is two dot
+    products + the fused update.
+    """
+    kt = tile if tile is not None else fused_step.TILE_D
+
+    def f(x_mat, y, w_t, u0, z, idx, scal):
+        eta, lam1, lam2 = scal[0], scal[1], scal[2]
+        aw = x_mat @ w_t  # h'(x_i . w_t) terms are reused every step
+        cw = _hprime(model, aw, y)
+
+        def step(u, i):
+            x = x_mat[i]
+            coeff = _hprime(model, x @ u, y[i]) - cw[i]
+            if use_pallas and u.shape[0] % kt == 0:
+                u_next = fused_step.fused_prox_step(
+                    u, x, z, coeff, eta, lam1, lam2, tile=kt
+                )
+            else:
+                d = (1.0 - eta * lam1) * u - eta * (coeff * x + z)
+                u_next = jnp.sign(d) * jnp.maximum(jnp.abs(d) - eta * lam2, 0.0)
+            return u_next, None
+
+        u_m, _ = lax.scan(step, u0, idx)
+        return (u_m,)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Dense full-batch prox-gradient step (FISTA / pGD baseline building block)
+# ---------------------------------------------------------------------------
+
+def make_prox_full_step(model: str):
+    """Return f(X, y, v, scal) -> (w_next,): one proximal full-gradient step
+    from point v.  scal = [eta, lam1, lam2, inv_n].  Used by the distributed
+    FISTA baseline's dense path."""
+
+    def f(x_mat, y, v, scal):
+        eta, lam1, lam2, inv_n = scal[0], scal[1], scal[2], scal[3]
+        a = x_mat @ v
+        g = x_mat.T @ _hprime(model, a, y) * inv_n + lam1 * v
+        d = v - eta * g
+        w = jnp.sign(d) * jnp.maximum(jnp.abs(d) - eta * lam2, 0.0)
+        return (w,)
+
+    return f

@@ -1,0 +1,165 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+The core correctness signal of the compile path: every kernel must agree
+with ref.py to float32 rounding.  Hypothesis sweeps shapes and parameter
+ranges; fixed-seed cases pin the exact configurations used by the AOT
+artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_step, ref, shard_grad, softthresh
+
+RNG = np.random.default_rng(1234)
+
+
+def vec(d, scale=1.0, rng=RNG):
+    return jnp.asarray(rng.normal(size=d) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# soft-threshold
+# ---------------------------------------------------------------------------
+
+class TestSoftThreshold:
+    def test_matches_ref(self):
+        v = vec(4096)
+        got = softthresh.soft_threshold(v, 0.25)
+        want = ref.soft_threshold(v, 0.25)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_zero_threshold_is_identity(self):
+        v = vec(2048)
+        np.testing.assert_allclose(softthresh.soft_threshold(v, 0.0), v, rtol=0)
+
+    def test_large_threshold_kills_everything(self):
+        v = vec(2048)
+        out = np.asarray(softthresh.soft_threshold(v, 1e6))
+        assert np.all(out == 0.0)
+
+    def test_shrinks_toward_zero(self):
+        v = vec(2048)
+        out = np.asarray(softthresh.soft_threshold(v, 0.1))
+        assert np.all(np.abs(out) <= np.abs(np.asarray(v)) + 1e-7)
+        assert np.all(out * np.asarray(v) >= 0.0)  # never flips sign
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        dmul=st.integers(min_value=1, max_value=4),
+        thr=st.floats(min_value=0.0, max_value=2.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, dmul, thr, seed):
+        rng = np.random.default_rng(seed)
+        tile = 512
+        v = jnp.asarray(rng.normal(size=dmul * tile), jnp.float32)
+        got = softthresh.soft_threshold(v, thr, tile=tile)
+        want = ref.soft_threshold(v, thr)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused VR prox step
+# ---------------------------------------------------------------------------
+
+class TestFusedProxStep:
+    def test_matches_ref(self):
+        u, x, z = vec(4096), vec(4096), vec(4096, 0.01)
+        got = fused_step.fused_prox_step(u, x, z, 0.3, 0.05, 1e-2, 1e-2)
+        want = ref.fused_prox_step(u, x, z, 0.3, 0.05, 1e-2, 1e-2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+    def test_artifact_tile_64(self):
+        # the cov-like artifacts run with tile == d == 64
+        u, x, z = vec(64), vec(64), vec(64, 0.01)
+        got = fused_step.fused_prox_step(u, x, z, -0.7, 0.1, 1e-5, 1e-5, tile=64)
+        want = ref.fused_prox_step(u, x, z, -0.7, 0.1, 1e-5, 1e-5)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+    def test_zero_coeff_is_lazy_form(self):
+        # coeff == 0 must reduce to the Lemma-11 untouched-coordinate update:
+        # prox((1 - eta*lam1) u - eta z, eta*lam2)
+        u, x, z = vec(1024), vec(1024), vec(1024, 0.05)
+        eta, lam1, lam2 = 0.2, 1e-2, 5e-2
+        got = fused_step.fused_prox_step(u, x, z, 0.0, eta, lam1, lam2, tile=1024)
+        want = ref.soft_threshold((1 - eta * lam1) * u - eta * z, eta * lam2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+    def test_rejects_non_multiple_tile(self):
+        u = vec(100)
+        with pytest.raises(AssertionError):
+            fused_step.fused_prox_step(u, u, u, 0.0, 0.1, 0.0, 0.0, tile=64)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        dmul=st.integers(min_value=1, max_value=4),
+        coeff=st.floats(min_value=-3.0, max_value=3.0),
+        eta=st.floats(min_value=1e-4, max_value=1.0),
+        lam1=st.floats(min_value=0.0, max_value=0.5),
+        lam2=st.floats(min_value=0.0, max_value=0.5),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, dmul, coeff, eta, lam1, lam2, seed):
+        rng = np.random.default_rng(seed)
+        tile = 256
+        d = dmul * tile
+        u = jnp.asarray(rng.normal(size=d), jnp.float32)
+        x = jnp.asarray(rng.normal(size=d), jnp.float32)
+        z = jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32)
+        got = fused_step.fused_prox_step(u, x, z, coeff, eta, lam1, lam2, tile=tile)
+        want = ref.fused_prox_step(u, x, z, coeff, eta, lam1, lam2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tiled shard gradient
+# ---------------------------------------------------------------------------
+
+class TestShardGrad:
+    def test_matches_matmul(self):
+        X = jnp.asarray(RNG.normal(size=(512, 256)), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=512), jnp.float32)
+        got = shard_grad.shard_grad(X, c)
+        np.testing.assert_allclose(got, X.T @ c, rtol=2e-4, atol=2e-3)
+
+    def test_single_tile(self):
+        X = jnp.asarray(RNG.normal(size=(256, 256)), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=256), jnp.float32)
+        got = shard_grad.shard_grad(X, c)
+        np.testing.assert_allclose(got, X.T @ c, rtol=2e-4, atol=2e-3)
+
+    def test_accumulation_across_n_tiles(self):
+        # 4 n-tiles accumulate into the same d-tile; equality with the
+        # blocked numpy sum verifies the pl.when zero-init + += pattern.
+        tile_n, tile_d = 64, 64
+        X = jnp.asarray(RNG.normal(size=(4 * tile_n, tile_d)), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=4 * tile_n), jnp.float32)
+        got = shard_grad.shard_grad(X, c, tile_n=tile_n, tile_d=tile_d)
+        want = sum(
+            np.asarray(X[i * tile_n:(i + 1) * tile_n]).T
+            @ np.asarray(c[i * tile_n:(i + 1) * tile_n])
+            for i in range(4)
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+    def test_zero_c_gives_zero(self):
+        X = jnp.asarray(RNG.normal(size=(256, 256)), jnp.float32)
+        got = np.asarray(shard_grad.shard_grad(X, jnp.zeros(256, jnp.float32)))
+        assert np.all(got == 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        nmul=st.integers(min_value=1, max_value=4),
+        dmul=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, nmul, dmul, seed):
+        rng = np.random.default_rng(seed)
+        tn, td = 64, 64
+        X = jnp.asarray(rng.normal(size=(nmul * tn, dmul * td)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=nmul * tn), jnp.float32)
+        got = shard_grad.shard_grad(X, c, tile_n=tn, tile_d=td)
+        np.testing.assert_allclose(got, X.T @ c, rtol=2e-4, atol=2e-3)

@@ -1,0 +1,143 @@
+"""L2 model programs vs the oracle: shard grad/loss, inner epoch, prox step.
+
+Also validates the exact shapes that aot.py lowers (the artifact contract
+the rust runtime depends on) and the scan-epoch semantics: the lax.scan
+program must reproduce the step-by-step python reference trajectory.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def problem(n, d, rng=RNG):
+    X = jnp.asarray(rng.normal(size=(n, d)) / np.sqrt(d), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=n)) , jnp.float32)
+    w = jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32)
+    return X, y, w
+
+
+REF_GRAD = {"logistic": ref.shard_grad_logistic, "lasso": ref.shard_grad_lasso}
+REF_LOSS = {"logistic": ref.shard_loss_logistic, "lasso": ref.shard_loss_lasso}
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+class TestShardPrograms:
+    def test_grad_matches_ref(self, model):
+        X, y, w = problem(256, 64)
+        (g,) = M.make_shard_grad(model)(X, y, w)
+        np.testing.assert_allclose(g, REF_GRAD[model](X, y, w), rtol=1e-4, atol=1e-5)
+
+    def test_grad_pallas_path(self, model):
+        # (1024, 256) hits the tiled Pallas shard_grad kernel
+        X, y, w = problem(1024, 256)
+        (g,) = M.make_shard_grad(model, use_pallas=True)(X, y, w)
+        (g2,) = M.make_shard_grad(model, use_pallas=False)(X, y, w)
+        np.testing.assert_allclose(g, g2, rtol=2e-4, atol=2e-3)
+
+    def test_loss_matches_ref(self, model):
+        X, y, w = problem(256, 64)
+        (l,) = M.make_shard_loss(model)(X, y, w)
+        np.testing.assert_allclose(l, REF_LOSS[model](X, y, w), rtol=1e-5)
+
+    def test_grad_is_jax_grad(self, model):
+        # raw-sum convention: g == d/dw sum_i h(x_i.w; y_i)
+        X, y, w = problem(64, 16)
+        (g,) = M.make_shard_grad(model, use_pallas=False)(X, y, w)
+        loss = lambda ww: M.make_shard_loss(model)(X, y, ww)[0]
+        g_ad = jax.grad(loss)(w)
+        np.testing.assert_allclose(g, g_ad, rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+class TestInnerEpoch:
+    def test_matches_python_loop(self, model):
+        X, y, w = problem(64, 32)
+        rng = np.random.default_rng(3)
+        z = jnp.asarray(rng.normal(size=32) * 0.01, jnp.float32)
+        idx = jnp.asarray(rng.integers(0, 64, size=40), jnp.int32)
+        scal = jnp.asarray([0.1, 1e-2, 1e-3], jnp.float32)
+        (u,) = M.make_inner_epoch(model, tile=32)(X, y, w, w, z, idx, scal)
+        u_ref = ref.inner_epoch(X, y, w, z, idx, 0.1, 1e-2, 1e-3, model=model)
+        np.testing.assert_allclose(u, u_ref, rtol=1e-4, atol=1e-6)
+
+    def test_artifact_shape(self, model):
+        # exact artifact config from aot.py: (256, 64, m=64), tile=64
+        X, y, w = problem(256, 64)
+        rng = np.random.default_rng(4)
+        z = jnp.asarray(rng.normal(size=64) * 0.01, jnp.float32)
+        idx = jnp.asarray(rng.integers(0, 256, size=64), jnp.int32)
+        scal = jnp.asarray([0.05, 1e-5, 1e-5], jnp.float32)
+        (u,) = M.make_inner_epoch(model, tile=64)(X, y, w, w, z, idx, scal)
+        u_ref = ref.inner_epoch(X, y, w, z, idx, 0.05, 1e-5, 1e-5, model=model)
+        np.testing.assert_allclose(u, u_ref, rtol=1e-4, atol=1e-6)
+        assert u.shape == (64,)
+
+    def test_pallas_vs_plain(self, model):
+        X, y, w = problem(128, 64)
+        rng = np.random.default_rng(5)
+        z = jnp.asarray(rng.normal(size=64) * 0.01, jnp.float32)
+        idx = jnp.asarray(rng.integers(0, 128, size=32), jnp.int32)
+        scal = jnp.asarray([0.2, 1e-3, 1e-4], jnp.float32)
+        (u1,) = M.make_inner_epoch(model, use_pallas=True, tile=64)(X, y, w, w, z, idx, scal)
+        (u2,) = M.make_inner_epoch(model, use_pallas=False)(X, y, w, w, z, idx, scal)
+        np.testing.assert_allclose(u1, u2, rtol=1e-4, atol=1e-6)
+
+    def test_m_zero_steps_returns_wt(self, model):
+        X, y, w = problem(16, 8)
+        z = jnp.zeros(8, jnp.float32)
+        idx = jnp.zeros((0,), jnp.int32)
+        scal = jnp.asarray([0.1, 0.0, 0.0], jnp.float32)
+        (u,) = M.make_inner_epoch(model, use_pallas=False)(X, y, w, w, z, idx, scal)
+        np.testing.assert_allclose(u, w, rtol=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=32),
+        eta=st.floats(min_value=1e-3, max_value=0.5),
+        lam2=st.floats(min_value=0.0, max_value=0.1),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_trajectory(self, model, m, eta, lam2, seed):
+        rng = np.random.default_rng(seed)
+        n, d = 32, 16
+        X = jnp.asarray(rng.normal(size=(n, d)) / 4.0, jnp.float32)
+        y = jnp.asarray(np.sign(rng.normal(size=n)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32)
+        z = jnp.asarray(rng.normal(size=d) * 0.01, jnp.float32)
+        idx = jnp.asarray(rng.integers(0, n, size=m), jnp.int32)
+        scal = jnp.asarray([eta, 1e-3, lam2], jnp.float32)
+        (u,) = M.make_inner_epoch(model, use_pallas=False)(X, y, w, w, z, idx, scal)
+        u_ref = ref.inner_epoch(X, y, w, z, idx, eta, 1e-3, lam2, model=model)
+        np.testing.assert_allclose(u, u_ref, rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("model", M.MODELS)
+class TestProxFullStep:
+    def test_matches_manual(self, model):
+        X, y, w = problem(128, 32)
+        n = 128
+        eta, lam1, lam2 = 0.5, 1e-3, 1e-2
+        scal = jnp.asarray([eta, lam1, lam2, 1.0 / n], jnp.float32)
+        (w1,) = M.make_prox_full_step(model)(X, y, w, scal)
+        g = REF_GRAD[model](X, y, w) / n + lam1 * w
+        want = ref.soft_threshold(w - eta * g, eta * lam2)
+        np.testing.assert_allclose(w1, want, rtol=1e-4, atol=1e-6)
+
+    def test_fixed_point_of_optimum(self, model):
+        # at lam2 = 0, lam1 = 0, a zero-gradient point is a fixed point
+        X, y, _ = problem(64, 8)
+        # construct w with zero data gradient by 1-step of gradient equality:
+        # use w such that h'(x.w) == 0 is hard; instead verify step with
+        # eta = 0 is the identity.
+        w = jnp.asarray(RNG.normal(size=8), jnp.float32)
+        scal = jnp.asarray([0.0, 0.0, 0.0, 1.0 / 64], jnp.float32)
+        (w1,) = M.make_prox_full_step(model)(X, y, w, scal)
+        np.testing.assert_allclose(w1, w, rtol=0, atol=0)

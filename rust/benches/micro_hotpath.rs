@@ -1,0 +1,158 @@
+//! Micro-benchmarks of the hot paths (EXPERIMENTS.md §Perf input):
+//!
+//! * §6 lazy engine vs naive dense engine — the recovery-rule speedup
+//!   (E6), plus the conditional-statement reduction counter;
+//! * `lazy_advance` scalar cost (phase decomposition, O(log k));
+//! * shard-gradient kernel (the epoch-start pass);
+//! * coordinator protocol overhead: one full epoch at M = 0 (pure
+//!   broadcast/reduce) vs the per-epoch compute at the default M;
+//! * PJRT inner-epoch artifact execution (when `artifacts/` exists).
+
+use pscope::bench_util::{human_time, time_fn, Table};
+use pscope::config::{Model, PscopeConfig, WorkerBackend};
+use pscope::coordinator::train_with;
+use pscope::data::synth;
+use pscope::loss::{Objective, Reg};
+use pscope::net::NetModel;
+use pscope::optim::lazy::{lazy_advance, lazy_inner_epoch, LazyStats};
+use pscope::optim::svrg::dense_inner_epoch;
+use pscope::partition::Partitioner;
+use pscope::rng::Rng;
+
+fn main() {
+    let mut table = Table::new("micro hotpath", &["benchmark", "median", "notes"]);
+
+    // ---- lazy vs dense inner epoch on rcv1-like sparsity ----
+    let ds = synth::rcv1_like(42).with_n(4000).generate();
+    let reg = Reg { lam1: 1e-4, lam2: 1e-5 };
+    let obj = Objective::new(&ds, pscope::loss::Loss::Logistic, reg);
+    let w = vec![0.01; ds.d()];
+    let z = obj.data_grad(&w);
+    let eta = 0.5 / obj.smoothness();
+    let m = ds.n();
+    let t_lazy = time_fn(1, 7, || {
+        let mut rng = Rng::new(7);
+        let mut stats = LazyStats::default();
+        std::hint::black_box(lazy_inner_epoch(
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
+            &mut stats,
+        ));
+    });
+    let t_dense = time_fn(1, 3, || {
+        let mut rng = Rng::new(7);
+        std::hint::black_box(dense_inner_epoch(
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
+        ));
+    });
+    let mut stats = LazyStats::default();
+    let mut rng = Rng::new(7);
+    let _ = lazy_inner_epoch(
+        &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats,
+    );
+    table.row(&[
+        format!("lazy inner epoch (M={m}, d={})", ds.d()),
+        human_time(t_lazy.median),
+        format!(
+            "{:.1} Msteps/s, {:.2}% coord work saved",
+            m as f64 / t_lazy.median / 1e6,
+            100.0 * stats.savings()
+        ),
+    ]);
+    table.row(&[
+        format!("dense inner epoch (M={m}, d={})", ds.d()),
+        human_time(t_dense.median),
+        format!("recovery-rule speedup {:.1}x", t_dense.median / t_lazy.median),
+    ]);
+
+    // ---- lazy_advance scalar ----
+    let t_adv = time_fn(10, 21, || {
+        let mut acc = 0.0;
+        for i in 0..10_000 {
+            acc += lazy_advance(1.0 + (i % 7) as f64, 1000 + i % 97, 1e-4, 2e-5, 1e-5);
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "lazy_advance x10k (k~1000)".into(),
+        human_time(t_adv.median),
+        format!("{:.0} ns/advance", t_adv.median / 10_000.0 * 1e9),
+    ]);
+
+    // ---- shard gradient pass ----
+    let t_grad = time_fn(1, 9, || {
+        std::hint::black_box(obj.shard_grad_sum(&w));
+    });
+    table.row(&[
+        format!("shard grad (nnz={})", ds.nnz()),
+        human_time(t_grad.median),
+        format!("{:.0} Mnnz/s", ds.nnz() as f64 / t_grad.median / 1e6),
+    ]);
+
+    // ---- coordinator protocol overhead ----
+    let part = Partitioner::Uniform.split(&ds, 8, 7);
+    let mk = |m_inner: usize| PscopeConfig {
+        p: 8,
+        outer_iters: 3,
+        m_inner,
+        reg,
+        seed: 42,
+        record_every: 100,
+        ..PscopeConfig::for_dataset("rcv1_like", Model::Logistic)
+    };
+    let t_proto = time_fn(1, 5, || {
+        let cfg = mk(1); // M=1: epoch cost ~= pure protocol + grad pass
+        std::hint::black_box(train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap());
+    });
+    let t_epoch = time_fn(1, 5, || {
+        let cfg = mk(0); // default M = 2n/p
+        std::hint::black_box(train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap());
+    });
+    table.row(&[
+        "3 epochs, M=1 (protocol+grad)".into(),
+        human_time(t_proto.median),
+        "coordination floor".into(),
+    ]);
+    table.row(&[
+        "3 epochs, M=2n/p (default)".into(),
+        human_time(t_epoch.median),
+        format!(
+            "coordination overhead {:.1}%",
+            100.0 * t_proto.median / t_epoch.median
+        ),
+    ]);
+
+    // ---- PJRT artifact execution ----
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let dsd = synth::cov_like(42).with_n(1500).generate();
+        let partd = Partitioner::Uniform.split(&dsd, 1, 7);
+        let cfg = PscopeConfig {
+            p: 1,
+            outer_iters: 2,
+            m_inner: 512,
+            reg,
+            backend: WorkerBackend::Xla,
+            seed: 42,
+            record_every: 100,
+            ..PscopeConfig::for_dataset("cov_like", Model::Logistic)
+        };
+        let t_xla = time_fn(1, 3, || {
+            std::hint::black_box(
+                train_with(&dsd, &partd, &cfg, Some("artifacts".into()), NetModel::zero())
+                    .unwrap(),
+            );
+        });
+        table.row(&[
+            "2 epochs via PJRT artifact (2048x64, M=512)".into(),
+            human_time(t_xla.median),
+            "includes per-run client + compile".into(),
+        ]);
+    } else {
+        table.row(&[
+            "PJRT artifact exec".into(),
+            "skipped".into(),
+            "run `make artifacts`".into(),
+        ]);
+    }
+
+    table.emit();
+}

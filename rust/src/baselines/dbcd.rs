@@ -1,0 +1,217 @@
+//! DBCD baseline (Mahajan et al. 2017, §7.1 / Table 2).
+//!
+//! Distributed block coordinate descent for L1-regularized classifiers:
+//! per outer iteration every worker computes a proximal-Newton direction
+//! on its feature block (CD sweeps against the shared activations), the
+//! proposed directions are aggregated, and the *master runs a global line
+//! search* on `P(w + α·Δw)` — each trial evaluation being another
+//! broadcast+reduce of the n-dim activation delta. The combination of
+//! full-data passes per iteration and O(n) communication per line-search
+//! step is why Table 2 shows DBCD at 100–1000× pSCOPE's time; this
+//! implementation reproduces that mechanism directly.
+
+use super::{should_stop, BaselineOpts, DistSolver, SimClock};
+use crate::config::Model;
+use crate::data::Dataset;
+use crate::linalg::{nrm1, soft_threshold, CscMatrix};
+use crate::loss::{Objective, Reg};
+use crate::metrics::{ThreadCpuTimer as Timer, Trace};
+use crate::partition::FeaturePartition;
+
+/// Distributed block coordinate descent.
+pub struct Dbcd {
+    /// Fraction of each worker's feature block updated per outer iteration
+    /// (Mahajan et al.'s working-set selection; small sets keep the local
+    /// quadratic model trustworthy but multiply the number of O(n)-comm
+    /// rounds — the Table-2 mechanism).
+    pub working_frac: f64,
+    /// Max line-search trials.
+    pub max_ls: usize,
+}
+
+impl Default for Dbcd {
+    fn default() -> Self {
+        Dbcd { working_frac: 0.1, max_ls: 12 }
+    }
+}
+
+impl DistSolver for Dbcd {
+    fn name(&self) -> &'static str {
+        "DBCD"
+    }
+
+    fn run(&self, ds: &Dataset, model: Model, reg: Reg, opts: &BaselineOpts) -> Trace {
+        let loss = model.loss();
+        let obj = Objective::new(ds, loss, reg);
+        let fp = FeaturePartition::contiguous(ds.d(), opts.p);
+        let csc: CscMatrix = ds.x.to_csc();
+        let n = ds.n();
+        let nf = n as f64;
+        // sigma = p safe scaling: p blocks update simultaneously against the
+        // same stale activations, so per-coordinate curvature is inflated by
+        // the aggregation factor (the same Gamma-bound CoCoA+ uses); without
+        // it simultaneous block updates overshoot and the line search
+        // rejects most of the step anyway.
+        let sigma = opts.p as f64;
+        let curv: Vec<f64> = (0..ds.d())
+            .map(|j| sigma * loss.curvature_bound() / nf * csc.col_nrm2_sq(j) + reg.lam1)
+            .collect();
+        let mut rng = crate::rng::Rng::new(opts.seed ^ 0xdbcd);
+
+        let mut clock = SimClock::new(opts.net);
+        let mut trace = Trace::new(self.name(), &ds.name);
+        let mut w = vec![0.0; ds.d()];
+        let mut v = vec![0.0; n];
+        trace.push(clock.point(0, obj.value(&w)));
+        for round in 0..opts.max_rounds {
+            // ---- direction phase: working-set CD against frozen activations ----
+            let mut dw = vec![0.0; ds.d()];
+            let mut dv_total = vec![0.0; n];
+            let mut times = Vec::with_capacity(opts.p);
+            for block in &fp.blocks {
+                let tm = Timer::start();
+                let mut dv = vec![0.0; n];
+                let ws = ((block.len() as f64 * self.working_frac).ceil() as usize)
+                    .clamp(1, block.len());
+                let picks: Vec<usize> = if ws >= block.len() {
+                    block.clone()
+                } else {
+                    rng.sample_distinct(block.len(), ws)
+                        .into_iter()
+                        .map(|i| block[i])
+                        .collect()
+                };
+                {
+                    for &j in &picks {
+                        let col = csc.col(j);
+                        if col.nnz() == 0 {
+                            continue;
+                        }
+                        let mut g = 0.0;
+                        for t in 0..col.nnz() {
+                            let i = col.idx[t] as usize;
+                            g += loss.hprime(v[i] + dv[i], ds.y[i]) * col.val[t];
+                        }
+                        let wj = w[j] + dw[j];
+                        g = g / nf + reg.lam1 * wj;
+                        let h = curv[j].max(1e-12);
+                        let new = soft_threshold(wj - g / h, reg.lam2 / h);
+                        let delta = new - wj;
+                        if delta != 0.0 {
+                            dw[j] += delta;
+                            for t in 0..col.nnz() {
+                                dv[col.idx[t] as usize] += delta * col.val[t];
+                            }
+                        }
+                    }
+                }
+                for i in 0..n {
+                    dv_total[i] += dv[i];
+                }
+                times.push(tm.elapsed_s());
+            }
+            clock.charge_vecs(opts.p, n); // broadcast v
+            clock.charge_vecs(opts.p, n); // gather dv blocks
+
+            // ---- global Armijo line search on P(w + α·Δw) ----
+            let tm = Timer::start();
+            let f0 = obj.value(&w);
+            let l1_0 = nrm1(&w);
+            let mut alpha = 1.0f64;
+            let mut accepted = false;
+            for _ in 0..self.max_ls {
+                // objective at the trial point, evaluated via activations
+                let mut smooth = 0.0;
+                for i in 0..n {
+                    smooth += loss.h(v[i] + alpha * dv_total[i], ds.y[i]);
+                }
+                smooth /= nf;
+                let mut sq = 0.0;
+                let mut l1 = 0.0;
+                for j in 0..ds.d() {
+                    let t = w[j] + alpha * dw[j];
+                    sq += t * t;
+                    l1 += t.abs();
+                }
+                let f1 = smooth + 0.5 * reg.lam1 * sq + reg.lam2 * l1;
+                // sufficient decrease including the L1 model term
+                let model_dec = 1e-3 * alpha * (reg.lam2 * (l1_0 - l1) + 1e-16);
+                clock.charge_vecs(opts.p, n); // trial activations out
+                clock.charge_vecs(opts.p, 1); // losses back
+                if f1 <= f0 - model_dec || f1 < f0 {
+                    accepted = true;
+                    break;
+                }
+                alpha *= 0.5;
+            }
+            if accepted {
+                for j in 0..ds.d() {
+                    w[j] += alpha * dw[j];
+                }
+                for i in 0..n {
+                    v[i] += alpha * dv_total[i];
+                }
+            }
+            let master_s = tm.elapsed_s();
+            clock.advance_round(&times, master_s);
+
+            if round % opts.record_every == 0 || round + 1 == opts.max_rounds {
+                let objective = obj.value(&w);
+                trace.push(clock.point(round + 1, objective));
+                if should_stop(opts, &clock, objective) {
+                    break;
+                }
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::net::NetModel;
+    use crate::optim::fista::reference_optimum;
+
+    #[test]
+    fn converges_slowly_but_surely() {
+        let ds = synth::tiny(261).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let opts = BaselineOpts {
+            p: 4,
+            max_rounds: 400,
+            net: NetModel::zero(),
+            record_every: 20,
+            ..Default::default()
+        };
+        let trace = Dbcd::default().run(&ds, Model::Logistic, reg, &opts);
+        let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+        let opt = reference_optimum(&obj, 20_000);
+        let gap = trace.last_objective() - opt.objective;
+        assert!(gap < 1e-4, "gap {gap}");
+        assert!(gap >= -1e-10);
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let ds = synth::tiny(262).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-2 };
+        let opts = BaselineOpts {
+            p: 3,
+            max_rounds: 30,
+            net: NetModel::zero(),
+            record_every: 1,
+            ..Default::default()
+        };
+        let trace = Dbcd::default().run(&ds, Model::Logistic, reg, &opts);
+        for win in trace.points.windows(2) {
+            assert!(
+                win[1].objective <= win[0].objective + 1e-10,
+                "objective increased {} -> {}",
+                win[0].objective,
+                win[1].objective
+            );
+        }
+    }
+}

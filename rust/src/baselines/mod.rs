@@ -1,0 +1,192 @@
+//! The §7.1 comparison systems, behind one trait.
+//!
+//! | baseline        | family              | distribution axis | module |
+//! |-----------------|---------------------|-------------------|--------|
+//! | dist-FISTA      | prox gradient       | instances         | [`dfista`] |
+//! | dist-mOWL-QN    | quasi-Newton        | instances         | [`mowlqn`] |
+//! | DFAL            | ADMM                | instances         | [`dfal`] |
+//! | dpSGD           | minibatch prox SGD  | instances         | [`dpsgd`] |
+//! | AsyProx-SVRG    | async prox SVRG     | instances         | [`asyprox_svrg`] |
+//! | ProxCOCOA+      | primal-dual local   | features          | [`proxcocoa`] |
+//! | DBCD            | block CD            | features          | [`dbcd`] |
+//! | pSCOPE          | this paper          | instances         | [`pscope`] |
+//!
+//! ## Execution / timing model
+//!
+//! The baselines run *simulated-distributed*: worker compute phases execute
+//! sequentially but are timed per worker, and the simulated wall clock
+//! advances by the **max** worker time per round (perfect overlap — the
+//! most favorable assumption for the baselines); communication volume is
+//! charged exactly through [`crate::net::ByteMeter`] and converted to wire
+//! time by the configured [`NetModel`]. pSCOPE itself runs on real threads
+//! (see [`crate::coordinator`]) and reports the same simulated-parallel
+//! clock (max worker compute per round + master time) in
+//! `TracePoint::sim_wall_s`, so the time axis is consistent across systems
+//! on this single-core box.
+
+pub mod asyprox_svrg;
+pub mod dbcd;
+pub mod dfal;
+pub mod dfista;
+pub mod dpsgd;
+pub mod mowlqn;
+pub mod proxcocoa;
+pub mod pscope;
+
+use crate::config::Model;
+use crate::data::Dataset;
+use crate::loss::Reg;
+use crate::metrics::{Trace, TracePoint};
+use crate::net::NetModel;
+
+/// Shared run options for all distributed solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineOpts {
+    /// Workers.
+    pub p: usize,
+    /// Seed.
+    pub seed: u64,
+    /// Outer-round cap.
+    pub max_rounds: usize,
+    /// Simulated-wall-clock cap in seconds (compute + wire).
+    pub max_total_s: f64,
+    /// Interconnect model.
+    pub net: NetModel,
+    /// Record a trace point every `record_every` rounds.
+    pub record_every: usize,
+    /// Early-stop target objective (`NEG_INFINITY` disables).
+    pub target_objective: f64,
+    /// Early-stop gap tolerance.
+    pub tol: f64,
+}
+
+impl Default for BaselineOpts {
+    fn default() -> Self {
+        BaselineOpts {
+            p: 8,
+            seed: 42,
+            max_rounds: 200,
+            max_total_s: 60.0,
+            net: NetModel::ten_gbe(),
+            record_every: 1,
+            target_objective: f64::NEG_INFINITY,
+            tol: 0.0,
+        }
+    }
+}
+
+/// A distributed solver that produces a convergence trace.
+pub trait DistSolver {
+    /// Legend name.
+    fn name(&self) -> &'static str;
+    /// Run on `ds` with the given model/regularization.
+    fn run(&self, ds: &Dataset, model: Model, reg: Reg, opts: &BaselineOpts) -> Trace;
+}
+
+/// Simulated distributed clock shared by the baseline implementations.
+pub struct SimClock {
+    /// Accumulated compute seconds (max-per-round).
+    pub wall_s: f64,
+    /// Accumulated payload bytes.
+    pub bytes: u64,
+    /// Accumulated messages.
+    pub msgs: u64,
+    net: NetModel,
+}
+
+impl SimClock {
+    /// Fresh clock.
+    pub fn new(net: NetModel) -> Self {
+        SimClock { wall_s: 0.0, bytes: 0, msgs: 0, net }
+    }
+
+    /// Advance compute time by the slowest worker of a round.
+    pub fn advance_round(&mut self, worker_times: &[f64], master_time: f64) {
+        let max = worker_times.iter().fold(0.0f64, |a, &b| a.max(b));
+        self.wall_s += max + master_time;
+    }
+
+    /// Charge one broadcast/reduce of `len` f64s to/from `p` workers.
+    pub fn charge_vecs(&mut self, p: usize, len: usize) {
+        self.bytes += p as u64 * crate::coordinator::protocol::vec_bytes(len);
+        self.msgs += p as u64;
+    }
+
+    /// Total simulated time (compute + wire).
+    pub fn total_s(&self) -> f64 {
+        self.wall_s + self.net.wire_time(self.bytes, self.msgs)
+    }
+
+    /// Trace point at `round` with `objective`.
+    pub fn point(&self, round: usize, objective: f64) -> TracePoint {
+        TracePoint {
+            epoch: round,
+            wall_s: self.wall_s,
+            sim_wall_s: self.wall_s,
+            net_s: self.net.wire_time(self.bytes, self.msgs),
+            objective,
+            comm_bytes: self.bytes,
+            comm_msgs: self.msgs,
+        }
+    }
+}
+
+/// Shared early-stop / budget check used by every baseline loop.
+pub fn should_stop(opts: &BaselineOpts, clock: &SimClock, objective: f64) -> bool {
+    if clock.total_s() > opts.max_total_s {
+        return true;
+    }
+    opts.target_objective.is_finite() && objective - opts.target_objective <= opts.tol
+}
+
+/// Every baseline in paper order (for the fig1 bench).
+pub fn all_baselines() -> Vec<Box<dyn DistSolver>> {
+    vec![
+        Box::new(pscope::PScope::default()),
+        Box::new(dfista::DistFista),
+        Box::new(mowlqn::DistMOwlQn::default()),
+        Box::new(dfal::Dfal::default()),
+        Box::new(asyprox_svrg::AsyProxSvrg::default()),
+        Box::new(proxcocoa::ProxCocoa::default()),
+        Box::new(dpsgd::DpSgd::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_by_max() {
+        let mut c = SimClock::new(NetModel::zero());
+        c.advance_round(&[0.1, 0.5, 0.2], 0.05);
+        assert!((c.wall_s - 0.55).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_charges_bytes() {
+        let mut c = SimClock::new(NetModel { latency_s: 0.0, bandwidth_bps: 1e6 });
+        c.charge_vecs(4, 1000);
+        assert_eq!(c.msgs, 4);
+        assert!(c.bytes >= 4 * 8000);
+        assert!(c.total_s() > 0.03);
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let opts = BaselineOpts { max_total_s: 1.0, target_objective: 1.0, tol: 0.1, ..Default::default() };
+        let mut c = SimClock::new(NetModel::zero());
+        assert!(!should_stop(&opts, &c, 2.0));
+        assert!(should_stop(&opts, &c, 1.05)); // target reached
+        c.wall_s = 2.0;
+        assert!(should_stop(&opts, &c, 2.0)); // budget exceeded
+    }
+
+    #[test]
+    fn roster_complete() {
+        let names: Vec<&str> = all_baselines().iter().map(|b| b.name()).collect();
+        for expect in ["pSCOPE", "FISTA", "mOWL-QN", "DFAL", "AsyProx-SVRG", "ProxCOCOA+", "dpSGD"] {
+            assert!(names.contains(&expect), "{expect} missing from roster {names:?}");
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! ProxCOCOA+-style baseline (Smith et al. 2015, §7.1).
+//!
+//! Feature-distributed primal CoCoA: worker k owns a block of columns
+//! `X_[k]` and the matching coordinates of `w`. Per round every worker
+//! solves its local subproblem — coordinate descent on its block against
+//! the shared activation vector `v = Xw`, with the safe aggregation
+//! scaling `σ' = p` on the quadratic term (the CoCoA+ Γ-bound) — and ships
+//! its activation delta `X_[k] Δw_k` (an n-vector!) back to the master.
+//! Communication is therefore `2·p·n` floats per round, which is the
+//! method's known weakness on instance-heavy data and the reason pSCOPE
+//! beats it in Figure 1.
+
+use super::{should_stop, BaselineOpts, DistSolver, SimClock};
+use crate::config::Model;
+use crate::data::Dataset;
+use crate::linalg::{soft_threshold, CscMatrix};
+use crate::loss::{Objective, Reg};
+use crate::metrics::{ThreadCpuTimer as Timer, Trace};
+use crate::partition::FeaturePartition;
+
+/// ProxCOCOA+ (primal variant with σ' = p aggregation).
+pub struct ProxCocoa {
+    /// Local CD sweeps per round.
+    pub local_sweeps: usize,
+}
+
+impl Default for ProxCocoa {
+    fn default() -> Self {
+        ProxCocoa { local_sweeps: 3 }
+    }
+}
+
+impl DistSolver for ProxCocoa {
+    fn name(&self) -> &'static str {
+        "ProxCOCOA+"
+    }
+
+    fn run(&self, ds: &Dataset, model: Model, reg: Reg, opts: &BaselineOpts) -> Trace {
+        let loss = model.loss();
+        let obj = Objective::new(ds, loss, reg);
+        let fp = FeaturePartition::contiguous(ds.d(), opts.p);
+        let csc: CscMatrix = ds.x.to_csc();
+        let n = ds.n();
+        let nf = n as f64;
+        let sigma_p = opts.p as f64; // CoCoA+ safe aggregation
+        // per-column curvature upper bounds with the sigma' scaling
+        let curv: Vec<f64> = (0..ds.d())
+            .map(|j| sigma_p * loss.curvature_bound() / nf * csc.col_nrm2_sq(j) + reg.lam1)
+            .collect();
+
+        let mut clock = SimClock::new(opts.net);
+        let mut trace = Trace::new(self.name(), &ds.name);
+        let mut w = vec![0.0; ds.d()];
+        let mut v = vec![0.0; n]; // shared activations Xw
+        trace.push(clock.point(0, obj.value(&w)));
+        for round in 0..opts.max_rounds {
+            let mut times = Vec::with_capacity(opts.p);
+            let mut deltas: Vec<Vec<f64>> = Vec::with_capacity(opts.p);
+            for block in &fp.blocks {
+                let tm = Timer::start();
+                // local view: v is frozen for the round; the worker tracks
+                // its own activation delta
+                let mut dv = vec![0.0; n];
+                for _ in 0..self.local_sweeps {
+                    for &j in block {
+                        let col = csc.col(j);
+                        if col.nnz() == 0 {
+                            continue;
+                        }
+                        let mut g = 0.0;
+                        for t in 0..col.nnz() {
+                            let i = col.idx[t] as usize;
+                            g += loss.hprime(v[i] + dv[i], ds.y[i]) * col.val[t];
+                        }
+                        g = g / nf + reg.lam1 * w[j];
+                        let h = curv[j].max(1e-12);
+                        let new = soft_threshold(w[j] - g / h, reg.lam2 / h);
+                        let delta = new - w[j];
+                        if delta != 0.0 {
+                            w[j] = new;
+                            for t in 0..col.nnz() {
+                                dv[col.idx[t] as usize] += delta * col.val[t];
+                            }
+                        }
+                    }
+                }
+                deltas.push(dv);
+                times.push(tm.elapsed_s());
+            }
+            // master: aggregate activation deltas (gamma = 1 with sigma'=p)
+            let tm = Timer::start();
+            for dv in &deltas {
+                for i in 0..n {
+                    v[i] += dv[i];
+                }
+            }
+            let master_s = tm.elapsed_s();
+            clock.advance_round(&times, master_s);
+            clock.charge_vecs(opts.p, n); // broadcast v
+            clock.charge_vecs(opts.p, n); // gather deltas
+
+            if round % opts.record_every == 0 || round + 1 == opts.max_rounds {
+                let objective = obj.value(&w);
+                trace.push(clock.point(round + 1, objective));
+                if should_stop(opts, &clock, objective) {
+                    break;
+                }
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::net::NetModel;
+    use crate::optim::fista::reference_optimum;
+
+    #[test]
+    fn converges_on_tiny() {
+        let ds = synth::tiny(251).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let opts = BaselineOpts {
+            p: 4,
+            max_rounds: 300,
+            net: NetModel::zero(),
+            record_every: 10,
+            ..Default::default()
+        };
+        let trace = ProxCocoa::default().run(&ds, Model::Logistic, reg, &opts);
+        let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+        let opt = reference_optimum(&obj, 20_000);
+        let gap = trace.last_objective() - opt.objective;
+        assert!(gap < 1e-4, "gap {gap}");
+        assert!(gap >= -1e-10);
+    }
+
+    #[test]
+    fn activations_consistent_after_rounds() {
+        // w and v must satisfy v = Xw after any number of rounds — the
+        // aggregation invariant.
+        let ds = synth::tiny(252).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-2 };
+        let opts = BaselineOpts {
+            p: 3,
+            max_rounds: 10,
+            net: NetModel::zero(),
+            record_every: 10,
+            ..Default::default()
+        };
+        // run and verify objective decreased (the invariant is internal;
+        // a broken v = Xw would stall or diverge the objective)
+        let trace = ProxCocoa::default().run(&ds, Model::Logistic, reg, &opts);
+        assert!(trace.last_objective() < trace.points[0].objective);
+    }
+
+    #[test]
+    fn comm_scales_with_n_not_d() {
+        let ds = synth::tiny(253).generate(); // n=200, d=50
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let opts = BaselineOpts {
+            p: 2,
+            max_rounds: 3,
+            net: NetModel::zero(),
+            ..Default::default()
+        };
+        let trace = ProxCocoa::default().run(&ds, Model::Logistic, reg, &opts);
+        let bytes = trace.points.last().unwrap().comm_bytes;
+        // 3 rounds * 2 directions * p * (n*8 + header): n=200 dominates d=50
+        assert!(bytes > 3 * 2 * 2 * 200 * 8, "bytes {bytes}");
+    }
+}

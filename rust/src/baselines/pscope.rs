@@ -1,0 +1,86 @@
+//! pSCOPE adapter: exposes the real coordinator behind the [`DistSolver`]
+//! trait so the fig1 bench drives every system through one interface.
+//!
+//! Unlike the simulated baselines, this runs the genuine multi-threaded
+//! CALL runtime ([`crate::coordinator::train_with`]) — real thread-parallel
+//! wall time plus the same modeled wire time.
+
+use super::{BaselineOpts, DistSolver};
+use crate::config::{Model, PscopeConfig, WorkerBackend};
+use crate::coordinator::train_with;
+use crate::data::Dataset;
+use crate::loss::Reg;
+use crate::metrics::Trace;
+use crate::partition::Partitioner;
+
+/// The paper's system.
+pub struct PScope {
+    /// Worker backend.
+    pub backend: WorkerBackend,
+    /// Partition strategy (Figure 2(b) varies this; default uniform π₁).
+    pub partitioner: Partitioner,
+    /// Inner steps per epoch (0 = auto 2n/p).
+    pub m_inner: usize,
+    /// Auto-η multiplier (η = c_eta / L). The paper grid-tunes step sizes
+    /// per dataset; the fig1/table2 benches sweep this.
+    pub c_eta: f64,
+}
+
+impl Default for PScope {
+    fn default() -> Self {
+        PScope {
+            backend: WorkerBackend::RustSparse,
+            partitioner: Partitioner::Uniform,
+            m_inner: 0,
+            c_eta: 0.5,
+        }
+    }
+}
+
+impl DistSolver for PScope {
+    fn name(&self) -> &'static str {
+        "pSCOPE"
+    }
+
+    fn run(&self, ds: &Dataset, model: Model, reg: Reg, opts: &BaselineOpts) -> Trace {
+        let cfg = PscopeConfig {
+            model,
+            reg,
+            p: opts.p,
+            outer_iters: opts.max_rounds,
+            m_inner: self.m_inner,
+            c_eta: self.c_eta,
+            backend: self.backend,
+            seed: opts.seed,
+            tol: opts.tol,
+            target_objective: opts.target_objective,
+            record_every: opts.record_every,
+            ..Default::default()
+        };
+        let part = self.partitioner.split(ds, opts.p, opts.seed);
+        let out = train_with(ds, &part, &cfg, None, opts.net).expect("pSCOPE run failed");
+        out.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::net::NetModel;
+
+    #[test]
+    fn adapter_runs_and_converges() {
+        let ds = synth::tiny(271).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let opts = BaselineOpts {
+            p: 4,
+            max_rounds: 15,
+            net: NetModel::zero(),
+            ..Default::default()
+        };
+        let trace = PScope::default().run(&ds, Model::Logistic, reg, &opts);
+        assert!(trace.last_objective() < trace.points[0].objective);
+        assert_eq!(trace.solver, "pscope");
+    }
+}

@@ -1,0 +1,161 @@
+//! Hand-rolled CLI argument parser (the offline image has no `clap`).
+//!
+//! Grammar: `pscope <subcommand> [--flag value | --switch] ...`. Flags are
+//! declared up front so typos fail fast with a helpful message; `--help`
+//! prints generated usage.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declared flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    /// Name without dashes.
+    pub name: &'static str,
+    /// Takes a value?
+    pub takes_value: bool,
+    /// Help line.
+    pub help: &'static str,
+    /// Default rendered in help.
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Get a string flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Get a parsed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|_| {
+                Error::Config(format!("--{name}: cannot parse {s:?}"))
+            }),
+        }
+    }
+
+    /// Was a boolean switch present?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// A subcommand definition.
+pub struct Command {
+    /// Name.
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Flags.
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    /// Render usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("pscope {} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let arg = if f.takes_value { format!("--{} <v>", f.name) } else { format!("--{}", f.name) };
+            let def = f.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {arg:<22} {}{def}\n", f.help));
+        }
+        s
+    }
+
+    /// Parse raw args (after the subcommand token).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            let name = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got {tok:?}")))?;
+            if name == "help" {
+                return Err(Error::Config(self.usage()));
+            }
+            let spec = self
+                .flags
+                .iter()
+                .find(|f| f.name == name)
+                .ok_or_else(|| Error::Config(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+            if spec.takes_value {
+                let v = raw
+                    .get(i + 1)
+                    .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?;
+                out.values.insert(name.to_string(), v.clone());
+                i += 2;
+            } else {
+                out.switches.push(name.to_string());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Flag helper.
+pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, takes_value: true, help, default }
+}
+
+/// Switch helper.
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, takes_value: false, help, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command {
+            name: "train",
+            about: "train a model",
+            flags: vec![
+                flag("dataset", "dataset preset", Some("rcv1_like")),
+                flag("p", "workers", Some("8")),
+                switch("verbose", "chatty output"),
+            ],
+        }
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let raw: Vec<String> = ["--dataset", "cov_like", "--verbose", "--p", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = cmd().parse(&raw).unwrap();
+        assert_eq!(a.get("dataset"), Some("cov_like"));
+        assert_eq!(a.get_parse::<usize>("p", 8).unwrap(), 4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_parse::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad() {
+        let c = cmd();
+        assert!(c.parse(&["--nope".into()]).is_err());
+        assert!(c.parse(&["positional".into()]).is_err());
+        assert!(c.parse(&["--p".into()]).is_err());
+        let a = c.parse(&["--p".into(), "x".into()]).unwrap();
+        assert!(a.get_parse::<usize>("p", 1).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = cmd().parse(&["--help".into()]).unwrap_err();
+        assert!(format!("{e}").contains("train"));
+    }
+}

@@ -1,0 +1,224 @@
+//! Experiment configuration: model/regularization/coordination parameters,
+//! per-dataset defaults (Table 1), and a TOML-subset file format.
+
+pub mod toml_lite;
+
+use crate::error::{Error, Result};
+use crate::loss::{Loss, Reg};
+
+/// Which model (§7) to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    /// Logistic regression with elastic net.
+    Logistic,
+    /// Lasso regression.
+    Lasso,
+}
+
+impl Model {
+    /// Loss flavor.
+    pub fn loss(self) -> Loss {
+        match self {
+            Model::Logistic => Loss::Logistic,
+            Model::Lasso => Loss::Squared,
+        }
+    }
+
+    /// Name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Model::Logistic => "logistic",
+            Model::Lasso => "lasso",
+        }
+    }
+
+    /// Parse.
+    pub fn parse(s: &str) -> Result<Model> {
+        match s {
+            "logistic" | "lr" => Ok(Model::Logistic),
+            "lasso" => Ok(Model::Lasso),
+            _ => Err(Error::Config(format!("unknown model {s:?}"))),
+        }
+    }
+}
+
+/// Which engine executes the worker inner loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WorkerBackend {
+    /// §6 lazy recovery-rule engine (default; O(nnz) per step).
+    #[default]
+    RustSparse,
+    /// Naive dense engine (O(d) per step; reference / dense data).
+    RustDense,
+    /// AOT-compiled XLA artifacts via PJRT (dense shards; requires
+    /// `artifacts/manifest.json` and matching shapes).
+    Xla,
+}
+
+impl WorkerBackend {
+    /// Parse.
+    pub fn parse(s: &str) -> Result<WorkerBackend> {
+        match s {
+            "sparse" | "lazy" => Ok(WorkerBackend::RustSparse),
+            "dense" => Ok(WorkerBackend::RustDense),
+            "xla" => Ok(WorkerBackend::Xla),
+            _ => Err(Error::Config(format!("unknown backend {s:?}"))),
+        }
+    }
+}
+
+/// Full pSCOPE run configuration (Algorithm 1 parameters + engineering).
+#[derive(Clone, Debug)]
+pub struct PscopeConfig {
+    /// Model (drives loss + default λ from Table 1).
+    pub model: Model,
+    /// Regularization.
+    pub reg: Reg,
+    /// Workers `p`.
+    pub p: usize,
+    /// Outer iterations `T`.
+    pub outer_iters: usize,
+    /// Inner steps per epoch `M`; 0 = auto (`2 · n/p`, the paper's
+    /// epoch-sized default).
+    pub m_inner: usize,
+    /// Learning rate η; 0.0 = auto (`c_eta / L`).
+    pub eta: f64,
+    /// Auto-η multiplier.
+    pub c_eta: f64,
+    /// Worker engine.
+    pub backend: WorkerBackend,
+    /// Master seed (forked per worker/epoch).
+    pub seed: u64,
+    /// Stop early when the objective gap vs `target_objective` (if finite)
+    /// falls below `tol`.
+    pub tol: f64,
+    /// Reference optimum for early stopping (`f64::NEG_INFINITY` disables).
+    pub target_objective: f64,
+    /// Record the objective every `record_every` epochs (1 = always).
+    pub record_every: usize,
+}
+
+impl Default for PscopeConfig {
+    fn default() -> Self {
+        PscopeConfig {
+            model: Model::Logistic,
+            reg: Reg { lam1: 1e-5, lam2: 1e-5 },
+            p: 8,
+            outer_iters: 30,
+            m_inner: 0,
+            eta: 0.0,
+            c_eta: 0.5,
+            backend: WorkerBackend::RustSparse,
+            seed: 42,
+            tol: 0.0,
+            target_objective: f64::NEG_INFINITY,
+            record_every: 1,
+        }
+    }
+}
+
+impl PscopeConfig {
+    /// Table-1 defaults per dataset (λ₁ per paper; λ₂ = 1e-5 except the
+    /// large CTR sets, which use 1e-6).
+    pub fn for_dataset(dataset: &str, model: Model) -> PscopeConfig {
+        let (lam1, lam2) = match dataset {
+            "cov_like" | "cov" => (1e-5, 1e-5),
+            "rcv1_like" | "rcv1" => (1e-5, 1e-5),
+            "avazu_like" | "avazu" => (1e-6, 1e-6),
+            "kdd2012_like" | "kdd2012" => (1e-8, 1e-6),
+            _ => (1e-5, 1e-5),
+        };
+        let reg = match model {
+            Model::Logistic => Reg { lam1, lam2 },
+            // paper's Lasso has no ridge term
+            Model::Lasso => Reg { lam1: 0.0, lam2 },
+        };
+        PscopeConfig { model, reg, ..Default::default() }
+    }
+
+    /// Resolve auto parameters against a concrete problem.
+    pub fn resolve(&self, n: usize, smoothness: f64) -> (usize, f64) {
+        let m = if self.m_inner == 0 {
+            (2 * n / self.p.max(1)).max(1)
+        } else {
+            self.m_inner
+        };
+        let eta = if self.eta == 0.0 { self.c_eta / smoothness } else { self.eta };
+        (m, eta)
+    }
+
+    /// Load overrides from a TOML-subset file (see [`toml_lite`]).
+    pub fn apply_toml(&mut self, text: &str) -> Result<()> {
+        let table = toml_lite::parse(text).map_err(Error::Config)?;
+        for (k, v) in &table {
+            match k.as_str() {
+                "model" => self.model = Model::parse(v.as_str_or()?)?,
+                "lam1" => self.reg.lam1 = v.as_f64_or()?,
+                "lam2" => self.reg.lam2 = v.as_f64_or()?,
+                "p" => self.p = v.as_usize_or()?,
+                "outer_iters" => self.outer_iters = v.as_usize_or()?,
+                "m_inner" => self.m_inner = v.as_usize_or()?,
+                "eta" => self.eta = v.as_f64_or()?,
+                "c_eta" => self.c_eta = v.as_f64_or()?,
+                "backend" => self.backend = WorkerBackend::parse(v.as_str_or()?)?,
+                "seed" => self.seed = v.as_usize_or()? as u64,
+                "tol" => self.tol = v.as_f64_or()?,
+                "record_every" => self.record_every = v.as_usize_or()?.max(1),
+                other => {
+                    return Err(Error::Config(format!("unknown config key {other:?}")));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_defaults_match_table1() {
+        let c = PscopeConfig::for_dataset("kdd2012_like", Model::Logistic);
+        assert_eq!(c.reg.lam1, 1e-8);
+        assert_eq!(c.reg.lam2, 1e-6);
+        let l = PscopeConfig::for_dataset("cov_like", Model::Lasso);
+        assert_eq!(l.reg.lam1, 0.0);
+        assert_eq!(l.reg.lam2, 1e-5);
+    }
+
+    #[test]
+    fn resolve_auto() {
+        let c = PscopeConfig { p: 8, ..Default::default() };
+        let (m, eta) = c.resolve(8000, 4.0);
+        assert_eq!(m, 2000);
+        assert!((eta - 0.5 / 4.0).abs() < 1e-12);
+        let c2 = PscopeConfig { m_inner: 5, eta: 0.01, ..Default::default() };
+        assert_eq!(c2.resolve(8000, 4.0), (5, 0.01));
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c = PscopeConfig::default();
+        c.apply_toml(
+            "model = \"lasso\"\nlam2 = 1e-4\np = 4\nbackend = \"dense\"\n# comment\n",
+        )
+        .unwrap();
+        assert_eq!(c.model, Model::Lasso);
+        assert_eq!(c.reg.lam2, 1e-4);
+        assert_eq!(c.p, 4);
+        assert_eq!(c.backend, WorkerBackend::RustDense);
+    }
+
+    #[test]
+    fn toml_rejects_unknown_key() {
+        let mut c = PscopeConfig::default();
+        assert!(c.apply_toml("nope = 1\n").is_err());
+    }
+
+    #[test]
+    fn model_parse() {
+        assert_eq!(Model::parse("lr").unwrap(), Model::Logistic);
+        assert!(Model::parse("svm").is_err());
+    }
+}

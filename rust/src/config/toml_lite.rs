@@ -1,0 +1,142 @@
+//! TOML-subset parser (offline image has no `toml`/`serde`).
+//!
+//! Supported grammar: `key = value` lines, `#` comments, blank lines,
+//! values = quoted strings / numbers / booleans. Sections (`[name]`)
+//! flatten to `name.key`. This covers the experiment configs; anything
+//! fancier is a parse error, not a silent misread.
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Number (int or float).
+    Num(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Value {
+    /// As string or error.
+    pub fn as_str_or(&self) -> Result<&str, crate::error::Error> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(crate::error::Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    /// As f64 or error.
+    pub fn as_f64_or(&self) -> Result<f64, crate::error::Error> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => Err(crate::error::Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    /// As usize or error.
+    pub fn as_usize_or(&self) -> Result<usize, crate::error::Error> {
+        let f = self.as_f64_or()?;
+        if f >= 0.0 && f.fract() == 0.0 {
+            Ok(f as usize)
+        } else {
+            Err(crate::error::Error::Config(format!("expected non-negative integer, got {f}")))
+        }
+    }
+}
+
+/// Parse `text` into ordered `(key, value)` pairs.
+pub fn parse(text: &str) -> Result<Vec<(String, Value)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim();
+        let value = if let Some(s) = v.strip_prefix('"') {
+            let s = s
+                .strip_suffix('"')
+                .ok_or_else(|| format!("line {}: unterminated string", lineno + 1))?;
+            Value::Str(s.to_string())
+        } else if v == "true" {
+            Value::Bool(true)
+        } else if v == "false" {
+            Value::Bool(false)
+        } else {
+            Value::Num(
+                v.parse::<f64>()
+                    .map_err(|e| format!("line {}: bad value {v:?}: {e}", lineno + 1))?,
+            )
+        };
+        out.push((key, value));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honor '#' outside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_kinds() {
+        let t = parse("a = 1\nb = -2.5e3\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(t[0], ("a".into(), Value::Num(1.0)));
+        assert_eq!(t[1], ("b".into(), Value::Num(-2500.0)));
+        assert_eq!(t[2], ("c".into(), Value::Str("hi".into())));
+        assert_eq!(t[3], ("d".into(), Value::Bool(true)));
+    }
+
+    #[test]
+    fn comments_and_sections() {
+        let t = parse("# top\nx = 1 # tail\n[sec]\ny = \"a # not comment\"\n").unwrap();
+        assert_eq!(t[0].0, "x");
+        assert_eq!(t[1].0, "sec.y");
+        assert_eq!(t[1].1, Value::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("a = 'x'\n").is_err());
+        assert!(parse("[open\n").is_err());
+        assert!(parse("s = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Num(3.0).as_usize_or().unwrap(), 3);
+        assert!(Value::Num(3.5).as_usize_or().is_err());
+        assert!(Value::Num(-1.0).as_usize_or().is_err());
+        assert!(Value::Str("x".into()).as_f64_or().is_err());
+        assert_eq!(Value::Str("x".into()).as_str_or().unwrap(), "x");
+    }
+}

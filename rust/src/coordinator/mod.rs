@@ -1,0 +1,478 @@
+//! The CALL coordinator — Algorithm 1 of the paper.
+//!
+//! One master thread and `p` worker threads, wired with byte-metered
+//! channels ([`crate::net`]). Per outer iteration the master
+//!
+//! 1. broadcasts `w_t`,
+//! 2. reduces the shard gradient sums into `z = (1/n) Σᵢ ∇fᵢ(w_t)`,
+//! 3. broadcasts `z`,
+//! 4. averages the returned local iterates into `w_{t+1}`,
+//!
+//! while every worker autonomously runs `M` proximal-SVRG inner steps on
+//! its own shard (no communication inside the epoch — the framework's
+//! communication cost is `O(1)` rounds / `O(p·d)` bytes per epoch).
+//!
+//! The master additionally records a [`Trace`] point per epoch: objective
+//! (evaluated off the clock), compute wall time, modeled network time from
+//! the byte meter, and lazy-engine counters. Early stopping triggers when
+//! the objective gap vs a known reference optimum crosses `cfg.tol`.
+
+pub mod protocol;
+pub mod worker;
+
+use std::path::PathBuf;
+
+use crate::config::{PscopeConfig, WorkerBackend};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::{scale, zero};
+use crate::loss::Objective;
+use crate::metrics::{ThreadCpuTimer, Timer, Trace, TracePoint};
+use crate::net::{sim_channel, ByteMeter, NetModel, SimSender};
+use crate::partition::Partition;
+use crate::rng::Rng;
+use crate::runtime::Manifest;
+
+use protocol::{ToMaster, ToWorker};
+use worker::Worker;
+
+/// Result of a [`train`] run.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    /// Final iterate.
+    pub w: Vec<f64>,
+    /// Per-epoch trace.
+    pub trace: Trace,
+    /// Total communication (bytes, messages).
+    pub comm: (u64, u64),
+    /// Total lazy-engine materializations across workers.
+    pub materializations: u64,
+    /// Epochs actually executed.
+    pub epochs_run: usize,
+}
+
+/// Train with the default artifact directory resolution (only touched when
+/// `cfg.backend == Xla`).
+pub fn train(ds: &Dataset, part: &Partition, cfg: &PscopeConfig) -> TrainOutput {
+    let dir = match cfg.backend {
+        WorkerBackend::Xla => Some(PathBuf::from("artifacts")),
+        _ => None,
+    };
+    train_with(ds, part, cfg, dir, NetModel::ten_gbe()).expect("training failed")
+}
+
+/// Full-control entry point.
+pub fn train_with(
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    artifact_dir: Option<PathBuf>,
+    net: NetModel,
+) -> Result<TrainOutput> {
+    let p = part.p();
+    if p == 0 {
+        return Err(Error::Config("partition has zero workers".into()));
+    }
+    if cfg.backend == WorkerBackend::Xla && artifact_dir.is_none() {
+        return Err(Error::Config("Xla backend requires an artifact dir".into()));
+    }
+    let d = ds.d();
+    let n_total = ds.n();
+    let loss = cfg.model.loss();
+    let obj = Objective::new(ds, loss, cfg.reg);
+    let (mut m_inner, eta) = cfg.resolve(n_total, obj.smoothness());
+    if cfg.backend == WorkerBackend::Xla {
+        // the artifact executes a fixed number of steps per call; round M
+        // up to the step of the artifact the workers will actually pick
+        // (largest shard decides — all shards of a partition use the same
+        // (n_pad, d_pad) class in practice)
+        if let Some(dir) = &artifact_dir {
+            let manifest = Manifest::load(dir.join("manifest.json"))?;
+            let max_shard = part.assignment.iter().map(|a| a.len()).max().unwrap_or(0);
+            if let Some((_, _, step, _)) = worker::select_epoch_artifact(
+                &manifest,
+                loss.name(),
+                max_shard,
+                d,
+            ) {
+                let step = step.max(1);
+                m_inner = m_inner.div_ceil(step) * step;
+            }
+        }
+    }
+
+    let meter = ByteMeter::new();
+    let root_rng = Rng::new(cfg.seed);
+
+    // build channels: one per worker for master->worker, one shared for
+    // worker->master
+    let (to_master_tx, to_master_rx) = sim_channel::<ToMaster>(meter.clone(), 4 * p);
+    let mut to_worker_tx: Vec<SimSender<ToWorker>> = Vec::with_capacity(p);
+    let mut to_worker_rx = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = sim_channel::<ToWorker>(meter.clone(), 4);
+        to_worker_tx.push(tx);
+        to_worker_rx.push(rx);
+    }
+
+    let mut trace = Trace::new("pscope", &ds.name);
+    let mut w = vec![0.0; d];
+    let mut materializations = 0u64;
+    let mut epochs_run = 0usize;
+    // record the starting point
+    trace.push(TracePoint {
+        epoch: 0,
+        wall_s: 0.0,
+        sim_wall_s: 0.0,
+        net_s: 0.0,
+        objective: obj.value(&w),
+        comm_bytes: 0,
+        comm_msgs: 0,
+    });
+
+    crossbeam_utils::thread::scope(|scope| -> Result<()> {
+        // spawn workers
+        let mut handles = Vec::with_capacity(p);
+        for (k, rx) in to_worker_rx.into_iter().enumerate() {
+            let shard = ds.select(&part.assignment[k]);
+            if shard.n() == 0 {
+                return Err(Error::Config(format!("worker {k} got an empty shard")));
+            }
+            let tx = to_master_tx.clone();
+            let rng = root_rng.fork(k as u64 + 1);
+            let rt = artifact_dir.clone();
+            let reg = cfg.reg;
+            let backend = cfg.backend;
+            handles.push(scope.spawn(move |_| -> Result<()> {
+                let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt);
+                let mut z_buf: Vec<f64>;
+                loop {
+                    let msg = rx.recv().map_err(|_| {
+                        Error::Protocol(format!("worker {k}: master channel closed"))
+                    })?;
+                    let (epoch, w_t) = match msg {
+                        ToWorker::Stop => return Ok(()),
+                        ToWorker::Broadcast { epoch, w } => (epoch, w),
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "worker {k}: expected Broadcast, got {other:?}"
+                            )))
+                        }
+                    };
+                    let t = ThreadCpuTimer::start();
+                    let zsum = wk.shard_grad(&w_t)?;
+                    let grad_s = t.elapsed_s();
+                    let count = wk.shard.n();
+                    let m = ToMaster::ShardGrad { worker: k, epoch, zsum, count };
+                    let bytes = m.wire_bytes();
+                    tx.send(m, bytes)
+                        .map_err(|_| Error::Protocol("master gone".into()))?;
+                    match rx.recv() {
+                        Ok(ToWorker::FullGrad { epoch: e2, z }) if e2 == epoch => {
+                            z_buf = z;
+                        }
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "worker {k}: expected FullGrad, got {other:?}"
+                            )))
+                        }
+                    }
+                    let t2 = ThreadCpuTimer::start();
+                    let before = wk.lazy_stats.materializations;
+                    let u = wk.inner_epoch(&w_t, &z_buf, eta, m_inner)?;
+                    let msg = ToMaster::LocalIterate {
+                        worker: k,
+                        epoch,
+                        u,
+                        compute_s: grad_s + t2.elapsed_s(),
+                        materializations: wk.lazy_stats.materializations - before,
+                    };
+                    let bytes = msg.wire_bytes();
+                    tx.send(msg, bytes)
+                        .map_err(|_| Error::Protocol("master gone".into()))?;
+                }
+            }));
+        }
+        drop(to_master_tx);
+
+        // ---- master loop (Algorithm 1, lines 2–8) ----
+        let mut wall_s = 0.0f64;
+        let mut sim_wall_s = 0.0f64;
+        let mut z = vec![0.0; d];
+        let mut u_mean = vec![0.0; d];
+        let result: Result<()> = (|| {
+            for t_epoch in 0..cfg.outer_iters {
+                let timer = Timer::start();
+                for (k, tx) in to_worker_tx.iter().enumerate() {
+                    let msg = ToWorker::Broadcast { epoch: t_epoch, w: w.clone() };
+                    let bytes = msg.wire_bytes();
+                    tx.send(msg, bytes).map_err(|_| {
+                        Error::Protocol(format!("worker {k} died before Broadcast"))
+                    })?;
+                }
+                // reduce shard gradients — buffered per worker and reduced
+                // in worker order so the f64 sum is deterministic regardless
+                // of message arrival order
+                let mut zsums: Vec<Option<(Vec<f64>, usize)>> = vec![None; p];
+                let mut seen = 0usize;
+                while seen < p {
+                    match to_master_rx.recv() {
+                        Ok(ToMaster::ShardGrad { worker, epoch, zsum, count })
+                            if epoch == t_epoch =>
+                        {
+                            zsums[worker] = Some((zsum, count));
+                            seen += 1;
+                        }
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "master: expected ShardGrad({t_epoch}), got {other:?}"
+                            )))
+                        }
+                    }
+                }
+                zero(&mut z);
+                let mut total_count = 0usize;
+                for slot in zsums.iter().flatten() {
+                    crate::linalg::axpy(1.0, &slot.0, &mut z);
+                    total_count += slot.1;
+                }
+                scale(&mut z, 1.0 / total_count as f64);
+                for tx in &to_worker_tx {
+                    let msg = ToWorker::FullGrad { epoch: t_epoch, z: z.clone() };
+                    let bytes = msg.wire_bytes();
+                    tx.send(msg, bytes)
+                        .map_err(|_| Error::Protocol("worker died before FullGrad".into()))?;
+                }
+                // collect local iterates (same deterministic-order reduce)
+                let mut us: Vec<Option<Vec<f64>>> = vec![None; p];
+                let mut seen = 0usize;
+                let mut max_worker_s = 0.0f64;
+                while seen < p {
+                    match to_master_rx.recv() {
+                        Ok(ToMaster::LocalIterate {
+                            worker,
+                            epoch,
+                            u,
+                            materializations: mat,
+                            compute_s,
+                        }) if epoch == t_epoch => {
+                            us[worker] = Some(u);
+                            materializations += mat;
+                            max_worker_s = max_worker_s.max(compute_s);
+                            seen += 1;
+                        }
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "master: expected LocalIterate({t_epoch}), got {other:?}"
+                            )))
+                        }
+                    }
+                }
+                let t_master = Timer::start();
+                zero(&mut u_mean);
+                for u in us.iter().flatten() {
+                    crate::linalg::axpy(1.0, u, &mut u_mean);
+                }
+                scale(&mut u_mean, 1.0 / p as f64);
+                w.copy_from_slice(&u_mean);
+                let epoch_wall = timer.elapsed_s();
+                wall_s += epoch_wall;
+                // cluster-equivalent epoch time: slowest worker + master
+                // reduction work (workers time-share this 1-core box, so the
+                // measured epoch_wall is ~sum over workers, not max)
+                sim_wall_s += max_worker_s + t_master.elapsed_s();
+                epochs_run = t_epoch + 1;
+
+                // telemetry (off the clock)
+                if t_epoch % cfg.record_every == 0 || t_epoch + 1 == cfg.outer_iters {
+                    let (bytes, msgs) = meter.snapshot();
+                    let objective = obj.value(&w);
+                    trace.push(TracePoint {
+                        epoch: t_epoch + 1,
+                        wall_s,
+                        sim_wall_s,
+                        net_s: net.wire_time(bytes, msgs),
+                        objective,
+                        comm_bytes: bytes,
+                        comm_msgs: msgs,
+                    });
+                    if cfg.target_objective.is_finite()
+                        && objective - cfg.target_objective <= cfg.tol
+                    {
+                        break;
+                    }
+                }
+            }
+            Ok(())
+        })();
+        for tx in &to_worker_tx {
+            let _ = tx.send(ToWorker::Stop, ToWorker::Stop.wire_bytes());
+        }
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => return Err(Error::Protocol("worker panicked".into())),
+            }
+        }
+        result
+    })
+    .map_err(|_| Error::Protocol("scope panicked".into()))??;
+
+    let comm = meter.snapshot();
+    Ok(TrainOutput {
+        w,
+        trace,
+        comm,
+        materializations,
+        epochs_run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Model;
+    use crate::data::synth;
+    use crate::optim::fista::reference_optimum;
+    use crate::partition::Partitioner;
+
+    fn run(cfg: &PscopeConfig, seed: u64) -> (Dataset, TrainOutput) {
+        let ds = synth::tiny(seed).generate();
+        // note: tests use well-conditioned reg (1e-3) so convergence is
+        // fast; the paper's Table-1 lambdas make sense at full dataset scale
+
+        let part = Partitioner::Uniform.split(&ds, cfg.p, 3);
+        let out = train_with(&ds, &part, cfg, None, NetModel::ten_gbe()).unwrap();
+        (ds, out)
+    }
+
+    #[test]
+    fn converges_on_tiny_problem() {
+        let cfg = PscopeConfig {
+            p: 4,
+            outer_iters: 60,
+            reg: crate::loss::Reg { lam1: 1e-3, lam2: 1e-3 },
+            ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+        };
+        let (ds, out) = run(&cfg, 101);
+        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+        let opt = reference_optimum(&obj, 20_000);
+        let gap = out.trace.last_objective() - opt.objective;
+        assert!(gap >= -1e-10, "gap below reference: {gap}");
+        assert!(gap < 1e-5, "did not converge, gap {gap}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = PscopeConfig {
+            p: 3,
+            outer_iters: 5,
+            ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+        };
+        let (_, a) = run(&cfg, 102);
+        let (_, b) = run(&cfg, 102);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.comm, b.comm);
+    }
+
+    #[test]
+    fn comm_is_constant_per_epoch() {
+        let mut cfg = PscopeConfig {
+            p: 4,
+            outer_iters: 4,
+            ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+        };
+        let (_, out4) = run(&cfg, 103);
+        cfg.outer_iters = 8;
+        let (_, out8) = run(&cfg, 103);
+        // bytes scale linearly with epochs (4 messages * p * d per epoch)
+        let per4 = out4.comm.0 as f64 / 4.0;
+        let per8 = out8.comm.0 as f64 / 8.0;
+        assert!(
+            ((per4 - per8) / per4).abs() < 0.05,
+            "per-epoch bytes differ: {per4} vs {per8}"
+        );
+    }
+
+    #[test]
+    fn p1_degenerates_to_serial_prox_svrg() {
+        // Corollary 2: with p = 1 the method is exactly prox-SVRG.
+        let ds = synth::tiny(104).generate();
+        let cfg = PscopeConfig {
+            p: 1,
+            outer_iters: 3,
+            m_inner: 50,
+            eta: 0.05,
+            ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+        };
+        let part = Partitioner::Uniform.split(&ds, 1, 0);
+        let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+        // replicate manually
+        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+        let mut w = vec![0.0; ds.d()];
+        let root = Rng::new(cfg.seed);
+        let mut rng = root.fork(1);
+        for _ in 0..3 {
+            let z = obj.data_grad(&w);
+            w = crate::optim::lazy::lazy_inner_epoch(
+                &ds, cfg.model.loss(), &w, &z, 0.05, cfg.reg.lam1, cfg.reg.lam2, 50,
+                &mut rng, &mut Default::default(),
+            );
+        }
+        for j in 0..ds.d() {
+            assert!((w[j] - out.w[j]).abs() < 1e-12, "coord {j}");
+        }
+    }
+
+    #[test]
+    fn early_stop_honors_target() {
+        let ds = synth::tiny(105).generate();
+        let reg = crate::loss::Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+        let opt = reference_optimum(&obj, 20_000);
+        let cfg = PscopeConfig {
+            p: 2,
+            outer_iters: 100,
+            tol: 1e-3,
+            target_objective: opt.objective,
+            reg,
+            ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+        };
+        let part = Partitioner::Uniform.split(&ds, 2, 3);
+        let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+        assert!(out.epochs_run < 100, "no early stop: {}", out.epochs_run);
+    }
+
+    #[test]
+    fn replicated_partition_trains_too() {
+        let ds = synth::tiny(106).generate();
+        let cfg = PscopeConfig {
+            p: 3,
+            outer_iters: 10,
+            ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+        };
+        let part = Partitioner::Replicated.split(&ds, 3, 0);
+        let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+        assert!(out.trace.last_objective() < obj.value(&vec![0.0; ds.d()]));
+    }
+
+    #[test]
+    fn lasso_model_runs() {
+        let ds = synth::tiny(107)
+            .with_task(crate::data::synth::Task::Regression)
+            .generate();
+        let cfg = PscopeConfig {
+            p: 4,
+            outer_iters: 50,
+            reg: crate::loss::Reg { lam1: 1e-3, lam2: 1e-3 },
+            ..PscopeConfig::for_dataset("tiny", Model::Lasso)
+        };
+        let part = Partitioner::Uniform.split(&ds, 4, 1);
+        let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+        let opt = reference_optimum(&obj, 20_000);
+        let gap = out.trace.last_objective() - opt.objective;
+        assert!(gap < 1e-5, "lasso gap {gap}");
+    }
+}

@@ -1,0 +1,314 @@
+//! Worker side of the CALL framework (Algorithm 1, lines 9–20).
+//!
+//! A worker owns its shard and runs one of three interchangeable compute
+//! backends:
+//!
+//! * [`WorkerBackend::RustSparse`] — the §6 lazy recovery-rule engine
+//!   (production path for high-dimensional sparse data);
+//! * [`WorkerBackend::RustDense`] — the naive dense engine (reference,
+//!   and competitive when `nnz ≈ d`);
+//! * [`WorkerBackend::Xla`] — the AOT-compiled JAX/Pallas artifacts via
+//!   PJRT (dense shards; pads the shard into the artifact's static shape
+//!   and chains `inner_epoch` calls to reach the configured `M`).
+//!
+//! All three consume the identical RNG stream (one `below(n)` per inner
+//! step), so backend choice changes *performance*, not the trajectory
+//! (up to f32/f64 precision on the XLA path — bounded in integration
+//! tests).
+
+use std::path::PathBuf;
+
+use crate::config::WorkerBackend;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::loss::{Loss, Reg};
+use crate::optim::lazy::{lazy_inner_epoch, LazyStats};
+use crate::optim::svrg::dense_inner_epoch;
+use crate::rng::Rng;
+use crate::runtime::{Input, XlaRuntime};
+
+/// Worker state (one per thread).
+pub struct Worker {
+    /// Worker id.
+    pub id: usize,
+    /// Owned shard.
+    pub shard: Dataset,
+    /// Loss flavor.
+    pub loss: Loss,
+    /// Regularization.
+    pub reg: Reg,
+    /// Backend.
+    pub backend: WorkerBackend,
+    /// Worker-local RNG (forked from the master seed per worker).
+    pub rng: Rng,
+    /// Lazy-engine counters (RustSparse only).
+    pub lazy_stats: LazyStats,
+    /// Artifact directory (Xla backend only). The PJRT client is created
+    /// lazily *inside* the worker thread: the xla crate's client/executable
+    /// handles are not Send, so every worker owns a private runtime.
+    pub artifact_dir: Option<PathBuf>,
+    runtime: Option<XlaRuntime>,
+    /// Cached padded dense shard (built on first Xla use).
+    xla_cache: Option<XlaShard>,
+}
+
+/// Padded dense copy of the shard matched to one artifact config.
+struct XlaShard {
+    n_pad: usize,
+    d_pad: usize,
+    m_step: usize,
+    x_dense: Vec<f32>,
+    y_pad: Vec<f32>,
+    grad_prog: String,
+    epoch_prog: String,
+}
+
+/// Pick the smallest inner-epoch artifact config that fits an `n x d`
+/// shard; returns `(n_pad, d_pad, m_step, program_name)`. Shared by the
+/// worker (artifact choice) and the driver (M rounding) so both agree.
+pub fn select_epoch_artifact(
+    manifest: &crate::runtime::Manifest,
+    model: &str,
+    n: usize,
+    d: usize,
+) -> Option<(usize, usize, usize, String)> {
+    let mut candidates: Vec<(usize, usize, usize, String)> = manifest
+        .programs()
+        .iter()
+        .filter(|p| p.kind == "inner_epoch" && p.model == model)
+        .map(|p| (p.n, p.d, p.m_inner, p.name.clone()))
+        .filter(|&(pn, pd, _, _)| pn >= n && pd >= d)
+        .collect();
+    candidates.sort();
+    candidates.into_iter().next()
+}
+
+impl Worker {
+    /// Create a worker over `shard`.
+    pub fn new(
+        id: usize,
+        shard: Dataset,
+        loss: Loss,
+        reg: Reg,
+        backend: WorkerBackend,
+        rng: Rng,
+        artifact_dir: Option<PathBuf>,
+    ) -> Self {
+        Worker {
+            id,
+            shard,
+            loss,
+            reg,
+            backend,
+            rng,
+            lazy_stats: LazyStats::default(),
+            artifact_dir,
+            runtime: None,
+            xla_cache: None,
+        }
+    }
+
+    /// Shard gradient sum `Σ_{i∈D_k} h'(xᵢᵀw) xᵢ` (Algorithm 1 line 12).
+    pub fn shard_grad(&mut self, w: &[f64]) -> Result<Vec<f64>> {
+        match self.backend {
+            WorkerBackend::RustSparse | WorkerBackend::RustDense => {
+                let obj = crate::loss::Objective::new(&self.shard, self.loss, self.reg);
+                Ok(obj.shard_grad_sum(w))
+            }
+            WorkerBackend::Xla => self.xla_shard_grad(w),
+        }
+    }
+
+    /// Run the inner epoch (Algorithm 1 lines 14–18): `m` prox-SVRG steps
+    /// from `w_t` with full data gradient `z`; returns `u_{k,M}`.
+    pub fn inner_epoch(
+        &mut self,
+        w_t: &[f64],
+        z: &[f64],
+        eta: f64,
+        m: usize,
+    ) -> Result<Vec<f64>> {
+        match self.backend {
+            WorkerBackend::RustSparse => Ok(lazy_inner_epoch(
+                &self.shard,
+                self.loss,
+                w_t,
+                z,
+                eta,
+                self.reg.lam1,
+                self.reg.lam2,
+                m,
+                &mut self.rng,
+                &mut self.lazy_stats,
+            )),
+            WorkerBackend::RustDense => Ok(dense_inner_epoch(
+                &self.shard,
+                self.loss,
+                w_t,
+                z,
+                eta,
+                self.reg.lam1,
+                self.reg.lam2,
+                m,
+                &mut self.rng,
+            )),
+            WorkerBackend::Xla => self.xla_inner_epoch(w_t, z, eta, m),
+        }
+    }
+
+    // ---- XLA backend ----------------------------------------------------
+
+    fn ensure_xla_shard(&mut self) -> Result<()> {
+        if self.xla_cache.is_some() {
+            return Ok(());
+        }
+        if self.runtime.is_none() {
+            let dir = self
+                .artifact_dir
+                .as_ref()
+                .ok_or_else(|| Error::Runtime("Xla backend needs an artifact dir".into()))?;
+            self.runtime = Some(XlaRuntime::open(dir)?);
+        }
+        let rt = self.runtime.as_ref().unwrap();
+        let (n, d) = (self.shard.n(), self.shard.d());
+        let model = self.loss.name();
+        let (n_pad, d_pad, m_step, epoch_prog) =
+            select_epoch_artifact(rt.manifest(), model, n, d).ok_or_else(|| {
+                Error::Manifest(format!(
+                    "no inner_epoch artifact fits shard {n}x{d} for model {model}; \
+                     regenerate artifacts with larger shapes"
+                ))
+            })?;
+        let grad_prog = rt
+            .manifest()
+            .find("shard_grad", model, n_pad, d_pad)
+            .map(|p| p.name.clone())
+            .ok_or_else(|| {
+                Error::Manifest(format!("no shard_grad artifact for {n_pad}x{d_pad}"))
+            })?;
+        let rows: Vec<usize> = (0..n).collect();
+        let x_dense = self.shard.x.to_dense_f32(&rows, d_pad);
+        let mut x_pad = vec![0f32; n_pad * d_pad];
+        x_pad[..x_dense.len()].copy_from_slice(&x_dense);
+        let mut y_pad = vec![0f32; n_pad];
+        for i in 0..n {
+            y_pad[i] = self.shard.y[i] as f32;
+        }
+        // padded rows are all-zero: they contribute h'(0; y)·0 = 0 to the
+        // gradient and are never sampled (idx is drawn from [0, n)).
+        self.xla_cache = Some(XlaShard {
+            n_pad,
+            d_pad,
+            m_step,
+            x_dense: x_pad,
+            y_pad,
+            grad_prog,
+            epoch_prog,
+        });
+        Ok(())
+    }
+
+    fn xla_shard_grad(&mut self, w: &[f64]) -> Result<Vec<f64>> {
+        self.ensure_xla_shard()?;
+        let rt = self.runtime.as_ref().unwrap();
+        let cache = self.xla_cache.as_ref().unwrap();
+        let d = self.shard.d();
+        let mut w32 = vec![0f32; cache.d_pad];
+        for j in 0..d {
+            w32[j] = w[j] as f32;
+        }
+        let outs = rt.execute(
+            &cache.grad_prog,
+            &[
+                Input::F32(&cache.x_dense, &[cache.n_pad, cache.d_pad]),
+                Input::F32(&cache.y_pad, &[cache.n_pad]),
+                Input::F32(&w32, &[cache.d_pad]),
+            ],
+        )?;
+        Ok(outs[0][..d].iter().map(|&v| v as f64).collect())
+    }
+
+    fn xla_inner_epoch(&mut self, w_t: &[f64], z: &[f64], eta: f64, m: usize) -> Result<Vec<f64>> {
+        self.ensure_xla_shard()?;
+        let cache = self.xla_cache.take().unwrap();
+        let d = self.shard.d();
+        let n = self.shard.n();
+        let mut w32 = vec![0f32; cache.d_pad];
+        let mut z32 = vec![0f32; cache.d_pad];
+        for j in 0..d {
+            w32[j] = w_t[j] as f32;
+            z32[j] = z[j] as f32;
+        }
+        let scal = [eta as f32, self.reg.lam1 as f32, self.reg.lam2 as f32];
+        if m % cache.m_step != 0 {
+            return Err(Error::Runtime(format!(
+                "m_inner {} must be a multiple of the artifact step {} for the Xla backend \
+                 (the driver rounds M up automatically)",
+                m, cache.m_step
+            )));
+        }
+        let mut u32 = w32.clone();
+        let mut done = 0usize;
+        // pre-sample the whole index stream (keeps the rng/runtime borrows
+        // disjoint and preserves the one-below(n)-per-step stream contract)
+        let total_idx: Vec<i32> = (0..m).map(|_| self.rng.below(n) as i32).collect();
+        let rt = self.runtime.as_ref().unwrap();
+        while done < m {
+            // chain fixed-M artifact calls: u0 of call j+1 = output of call j
+            let idx = &total_idx[done..done + cache.m_step];
+            let outs = rt.execute(
+                &cache.epoch_prog,
+                &[
+                    Input::F32(&cache.x_dense, &[cache.n_pad, cache.d_pad]),
+                    Input::F32(&cache.y_pad, &[cache.n_pad]),
+                    Input::F32(&w32, &[cache.d_pad]),
+                    Input::F32(&u32, &[cache.d_pad]),
+                    Input::F32(&z32, &[cache.d_pad]),
+                    Input::I32(idx, &[cache.m_step]),
+                    Input::F32(&scal, &[3]),
+                ],
+            )?;
+            u32 = outs[0].clone();
+            done += cache.m_step;
+        }
+        self.xla_cache = Some(cache);
+        Ok(u32[..d].iter().map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn rust_backends_agree() {
+        let ds = synth::tiny(91).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = crate::loss::Objective::new(&ds, Loss::Logistic, reg);
+        let w = vec![0.02; ds.d()];
+        let z = obj.data_grad(&w);
+        let eta = 0.2 / obj.smoothness();
+        let mk = |backend| {
+            Worker::new(0, ds.clone(), Loss::Logistic, reg, backend, Rng::new(7), None)
+        };
+        let mut sparse = mk(WorkerBackend::RustSparse);
+        let mut dense = mk(WorkerBackend::RustDense);
+        let us = sparse.inner_epoch(&w, &z, eta, 400).unwrap();
+        let ud = dense.inner_epoch(&w, &z, eta, 400).unwrap();
+        for j in 0..ds.d() {
+            assert!((us[j] - ud[j]).abs() < 1e-9, "coord {j}");
+        }
+        let gs = sparse.shard_grad(&w).unwrap();
+        let gd = dense.shard_grad(&w).unwrap();
+        assert_eq!(gs, gd);
+    }
+
+    #[test]
+    fn xla_backend_requires_runtime() {
+        let ds = synth::tiny(92).generate();
+        let reg = Reg { lam1: 0.0, lam2: 1e-3 };
+        let mut w = Worker::new(0, ds, Loss::Logistic, reg, WorkerBackend::Xla, Rng::new(1), None);
+        assert!(w.shard_grad(&vec![0.0; 50]).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! LibSVM text format I/O.
+//!
+//! The paper's datasets are distributed in this format; when the real files
+//! are available they drop in via [`read_file`] and every experiment runs
+//! unchanged (the bench harness looks for `data/<name>.libsvm` before
+//! falling back to the synthetic generator).
+//!
+//! Format: one instance per line, `label idx:val idx:val ...` with 1-based
+//! feature indices (0-based also accepted); `#` starts a comment.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::CsrMatrix;
+
+/// Parse LibSVM text from a reader. `d_hint` pre-sets the feature count
+/// (0 = infer from the max index seen).
+pub fn read<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset> {
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|e| Error::Data(format!("line {}: bad label: {e}", lineno + 1)))?;
+        let mut row: Vec<(u32, f64)> = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| Error::Data(format!("line {}: bad pair {tok:?}", lineno + 1)))?;
+            let idx: i64 = i
+                .parse()
+                .map_err(|e| Error::Data(format!("line {}: bad index: {e}", lineno + 1)))?;
+            let val: f64 = v
+                .parse()
+                .map_err(|e| Error::Data(format!("line {}: bad value: {e}", lineno + 1)))?;
+            if idx < 0 {
+                return Err(Error::Data(format!("line {}: negative index", lineno + 1)));
+            }
+            // LibSVM is 1-based; tolerate 0-based by shifting only when a 0
+            // index never appears (resolved after the parse).
+            row.push((idx as u32, val));
+        }
+        row.sort_unstable_by_key(|&(j, _)| j);
+        for w in row.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::Data(format!(
+                    "line {}: duplicate index {}",
+                    lineno + 1,
+                    w[0].0
+                )));
+            }
+        }
+        if let Some(&(j, _)) = row.last() {
+            max_col = max_col.max(j as usize);
+        }
+        rows.push(row);
+        y.push(label);
+    }
+    let has_zero = rows.iter().flatten().any(|&(j, _)| j == 0);
+    if !has_zero {
+        // 1-based file: shift down
+        for row in rows.iter_mut() {
+            for e in row.iter_mut() {
+                e.0 -= 1;
+            }
+        }
+        max_col = max_col.saturating_sub(1);
+    }
+    let d = if d_hint > 0 { d_hint.max(max_col + 1) } else { max_col + 1 };
+    Ok(Dataset {
+        name: name.to_string(),
+        x: CsrMatrix::from_rows(d, &rows),
+        y,
+    })
+}
+
+/// Read a LibSVM file from disk.
+pub fn read_file<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset> {
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    let f = std::fs::File::open(path)?;
+    read(BufReader::new(f), &name, d_hint)
+}
+
+/// Write a dataset in LibSVM format (1-based indices).
+pub fn write<W: Write>(ds: &Dataset, mut w: W) -> Result<()> {
+    for i in 0..ds.n() {
+        let row = ds.x.row(i);
+        write!(w, "{}", ds.y[i])?;
+        for k in 0..row.nnz() {
+            write!(w, " {}:{}", row.idx[k] + 1, row.val[k])?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_one_based() {
+        let text = "1 1:0.5 3:1.5\n-1 2:2.0\n";
+        let ds = read(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.row(0).idx, &[0, 2]);
+        assert_eq!(ds.x.row(1).val, &[2.0]);
+    }
+
+    #[test]
+    fn parse_zero_based() {
+        let text = "1 0:0.5 2:1.5\n";
+        let ds = read(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.x.row(0).idx, &[0, 2]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let text = "# header\n1 1:1.0\n\n-1 1:2.0 # trailing\n";
+        let ds = read(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn unsorted_indices_accepted() {
+        let text = "1 3:3.0 1:1.0\n";
+        let ds = read(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!(ds.x.row(0).idx, &[0, 2]);
+        assert_eq!(ds.x.row(0).val, &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn duplicate_index_rejected() {
+        let text = "1 1:1.0 1:2.0\n";
+        assert!(read(Cursor::new(text), "t", 0).is_err());
+    }
+
+    #[test]
+    fn bad_tokens_rejected() {
+        assert!(read(Cursor::new("x 1:1.0\n"), "t", 0).is_err());
+        assert!(read(Cursor::new("1 1-1.0\n"), "t", 0).is_err());
+        assert!(read(Cursor::new("1 a:1.0\n"), "t", 0).is_err());
+    }
+
+    #[test]
+    fn d_hint_expands() {
+        let ds = read(Cursor::new("1 1:1.0\n"), "t", 10).unwrap();
+        assert_eq!(ds.d(), 10);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = crate::data::synth::tiny(1).generate();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = read(Cursor::new(buf), "tiny", ds.d()).unwrap();
+        assert_eq!(ds.n(), ds2.n());
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x.indices, ds2.x.indices);
+        for (a, b) in ds.x.values.iter().zip(&ds2.x.values) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Dataset substrate: containers, synthetic generators, LibSVM I/O, stats.
+
+pub mod libsvm;
+pub mod stats;
+pub mod synth;
+
+use crate::linalg::CsrMatrix;
+
+/// A supervised learning dataset: sparse design matrix + targets.
+///
+/// Labels are `±1` for classification (logistic) and real-valued for
+/// regression (lasso); both live in `y: Vec<f64>`.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Human-readable name (used in traces, configs, bench tables).
+    pub name: String,
+    /// `n x d` design matrix in CSR.
+    pub x: CsrMatrix,
+    /// Targets, length `n`.
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    /// Number of instances.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.x.nrows
+    }
+
+    /// Number of features.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.x.ncols
+    }
+
+    /// Stored non-zeros in the design matrix.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Restrict to a subset of instances (shard extraction for workers).
+    pub fn select(&self, rows: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Basic consistency check (lengths line up, labels finite).
+    pub fn validate(&self) -> crate::error::Result<()> {
+        if self.y.len() != self.x.nrows {
+            return Err(crate::error::Error::Data(format!(
+                "y has {} entries but X has {} rows",
+                self.y.len(),
+                self.x.nrows
+            )));
+        }
+        if self.y.iter().any(|v| !v.is_finite()) {
+            return Err(crate::error::Error::Data("non-finite label".into()));
+        }
+        if self.x.values.iter().any(|v| !v.is_finite()) {
+            return Err(crate::error::Error::Data("non-finite feature".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CsrMatrix;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            x: CsrMatrix::from_rows(2, &[vec![(0, 1.0)], vec![(1, 2.0)], vec![(0, 3.0)]]),
+            y: vec![1.0, -1.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.d(), 2);
+        assert_eq!(d.nnz(), 3);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn select_subset() {
+        let d = tiny();
+        let s = d.select(&[2, 0]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.y, vec![1.0, 1.0]);
+        assert_eq!(s.x.row(0).val, &[3.0]);
+    }
+
+    #[test]
+    fn validate_catches_len_mismatch() {
+        let mut d = tiny();
+        d.y.pop();
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nan() {
+        let mut d = tiny();
+        d.y[0] = f64::NAN;
+        assert!(d.validate().is_err());
+    }
+}

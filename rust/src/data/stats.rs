@@ -1,0 +1,89 @@
+//! Dataset statistics — printed by `pscope info` and recorded in traces so
+//! every experiment documents the data it actually ran on.
+
+use super::Dataset;
+
+/// Summary statistics of a dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    /// Instances.
+    pub n: usize,
+    /// Features.
+    pub d: usize,
+    /// Total stored non-zeros.
+    pub nnz: usize,
+    /// nnz / (n*d).
+    pub density: f64,
+    /// Mean non-zeros per row.
+    pub nnz_per_row: f64,
+    /// Max squared row norm (enters the smoothness constant L).
+    pub max_row_nrm2_sq: f64,
+    /// Fraction of positive labels (classification) / NaN for regression-ish.
+    pub pos_fraction: f64,
+    /// Fraction of features that never appear.
+    pub empty_feature_fraction: f64,
+}
+
+/// Compute [`DatasetStats`].
+pub fn compute(ds: &Dataset) -> DatasetStats {
+    let n = ds.n();
+    let d = ds.d();
+    let nnz = ds.nnz();
+    let mut seen = vec![false; d];
+    for &j in &ds.x.indices {
+        seen[j as usize] = true;
+    }
+    let used = seen.iter().filter(|&&b| b).count();
+    let pos = ds.y.iter().filter(|&&v| v > 0.0).count();
+    let looks_binary = ds.y.iter().all(|&v| v == 1.0 || v == -1.0);
+    DatasetStats {
+        n,
+        d,
+        nnz,
+        density: if n * d > 0 { nnz as f64 / (n as f64 * d as f64) } else { 0.0 },
+        nnz_per_row: if n > 0 { nnz as f64 / n as f64 } else { 0.0 },
+        max_row_nrm2_sq: ds.x.max_row_nrm2_sq(),
+        pos_fraction: if looks_binary { pos as f64 / n.max(1) as f64 } else { f64::NAN },
+        empty_feature_fraction: if d > 0 { 1.0 - used as f64 / d as f64 } else { 0.0 },
+    }
+}
+
+impl std::fmt::Display for DatasetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "n                 {}", self.n)?;
+        writeln!(f, "d                 {}", self.d)?;
+        writeln!(f, "nnz               {}", self.nnz)?;
+        writeln!(f, "density           {:.3e}", self.density)?;
+        writeln!(f, "nnz/row           {:.2}", self.nnz_per_row)?;
+        writeln!(f, "max ||x||^2       {:.4}", self.max_row_nrm2_sq)?;
+        if !self.pos_fraction.is_nan() {
+            writeln!(f, "positive fraction {:.3}", self.pos_fraction)?;
+        }
+        write!(f, "empty features    {:.3}", self.empty_feature_fraction)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn stats_of_tiny() {
+        let ds = synth::tiny(1).generate();
+        let s = compute(&ds);
+        assert_eq!(s.n, 200);
+        assert_eq!(s.d, 50);
+        assert!(s.density > 0.0 && s.density < 1.0);
+        assert!(s.nnz_per_row > 1.0);
+        assert!(s.pos_fraction > 0.2 && s.pos_fraction < 0.8);
+        assert!(s.max_row_nrm2_sq > 0.0);
+    }
+
+    #[test]
+    fn display_renders() {
+        let ds = synth::tiny(1).generate();
+        let s = format!("{}", compute(&ds));
+        assert!(s.contains("density"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the pSCOPE library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Runtime/PJRT layer failure (artifact loading, compilation, execution).
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Artifact manifest problems (missing program, shape mismatch, parse).
+    #[error("manifest: {0}")]
+    Manifest(String),
+    /// Dataset parsing / generation problems.
+    #[error("data: {0}")]
+    Data(String),
+    /// Configuration file / CLI problems.
+    #[error("config: {0}")]
+    Config(String),
+    /// Coordinator protocol violation (unexpected message, dead worker).
+    #[error("protocol: {0}")]
+    Protocol(String),
+    /// Underlying I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}

@@ -1,0 +1,71 @@
+//! # pSCOPE — Proximal SCOPE for distributed sparse learning
+//!
+//! A production-grade reproduction of *"Proximal SCOPE for Distributed
+//! Sparse Learning: Better Data Partition Implies Faster Convergence Rate"*
+//! (Zhao, Zhang, Li, Li — NeurIPS 2018).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack
+//! (see `DESIGN.md`):
+//!
+//! * [`coordinator`] — the paper's CALL (cooperative autonomous local
+//!   learning) runtime: one master, `p` workers, bulk-synchronous outer
+//!   epochs (Algorithm 1), byte-accounted communication.
+//! * [`optim`] — the proximal-SVRG inner engine, including the §6 *recovery
+//!   rules* (lazy sparse updates, Lemma 11) that make each inner step cost
+//!   `O(nnz(x_i))` instead of `O(d)`, plus every serial solver the baselines
+//!   need (FISTA, OWL-QN, SGD, CD, SDCA, ADMM).
+//! * [`partition`] — partition strategies (π*, uniform π₁, skewed π₂/π₃,
+//!   feature partitions) and the **partition-goodness analyzer** that
+//!   measures the paper's local–global gap `l_π(a)` and goodness constant
+//!   `γ(π; ε)` (Definitions 4–5).
+//! * [`baselines`] — the six §7.1 comparison systems (dist-FISTA,
+//!   dist-mOWL-QN, DFAL, AsyProx-SVRG, ProxCOCOA+, DBCD) behind one trait.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas HLO
+//!   artifacts (`artifacts/*.hlo.txt`) and runs them on the worker hot path
+//!   for dense shards. Python never executes at train time.
+//! * [`data`], [`linalg`], [`loss`], [`net`], [`metrics`], [`config`] —
+//!   substrates: synthetic dataset generators matched to the paper's four
+//!   LibSVM datasets, CSR/CSC sparse algebra, loss models, the simulated
+//!   cluster interconnect, experiment telemetry, and the config system.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pscope::prelude::*;
+//!
+//! let ds = pscope::data::synth::rcv1_like(42).generate();
+//! let part = Partitioner::Uniform.split(&ds, 8, 7);
+//! let cfg = PscopeConfig::for_dataset("rcv1_like", Model::Logistic);
+//! let out = pscope::coordinator::train(&ds, &part, &cfg);
+//! println!("final objective {:.6e}", out.trace.last_objective());
+//! ```
+#![warn(missing_docs)]
+
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod json;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod net;
+pub mod optim;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{Model, PscopeConfig};
+    pub use crate::coordinator::{train, TrainOutput};
+    pub use crate::data::{synth::SynthSpec, Dataset};
+    pub use crate::loss::Objective;
+    pub use crate::metrics::Trace;
+    pub use crate::partition::{Partition, Partitioner};
+    pub use crate::rng::Rng;
+}

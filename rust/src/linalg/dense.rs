@@ -1,0 +1,126 @@
+//! Dense vector kernels used on the coordinator hot path.
+//!
+//! Free functions over slices, written so LLVM auto-vectorizes them (plain
+//! indexed loops over equal-length slices, no iterator chains in the hot
+//! ones). These carry the master-side O(d) work: averaging local iterates,
+//! gradient reductions, objective evaluation.
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// L2 norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    nrm2_sq(x).sqrt()
+}
+
+/// L1 norm.
+#[inline]
+pub fn nrm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// `x *= a` in place.
+#[inline]
+pub fn scale(x: &mut [f64], a: f64) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Euclidean distance squared.
+#[inline]
+pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Zero-fill.
+#[inline]
+pub fn zero(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Elementwise mean of `p` equal-length vectors into `out`.
+pub fn mean_into(vs: &[Vec<f64>], out: &mut [f64]) {
+    assert!(!vs.is_empty());
+    zero(out);
+    for v in vs {
+        axpy(1.0, v, out);
+    }
+    scale(out, 1.0 / vs.len() as f64);
+}
+
+/// Number of non-zero entries (exact zero test — used for sparsity reports).
+#[inline]
+pub fn nnz(x: &[f64]) -> usize {
+    x.iter().filter(|v| **v != 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot_roundtrip() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![4.0, 5.0, 6.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![6.0, 9.0, 12.0]);
+        assert_eq!(dot(&x, &y), 6.0 + 18.0 + 36.0);
+    }
+
+    #[test]
+    fn norms() {
+        let x = vec![3.0, -4.0];
+        assert_eq!(nrm2(&x), 5.0);
+        assert_eq!(nrm1(&x), 7.0);
+        assert_eq!(nrm2_sq(&x), 25.0);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let vs = vec![vec![1.0, 0.0], vec![3.0, 2.0]];
+        let mut out = vec![0.0; 2];
+        mean_into(&vs, &mut out);
+        assert_eq!(out, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn dist_and_nnz() {
+        let x = vec![1.0, 0.0, 2.0];
+        let y = vec![0.0, 0.0, 0.0];
+        assert_eq!(dist_sq(&x, &y), 5.0);
+        assert_eq!(nnz(&x), 2);
+    }
+}

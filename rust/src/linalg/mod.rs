@@ -1,0 +1,14 @@
+//! Sparse / dense linear-algebra substrate.
+//!
+//! Everything the engine touches is `f64` — the rust reference/production
+//! path keeps full precision so benchmark suboptimality gaps down to 1e-12
+//! are meaningful; conversion to `f32` happens only at the PJRT artifact
+//! boundary ([`crate::runtime`]).
+
+pub mod dense;
+pub mod prox;
+pub mod sparse;
+
+pub use dense::*;
+pub use prox::*;
+pub use sparse::{CscMatrix, CsrMatrix, SparseRow};

@@ -1,0 +1,350 @@
+//! Compressed sparse row / column matrices.
+//!
+//! [`CsrMatrix`] is the instance-major layout every worker holds (rows =
+//! training instances); [`CscMatrix`] is the feature-major layout the
+//! coordinate-distributed baselines (DBCD, ProxCOCOA+) need. Both are
+//! immutable after construction — training never mutates data, only
+//! parameter vectors.
+
+/// A borrowed view of one sparse row: parallel `(indices, values)` slices.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseRow<'a> {
+    /// Column indices (strictly increasing).
+    pub idx: &'a [u32],
+    /// Corresponding values.
+    pub val: &'a [f64],
+}
+
+impl<'a> SparseRow<'a> {
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Sparse dot with a dense vector.
+    #[inline]
+    pub fn dot(&self, w: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for k in 0..self.idx.len() {
+            s += self.val[k] * w[self.idx[k] as usize];
+        }
+        s
+    }
+
+    /// `w[idx] += a * val` scatter-add.
+    #[inline]
+    pub fn axpy_into(&self, a: f64, w: &mut [f64]) {
+        for k in 0..self.idx.len() {
+            w[self.idx[k] as usize] += a * self.val[k];
+        }
+    }
+
+    /// Squared L2 norm of the row.
+    #[inline]
+    pub fn nrm2_sq(&self) -> f64 {
+        self.val.iter().map(|v| v * v).sum()
+    }
+}
+
+/// Compressed sparse row matrix (instances x features).
+#[derive(Clone, Debug, Default)]
+pub struct CsrMatrix {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row pointers, length `nrows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, length `nnz`.
+    pub indices: Vec<u32>,
+    /// Values, length `nnz`.
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row `(index, value)` lists. Each row's indices must be
+    /// strictly increasing; values of exact 0.0 are dropped.
+    pub fn from_rows(ncols: usize, rows: &[Vec<(u32, f64)>]) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in rows {
+            let mut last: Option<u32> = None;
+            for &(j, v) in row {
+                assert!((j as usize) < ncols, "column {j} >= ncols {ncols}");
+                if let Some(l) = last {
+                    assert!(j > l, "row indices must be strictly increasing");
+                }
+                last = Some(j);
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            nrows: rows.len(),
+            ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Build from a dense row-major buffer (used at the XLA boundary and in
+    /// tests).
+    pub fn from_dense(nrows: usize, ncols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        let rows: Vec<Vec<(u32, f64)>> = (0..nrows)
+            .map(|i| {
+                (0..ncols)
+                    .filter_map(|j| {
+                        let v = data[i * ncols + j];
+                        (v != 0.0).then_some((j as u32, v))
+                    })
+                    .collect()
+            })
+            .collect();
+        Self::from_rows(ncols, &rows)
+    }
+
+    /// Stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored entries.
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow {
+            idx: &self.indices[a..b],
+            val: &self.values[a..b],
+        }
+    }
+
+    /// Dense row-major `f32` copy of a subset of rows, each padded/truncated
+    /// to `ncols_out` — the conversion the PJRT artifacts consume.
+    pub fn to_dense_f32(&self, rows: &[usize], ncols_out: usize) -> Vec<f32> {
+        let mut out = vec![0f32; rows.len() * ncols_out];
+        for (r, &i) in rows.iter().enumerate() {
+            let row = self.row(i);
+            for k in 0..row.nnz() {
+                let j = row.idx[k] as usize;
+                if j < ncols_out {
+                    out[r * ncols_out + j] = row.val[k] as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// `y = X w` (dense result over all rows).
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.ncols);
+        (0..self.nrows).map(|i| self.row(i).dot(w)).collect()
+    }
+
+    /// `g = X^T c` (dense result over columns).
+    pub fn tmatvec(&self, c: &[f64]) -> Vec<f64> {
+        assert_eq!(c.len(), self.nrows);
+        let mut g = vec![0.0; self.ncols];
+        for i in 0..self.nrows {
+            self.row(i).axpy_into(c[i], &mut g);
+        }
+        g
+    }
+
+    /// Max squared row norm — the data part of the per-sample smoothness
+    /// constant `L` used to pick step sizes.
+    pub fn max_row_nrm2_sq(&self) -> f64 {
+        (0..self.nrows)
+            .map(|i| self.row(i).nrm2_sq())
+            .fold(0.0, f64::max)
+    }
+
+    /// Select a subset of rows into a new matrix (shard extraction).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for &i in rows {
+            let r = self.row(i);
+            indices.extend_from_slice(r.idx);
+            values.extend_from_slice(r.val);
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            nrows: rows.len(),
+            ncols: self.ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Transpose into feature-major CSC.
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut colptr = vec![0usize; self.ncols + 1];
+        for &j in &self.indices {
+            colptr[j as usize + 1] += 1;
+        }
+        for j in 0..self.ncols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut rows = vec![0u32; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut cursor = colptr.clone();
+        for i in 0..self.nrows {
+            let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+            for k in a..b {
+                let j = self.indices[k] as usize;
+                rows[cursor[j]] = i as u32;
+                vals[cursor[j]] = self.values[k];
+                cursor[j] += 1;
+            }
+        }
+        CscMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            colptr,
+            rows,
+            values: vals,
+        }
+    }
+}
+
+/// Compressed sparse column matrix (feature-major; DBCD / ProxCOCOA+).
+#[derive(Clone, Debug, Default)]
+pub struct CscMatrix {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Column pointers, length `ncols + 1`.
+    pub colptr: Vec<usize>,
+    /// Row indices per column.
+    pub rows: Vec<u32>,
+    /// Values.
+    pub values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Borrow column `j` as a sparse vector over rows.
+    #[inline]
+    pub fn col(&self, j: usize) -> SparseRow<'_> {
+        let (a, b) = (self.colptr[j], self.colptr[j + 1]);
+        SparseRow {
+            idx: &self.rows[a..b],
+            val: &self.values[a..b],
+        }
+    }
+
+    /// Squared L2 norm of column `j`.
+    #[inline]
+    pub fn col_nrm2_sq(&self, j: usize) -> f64 {
+        self.col(j).nrm2_sq()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0]]
+        CsrMatrix::from_rows(3, &[vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]])
+    }
+
+    #[test]
+    fn construction_invariants() {
+        let m = small();
+        assert_eq!(m.nrows, 2);
+        assert_eq!(m.ncols, 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.indptr, vec![0, 2, 3]);
+        assert!((m.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_values_dropped() {
+        let m = CsrMatrix::from_rows(2, &[vec![(0, 0.0), (1, 1.0)]]);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted_rows() {
+        CsrMatrix::from_rows(3, &[vec![(2, 1.0), (0, 1.0)]]);
+    }
+
+    #[test]
+    fn matvec_tmatvec() {
+        let m = small();
+        let w = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.matvec(&w), vec![7.0, 6.0]);
+        let c = vec![1.0, 2.0];
+        assert_eq!(m.tmatvec(&c), vec![1.0, 6.0, 2.0]);
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let data = vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0];
+        let m = CsrMatrix::from_dense(2, 3, &data);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.matvec(&[1.0, 1.0, 1.0]), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn to_dense_f32_pads() {
+        let m = small();
+        let d = m.to_dense_f32(&[0, 1], 4);
+        assert_eq!(d.len(), 8);
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[2], 2.0);
+        assert_eq!(d[3], 0.0);
+        assert_eq!(d[5], 3.0);
+    }
+
+    #[test]
+    fn select_rows_shard() {
+        let m = small();
+        let s = m.select_rows(&[1]);
+        assert_eq!(s.nrows, 1);
+        assert_eq!(s.matvec(&[1.0, 1.0, 1.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn csc_transpose_consistent() {
+        let m = small();
+        let t = m.to_csc();
+        assert_eq!(t.col(0).nnz(), 1);
+        assert_eq!(t.col(1).nnz(), 1);
+        assert_eq!(t.col(2).nnz(), 1);
+        // X^T c via CSC columns == CSR tmatvec
+        let c = vec![0.5, -1.0];
+        let via_csr = m.tmatvec(&c);
+        let via_csc: Vec<f64> = (0..3).map(|j| t.col(j).dot(&c)).collect();
+        assert_eq!(via_csr, via_csc);
+    }
+
+    #[test]
+    fn max_row_norm() {
+        let m = small();
+        assert_eq!(m.max_row_nrm2_sq(), 9.0);
+    }
+}

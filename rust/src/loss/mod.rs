@@ -1,0 +1,271 @@
+//! Loss models and the composite objective.
+//!
+//! The paper evaluates two models (§7):
+//!
+//! * logistic regression with elastic net:
+//!   `P(w) = (1/n) Σ log(1 + exp(-yᵢ xᵢᵀw)) + λ₁/2 ‖w‖² + λ₂‖w‖₁`
+//! * Lasso: `P(w) = (1/2n) Σ (xᵢᵀw − yᵢ)² + λ₂‖w‖₁`
+//!
+//! Both are `h(a; y)` losses of the linear activation `a = xᵀw`, so the
+//! engine only needs `h` and `h'` per model ([`Loss`]). The **data
+//! gradient** convention matches the L1/L2 layers (see
+//! `python/compile/kernels/ref.py`): `z = (1/n) Σ h'(xᵢᵀw) xᵢ` carries no
+//! regularization — λ₁ enters inner steps as `(1 − ηλ₁)` decay and λ₂
+//! through the prox.
+
+use crate::data::Dataset;
+use crate::linalg::{nrm1, nrm2_sq};
+
+/// Pointwise loss of the linear activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// `h(a; y) = log(1 + exp(-y a))`, labels ±1.
+    Logistic,
+    /// `h(a; y) = 0.5 (a − y)²`.
+    Squared,
+}
+
+impl Loss {
+    /// Loss value.
+    #[inline(always)]
+    pub fn h(self, a: f64, y: f64) -> f64 {
+        match self {
+            Loss::Logistic => {
+                // log(1+exp(-ya)) computed stably
+                let m = -y * a;
+                if m > 30.0 {
+                    m
+                } else {
+                    m.exp().ln_1p()
+                }
+            }
+            Loss::Squared => 0.5 * (a - y) * (a - y),
+        }
+    }
+
+    /// Derivative `h'(a; y)`.
+    #[inline(always)]
+    pub fn hprime(self, a: f64, y: f64) -> f64 {
+        match self {
+            Loss::Logistic => -y / (1.0 + (y * a).exp()),
+            Loss::Squared => a - y,
+        }
+    }
+
+    /// Upper bound on `h''` (1/4 for logistic, 1 for squared) — enters the
+    /// smoothness constant.
+    #[inline]
+    pub fn curvature_bound(self) -> f64 {
+        match self {
+            Loss::Logistic => 0.25,
+            Loss::Squared => 1.0,
+        }
+    }
+
+    /// Name for traces/configs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Logistic => "logistic",
+            Loss::Squared => "lasso",
+        }
+    }
+}
+
+/// Regularization parameters of the composite objective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Reg {
+    /// Ridge coefficient λ₁ (elastic net; 0 for pure Lasso).
+    pub lam1: f64,
+    /// L1 coefficient λ₂.
+    pub lam2: f64,
+}
+
+/// The composite objective `P(w)` bound to a dataset.
+#[derive(Clone, Debug)]
+pub struct Objective<'a> {
+    /// Dataset.
+    pub ds: &'a Dataset,
+    /// Loss flavor.
+    pub loss: Loss,
+    /// Regularization.
+    pub reg: Reg,
+    /// Multiplier on the data term (default 1). The partition-goodness
+    /// analyzer sets `weight = |D_k|·p/n` so the local functions decompose
+    /// the global one exactly: `F = (1/p) Σ F_k` even with unequal shards.
+    pub weight: f64,
+}
+
+impl<'a> Objective<'a> {
+    /// Construct (data weight 1).
+    pub fn new(ds: &'a Dataset, loss: Loss, reg: Reg) -> Self {
+        Objective { ds, loss, reg, weight: 1.0 }
+    }
+
+    /// Override the data-term weight.
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// Full objective `P(w)`.
+    pub fn value(&self, w: &[f64]) -> f64 {
+        let n = self.ds.n() as f64;
+        let mut s = 0.0;
+        for i in 0..self.ds.n() {
+            let a = self.ds.x.row(i).dot(w);
+            s += self.loss.h(a, self.ds.y[i]);
+        }
+        self.weight * s / n + 0.5 * self.reg.lam1 * nrm2_sq(w) + self.reg.lam2 * nrm1(w)
+    }
+
+    /// Smooth part `F(w) = (1/n) Σ h + λ₁/2‖w‖²` only.
+    pub fn smooth_value(&self, w: &[f64]) -> f64 {
+        self.value(w) - self.reg.lam2 * nrm1(w)
+    }
+
+    /// Data gradient `z = (1/n) Σ h'(xᵢᵀw; yᵢ) xᵢ` (no regularization).
+    pub fn data_grad(&self, w: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.ds.d()];
+        self.data_grad_into(w, &mut g);
+        g
+    }
+
+    /// As [`Self::data_grad`] but into a caller buffer; returns the buffer.
+    pub fn data_grad_into(&self, w: &[f64], g: &mut [f64]) {
+        crate::linalg::zero(g);
+        let n = self.ds.n() as f64;
+        for i in 0..self.ds.n() {
+            let row = self.ds.x.row(i);
+            let c = self.loss.hprime(row.dot(w), self.ds.y[i]);
+            row.axpy_into(c, g);
+        }
+        crate::linalg::scale(g, self.weight / n);
+    }
+
+    /// Gradient of the full smooth part: `data_grad + λ₁ w`.
+    pub fn smooth_grad(&self, w: &[f64]) -> Vec<f64> {
+        let mut g = self.data_grad(w);
+        crate::linalg::axpy(self.reg.lam1, w, &mut g);
+        g
+    }
+
+    /// Raw shard gradient sum `Σ_{i∈shard} h'(xᵢᵀw) xᵢ` — what a worker
+    /// reports to the master (Algorithm 1 line 12; the master divides by n).
+    pub fn shard_grad_sum(&self, w: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.ds.d()];
+        for i in 0..self.ds.n() {
+            let row = self.ds.x.row(i);
+            let c = self.loss.hprime(row.dot(w), self.ds.y[i]);
+            row.axpy_into(c, &mut g);
+        }
+        g
+    }
+
+    /// Per-sample smoothness constant:
+    /// `L = c_h · max_i ‖xᵢ‖² + λ₁` — drives the default step size.
+    pub fn smoothness(&self) -> f64 {
+        self.weight * self.loss.curvature_bound() * self.ds.x.max_row_nrm2_sq() + self.reg.lam1
+    }
+
+    /// Strong-convexity estimate `μ ≥ λ₁` (data curvature ignored — a safe
+    /// lower bound; the paper's theory only needs some μ > 0).
+    pub fn strong_convexity(&self) -> f64 {
+        self.reg.lam1.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn obj(ds: &Dataset, loss: Loss) -> Objective<'_> {
+        Objective::new(ds, loss, Reg { lam1: 1e-3, lam2: 1e-3 })
+    }
+
+    #[test]
+    fn logistic_h_stable_extremes() {
+        let l = Loss::Logistic;
+        assert!((l.h(100.0, 1.0) - 0.0).abs() < 1e-12);
+        assert!((l.h(-100.0, 1.0) - 100.0).abs() < 1e-9);
+        assert!(l.h(1000.0, -1.0).is_finite());
+        assert!((l.hprime(1000.0, 1.0)).abs() < 1e-12);
+        assert!((l.hprime(-1000.0, 1.0) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squared_h() {
+        let l = Loss::Squared;
+        assert_eq!(l.h(3.0, 1.0), 2.0);
+        assert_eq!(l.hprime(3.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn hprime_is_derivative() {
+        for loss in [Loss::Logistic, Loss::Squared] {
+            for &(a, y) in &[(0.3, 1.0), (-1.2, -1.0), (2.0, 1.0)] {
+                let eps = 1e-6;
+                let num = (loss.h(a + eps, y) - loss.h(a - eps, y)) / (2.0 * eps);
+                assert!(
+                    (num - loss.hprime(a, y)).abs() < 1e-6,
+                    "{loss:?} a={a} y={y}: {num} vs {}",
+                    loss.hprime(a, y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let ds = synth::tiny(2).generate();
+        for loss in [Loss::Logistic, Loss::Squared] {
+            let o = obj(&ds, loss);
+            let mut rng = crate::rng::Rng::new(9);
+            let w: Vec<f64> = (0..ds.d()).map(|_| 0.1 * rng.normal()).collect();
+            let g = o.smooth_grad(&w);
+            for j in [0usize, 7, 23, 49] {
+                let eps = 1e-6;
+                let mut wp = w.clone();
+                wp[j] += eps;
+                let mut wm = w.clone();
+                wm[j] -= eps;
+                let num = (o.smooth_value(&wp) - o.smooth_value(&wm)) / (2.0 * eps);
+                assert!(
+                    (num - g[j]).abs() < 1e-5,
+                    "{loss:?} coord {j}: fd {num} vs analytic {}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_grad_sums_to_n_times_data_grad() {
+        let ds = synth::tiny(3).generate();
+        let o = obj(&ds, Loss::Logistic);
+        let w = vec![0.01; ds.d()];
+        let zsum = o.shard_grad_sum(&w);
+        let z = o.data_grad(&w);
+        for j in 0..ds.d() {
+            assert!((zsum[j] / ds.n() as f64 - z[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn objective_decomposition() {
+        let ds = synth::tiny(4).generate();
+        let o = obj(&ds, Loss::Squared);
+        let w = vec![0.5; ds.d()];
+        let p = o.value(&w);
+        let f = o.smooth_value(&w);
+        assert!((p - f - o.reg.lam2 * nrm1(&w)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smoothness_positive() {
+        let ds = synth::tiny(5).generate();
+        for loss in [Loss::Logistic, Loss::Squared] {
+            assert!(obj(&ds, loss).smoothness() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! `pscope` — the launcher.
+//!
+//! ```text
+//! pscope train          --dataset rcv1_like --model logistic --p 8 ...
+//! pscope info           --dataset rcv1_like
+//! pscope partition-eval --dataset tiny --p 8
+//! pscope gen-data       --dataset rcv1_like --out data/rcv1_like.libsvm
+//! pscope artifacts      (inspect artifacts/manifest.json + PJRT smoke run)
+//! ```
+
+use std::process::ExitCode;
+
+use pscope::cli::{flag, switch, Command};
+use pscope::config::{Model, PscopeConfig, WorkerBackend};
+use pscope::coordinator::train_with;
+use pscope::data::{libsvm, stats, synth};
+use pscope::error::{Error, Result};
+use pscope::loss::Objective;
+use pscope::net::NetModel;
+use pscope::optim::fista::reference_optimum;
+use pscope::partition::{goodness, Partitioner};
+use pscope::runtime::XlaRuntime;
+
+fn load_dataset(name: &str, seed: u64) -> Result<pscope::data::Dataset> {
+    // real LibSVM file wins when present (data/<name>.libsvm)
+    let path = format!("data/{name}.libsvm");
+    if std::path::Path::new(&path).exists() {
+        return libsvm::read_file(&path, 0);
+    }
+    synth::preset(name, seed)
+        .map(|s| s.generate())
+        .ok_or_else(|| Error::Config(format!("unknown dataset {name:?}")))
+}
+
+fn cmd_train() -> Command {
+    Command {
+        name: "train",
+        about: "run pSCOPE (Algorithm 1) on a dataset",
+        flags: vec![
+            flag("dataset", "preset or data/<name>.libsvm", Some("tiny")),
+            flag("model", "logistic | lasso", Some("logistic")),
+            flag("p", "workers", Some("8")),
+            flag("epochs", "outer iterations T", Some("30")),
+            flag("m", "inner steps M (0 = 2n/p)", Some("0")),
+            flag("eta", "learning rate (0 = auto)", Some("0")),
+            flag("backend", "sparse | dense | xla", Some("sparse")),
+            flag("partition", "uniform | skew75 | separated | replicated", Some("uniform")),
+            flag("seed", "PRNG seed", Some("42")),
+            flag("config", "TOML config file overriding defaults", None),
+            flag("trace-out", "write per-epoch CSV here", None),
+            switch("gap", "also compute a reference optimum and report gaps"),
+        ],
+    }
+}
+
+fn run_train(raw: &[String]) -> Result<()> {
+    let args = cmd_train().parse(raw)?;
+    let name = args.get("dataset").unwrap_or("tiny");
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let ds = load_dataset(name, seed)?;
+    let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
+    let mut cfg = PscopeConfig::for_dataset(name, model);
+    if let Some(path) = args.get("config") {
+        cfg.apply_toml(&std::fs::read_to_string(path)?)?;
+    }
+    cfg.p = args.get_parse("p", cfg.p)?;
+    cfg.outer_iters = args.get_parse("epochs", cfg.outer_iters)?;
+    cfg.m_inner = args.get_parse("m", cfg.m_inner)?;
+    cfg.eta = args.get_parse("eta", cfg.eta)?;
+    cfg.seed = seed;
+    cfg.backend = WorkerBackend::parse(args.get("backend").unwrap_or("sparse"))?;
+    let partitioner = match args.get("partition").unwrap_or("uniform") {
+        "uniform" => Partitioner::Uniform,
+        "skew75" => Partitioner::LabelSkew75,
+        "separated" => Partitioner::LabelSeparated,
+        "replicated" => Partitioner::Replicated,
+        other => return Err(Error::Config(format!("unknown partition {other:?}"))),
+    };
+    println!("dataset {name}: n={} d={} nnz={}", ds.n(), ds.d(), ds.nnz());
+    let part = partitioner.split(&ds, cfg.p, seed);
+    let artifact_dir = if cfg.backend == WorkerBackend::Xla {
+        Some(std::path::PathBuf::from("artifacts"))
+    } else {
+        None
+    };
+    let p_star = if args.has("gap") {
+        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+        let r = reference_optimum(&obj, 50_000);
+        println!("reference optimum P(w*) = {:.12e}", r.objective);
+        r.objective
+    } else {
+        f64::NEG_INFINITY
+    };
+    let out = train_with(&ds, &part, &cfg, artifact_dir, NetModel::ten_gbe())?;
+    for pt in &out.trace.points {
+        if p_star.is_finite() {
+            println!(
+                "epoch {:>3}  t={:>8.3}s  P(w)={:.10e}  gap={:.3e}  comm={}B",
+                pt.epoch,
+                pt.total_s(),
+                pt.objective,
+                pt.objective - p_star,
+                pt.comm_bytes
+            );
+        } else {
+            println!(
+                "epoch {:>3}  t={:>8.3}s  P(w)={:.10e}  comm={}B",
+                pt.epoch,
+                pt.total_s(),
+                pt.objective,
+                pt.comm_bytes
+            );
+        }
+    }
+    println!(
+        "done: {} epochs, {} bytes / {} msgs, {} lazy materializations",
+        out.epochs_run, out.comm.0, out.comm.1, out.materializations
+    );
+    if let Some(path) = args.get("trace-out") {
+        let f = std::fs::File::create(path)?;
+        out.trace.write_csv(f, if p_star.is_finite() { p_star } else { 0.0 })?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Command {
+    Command {
+        name: "info",
+        about: "print dataset statistics",
+        flags: vec![
+            flag("dataset", "preset name or LibSVM path", Some("tiny")),
+            flag("seed", "PRNG seed", Some("42")),
+        ],
+    }
+}
+
+fn run_info(raw: &[String]) -> Result<()> {
+    let args = cmd_info().parse(raw)?;
+    let name = args.get("dataset").unwrap_or("tiny");
+    let ds = load_dataset(name, args.get_parse("seed", 42u64)?)?;
+    println!("dataset {name}");
+    println!("{}", stats::compute(&ds));
+    Ok(())
+}
+
+fn cmd_partition_eval() -> Command {
+    Command {
+        name: "partition-eval",
+        about: "measure the local-global gap and goodness constant γ(π; ε) of the §7.4 partitions",
+        flags: vec![
+            flag("dataset", "preset name", Some("tiny")),
+            flag("model", "logistic | lasso", Some("logistic")),
+            flag("p", "workers", Some("8")),
+            flag("seed", "PRNG seed", Some("42")),
+        ],
+    }
+}
+
+fn run_partition_eval(raw: &[String]) -> Result<()> {
+    let args = cmd_partition_eval().parse(raw)?;
+    let name = args.get("dataset").unwrap_or("tiny");
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let ds = load_dataset(name, seed)?;
+    let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
+    let cfg = PscopeConfig::for_dataset(name, model);
+    let p: usize = args.get_parse("p", 8usize)?;
+    println!("partition goodness on {name} (n={} d={}), p={p}", ds.n(), ds.d());
+    println!("{:<18} {:>12} {:>14} {:>12}", "partition", "gamma_hat", "gap@optimum", "imbalance");
+    for strat in Partitioner::all() {
+        let part = strat.split(&ds, p, seed);
+        let rep = goodness::analyze(&ds, &part, model.loss(), cfg.reg, &Default::default());
+        println!(
+            "{:<18} {:>12.4e} {:>14.4e} {:>12.3}",
+            rep.tag, rep.gamma_hat, rep.gap_at_optimum, rep.shard_imbalance
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_data() -> Command {
+    Command {
+        name: "gen-data",
+        about: "write a synthetic dataset as LibSVM text",
+        flags: vec![
+            flag("dataset", "preset name", Some("tiny")),
+            flag("out", "output path", None),
+            flag("seed", "PRNG seed", Some("42")),
+        ],
+    }
+}
+
+fn run_gen_data(raw: &[String]) -> Result<()> {
+    let args = cmd_gen_data().parse(raw)?;
+    let name = args.get("dataset").unwrap_or("tiny");
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let spec = synth::preset(name, seed)
+        .ok_or_else(|| Error::Config(format!("unknown dataset {name:?}")))?;
+    let ds = spec.generate();
+    let default_out = format!("data/{name}.libsvm");
+    let out = args.get("out").unwrap_or(&default_out);
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(out)?;
+    libsvm::write(&ds, std::io::BufWriter::new(f))?;
+    println!("wrote {} instances x {} features to {out}", ds.n(), ds.d());
+    Ok(())
+}
+
+fn cmd_artifacts() -> Command {
+    Command {
+        name: "artifacts",
+        about: "inspect the AOT artifact manifest and smoke-run one program on PJRT",
+        flags: vec![flag("dir", "artifact directory", Some("artifacts"))],
+    }
+}
+
+fn run_artifacts(raw: &[String]) -> Result<()> {
+    let args = cmd_artifacts().parse(raw)?;
+    let dir = args.get("dir").unwrap_or("artifacts");
+    let rt = XlaRuntime::open(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("programs ({}):", rt.manifest().programs().len());
+    for p in rt.manifest().programs() {
+        println!(
+            "  {:<40} kind={:<14} model={:<8} n={} d={} m={}",
+            p.name, p.kind, p.model, p.n, p.d, p.m_inner
+        );
+    }
+    // smoke: run the small logistic shard_grad on zeros
+    if let Some(p) = rt.manifest().find("shard_grad", "logistic", 256, 64) {
+        let x = vec![0f32; 256 * 64];
+        let y = vec![1f32; 256];
+        let w = vec![0f32; 64];
+        let outs = rt.execute(
+            &p.name.clone(),
+            &[
+                pscope::runtime::Input::F32(&x, &[256, 64]),
+                pscope::runtime::Input::F32(&y, &[256]),
+                pscope::runtime::Input::F32(&w, &[64]),
+            ],
+        )?;
+        println!("smoke {}: output[0] len={} (all-zero input -> all-zero grad: {})",
+            p.name, outs[0].len(), outs[0].iter().all(|&v| v == 0.0));
+    }
+    Ok(())
+}
+
+const TOPLEVEL: &str = "\
+pscope — proximal SCOPE for distributed sparse learning (NeurIPS'18 reproduction)
+
+subcommands:
+  train            run pSCOPE on a dataset
+  info             dataset statistics
+  partition-eval   measure partition goodness γ(π; ε)
+  gen-data         write a synthetic dataset as LibSVM text
+  artifacts        inspect + smoke-run the AOT artifacts
+
+`pscope <subcommand> --help` lists flags.
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(sub) = argv.first() else {
+        print!("{TOPLEVEL}");
+        return ExitCode::FAILURE;
+    };
+    let rest = &argv[1..];
+    let result = match sub.as_str() {
+        "train" => run_train(rest),
+        "info" => run_info(rest),
+        "partition-eval" => run_partition_eval(rest),
+        "gen-data" => run_gen_data(rest),
+        "artifacts" => run_artifacts(rest),
+        "--help" | "-h" | "help" => {
+            print!("{TOPLEVEL}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown subcommand {other:?}\n\n{TOPLEVEL}"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Experiment telemetry: per-epoch traces, CSV/JSON output, wall timers.
+//!
+//! Every solver (pSCOPE and all baselines) emits a [`Trace`]; the bench
+//! harness consumes traces to print the paper's tables/series and dumps
+//! them under `bench_out/` for post-processing.
+
+use std::io::Write;
+use std::time::Instant;
+
+/// One recorded point of a training run.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Outer iteration / epoch index.
+    pub epoch: usize,
+    /// Wall-clock seconds since run start (compute only, as measured on
+    /// this machine — one box, threads may contend).
+    pub wall_s: f64,
+    /// Simulated-parallel compute seconds: per round, the max over workers
+    /// of their compute time plus the master's (what a real p-node cluster
+    /// would take; this box has a single core, so real thread wall time
+    /// cannot show speedup — see DESIGN.md §4).
+    pub sim_wall_s: f64,
+    /// Modeled network seconds accumulated so far (see [`crate::net`]).
+    pub net_s: f64,
+    /// Objective value `P(w)`.
+    pub objective: f64,
+    /// Communication payload bytes so far.
+    pub comm_bytes: u64,
+    /// Messages so far.
+    pub comm_msgs: u64,
+}
+
+impl TracePoint {
+    /// Time axis used by the figures: simulated-parallel compute + modeled
+    /// wire time (cluster-equivalent time on this 1-core box).
+    #[inline]
+    pub fn total_s(&self) -> f64 {
+        self.sim_wall_s + self.net_s
+    }
+
+    /// Real measured wall + wire (threads contend on one core).
+    #[inline]
+    pub fn real_total_s(&self) -> f64 {
+        self.wall_s + self.net_s
+    }
+}
+
+/// A full training trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Solver name (legend label).
+    pub solver: String,
+    /// Dataset name.
+    pub dataset: String,
+    /// Recorded points (epoch order).
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    /// New empty trace.
+    pub fn new(solver: &str, dataset: &str) -> Self {
+        Trace {
+            solver: solver.into(),
+            dataset: dataset.into(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// Final objective (`inf` when empty).
+    pub fn last_objective(&self) -> f64 {
+        self.points.last().map(|p| p.objective).unwrap_or(f64::INFINITY)
+    }
+
+    /// First time (total_s) at which the suboptimality gap vs `p_star`
+    /// drops below `tol`; `None` if never.
+    pub fn time_to_gap(&self, p_star: f64, tol: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.objective - p_star <= tol)
+            .map(|p| p.total_s())
+    }
+
+    /// Epochs to reach the gap; `None` if never.
+    pub fn epochs_to_gap(&self, p_star: f64, tol: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.objective - p_star <= tol)
+            .map(|p| p.epoch)
+    }
+
+    /// Write as CSV (`epoch,wall_s,net_s,total_s,objective,gap,comm_bytes`).
+    pub fn write_csv<W: Write>(&self, mut w: W, p_star: f64) -> std::io::Result<()> {
+        writeln!(w, "epoch,wall_s,sim_wall_s,net_s,total_s,objective,gap,comm_bytes,comm_msgs")?;
+        for p in &self.points {
+            writeln!(
+                w,
+                "{},{:.6},{:.6},{:.6},{:.6},{:.12e},{:.6e},{},{}",
+                p.epoch,
+                p.wall_s,
+                p.sim_wall_s,
+                p.net_s,
+                p.total_s(),
+                p.objective,
+                p.objective - p_star,
+                p.comm_bytes,
+                p.comm_msgs
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-thread CPU-time timer (CLOCK_THREAD_CPUTIME_ID).
+///
+/// Workers time-share this image's single core, so wall time measured
+/// inside a worker includes the other workers' compute; thread CPU time is
+/// what the worker itself actually burned — the quantity the
+/// simulated-parallel clock needs.
+#[derive(Debug)]
+pub struct ThreadCpuTimer {
+    start_ns: u64,
+}
+
+fn thread_cpu_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: valid pointer to a timespec; clockid is a supported constant.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+impl ThreadCpuTimer {
+    /// Start measuring this thread's CPU time.
+    pub fn start() -> Self {
+        ThreadCpuTimer { start_ns: thread_cpu_ns() }
+    }
+
+    /// CPU seconds this thread spent since `start()`.
+    pub fn elapsed_s(&self) -> f64 {
+        (thread_cpu_ns().saturating_sub(self.start_ns)) as f64 * 1e-9
+    }
+}
+
+/// Wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(epoch: usize, t: f64, obj: f64) -> TracePoint {
+        TracePoint {
+            epoch,
+            wall_s: t,
+            sim_wall_s: t,
+            net_s: 0.1 * t,
+            objective: obj,
+            comm_bytes: 100 * epoch as u64,
+            comm_msgs: epoch as u64,
+        }
+    }
+
+    #[test]
+    fn time_to_gap_finds_first_crossing() {
+        let mut tr = Trace::new("x", "d");
+        tr.push(pt(0, 0.0, 1.0));
+        tr.push(pt(1, 1.0, 0.1));
+        tr.push(pt(2, 2.0, 0.01));
+        assert_eq!(tr.time_to_gap(0.0, 0.5), Some(1.0 + 0.1));
+        assert_eq!(tr.epochs_to_gap(0.0, 0.005), None);
+        assert_eq!(tr.epochs_to_gap(0.0, 0.05), Some(2));
+    }
+
+    #[test]
+    fn csv_renders() {
+        let mut tr = Trace::new("pscope", "cov");
+        tr.push(pt(0, 0.0, 2.0));
+        let mut buf = Vec::new();
+        tr.write_csv(&mut buf, 1.0).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("epoch,"));
+        assert!(s.lines().count() == 2);
+        assert!(s.contains("1.000000e0") || s.contains("1e0"));
+    }
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn thread_cpu_timer_counts_work_not_sleep() {
+        let t = ThreadCpuTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let after_sleep = t.elapsed_s();
+        assert!(after_sleep < 0.015, "sleep counted as cpu: {after_sleep}");
+        let mut acc = 0u64;
+        for i in 0..20_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        assert!(t.elapsed_s() > after_sleep, "cpu work not counted");
+    }
+}

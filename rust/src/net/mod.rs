@@ -1,0 +1,150 @@
+//! Simulated cluster interconnect.
+//!
+//! Workers here are OS threads on one box; the paper's testbed is a
+//! 10 GbE cluster. This module makes communication *observable and
+//! chargeable*: every master↔worker message flows through a
+//! [`SimChannel`], which counts messages and payload bytes, and a
+//! [`NetModel`] converts those counts into modeled wire time
+//! (`latency · msgs + bytes / bandwidth`) that the bench harness adds to
+//! the time axis. Figure-1-style comparisons hinge on exactly this cost
+//! (pSCOPE's O(1) rounds/epoch vs minibatch O(n) rounds), so it must be
+//! modeled rather than measured on shared-memory channels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+
+/// Byte/message counters shared by all channels of one experiment.
+#[derive(Debug, Default)]
+pub struct ByteMeter {
+    /// Total payload bytes sent.
+    pub bytes: AtomicU64,
+    /// Total messages sent.
+    pub messages: AtomicU64,
+}
+
+impl ByteMeter {
+    /// New zeroed meter.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Record one message of `bytes` payload.
+    #[inline]
+    pub fn record(&self, bytes: u64) {
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot (bytes, messages).
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.bytes.load(Ordering::Relaxed),
+            self.messages.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Wire-time model of the cluster interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Per-message latency in seconds (one way).
+    pub latency_s: f64,
+    /// Bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetModel {
+    /// The paper's testbed: 10 GbE (~1.1 GB/s effective, ~50 µs latency).
+    pub fn ten_gbe() -> Self {
+        NetModel {
+            latency_s: 50e-6,
+            bandwidth_bps: 1.1e9,
+        }
+    }
+
+    /// An idealized zero-cost network (pure-compute comparisons).
+    pub fn zero() -> Self {
+        NetModel {
+            latency_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+        }
+    }
+
+    /// Modeled seconds to move `bytes` in `messages` messages.
+    pub fn wire_time(&self, bytes: u64, messages: u64) -> f64 {
+        self.latency_s * messages as f64 + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// A sending endpoint that meters every payload.
+pub struct SimSender<T> {
+    tx: SyncSender<T>,
+    meter: Arc<ByteMeter>,
+}
+
+impl<T> Clone for SimSender<T> {
+    fn clone(&self) -> Self {
+        SimSender {
+            tx: self.tx.clone(),
+            meter: self.meter.clone(),
+        }
+    }
+}
+
+impl<T> SimSender<T> {
+    /// Send `msg` whose wire size is `bytes` (the caller computes payload
+    /// size; see [`crate::coordinator::protocol`]).
+    pub fn send(&self, msg: T, bytes: u64) -> Result<(), std::sync::mpsc::SendError<T>> {
+        self.meter.record(bytes);
+        self.tx.send(msg)
+    }
+}
+
+/// Create a metered channel with the given buffering.
+pub fn sim_channel<T>(meter: Arc<ByteMeter>, bound: usize) -> (SimSender<T>, Receiver<T>) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(bound);
+    (SimSender { tx, meter }, rx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_counts() {
+        let meter = ByteMeter::new();
+        let (tx, rx) = sim_channel::<u32>(meter.clone(), 4);
+        tx.send(1, 100).unwrap();
+        tx.send(2, 50).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(meter.snapshot(), (150, 2));
+    }
+
+    #[test]
+    fn wire_time_model() {
+        let net = NetModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let t = net.wire_time(1_000_000, 10);
+        assert!((t - (0.01 + 1.0)).abs() < 1e-12);
+        assert_eq!(NetModel::zero().wire_time(u64::MAX, 1_000), 0.0);
+    }
+
+    #[test]
+    fn shared_meter_across_channels() {
+        let meter = ByteMeter::new();
+        let (tx1, _rx1) = sim_channel::<()>(meter.clone(), 1);
+        let (tx2, _rx2) = sim_channel::<()>(meter.clone(), 1);
+        tx1.send((), 10).unwrap();
+        tx2.send((), 20).unwrap();
+        assert_eq!(meter.snapshot().0, 30);
+    }
+
+    #[test]
+    fn ten_gbe_plausible() {
+        let net = NetModel::ten_gbe();
+        // broadcasting an 8 MB model to 8 workers ~ tens of ms
+        let t = net.wire_time(8 * 8_000_000, 8);
+        assert!(t > 0.01 && t < 1.0, "t={t}");
+    }
+}

@@ -1,0 +1,217 @@
+//! FISTA (Beck & Teboulle 2009) for the composite objective.
+//!
+//! Triple duty:
+//!
+//! 1. **Baseline** — the paper compares against distributed FISTA (§7.1);
+//!    [`crate::baselines::dfista`] wraps this with distributed gradient
+//!    accumulation and communication accounting.
+//! 2. **Reference-optimum solver** — `P(w*)` for suboptimality-gap plots is
+//!    produced by a long, tight-tolerance run (f64 throughout).
+//! 3. **Local-subproblem solver** — the partition-goodness analyzer
+//!    minimizes `P_k(w; a) = F_k(w) + G_k(a)ᵀw + R(w)`, which is exactly
+//!    this problem with an extra linear term.
+
+use crate::linalg::{axpy, dist_sq, soft_threshold};
+use crate::loss::Objective;
+
+/// FISTA options.
+#[derive(Clone, Copy, Debug)]
+pub struct FistaOpts {
+    /// Iteration cap.
+    pub max_iter: usize,
+    /// Stop when the prox-gradient-mapping norm `‖w_{k+1} − w_k‖/η` falls
+    /// below this.
+    pub tol: f64,
+    /// Step size; `None` = `1/L` from [`Objective::smoothness`].
+    pub step: Option<f64>,
+    /// Restart the momentum when the objective increases (adaptive
+    /// restart — keeps long reference runs stable).
+    pub adaptive_restart: bool,
+}
+
+impl Default for FistaOpts {
+    fn default() -> Self {
+        FistaOpts {
+            max_iter: 10_000,
+            tol: 1e-10,
+            step: None,
+            adaptive_restart: true,
+        }
+    }
+}
+
+/// FISTA result.
+#[derive(Clone, Debug)]
+pub struct FistaResult {
+    /// Final iterate.
+    pub w: Vec<f64>,
+    /// Iterations executed.
+    pub iters: usize,
+    /// Final objective value (including the `linear` term if given).
+    pub objective: f64,
+    /// Whether the tolerance was reached before `max_iter`.
+    pub converged: bool,
+}
+
+/// Minimize `obj.value(w) + linearᵀw` (the linear term models the paper's
+/// `G_k(a)ᵀw` surrogate shift; pass `None` for the plain objective).
+pub fn fista(obj: &Objective<'_>, linear: Option<&[f64]>, w0: &[f64], opts: &FistaOpts) -> FistaResult {
+    let d = w0.len();
+    let eta = opts.step.unwrap_or_else(|| 1.0 / obj.smoothness());
+    let thr = eta * obj.reg.lam2;
+    let value = |w: &[f64]| -> f64 {
+        let mut v = obj.value(w);
+        if let Some(l) = linear {
+            v += crate::linalg::dot(l, w);
+        }
+        v
+    };
+    let mut w = w0.to_vec();
+    let mut v = w.clone(); // extrapolated point
+    let mut t = 1.0f64;
+    let mut prev_obj = value(&w);
+    let mut grad = vec![0.0; d];
+    let mut converged = false;
+    let mut iters = 0;
+    for k in 0..opts.max_iter {
+        iters = k + 1;
+        // gradient of the smooth part at v (+ linear shift)
+        obj.data_grad_into(&v, &mut grad);
+        axpy(obj.reg.lam1, &v, &mut grad);
+        if let Some(l) = linear {
+            axpy(1.0, l, &mut grad);
+        }
+        // prox step
+        let mut w_next = vec![0.0; d];
+        for j in 0..d {
+            w_next[j] = soft_threshold(v[j] - eta * grad[j], thr);
+        }
+        let delta = dist_sq(&w_next, &w).sqrt();
+        // momentum
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let beta = (t - 1.0) / t_next;
+        for j in 0..d {
+            v[j] = w_next[j] + beta * (w_next[j] - w[j]);
+        }
+        t = t_next;
+        w = w_next;
+        if opts.adaptive_restart {
+            let cur = value(&w);
+            if cur > prev_obj {
+                // restart momentum
+                v.copy_from_slice(&w);
+                t = 1.0;
+            }
+            prev_obj = cur;
+        }
+        if delta / eta < opts.tol {
+            converged = true;
+            break;
+        }
+    }
+    let objective = value(&w);
+    FistaResult {
+        w,
+        iters,
+        objective,
+        converged,
+    }
+}
+
+/// Solve for a high-accuracy reference optimum of `obj` (used by every
+/// bench to compute suboptimality gaps).
+pub fn reference_optimum(obj: &Objective<'_>, max_iter: usize) -> FistaResult {
+    let opts = FistaOpts {
+        max_iter,
+        tol: 1e-13,
+        step: None,
+        adaptive_restart: true,
+    };
+    fista(obj, None, &vec![0.0; obj.ds.d()], &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::loss::{Loss, Objective, Reg};
+
+    #[test]
+    fn solves_tiny_logistic() {
+        let ds = synth::tiny(41).generate();
+        let obj = Objective::new(&ds, Loss::Logistic, Reg { lam1: 1e-3, lam2: 1e-3 });
+        let r = fista(&obj, None, &vec![0.0; ds.d()], &FistaOpts::default());
+        assert!(r.converged, "no convergence in {} iters", r.iters);
+        // optimality: prox-gradient fixed point
+        let g = obj.smooth_grad(&r.w);
+        let eta = 1.0 / obj.smoothness();
+        for j in 0..ds.d() {
+            let fp = soft_threshold(r.w[j] - eta * g[j], eta * obj.reg.lam2);
+            assert!((fp - r.w[j]).abs() < 1e-7, "coord {j} not a fixed point");
+        }
+    }
+
+    #[test]
+    fn solves_lasso_and_sparsifies() {
+        let ds = synth::tiny(42)
+            .with_task(crate::data::synth::Task::Regression)
+            .generate();
+        let obj = Objective::new(&ds, Loss::Squared, Reg { lam1: 0.0, lam2: 0.05 });
+        let r = fista(&obj, None, &vec![0.0; ds.d()], &FistaOpts::default());
+        assert!(r.converged);
+        let nz = crate::linalg::nnz(&r.w);
+        assert!(nz < ds.d(), "lasso solution is fully dense");
+        assert!(nz > 0, "lasso solution collapsed to zero");
+    }
+
+    #[test]
+    fn linear_term_shifts_solution() {
+        let ds = synth::tiny(43).generate();
+        let obj = Objective::new(&ds, Loss::Logistic, Reg { lam1: 1e-2, lam2: 1e-3 });
+        let base = fista(&obj, None, &vec![0.0; ds.d()], &FistaOpts::default());
+        let shift = vec![0.05; ds.d()];
+        let shifted = fista(&obj, Some(&shift), &vec![0.0; ds.d()], &FistaOpts::default());
+        assert!(dist_sq(&base.w, &shifted.w) > 1e-8, "linear term had no effect");
+        // shifted problem optimality check
+        let mut g = obj.smooth_grad(&shifted.w);
+        axpy(1.0, &shift, &mut g);
+        let eta = 1.0 / obj.smoothness();
+        for j in 0..ds.d() {
+            let fp = soft_threshold(shifted.w[j] - eta * g[j], eta * obj.reg.lam2);
+            assert!((fp - shifted.w[j]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn monotone_under_restart() {
+        let ds = synth::tiny(44).generate();
+        let obj = Objective::new(&ds, Loss::Logistic, Reg { lam1: 1e-4, lam2: 1e-4 });
+        let r1 = fista(
+            &obj,
+            None,
+            &vec![0.0; ds.d()],
+            &FistaOpts { max_iter: 50, ..Default::default() },
+        );
+        let r2 = fista(
+            &obj,
+            None,
+            &vec![0.0; ds.d()],
+            &FistaOpts { max_iter: 500, ..Default::default() },
+        );
+        assert!(r2.objective <= r1.objective + 1e-12);
+    }
+
+    #[test]
+    fn reference_optimum_beats_loose_run() {
+        let ds = synth::tiny(45).generate();
+        let obj = Objective::new(&ds, Loss::Logistic, Reg { lam1: 1e-3, lam2: 1e-3 });
+        let loose = fista(
+            &obj,
+            None,
+            &vec![0.0; ds.d()],
+            &FistaOpts { max_iter: 30, ..Default::default() },
+        );
+        let tight = reference_optimum(&obj, 20_000);
+        assert!(tight.objective <= loose.objective + 1e-14);
+    }
+}

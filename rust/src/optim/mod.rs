@@ -1,0 +1,29 @@
+//! Optimization engines.
+//!
+//! * [`svrg`] — the *naive dense* proximal-SVRG inner epoch (`O(M·d)`),
+//!   the semantic reference every other engine is checked against.
+//! * [`lazy`] — the paper's §6 **recovery-rule engine** (`O(M·nnz)`): the
+//!   production inner loop for high-dimensional sparse data. Equivalent to
+//!   [`svrg`] up to floating-point reassociation (tested to 1e-9).
+//! * [`fista`] — composite FISTA; reference-optimum solver, baseline
+//!   building block, and local-subproblem solver for the partition
+//!   goodness analyzer.
+//! * [`owlqn`] — orthant-wise limited-memory quasi-Newton (the mOWL-QN
+//!   baseline's serial core).
+//! * [`cd`] — cyclic/randomized coordinate descent on the composite
+//!   objective (DBCD / ProxCOCOA+ local solver).
+//! * [`sgd`] — proximal stochastic gradient (dpSGD worker core).
+//! * [`scope`] — the original SCOPE correction term `c(u − w_t)` as a
+//!   re-parameterization of the same engines (the §3 ablation).
+
+pub mod cd;
+pub mod fista;
+pub mod lazy;
+pub mod owlqn;
+pub mod scope;
+pub mod sgd;
+pub mod svrg;
+
+pub use fista::{fista, FistaOpts, FistaResult};
+pub use lazy::{lazy_inner_epoch, LazyStats};
+pub use svrg::dense_inner_epoch;

@@ -1,0 +1,151 @@
+//! SCOPE-style correction term — the §3 ablation.
+//!
+//! The original SCOPE (Zhao et al., AAAI 2017) needs an extra proximal
+//! pull-back `c(u_{k,m} − w_t)` in every inner update to guarantee
+//! convergence; pSCOPE's contribution is precisely that *a good partition
+//! makes c = 0 sound*. The corrected update
+//!
+//! ```text
+//! u ← prox_{ηλ₂}( u − η(v + c(u − w_t)) )
+//!   = prox_{ηλ₂}( (1 − η(λ₁+c)) u − η(coeff·x + z − c·w_t) )
+//! ```
+//!
+//! is *the same affine-map family* as the plain update with
+//! `λ₁' = λ₁ + c` and `z' = z − c·w_t`, so both engines (dense and lazy,
+//! recovery rules included) run it unchanged — this module is just that
+//! re-parameterization. The `ablate_scope_c` bench measures how the pull
+//! strength trades epoch progress for stability, reproducing the paper's
+//! claim that under a good partition c = 0 (pSCOPE) dominates c > 0
+//! (SCOPE).
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+use crate::optim::lazy::{lazy_inner_epoch, LazyStats};
+use crate::rng::Rng;
+
+/// Inner epoch with the SCOPE correction `c(u − w_t)` added to every
+/// stochastic step; `c = 0` is exactly pSCOPE's update.
+#[allow(clippy::too_many_arguments)]
+pub fn scope_inner_epoch(
+    shard: &Dataset,
+    loss: Loss,
+    w_t: &[f64],
+    z: &[f64],
+    eta: f64,
+    lam1: f64,
+    lam2: f64,
+    scope_c: f64,
+    m_steps: usize,
+    rng: &mut Rng,
+    stats: &mut LazyStats,
+) -> Vec<f64> {
+    if scope_c == 0.0 {
+        return lazy_inner_epoch(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, stats);
+    }
+    let z_shift: Vec<f64> = (0..z.len()).map(|j| z[j] - scope_c * w_t[j]).collect();
+    lazy_inner_epoch(
+        shard,
+        loss,
+        w_t,
+        &z_shift,
+        eta,
+        lam1 + scope_c,
+        lam2,
+        m_steps,
+        rng,
+        stats,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg::soft_threshold;
+    use crate::loss::{Objective, Reg};
+
+    #[test]
+    fn c_zero_is_plain_pscope() {
+        let ds = synth::tiny(301).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = Objective::new(&ds, Loss::Logistic, reg);
+        let w = vec![0.02; ds.d()];
+        let z = obj.data_grad(&w);
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let a = scope_inner_epoch(
+            &ds, Loss::Logistic, &w, &z, 0.1, reg.lam1, reg.lam2, 0.0, 100, &mut r1,
+            &mut Default::default(),
+        );
+        let b = lazy_inner_epoch(
+            &ds, Loss::Logistic, &w, &z, 0.1, reg.lam1, reg.lam2, 100, &mut r2,
+            &mut Default::default(),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn correction_matches_manual_step() {
+        // one step from u = w_t with correction c: the c-term vanishes at
+        // u = w_t, so step 1 must equal the plain step; verify instead from
+        // a step-2 state via manual computation on a 1-instance problem.
+        let ds = synth::tiny(302).with_n(1).generate();
+        let reg = Reg { lam1: 1e-2, lam2: 1e-2 };
+        let obj = Objective::new(&ds, Loss::Logistic, reg);
+        let w = vec![0.1; ds.d()];
+        let z = obj.data_grad(&w);
+        let (eta, c) = (0.05, 0.7);
+        let mut rng = Rng::new(9);
+        let got = scope_inner_epoch(
+            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c, 2, &mut rng,
+            &mut Default::default(),
+        );
+        // manual: two steps, instance 0 each time
+        let row = ds.x.row(0);
+        let cw = Loss::Logistic.hprime(row.dot(&w), ds.y[0]);
+        let mut u = w.clone();
+        for _ in 0..2 {
+            let coeff = Loss::Logistic.hprime(row.dot(&u), ds.y[0]) - cw;
+            let mut xd = vec![0.0; ds.d()];
+            row.axpy_into(1.0, &mut xd);
+            for j in 0..ds.d() {
+                let v = coeff * xd[j] + z[j] + c * (u[j] - w[j]);
+                u[j] = soft_threshold(
+                    (1.0 - eta * reg.lam1) * u[j] - eta * v,
+                    eta * reg.lam2,
+                );
+            }
+        }
+        for j in 0..ds.d() {
+            assert!((got[j] - u[j]).abs() < 1e-12, "coord {j}: {} vs {}", got[j], u[j]);
+        }
+    }
+
+    #[test]
+    fn strong_pullback_slows_convergence_under_good_partition() {
+        // the paper's point: with a good (uniform) partition the correction
+        // only drags the iterate back toward w_t — c = 0 converges faster.
+        let ds = synth::tiny(303).with_n(600).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = Objective::new(&ds, Loss::Logistic, reg);
+        let eta = 0.5 / obj.smoothness();
+        let run = |c: f64| {
+            let mut w = vec![0.0; ds.d()];
+            let mut rng = Rng::new(5);
+            for _ in 0..6 {
+                let z = obj.data_grad(&w);
+                w = scope_inner_epoch(
+                    &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c,
+                    2 * ds.n(), &mut rng, &mut Default::default(),
+                );
+            }
+            obj.value(&w)
+        };
+        let plain = run(0.0);
+        let pulled = run(1.5 * obj.smoothness()); // eta*(lam1+c) = 0.75 < 1
+        assert!(
+            plain < pulled - 1e-6,
+            "c=0 ({plain}) should beat strong pull-back ({pulled})"
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! Proximal stochastic gradient descent — the dpSGD worker core.
+//!
+//! `w ← prox_{η_t λ₂}((1 − η_t λ₁) w − η_t ĝ)` with a minibatch data
+//! gradient `ĝ` and the usual `η_t = η₀ / (1 + t/t₀)` decay. Kept sparse:
+//! the minibatch gradient is accumulated on the union support, but the
+//! decay/prox is dense (dpSGD has no recovery rules — this O(d)-per-step
+//! cost is precisely one of the inefficiencies pSCOPE removes; see
+//! EXPERIMENTS.md E1 discussion).
+
+use crate::data::Dataset;
+use crate::linalg::soft_threshold;
+use crate::loss::{Loss, Reg};
+use crate::rng::Rng;
+
+/// Step-size schedule for SGD.
+#[derive(Clone, Copy, Debug)]
+pub struct SgdSchedule {
+    /// Initial step.
+    pub eta0: f64,
+    /// Decay horizon (steps until the step halves).
+    pub t0: f64,
+}
+
+impl SgdSchedule {
+    /// η at step `t`.
+    #[inline]
+    pub fn eta(&self, t: usize) -> f64 {
+        self.eta0 / (1.0 + t as f64 / self.t0)
+    }
+}
+
+/// One proximal SGD minibatch update in place; returns the step size used.
+pub fn sgd_minibatch_step(
+    shard: &Dataset,
+    loss: Loss,
+    reg: Reg,
+    w: &mut [f64],
+    batch: &[usize],
+    schedule: SgdSchedule,
+    t: usize,
+) -> f64 {
+    let eta = schedule.eta(t);
+    let d = w.len();
+    let b = batch.len().max(1) as f64;
+    // minibatch data gradient (dense accumulation buffer)
+    let mut g = vec![0.0; d];
+    for &i in batch {
+        let row = shard.x.row(i);
+        let c = loss.hprime(row.dot(w), shard.y[i]);
+        row.axpy_into(c / b, &mut g);
+    }
+    let decay = 1.0 - eta * reg.lam1;
+    let thr = eta * reg.lam2;
+    for j in 0..d {
+        w[j] = soft_threshold(decay * w[j] - eta * g[j], thr);
+    }
+    eta
+}
+
+/// Serial prox-SGD driver over `epochs` passes (used in tests; the
+/// distributed baseline drives [`sgd_minibatch_step`] itself).
+pub fn sgd_solve(
+    ds: &Dataset,
+    loss: Loss,
+    reg: Reg,
+    schedule: SgdSchedule,
+    batch_size: usize,
+    epochs: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut w = vec![0.0; ds.d()];
+    let steps_per_epoch = ds.n().div_ceil(batch_size);
+    let mut t = 0;
+    for _ in 0..epochs {
+        for _ in 0..steps_per_epoch {
+            let batch: Vec<usize> = (0..batch_size).map(|_| rng.below(ds.n())).collect();
+            sgd_minibatch_step(ds, loss, reg, &mut w, &batch, schedule, t);
+            t += 1;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::loss::Objective;
+
+    #[test]
+    fn schedule_decays() {
+        let s = SgdSchedule { eta0: 1.0, t0: 10.0 };
+        assert_eq!(s.eta(0), 1.0);
+        assert!((s.eta(10) - 0.5).abs() < 1e-12);
+        assert!(s.eta(100) < s.eta(10));
+    }
+
+    #[test]
+    fn converges_near_optimum() {
+        let ds = synth::tiny(71).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = Objective::new(&ds, Loss::Logistic, reg);
+        let eta0 = 0.5 / obj.smoothness();
+        let mut rng = Rng::new(8);
+        let w = sgd_solve(
+            &ds,
+            Loss::Logistic,
+            reg,
+            SgdSchedule { eta0, t0: 500.0 },
+            8,
+            40,
+            &mut rng,
+        );
+        let opt = crate::optim::fista::reference_optimum(&obj, 20_000);
+        let gap = obj.value(&w) - opt.objective;
+        assert!(gap < 0.05, "sgd gap {gap}");
+        assert!(gap >= -1e-10);
+    }
+
+    #[test]
+    fn single_step_reduces_batch_loss_in_expectation() {
+        let ds = synth::tiny(72).generate();
+        let reg = Reg { lam1: 0.0, lam2: 0.0 };
+        let obj = Objective::new(&ds, Loss::Logistic, reg);
+        let mut w = vec![0.0; ds.d()];
+        let batch: Vec<usize> = (0..ds.n()).collect(); // full batch = GD
+        let before = obj.value(&w);
+        sgd_minibatch_step(
+            &ds,
+            Loss::Logistic,
+            reg,
+            &mut w,
+            &batch,
+            SgdSchedule { eta0: 0.5 / obj.smoothness(), t0: 1e12 },
+            0,
+        );
+        assert!(obj.value(&w) < before);
+    }
+}

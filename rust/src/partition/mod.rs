@@ -1,0 +1,263 @@
+//! Data partitions — the object the paper's theory is about.
+//!
+//! A [`Partition`] assigns instance indices to `p` workers. §7.4 evaluates
+//! four: π* (full replication — every worker sees everything), π₁ (uniform),
+//! π₂ (75/25 label skew), π₃ (total label separation). [`Partitioner`]
+//! produces all of them plus the *feature* partition the
+//! coordinate-distributed baselines (DBCD, ProxCOCOA+) use.
+//!
+//! [`goodness`] implements the measurement side: the local–global gap
+//! `l_π(a)` (Definition 4) and the goodness constant `γ(π; ε)`
+//! (Definition 5), which the fig2b bench correlates with convergence rate.
+
+pub mod goodness;
+pub mod quadratic;
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// An instance-level partition: `assignment[k]` lists the dataset row
+/// indices owned by worker `k`. Under replication a row may appear in
+/// several lists; otherwise lists are disjoint and cover `0..n`.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Rows per worker.
+    pub assignment: Vec<Vec<usize>>,
+    /// Human-readable strategy tag (π*, π₁, ...).
+    pub tag: String,
+}
+
+impl Partition {
+    /// Number of workers.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Total assigned instances (counts duplicates under replication).
+    pub fn total_assigned(&self) -> usize {
+        self.assignment.iter().map(|a| a.len()).sum()
+    }
+
+    /// Check the partition covers `0..n` exactly once (not true for π*).
+    pub fn is_disjoint_cover(&self, n: usize) -> bool {
+        let mut seen = vec![0u8; n];
+        for a in &self.assignment {
+            for &i in a {
+                if i >= n || seen[i] > 0 {
+                    return false;
+                }
+                seen[i] = 1;
+            }
+        }
+        seen.iter().all(|&c| c == 1)
+    }
+}
+
+/// Partitioning strategies from §7.4 (instance level) plus the feature
+/// partition for coordinate-distributed baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// π₁: assign each instance to a uniformly random worker.
+    Uniform,
+    /// π₂-style label skew: `skew` ∈ [0.5, 1] of positives to the first
+    /// half of workers (paper's π₂ is `skew = 0.75`).
+    LabelSkew75,
+    /// π₃: all positives on the first half of workers, all negatives on the
+    /// second half.
+    LabelSeparated,
+    /// π*: every worker holds the full dataset (replication — the provably
+    /// optimal partition, γ(π*; 0) = 0).
+    Replicated,
+}
+
+impl Partitioner {
+    /// Build the partition of `ds` over `p` workers.
+    pub fn split(self, ds: &Dataset, p: usize, seed: u64) -> Partition {
+        assert!(p > 0);
+        let n = ds.n();
+        let mut rng = Rng::new(seed ^ 0x5eed_0001);
+        let mut assignment = vec![Vec::new(); p];
+        match self {
+            Partitioner::Uniform => {
+                for i in 0..n {
+                    assignment[rng.below(p)].push(i);
+                }
+            }
+            Partitioner::Replicated => {
+                for a in assignment.iter_mut() {
+                    a.extend(0..n);
+                }
+            }
+            Partitioner::LabelSkew75 | Partitioner::LabelSeparated => {
+                let frac = if self == Partitioner::LabelSkew75 { 0.75 } else { 1.0 };
+                let first_half = (p + 1) / 2;
+                let second_half = p - first_half;
+                for i in 0..n {
+                    let positive = ds.y[i] > 0.0;
+                    // positives go to the first half with prob `frac`,
+                    // negatives with prob `1 - frac`
+                    let to_first = if positive { rng.bool(frac) } else { rng.bool(1.0 - frac) };
+                    let k = if to_first || second_half == 0 {
+                        rng.below(first_half)
+                    } else {
+                        first_half + rng.below(second_half)
+                    };
+                    assignment[k].push(i);
+                }
+            }
+        }
+        Partition {
+            assignment,
+            tag: self.tag().to_string(),
+        }
+    }
+
+    /// Paper tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Partitioner::Uniform => "pi1_uniform",
+            Partitioner::LabelSkew75 => "pi2_skew75",
+            Partitioner::LabelSeparated => "pi3_separated",
+            Partitioner::Replicated => "pi*_replicated",
+        }
+    }
+
+    /// All §7.4 strategies in paper order (π*, π₁, π₂, π₃).
+    pub fn all() -> [Partitioner; 4] {
+        [
+            Partitioner::Replicated,
+            Partitioner::Uniform,
+            Partitioner::LabelSkew75,
+            Partitioner::LabelSeparated,
+        ]
+    }
+}
+
+/// Feature (coordinate) partition: `blocks[k]` lists the feature indices
+/// worker `k` owns — the layout DBCD and ProxCOCOA+ distribute over.
+#[derive(Clone, Debug)]
+pub struct FeaturePartition {
+    /// Feature indices per worker.
+    pub blocks: Vec<Vec<usize>>,
+}
+
+impl FeaturePartition {
+    /// Contiguous equal blocks of `0..d` over `p` workers.
+    pub fn contiguous(d: usize, p: usize) -> Self {
+        let mut blocks = vec![Vec::new(); p];
+        for j in 0..d {
+            blocks[j * p / d.max(1)].push(j);
+        }
+        FeaturePartition { blocks }
+    }
+
+    /// Number of workers.
+    pub fn p(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn uniform_is_disjoint_cover_and_balanced() {
+        let ds = synth::tiny(1).generate();
+        let part = Partitioner::Uniform.split(&ds, 8, 3);
+        assert!(part.is_disjoint_cover(ds.n()));
+        for a in &part.assignment {
+            let expect = ds.n() / 8;
+            assert!(
+                a.len() > expect / 2 && a.len() < expect * 2,
+                "unbalanced shard {}",
+                a.len()
+            );
+        }
+    }
+
+    #[test]
+    fn replicated_gives_full_copies() {
+        let ds = synth::tiny(1).generate();
+        let part = Partitioner::Replicated.split(&ds, 4, 3);
+        assert_eq!(part.total_assigned(), 4 * ds.n());
+        for a in &part.assignment {
+            assert_eq!(a.len(), ds.n());
+        }
+        assert!(!part.is_disjoint_cover(ds.n()));
+    }
+
+    #[test]
+    fn label_separated_splits_classes() {
+        let ds = synth::tiny(2).generate();
+        let part = Partitioner::LabelSeparated.split(&ds, 8, 3);
+        assert!(part.is_disjoint_cover(ds.n()));
+        for (k, a) in part.assignment.iter().enumerate() {
+            for &i in a {
+                let positive = ds.y[i] > 0.0;
+                if k < 4 {
+                    assert!(positive, "negative instance on first half worker {k}");
+                } else {
+                    assert!(!positive, "positive instance on second half worker {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skew75_biases_but_mixes() {
+        let ds = synth::tiny(4).generate();
+        let part = Partitioner::LabelSkew75.split(&ds, 8, 5);
+        assert!(part.is_disjoint_cover(ds.n()));
+        let pos_first: usize = part.assignment[..4]
+            .iter()
+            .flatten()
+            .filter(|&&i| ds.y[i] > 0.0)
+            .count();
+        let pos_total = ds.y.iter().filter(|&&v| v > 0.0).count();
+        let frac = pos_first as f64 / pos_total as f64;
+        assert!((0.6..0.9).contains(&frac), "positive skew {frac}");
+        // but unlike pi3, both halves see both classes
+        let neg_first: usize = part.assignment[..4]
+            .iter()
+            .flatten()
+            .filter(|&&i| ds.y[i] < 0.0)
+            .count();
+        assert!(neg_first > 0);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = synth::tiny(1).generate();
+        let a = Partitioner::Uniform.split(&ds, 4, 9);
+        let b = Partitioner::Uniform.split(&ds, 4, 9);
+        assert_eq!(a.assignment, b.assignment);
+        let c = Partitioner::Uniform.split(&ds, 4, 10);
+        assert_ne!(a.assignment, c.assignment);
+    }
+
+    #[test]
+    fn feature_partition_covers_all_features() {
+        let fp = FeaturePartition::contiguous(100, 7);
+        let mut seen = vec![false; 100];
+        for b in &fp.blocks {
+            for &j in b {
+                assert!(!seen[j]);
+                seen[j] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn single_worker_cases() {
+        let ds = synth::tiny(1).generate();
+        for strat in Partitioner::all() {
+            let part = strat.split(&ds, 1, 0);
+            assert_eq!(part.p(), 1);
+            assert_eq!(part.assignment[0].len(), ds.n());
+        }
+    }
+}

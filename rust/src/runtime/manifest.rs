@@ -1,0 +1,220 @@
+//! Artifact manifest: the typed contract between `python/compile/aot.py`
+//! and the rust runtime.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+
+/// One tensor's shape + dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// `"float32"` / `"int32"`.
+    pub dtype: String,
+}
+
+/// One AOT program.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    /// Program name (`inner_epoch_logistic_2048x64_m512`, ...).
+    pub name: String,
+    /// HLO text file relative to the artifact dir.
+    pub path: String,
+    /// Input tensors in call order.
+    pub inputs: Vec<IoSpec>,
+    /// Output tensors.
+    pub outputs: Vec<IoSpec>,
+    /// `kind` meta field (`shard_grad`/`shard_loss`/`inner_epoch`/...).
+    pub kind: String,
+    /// `model` meta field (`logistic`/`lasso`).
+    pub model: String,
+    /// Shard rows `n`.
+    pub n: usize,
+    /// Features `d`.
+    pub d: usize,
+    /// Inner steps `m` (0 when not an inner-epoch program).
+    pub m_inner: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    programs: Vec<ProgramSpec>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Manifest("io entry missing shape".into()))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| Error::Manifest("bad dim".into())))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Manifest("io entry missing dtype".into()))?
+        .to_string();
+    Ok(IoSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(Error::Manifest)?;
+        let fmt = j.get("format").and_then(Json::as_usize).unwrap_or(0);
+        if fmt != 1 {
+            return Err(Error::Manifest(format!("unsupported manifest format {fmt}")));
+        }
+        let progs = j
+            .get("programs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Manifest("missing programs".into()))?;
+        let mut programs = Vec::with_capacity(progs.len());
+        for p in progs {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Manifest("program missing name".into()))?
+                .to_string();
+            let path = p
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Manifest(format!("{name}: missing path")))?
+                .to_string();
+            let inputs = p
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Manifest(format!("{name}: missing inputs")))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = p
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Manifest(format!("{name}: missing outputs")))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = p
+                .get("meta")
+                .ok_or_else(|| Error::Manifest(format!("{name}: missing meta")))?;
+            let get_meta_usize =
+                |k: &str| meta.get(k).and_then(Json::as_usize).unwrap_or(0);
+            programs.push(ProgramSpec {
+                kind: meta
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                model: meta
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                n: get_meta_usize("n"),
+                d: get_meta_usize("d"),
+                m_inner: get_meta_usize("m_inner"),
+                name,
+                path,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { programs })
+    }
+
+    /// Load from a file path.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "{}: {e} (run `make artifacts` first)",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Find a program by exact name.
+    pub fn program(&self, name: &str) -> Option<&ProgramSpec> {
+        self.programs.iter().find(|p| p.name == name)
+    }
+
+    /// Find by (kind, model, n, d [, m]) — how the worker picks artifacts.
+    pub fn find(&self, kind: &str, model: &str, n: usize, d: usize) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .find(|p| p.kind == kind && p.model == model && p.n == n && p.d == d)
+    }
+
+    /// All program names.
+    pub fn names(&self) -> Vec<&str> {
+        self.programs.iter().map(|p| p.name.as_str()).collect()
+    }
+
+    /// All programs.
+    pub fn programs(&self) -> &[ProgramSpec] {
+        &self.programs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "jax_version": "0.8.2",
+      "programs": [
+        {
+          "name": "shard_grad_logistic_256x64",
+          "path": "shard_grad_logistic_256x64.hlo.txt",
+          "inputs": [
+            {"shape": [256, 64], "dtype": "float32"},
+            {"shape": [256], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"}
+          ],
+          "outputs": [{"shape": [64], "dtype": "float32"}],
+          "meta": {"kind": "shard_grad", "model": "logistic", "n": 256, "d": 64}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.program("shard_grad_logistic_256x64").unwrap();
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.inputs[0].shape, vec![256, 64]);
+        assert_eq!(p.kind, "shard_grad");
+        assert_eq!(p.n, 256);
+        assert_eq!(p.m_inner, 0);
+    }
+
+    #[test]
+    fn find_by_meta() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("shard_grad", "logistic", 256, 64).is_some());
+        assert!(m.find("shard_grad", "lasso", 256, 64).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": 9, "programs": []}"#).is_err());
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // when `make artifacts` has run, parse the real thing too
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.find("inner_epoch", "logistic", 2048, 64).is_some());
+            assert_eq!(m.programs().len(), 20);
+        }
+    }
+}

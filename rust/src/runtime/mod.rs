@@ -1,0 +1,218 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the L2 programs (which inline the L1 Pallas
+//! kernels) to HLO **text** under `artifacts/`, plus a `manifest.json`
+//! describing every program's I/O. This module is the rust half of that
+//! contract:
+//!
+//! ```text
+//! manifest.json ─┐
+//! *.hlo.txt ─────┴─> HloModuleProto::from_text_file
+//!                      -> XlaComputation -> PjRtClient::cpu().compile
+//!                      -> cached PjRtLoadedExecutable -> execute(...)
+//! ```
+//!
+//! Text (not serialized proto) is the interchange format because the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids;
+//! the text parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! Executables are compiled once per program name and cached; the worker
+//! hot path only pays literal conversion + execution.
+
+mod manifest;
+
+pub use manifest::{IoSpec, Manifest, ProgramSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// Input tensor handed to [`XlaRuntime::execute`].
+pub enum Input<'a> {
+    /// f32 tensor with shape.
+    F32(&'a [f32], &'a [usize]),
+    /// i32 tensor with shape.
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl Input<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Input::F32(data, shape) => {
+                let expected: usize = shape.iter().product();
+                if data.len() != expected {
+                    return Err(Error::Runtime(format!(
+                        "f32 input has {} elements, shape {:?} wants {}",
+                        data.len(),
+                        shape,
+                        expected
+                    )));
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Input::I32(data, shape) => {
+                let expected: usize = shape.iter().product();
+                if data.len() != expected {
+                    return Err(Error::Runtime(format!(
+                        "i32 input has {} elements, shape {:?} wants {}",
+                        data.len(),
+                        shape,
+                        expected
+                    )));
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            Input::F32(_, s) | Input::I32(_, s) => s,
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Input::F32(..) => "float32",
+            Input::I32(..) => "int32",
+        }
+    }
+}
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .program(name)
+            .ok_or_else(|| Error::Manifest(format!("program {name:?} not in manifest")))?;
+        let path = self.dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute program `name` with `inputs`, validating shapes/dtypes
+    /// against the manifest; returns the flattened f32 outputs (the
+    /// artifacts all return f32 tuples).
+    pub fn execute(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self
+            .manifest
+            .program(name)
+            .ok_or_else(|| Error::Manifest(format!("program {name:?} not in manifest")))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: got {} inputs, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        for (i, (inp, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if inp.shape() != want.shape.as_slice() || inp.dtype() != want.dtype {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} is {:?}/{}, manifest wants {:?}/{}",
+                    inp.shape(),
+                    inp.dtype(),
+                    want.shape,
+                    want.dtype
+                )));
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Runtime(format!("{name}: empty execution result")))?;
+        // aot.py lowers with return_tuple=True: output is an n-tuple literal
+        let tuple = first.to_literal_sync()?.to_tuple()?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(lit.to_vec::<f32>()?);
+        }
+        Ok(outs)
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("dir", &self.dir)
+            .field("programs", &self.manifest.names().len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution-level integration tests live in rust/tests/runtime_roundtrip.rs
+    // (they need `make artifacts`). Here: input validation only.
+
+    #[test]
+    fn input_shape_validation() {
+        let data = vec![1f32; 6];
+        let inp = Input::F32(&data, &[2, 3]);
+        assert!(inp.to_literal().is_ok());
+        let bad = Input::F32(&data, &[2, 4]);
+        assert!(bad.to_literal().is_err());
+    }
+
+    #[test]
+    fn dtype_tags() {
+        let f = vec![0f32; 2];
+        let i = vec![0i32; 2];
+        assert_eq!(Input::F32(&f, &[2]).dtype(), "float32");
+        assert_eq!(Input::I32(&i, &[2]).dtype(), "int32");
+    }
+}

@@ -1,0 +1,107 @@
+//! Mini property-testing framework.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! use pscope::testkit::prop;
+//! use pscope::rng::Rng;
+//!
+//! prop::check("addition commutes", 100, |rng, _shrink| {
+//!     let (a, b) = (rng.range(-1e6, 1e6), rng.range(-1e6, 1e6));
+//!     prop::that(a + b == b + a, format!("a={a} b={b}"))
+//! });
+//! ```
+//!
+//! * `cases` random cases, each from a per-case seed derived from a run
+//!   seed (override with env `PROP_SEED` to replay a failure).
+//! * On failure the case is re-run at increasing `shrink` levels (0..=3);
+//!   generators should produce *smaller* inputs at higher shrink levels
+//!   (fewer dims, shorter loops), giving readable counterexamples without
+//!   a full shrinking engine.
+
+use crate::rng::Rng;
+
+/// Outcome of one property case.
+pub struct Outcome {
+    /// Pass?
+    pub ok: bool,
+    /// Counterexample description when failing.
+    pub detail: String,
+}
+
+/// Build an [`Outcome`].
+pub fn that(ok: bool, detail: impl Into<String>) -> Outcome {
+    Outcome { ok, detail: detail.into() }
+}
+
+/// Run `cases` cases of `property`. Panics (test failure) with the seed and
+/// detail of the first failing case.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Rng, u32) -> Outcome,
+{
+    let run_seed: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let forced = std::env::var("PROP_SEED").is_ok();
+    for case in 0..cases {
+        let seed = if forced { run_seed } else { run_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15) };
+        let mut rng = Rng::new(seed);
+        let out = property(&mut rng, 0);
+        if !out.ok {
+            // try to present a smaller counterexample
+            let mut best = out.detail.clone();
+            for shrink in 1..=3u32 {
+                let mut rng = Rng::new(seed);
+                let o = property(&mut rng, shrink);
+                if !o.ok {
+                    best = o.detail.clone();
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, replay with PROP_SEED={seed}):\n  {best}"
+            );
+        }
+        if forced {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs nonneg", 50, |rng, _| {
+            let x = rng.range(-10.0, 10.0);
+            that(x.abs() >= 0.0, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always false", 5, |rng, _| {
+                let x = rng.f64();
+                that(false, format!("x={x}"))
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("PROP_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn shrink_level_is_passed() {
+        let mut seen = Vec::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("records shrink", 1, |_, shrink| {
+                seen.push(shrink);
+                that(false, "x")
+            });
+        }));
+        assert!(r.is_err());
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+}

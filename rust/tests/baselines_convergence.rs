@@ -1,0 +1,170 @@
+//! Cross-system integration: every §7.1 baseline solves the same problem to
+//! a common loose gap, and the Figure-1 *ordering mechanisms* hold at test
+//! scale — pSCOPE's per-epoch communication is constant while the
+//! minibatch methods' grows with n, and DBCD needs orders of magnitude
+//! more simulated time (Table 2's mechanism).
+
+use pscope::baselines::{
+    all_baselines, dbcd::Dbcd, pscope::PScope, BaselineOpts, DistSolver,
+};
+use pscope::config::Model;
+use pscope::data::synth;
+use pscope::loss::{Objective, Reg};
+use pscope::net::NetModel;
+use pscope::optim::fista::reference_optimum;
+
+fn problem() -> (pscope::data::Dataset, Reg, f64) {
+    let ds = synth::tiny(55).with_n(400).generate();
+    let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+    let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+    let opt = reference_optimum(&obj, 30_000);
+    (ds, reg, opt.objective)
+}
+
+#[test]
+fn all_baselines_reach_loose_gap() {
+    let (ds, reg, p_star) = problem();
+    for solver in all_baselines() {
+        let opts = BaselineOpts {
+            p: 4,
+            seed: 42,
+            max_rounds: 600,
+            max_total_s: 120.0,
+            net: NetModel::zero(),
+            record_every: 10,
+            target_objective: p_star,
+            tol: 1e-2,
+        };
+        let trace = solver.run(&ds, Model::Logistic, reg, &opts);
+        let best = trace
+            .points
+            .iter()
+            .map(|p| p.objective - p_star)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best < 2e-2,
+            "{} never reached the loose gap (best {best:.3e})",
+            solver.name()
+        );
+    }
+}
+
+#[test]
+fn pscope_comm_is_constant_per_epoch_vs_minibatch_linear() {
+    let (ds, reg, _) = problem();
+    let run_bytes = |solver: &dyn DistSolver, rounds: usize| {
+        let opts = BaselineOpts {
+            p: 4,
+            seed: 42,
+            max_rounds: rounds,
+            max_total_s: 300.0,
+            net: NetModel::zero(),
+            record_every: 1,
+            target_objective: f64::NEG_INFINITY,
+            tol: 0.0,
+        };
+        solver
+            .run(&ds, Model::Logistic, reg, &opts)
+            .points
+            .last()
+            .unwrap()
+            .comm_bytes as f64
+    };
+    let ps = run_bytes(&PScope::default(), 3) / 3.0;
+    // batch 4 => n/(b*p) = 25 parameter-server rounds per epoch
+    let sgd = run_bytes(&pscope::baselines::dpsgd::DpSgd { batch: 4, t0: 2000.0 }, 3) / 3.0;
+    // dpSGD moves ~steps_per_epoch x the bytes pSCOPE moves per epoch
+    assert!(
+        sgd > 8.0 * ps,
+        "expected dpSGD per-epoch comm >> pSCOPE ({sgd:.0} vs {ps:.0})"
+    );
+}
+
+#[test]
+fn dbcd_needs_far_more_communication() {
+    // Table 2's *mechanism*, stated scale-robustly: DBCD moves O(n)-sized
+    // vectors for many rounds (direction exchange + every line-search
+    // trial), while pSCOPE moves 4 d-sized vectors per epoch. At the
+    // paper's n = 581k..677k this communication gap is what produces the
+    // 100-1000x wall-time ratios; here we assert the byte ratio directly
+    // (the wall-time ordering at full scale is reproduced by
+    // `cargo bench --bench table2_dbcd`).
+    // geometry matters: the paper's datasets all have n >> d (rcv1:
+    // 677k x 47k), which is exactly when DBCD's n-sized rounds lose to
+    // pSCOPE's d-sized ones. Mirror that ratio at test scale.
+    let ds = synth::SynthSpec {
+        name: "nd10".into(),
+        n: 12_000,
+        d: 1_200,
+        nnz_per_row: 30.0,
+        powerlaw_alpha: 1.0,
+        k_true: 100,
+        label_noise: 0.05,
+        class_scale: 1.0,
+        task: synth::Task::Classification,
+        seed: 77,
+    }
+    .generate();
+    let reg = Reg { lam1: 1e-4, lam2: 1e-5 };
+    let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+    let p_star = reference_optimum(&obj, 4000).objective;
+    let bytes_to = |solver: &dyn DistSolver| -> Option<u64> {
+        let opts = BaselineOpts {
+            p: 4,
+            seed: 42,
+            max_rounds: 50_000,
+            max_total_s: 20.0,
+            net: NetModel::ten_gbe(),
+            record_every: 1,
+            target_objective: p_star,
+            tol: 1e-3,
+        };
+        let tr = solver.run(&ds, Model::Logistic, reg, &opts);
+        tr.points
+            .iter()
+            .find(|pt| pt.objective - p_star <= 1e-3)
+            .map(|pt| pt.comm_bytes)
+    };
+    let b_ps = bytes_to(&PScope::default()).expect("pSCOPE must reach 1e-3");
+    match bytes_to(&Dbcd::default()) {
+        Some(b_db) => assert!(
+            b_db > 3 * b_ps,
+            "Table-2 mechanism violated: DBCD {b_db}B vs pSCOPE {b_ps}B to the same gap"
+        ),
+        None => { /* never reached the gap inside the budget — also Table-2 shape */ }
+    }
+}
+
+#[test]
+fn lasso_flavor_runs_on_all_instance_distributed_baselines() {
+    let ds = synth::tiny(56)
+        .with_n(300)
+        .with_task(synth::Task::Regression)
+        .generate();
+    let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+    let obj = Objective::new(&ds, Model::Lasso.loss(), reg);
+    let p_star = reference_optimum(&obj, 30_000).objective;
+    for solver in all_baselines() {
+        let opts = BaselineOpts {
+            p: 3,
+            seed: 1,
+            max_rounds: 400,
+            max_total_s: 60.0,
+            net: NetModel::zero(),
+            record_every: 10,
+            target_objective: p_star,
+            tol: 1e-2,
+        };
+        let trace = solver.run(&ds, Model::Lasso, reg, &opts);
+        let best = trace
+            .points
+            .iter()
+            .map(|p| p.objective - p_star)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best < 5e-2,
+            "{} failed on lasso (best gap {best:.3e})",
+            solver.name()
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! Corollary 2 (E7): with p = 1, pSCOPE degenerates to serial proximal
+//! SVRG — trajectory-exact, and converging at the serial rate.
+
+use pscope::config::{Model, PscopeConfig};
+use pscope::coordinator::train_with;
+use pscope::data::synth;
+use pscope::loss::{Objective, Reg};
+use pscope::net::NetModel;
+use pscope::optim::fista::reference_optimum;
+use pscope::optim::lazy::{lazy_inner_epoch, LazyStats};
+use pscope::partition::Partitioner;
+use pscope::rng::Rng;
+
+#[test]
+fn p1_trajectory_is_serial_prox_svrg() {
+    let ds = synth::tiny(44).with_n(300).generate();
+    let reg = Reg { lam1: 2e-3, lam2: 1e-3 };
+    let (m, eta, epochs) = (600usize, 0.08, 5usize);
+    let cfg = PscopeConfig {
+        p: 1,
+        outer_iters: epochs,
+        m_inner: m,
+        eta,
+        reg,
+        seed: 99,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, 1, 0);
+    let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+
+    // serial prox-SVRG with the coordinator's per-worker rng stream
+    let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+    let mut w = vec![0.0; ds.d()];
+    let mut rng = Rng::new(99).fork(1);
+    let mut stats = LazyStats::default();
+    for _ in 0..epochs {
+        let z = obj.data_grad(&w);
+        w = lazy_inner_epoch(
+            &ds,
+            Model::Logistic.loss(),
+            &w,
+            &z,
+            eta,
+            reg.lam1,
+            reg.lam2,
+            m,
+            &mut rng,
+            &mut stats,
+        );
+    }
+    assert_eq!(out.w, w, "p=1 coordinator deviated from serial prox-SVRG");
+}
+
+#[test]
+fn p1_converges_at_serial_rate() {
+    let ds = synth::tiny(45).with_n(300).generate();
+    let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+    let obj = Objective::new(&ds, Model::Logistic.loss(), reg);
+    let opt = reference_optimum(&obj, 20_000);
+    let cfg = PscopeConfig {
+        p: 1,
+        outer_iters: 30,
+        reg,
+        seed: 7,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, 1, 0);
+    let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+    let gap = out.trace.last_objective() - opt.objective;
+    assert!(gap < 1e-8, "serial rate not reached: gap {gap}");
+    // linear-rate check: log-gap decreases roughly linearly over epochs
+    let gaps: Vec<f64> = out
+        .trace
+        .points
+        .iter()
+        .map(|p| (p.objective - opt.objective).max(1e-16))
+        .collect();
+    let early = (gaps[2] / gaps[0]).ln();
+    let late = (gaps[12] / gaps[10]).ln();
+    assert!(early < 0.0 && late < 0.0, "no contraction: early {early} late {late}");
+}

@@ -1,0 +1,123 @@
+//! Property tests: the §6 recovery-rule engine is semantically identical to
+//! the naive dense engine (E6), across randomized problems, regularization
+//! regimes (all five Lemma-11 z cases arise naturally), sparsity patterns,
+//! and epoch lengths.
+
+use pscope::data::synth::{SynthSpec, Task};
+use pscope::loss::{Loss, Objective, Reg};
+use pscope::optim::lazy::{lazy_advance, lazy_inner_epoch, LazyStats};
+use pscope::optim::svrg::dense_inner_epoch;
+use pscope::rng::Rng;
+use pscope::testkit::prop;
+
+fn random_spec(rng: &mut Rng, shrink: u32) -> SynthSpec {
+    let scale = 1usize << shrink.min(3); // shrink level makes problems smaller
+    SynthSpec {
+        name: "prop".into(),
+        n: (20 + rng.below(120)) / scale + 5,
+        d: (10 + rng.below(80)) / scale + 5,
+        nnz_per_row: 2.0 + rng.f64() * 6.0,
+        powerlaw_alpha: if rng.bool(0.5) { 0.0 } else { 1.1 },
+        k_true: 5,
+        label_noise: 0.05,
+        class_scale: 1.0,
+        task: if rng.bool(0.5) { Task::Classification } else { Task::Regression },
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_lazy_epoch_equals_dense_epoch() {
+    prop::check("lazy == dense inner epoch", 40, |rng, shrink| {
+        let spec = random_spec(rng, shrink);
+        let ds = spec.generate();
+        let loss = if spec.task == Task::Regression { Loss::Squared } else { Loss::Logistic };
+        let reg = Reg {
+            lam1: if rng.bool(0.3) { 0.0 } else { rng.f64() * 1e-2 },
+            lam2: if rng.bool(0.2) { 0.0 } else { rng.f64() * 1e-2 },
+        };
+        let obj = Objective::new(&ds, loss, reg);
+        let mut w: Vec<f64> = (0..ds.d()).map(|_| 0.2 * rng.normal()).collect();
+        if rng.bool(0.3) {
+            // exercise the zero-absorbing branch from a zero start
+            w.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let z = obj.data_grad(&w);
+        let eta = (0.1 + rng.f64() * 0.5) / obj.smoothness();
+        let m = 1 + rng.below(4 * ds.n());
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        let mut stats = LazyStats::default();
+        let ud = dense_inner_epoch(&ds, loss, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r1);
+        let ul = lazy_inner_epoch(&ds, loss, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r2, &mut stats);
+        for j in 0..ds.d() {
+            let tol = 1e-9 * (1.0 + ud[j].abs());
+            if (ud[j] - ul[j]).abs() >= tol {
+                return prop::that(
+                    false,
+                    format!(
+                        "spec n={} d={} lam=({:.2e},{:.2e}) eta={eta:.3e} m={m}: coord {j} dense {} vs lazy {}",
+                        ds.n(), ds.d(), reg.lam1, reg.lam2, ud[j], ul[j]
+                    ),
+                );
+            }
+        }
+        prop::that(true, "")
+    });
+}
+
+#[test]
+fn prop_lazy_advance_equals_iteration() {
+    prop::check("lazy_advance == repeated map", 300, |rng, _| {
+        let u0 = rng.range(-8.0, 8.0);
+        let eps = match rng.below(3) {
+            0 => 0.0,
+            1 => rng.f64() * 1e-3,
+            _ => rng.f64() * 0.4,
+        };
+        let tau = if rng.bool(0.2) { 0.0 } else { rng.f64() * 0.4 };
+        // include the boundary cases c = ±tau (Lemma 11 cases 2-3)
+        let c = match rng.below(4) {
+            0 => tau,
+            1 => -tau,
+            _ => rng.range(-0.6, 0.6),
+        };
+        let k = 1 + rng.below(2000);
+        let lazy = lazy_advance(u0, k, eps, c, tau);
+        let mut naive = u0;
+        for _ in 0..k {
+            naive = pscope::linalg::soft_threshold((1.0 - eps) * naive - c, tau);
+        }
+        prop::that(
+            (lazy - naive).abs() < 1e-9 * (1.0 + naive.abs()),
+            format!("u0={u0} k={k} eps={eps} c={c} tau={tau}: {lazy} vs {naive}"),
+        )
+    });
+}
+
+#[test]
+fn prop_savings_match_sparsity() {
+    // the counter must report exactly sum(nnz of sampled rows) + d
+    prop::check("materialization count exact", 30, |rng, shrink| {
+        let spec = random_spec(rng, shrink);
+        let ds = spec.generate();
+        let loss = Loss::Logistic;
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = Objective::new(&ds, loss, reg);
+        let w = vec![0.0; ds.d()];
+        let z = obj.data_grad(&w);
+        let m = 1 + rng.below(2 * ds.n());
+        let seed = rng.next_u64();
+        let mut stats = LazyStats::default();
+        let mut r = Rng::new(seed);
+        let _ = lazy_inner_epoch(&ds, loss, &w, &z, 0.01, reg.lam1, reg.lam2, m, &mut r, &mut stats);
+        // replay the sampling
+        let mut r2 = Rng::new(seed);
+        let expect: u64 = (0..m).map(|_| ds.x.row(r2.below(ds.n())).nnz() as u64).sum::<u64>()
+            + ds.d() as u64;
+        prop::that(
+            stats.materializations == expect,
+            format!("counted {} expect {expect}", stats.materializations),
+        )
+    });
+}
