@@ -4,27 +4,38 @@
 //! python nowhere on the path — and cross-check the trajectory against the
 //! pure-rust dense engine.
 //!
+//! Degrades gracefully: when the artifacts have not been generated (or the
+//! crate was built without the `xla` feature) the demo prints the layer's
+//! actionable error and exits non-zero instead of panicking.
+//!
 //! ```bash
 //! make artifacts   # once
 //! cargo run --release --example xla_worker_demo
 //! ```
 
+use std::process::ExitCode;
+
 use pscope::config::WorkerBackend;
 use pscope::coordinator::train_with;
+use pscope::error::Result;
 use pscope::loss::{Objective, Reg};
 use pscope::net::NetModel;
 use pscope::prelude::*;
 use pscope::runtime::XlaRuntime;
 
-fn main() {
+fn run() -> Result<()> {
     // cov-like dense data sized so each of the 4 shards fits the
     // (2048 x 64) artifact config
     let ds = pscope::data::synth::cov_like(42).with_n(6000).generate();
     let reg = Reg { lam1: 1e-3, lam2: 1e-4 };
     println!("dense data: n={} d={} (artifact config 2048x64, m=512)", ds.n(), ds.d());
 
-    let rt = XlaRuntime::open("artifacts").expect("run `make artifacts` first");
-    println!("PJRT platform: {}, {} programs in manifest\n", rt.platform(), rt.manifest().programs().len());
+    let rt = XlaRuntime::open("artifacts")?;
+    println!(
+        "PJRT platform: {}, {} programs in manifest\n",
+        rt.platform(),
+        rt.manifest().programs().len()
+    );
     drop(rt); // each worker thread opens its own client (xla handles aren't Send)
 
     let mk_cfg = |backend| PscopeConfig {
@@ -47,8 +58,7 @@ fn main() {
         &mk_cfg(WorkerBackend::Xla),
         Some("artifacts".into()),
         NetModel::ten_gbe(),
-    )
-    .unwrap();
+    )?;
     println!("running rust dense backend (same seeds)...");
     let dense = train_with(
         &ds,
@@ -56,8 +66,7 @@ fn main() {
         &mk_cfg(WorkerBackend::RustDense),
         None,
         NetModel::ten_gbe(),
-    )
-    .unwrap();
+    )?;
 
     println!("\n{:>5} {:>16} {:>16} {:>12}", "epoch", "P(w) xla", "P(w) rust", "|Δ|");
     for (a, b) in xla.trace.points.iter().zip(&dense.trace.points) {
@@ -76,11 +85,27 @@ fn main() {
         .zip(&dense.w)
         .map(|(x, y)| (x - y).abs())
         .fold(0.0f64, f64::max);
-    println!("\nfinal objectives: xla {:.10} vs rust {:.10}", obj.value(&xla.w), obj.value(&dense.w));
+    println!(
+        "\nfinal objectives: xla {:.10} vs rust {:.10}",
+        obj.value(&xla.w),
+        obj.value(&dense.w)
+    );
     println!("max coordinate divergence: {max_dw:.2e} (f32 artifact vs f64 engine)");
     assert!(
         (xla.trace.last_objective() - dense.trace.last_objective()).abs() < 1e-3,
         "backends diverged beyond f32 tolerance"
     );
     println!("\nthree-layer compose OK: rust coordinator -> PJRT -> XLA(JAX+Pallas) matches rust engine");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("xla_worker_demo: {e}");
+            eprintln!("(generate the AOT artifacts with `make artifacts`, or use the pure-rust backends)");
+            ExitCode::FAILURE
+        }
+    }
 }

@@ -22,7 +22,8 @@ fn main() {
     let full = std::env::var("PSCOPE_BENCH_SCALE").as_deref() == Ok("full");
     // geometry-preserving specs (see bench_spec); n boosted so that even at
     // p = 8 a single local pass saturates each worker's inner chain — the
-    // precondition for parallel speedup (E3 discussion in EXPERIMENTS.md)
+    // precondition for parallel speedup (see DESIGN.md §4 on why the
+    // cluster-equivalent clock, not raw wall time, carries this figure)
     let boost = |mut s: pscope::data::synth::SynthSpec| {
         s.n *= if full { 4 } else { 3 };
         s

@@ -21,7 +21,8 @@ fn main() {
     let full = std::env::var("PSCOPE_BENCH_SCALE").as_deref() == Ok("full");
     // class_scale > 1 reproduces the class-conditional curvature real data
     // (cov, rcv1) carries; symmetric synthetic data would let the per-worker
-    // biases cancel in the master average (see DESIGN.md / EXPERIMENTS.md E4)
+    // biases cancel in the master average (see the SynthSpec::class_scale
+    // field docs and DESIGN.md §5)
     // rcv1 at reduced n must keep n >> d or the per-worker logistic
     // subproblems are separable/degenerate; shrink d along with n.
     let rcv1_small = synth::SynthSpec {

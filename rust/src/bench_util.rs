@@ -22,7 +22,8 @@ use std::time::Instant;
 /// rather than the absolute dimensions. λ₁ is likewise kept at 1e-5 (the
 /// paper's values for the two big CTR sets, 1e-6/1e-8, are tuned to
 /// n ~ 10⁷..10⁸; at n ~ 10⁴ they leave the problem effectively
-/// unregularized and no method resolves a 1e-5 gap). See EXPERIMENTS.md.
+/// unregularized and no method resolves a 1e-5 gap). The time axis the
+/// benches report over these specs is documented in DESIGN.md §4.
 pub fn bench_spec(name: &str, full: bool) -> crate::data::synth::SynthSpec {
     use crate::data::synth::{SynthSpec, Task};
     let sc = |small: usize, big: usize| if full { big } else { small };

@@ -16,6 +16,25 @@
 //! (evaluated off the clock), compute wall time, modeled network time from
 //! the byte meter, and lazy-engine counters. Early stopping triggers when
 //! the objective gap vs a known reference optimum crosses `cfg.tol`.
+//!
+//! ## Failure model
+//!
+//! The reduce loops must never hang, whatever a worker does:
+//!
+//! * every worker thread carries a drop guard that emits a
+//!   [`protocol::ToMaster::WorkerDown`] sentinel on any non-clean exit —
+//!   including a panic mid-unwind — so the master's `recv` loops fail fast
+//!   with [`Error::Protocol`] instead of waiting for a message that will
+//!   never arrive;
+//! * [`protocol::ToWorker::Stop`] is a clean shutdown at *every* worker
+//!   receive point (epoch start or mid-epoch), so an aborting master can
+//!   always drain its workers;
+//! * channel senders are dropped deterministically (master clone before the
+//!   loop, worker channels right after `Stop`), and every join handle is
+//!   reaped explicitly — a panicking worker surfaces as `Err`, never as a
+//!   propagated panic or a deadlocked join;
+//! * degenerate configurations (zero workers, empty shards) are rejected
+//!   before any thread spawns.
 
 pub mod protocol;
 pub mod worker;
@@ -61,6 +80,28 @@ pub fn train(ds: &Dataset, part: &Partition, cfg: &PscopeConfig) -> TrainOutput 
     train_with(ds, part, cfg, dir, NetModel::ten_gbe()).expect("training failed")
 }
 
+/// Drop guard held by every worker thread: if the thread exits without
+/// disarming (i.e. it returned an error or is unwinding from a panic), the
+/// guard notifies the master so its reduce loop cannot deadlock.
+struct DownGuard {
+    tx: SimSender<ToMaster>,
+    worker: usize,
+    armed: bool,
+}
+
+impl Drop for DownGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            // Unmetered: thread death is not wire traffic. Ignore send
+            // failures — if the master is already gone there is nobody
+            // left to deadlock.
+            let _ = self
+                .tx
+                .send_unmetered(ToMaster::WorkerDown { worker: self.worker });
+        }
+    }
+}
+
 /// Full-control entry point.
 pub fn train_with(
     ds: &Dataset,
@@ -75,6 +116,14 @@ pub fn train_with(
     }
     if cfg.backend == WorkerBackend::Xla && artifact_dir.is_none() {
         return Err(Error::Config("Xla backend requires an artifact dir".into()));
+    }
+    // Reject degenerate shards before any thread exists: a worker with no
+    // data cannot run an inner epoch, and failing here keeps the error on
+    // the caller's thread.
+    for (k, rows) in part.assignment.iter().enumerate() {
+        if rows.is_empty() {
+            return Err(Error::Config(format!("worker {k} got an empty shard")));
+        }
     }
     let d = ds.d();
     let n_total = ds.n();
@@ -105,7 +154,9 @@ pub fn train_with(
     let root_rng = Rng::new(cfg.seed);
 
     // build channels: one per worker for master->worker, one shared for
-    // worker->master
+    // worker->master. The worker->master bound (4p) exceeds the worst-case
+    // number of in-flight messages (≤ 2 data messages + 1 WorkerDown per
+    // worker), so no send can ever block against an aborting master.
     let (to_master_tx, to_master_rx) = sim_channel::<ToMaster>(meter.clone(), 4 * p);
     let mut to_worker_tx: Vec<SimSender<ToWorker>> = Vec::with_capacity(p);
     let mut to_worker_rx = Vec::with_capacity(p);
@@ -130,69 +181,73 @@ pub fn train_with(
         comm_msgs: 0,
     });
 
-    crossbeam_utils::thread::scope(|scope| -> Result<()> {
-        // spawn workers
+    let scope_result: Result<()> = std::thread::scope(|scope| {
+        // ---- spawn workers (Algorithm 1, lines 9–20) ----
         let mut handles = Vec::with_capacity(p);
         for (k, rx) in to_worker_rx.into_iter().enumerate() {
             let shard = ds.select(&part.assignment[k]);
-            if shard.n() == 0 {
-                return Err(Error::Config(format!("worker {k} got an empty shard")));
-            }
             let tx = to_master_tx.clone();
             let rng = root_rng.fork(k as u64 + 1);
             let rt = artifact_dir.clone();
             let reg = cfg.reg;
             let backend = cfg.backend;
-            handles.push(scope.spawn(move |_| -> Result<()> {
-                let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt);
-                let mut z_buf: Vec<f64>;
-                loop {
-                    let msg = rx.recv().map_err(|_| {
-                        Error::Protocol(format!("worker {k}: master channel closed"))
-                    })?;
-                    let (epoch, w_t) = match msg {
-                        ToWorker::Stop => return Ok(()),
-                        ToWorker::Broadcast { epoch, w } => (epoch, w),
-                        other => {
-                            return Err(Error::Protocol(format!(
-                                "worker {k}: expected Broadcast, got {other:?}"
-                            )))
-                        }
-                    };
-                    let t = ThreadCpuTimer::start();
-                    let zsum = wk.shard_grad(&w_t)?;
-                    let grad_s = t.elapsed_s();
-                    let count = wk.shard.n();
-                    let m = ToMaster::ShardGrad { worker: k, epoch, zsum, count };
-                    let bytes = m.wire_bytes();
-                    tx.send(m, bytes)
-                        .map_err(|_| Error::Protocol("master gone".into()))?;
-                    match rx.recv() {
-                        Ok(ToWorker::FullGrad { epoch: e2, z }) if e2 == epoch => {
-                            z_buf = z;
-                        }
-                        other => {
-                            return Err(Error::Protocol(format!(
-                                "worker {k}: expected FullGrad, got {other:?}"
-                            )))
-                        }
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut guard = DownGuard { tx: tx.clone(), worker: k, armed: true };
+                let result = (|| -> Result<()> {
+                    let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt);
+                    loop {
+                        let (epoch, w_t) = match rx.recv() {
+                            // Stop (or a vanished master) is a clean
+                            // shutdown at any protocol point.
+                            Ok(ToWorker::Stop) | Err(_) => return Ok(()),
+                            Ok(ToWorker::Broadcast { epoch, w }) => (epoch, w),
+                            Ok(other) => {
+                                return Err(Error::Protocol(format!(
+                                    "worker {k}: expected Broadcast, got {other:?}"
+                                )))
+                            }
+                        };
+                        let t = ThreadCpuTimer::start();
+                        let zsum = wk.shard_grad(&w_t)?;
+                        let grad_s = t.elapsed_s();
+                        let count = wk.shard.n();
+                        let m = ToMaster::ShardGrad { worker: k, epoch, zsum, count };
+                        let bytes = m.wire_bytes();
+                        tx.send(m, bytes)
+                            .map_err(|_| Error::Protocol("master gone".into()))?;
+                        let z_buf = match rx.recv() {
+                            Ok(ToWorker::FullGrad { epoch: e2, z }) if e2 == epoch => z,
+                            // master aborted the epoch mid-flight
+                            Ok(ToWorker::Stop) | Err(_) => return Ok(()),
+                            Ok(other) => {
+                                return Err(Error::Protocol(format!(
+                                    "worker {k}: expected FullGrad({epoch}), got {other:?}"
+                                )))
+                            }
+                        };
+                        let t2 = ThreadCpuTimer::start();
+                        let before = wk.lazy_stats.materializations;
+                        let u = wk.inner_epoch(&w_t, &z_buf, eta, m_inner)?;
+                        let msg = ToMaster::LocalIterate {
+                            worker: k,
+                            epoch,
+                            u,
+                            compute_s: grad_s + t2.elapsed_s(),
+                            materializations: wk.lazy_stats.materializations - before,
+                        };
+                        let bytes = msg.wire_bytes();
+                        tx.send(msg, bytes)
+                            .map_err(|_| Error::Protocol("master gone".into()))?;
                     }
-                    let t2 = ThreadCpuTimer::start();
-                    let before = wk.lazy_stats.materializations;
-                    let u = wk.inner_epoch(&w_t, &z_buf, eta, m_inner)?;
-                    let msg = ToMaster::LocalIterate {
-                        worker: k,
-                        epoch,
-                        u,
-                        compute_s: grad_s + t2.elapsed_s(),
-                        materializations: wk.lazy_stats.materializations - before,
-                    };
-                    let bytes = msg.wire_bytes();
-                    tx.send(msg, bytes)
-                        .map_err(|_| Error::Protocol("master gone".into()))?;
+                })();
+                if result.is_ok() {
+                    guard.armed = false;
                 }
+                result
             }));
         }
+        // the master's clone must go away so worker-side disconnects are
+        // observable; workers hold the remaining sender clones
         drop(to_master_tx);
 
         // ---- master loop (Algorithm 1, lines 2–8) ----
@@ -200,7 +255,7 @@ pub fn train_with(
         let mut sim_wall_s = 0.0f64;
         let mut z = vec![0.0; d];
         let mut u_mean = vec![0.0; d];
-        let result: Result<()> = (|| {
+        let master_result: Result<()> = (|| {
             for t_epoch in 0..cfg.outer_iters {
                 let timer = Timer::start();
                 for (k, tx) in to_worker_tx.iter().enumerate() {
@@ -223,10 +278,21 @@ pub fn train_with(
                             zsums[worker] = Some((zsum, count));
                             seen += 1;
                         }
-                        other => {
+                        Ok(ToMaster::WorkerDown { worker }) => {
+                            return Err(Error::Protocol(format!(
+                                "worker {worker} died during epoch {t_epoch} \
+                                 (panic or backend failure)"
+                            )))
+                        }
+                        Ok(other) => {
                             return Err(Error::Protocol(format!(
                                 "master: expected ShardGrad({t_epoch}), got {other:?}"
                             )))
+                        }
+                        Err(_) => {
+                            return Err(Error::Protocol(
+                                "all workers disconnected mid-reduce".into(),
+                            ))
                         }
                     }
                 }
@@ -261,10 +327,21 @@ pub fn train_with(
                             max_worker_s = max_worker_s.max(compute_s);
                             seen += 1;
                         }
-                        other => {
+                        Ok(ToMaster::WorkerDown { worker }) => {
+                            return Err(Error::Protocol(format!(
+                                "worker {worker} died during epoch {t_epoch} \
+                                 (panic or backend failure)"
+                            )))
+                        }
+                        Ok(other) => {
                             return Err(Error::Protocol(format!(
                                 "master: expected LocalIterate({t_epoch}), got {other:?}"
                             )))
+                        }
+                        Err(_) => {
+                            return Err(Error::Protocol(
+                                "all workers disconnected mid-reduce".into(),
+                            ))
                         }
                     }
                 }
@@ -305,18 +382,45 @@ pub fn train_with(
             }
             Ok(())
         })();
+
+        // ---- deterministic shutdown ----
+        // One Stop per worker (workers treat it as clean shutdown at any
+        // receive point), then drop the senders so even a worker that
+        // missed the Stop observes a closed channel. Send failures mean
+        // the worker is already gone — its join below tells us why.
         for tx in &to_worker_tx {
             let _ = tx.send(ToWorker::Stop, ToWorker::Stop.wire_bytes());
         }
-        for h in handles {
+        drop(to_worker_tx);
+
+        // Reap every worker explicitly: a panic becomes Err, never a
+        // propagated unwind out of the scope.
+        let mut worker_err: Option<Error> = None;
+        for (k, h) in handles.into_iter().enumerate() {
             match h.join() {
-                Ok(r) => r?,
-                Err(_) => return Err(Error::Protocol("worker panicked".into())),
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if worker_err.is_none() {
+                        worker_err = Some(Error::Protocol(format!(
+                            "worker {k} panicked mid-epoch"
+                        )));
+                    }
+                }
             }
         }
-        result
-    })
-    .map_err(|_| Error::Protocol("scope panicked".into()))??;
+        // A worker failure is the root cause; the master error it induced
+        // ("worker died during epoch ...") is secondary.
+        match worker_err {
+            Some(e) => Err(e),
+            None => master_result,
+        }
+    });
+    scope_result?;
 
     let comm = meter.snapshot();
     Ok(TrainOutput {
@@ -474,5 +578,25 @@ mod tests {
         let opt = reference_optimum(&obj, 20_000);
         let gap = out.trace.last_objective() - opt.objective;
         assert!(gap < 1e-5, "lasso gap {gap}");
+    }
+
+    #[test]
+    fn empty_shard_is_config_error_before_spawn() {
+        let ds = synth::tiny(108).generate();
+        let part = Partition {
+            assignment: vec![(0..ds.n()).collect(), Vec::new()],
+            tag: "degenerate".into(),
+        };
+        let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        let err = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap_err();
+        assert!(format!("{err}").contains("empty shard"), "{err}");
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let ds = synth::tiny(109).generate();
+        let part = Partition { assignment: Vec::new(), tag: "none".into() };
+        let cfg = PscopeConfig::for_dataset("tiny", Model::Logistic);
+        assert!(train_with(&ds, &part, &cfg, None, NetModel::zero()).is_err());
     }
 }

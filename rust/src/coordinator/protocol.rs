@@ -83,6 +83,15 @@ pub enum ToMaster {
         /// Lazy-engine materializations this epoch (0 for dense/XLA).
         materializations: u64,
     },
+    /// Failure sentinel: the worker thread exited without completing the
+    /// protocol (panic or backend error). Emitted by the worker's drop
+    /// guard — even during unwinding — so the master's reduce loop fails
+    /// fast instead of blocking forever on a message that will never come.
+    /// Sent unmetered: it models thread death, not wire traffic.
+    WorkerDown {
+        /// Which worker died.
+        worker: usize,
+    },
 }
 
 impl ToMaster {
@@ -91,6 +100,7 @@ impl ToMaster {
         match self {
             ToMaster::ShardGrad { zsum, .. } => vec_bytes(zsum.len()) + 8,
             ToMaster::LocalIterate { u, .. } => vec_bytes(u.len()) + 16,
+            ToMaster::WorkerDown { .. } => MSG_HEADER_BYTES,
         }
     }
 }

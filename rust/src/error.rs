@@ -1,35 +1,79 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled; the offline image has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the pSCOPE library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Runtime/PJRT layer failure (artifact loading, compilation, execution).
-    #[error("runtime: {0}")]
     Runtime(String),
     /// Artifact manifest problems (missing program, shape mismatch, parse).
-    #[error("manifest: {0}")]
     Manifest(String),
     /// Dataset parsing / generation problems.
-    #[error("data: {0}")]
     Data(String),
     /// Configuration file / CLI problems.
-    #[error("config: {0}")]
     Config(String),
     /// Coordinator protocol violation (unexpected message, dead worker).
-    #[error("protocol: {0}")]
     Protocol(String),
     /// Underlying I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_layer() {
+        assert_eq!(format!("{}", Error::Runtime("x".into())), "runtime: x");
+        assert_eq!(format!("{}", Error::Manifest("y".into())), "manifest: y");
+        assert_eq!(format!("{}", Error::Protocol("z".into())), "protocol: z");
+    }
+
+    #[test]
+    fn io_error_is_transparent_and_sourced() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::Data("d".into())).is_none());
     }
 }

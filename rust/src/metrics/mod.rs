@@ -126,13 +126,51 @@ pub struct ThreadCpuTimer {
     start_ns: u64,
 }
 
-fn thread_cpu_ns() -> u64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: valid pointer to a timespec; clockid is a supported constant.
-    unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+// The offline image has no `libc` crate; declare the one libc symbol we
+// need directly (std already links libc here). Linux/Android only: the
+// clockid constant and the i64/i64 timespec layout are Linux-ABI facts —
+// other unices get the wall-clock fallback below.
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod thread_clock {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
     }
-    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+
+    pub fn now_ns() -> u64 {
+        let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+        // SAFETY: valid pointer to a Timespec; the clock id is a supported
+        // constant on every unix this crate targets.
+        let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        if rc != 0 {
+            return 0;
+        }
+        ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "android")))]
+mod thread_clock {
+    // No per-thread clock: fall back to wall time (monotone, so elapsed
+    // deltas stay meaningful even if they include other threads' work).
+    pub fn now_ns() -> u64 {
+        use std::time::Instant;
+        use std::sync::OnceLock;
+        static EPOCH: OnceLock<Instant> = OnceLock::new();
+        let epoch = *EPOCH.get_or_init(Instant::now);
+        epoch.elapsed().as_nanos() as u64
+    }
+}
+
+fn thread_cpu_ns() -> u64 {
+    thread_clock::now_ns()
 }
 
 impl ThreadCpuTimer {
@@ -218,6 +256,8 @@ mod tests {
     }
 
     #[test]
+    // elsewhere the fallback clock counts wall time by design
+    #[cfg(any(target_os = "linux", target_os = "android"))]
     fn thread_cpu_timer_counts_work_not_sleep() {
         let t = ThreadCpuTimer::start();
         std::thread::sleep(std::time::Duration::from_millis(20));

@@ -2,8 +2,8 @@
 //!
 //! Workers here are OS threads on one box; the paper's testbed is a
 //! 10 GbE cluster. This module makes communication *observable and
-//! chargeable*: every master↔worker message flows through a
-//! [`SimChannel`], which counts messages and payload bytes, and a
+//! chargeable*: every master↔worker message flows through a metered
+//! channel ([`sim_channel`]), which counts messages and payload bytes, and a
 //! [`NetModel`] converts those counts into modeled wire time
 //! (`latency · msgs + bytes / bandwidth`) that the bench harness adds to
 //! the time axis. Figure-1-style comparisons hinge on exactly this cost
@@ -99,6 +99,16 @@ impl<T> SimSender<T> {
         self.meter.record(bytes);
         self.tx.send(msg)
     }
+
+    /// Send a control-plane message without touching the byte meter.
+    ///
+    /// Used for failure notifications (e.g. the coordinator's
+    /// `WorkerDown` sentinel): those are an artifact of the in-process
+    /// simulation, not of the modeled wire protocol, so metering them would
+    /// corrupt the exact per-epoch accounting the tests pin down.
+    pub fn send_unmetered(&self, msg: T) -> Result<(), std::sync::mpsc::SendError<T>> {
+        self.tx.send(msg)
+    }
 }
 
 /// Create a metered channel with the given buffering.
@@ -128,6 +138,15 @@ mod tests {
         let t = net.wire_time(1_000_000, 10);
         assert!((t - (0.01 + 1.0)).abs() < 1e-12);
         assert_eq!(NetModel::zero().wire_time(u64::MAX, 1_000), 0.0);
+    }
+
+    #[test]
+    fn unmetered_send_bypasses_meter() {
+        let meter = ByteMeter::new();
+        let (tx, rx) = sim_channel::<u32>(meter.clone(), 4);
+        tx.send_unmetered(9).unwrap();
+        assert_eq!(rx.recv().unwrap(), 9);
+        assert_eq!(meter.snapshot(), (0, 0));
     }
 
     #[test]

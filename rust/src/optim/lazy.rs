@@ -101,7 +101,7 @@ pub fn lazy_advance(u0: f64, k: usize, eps: f64, c: f64, tau: f64) -> f64 {
         let b = if pre > tau { c + tau } else { c - tau };
         // closed form u_q = r^q * u - b * beta_q; r^q via exp(q·ln r) —
         // one exp instead of __powidf2's multiply loop (≈35% of the epoch
-        // before this change; see EXPERIMENTS.md §Perf)
+        // before this change; measured by `cargo bench --bench micro_hotpath`)
         let ln_r = r.ln();
         let closed = |q: usize| -> f64 {
             if eps == 0.0 {
@@ -216,7 +216,7 @@ pub fn lazy_inner_epoch(
         let row = shard.x.row(i);
         // recover the support coordinates up to step m, accumulating the
         // inner product in the same pass (one gather over the support
-        // instead of two — see EXPERIMENTS.md §Perf)
+        // instead of two — measured by `cargo bench --bench micro_hotpath`)
         let mut a_u = 0.0;
         for k in 0..row.idx.len() {
             let j = row.idx[k] as usize;

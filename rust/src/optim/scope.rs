@@ -13,10 +13,10 @@
 //! is *the same affine-map family* as the plain update with
 //! `λ₁' = λ₁ + c` and `z' = z − c·w_t`, so both engines (dense and lazy,
 //! recovery rules included) run it unchanged — this module is just that
-//! re-parameterization. The `ablate_scope_c` bench measures how the pull
-//! strength trades epoch progress for stability, reproducing the paper's
-//! claim that under a good partition c = 0 (pSCOPE) dominates c > 0
-//! (SCOPE).
+//! re-parameterization. The unit tests below sweep the pull strength and
+//! show how it trades epoch progress for stability, reproducing the
+//! paper's claim that under a good partition c = 0 (pSCOPE) dominates
+//! c > 0 (SCOPE).
 
 use crate::data::Dataset;
 use crate::loss::Loss;
@@ -25,7 +25,6 @@ use crate::rng::Rng;
 
 /// Inner epoch with the SCOPE correction `c(u − w_t)` added to every
 /// stochastic step; `c = 0` is exactly pSCOPE's update.
-#[allow(clippy::too_many_arguments)]
 pub fn scope_inner_epoch(
     shard: &Dataset,
     loss: Loss,

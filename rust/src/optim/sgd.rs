@@ -4,8 +4,8 @@
 //! gradient `ĝ` and the usual `η_t = η₀ / (1 + t/t₀)` decay. Kept sparse:
 //! the minibatch gradient is accumulated on the union support, but the
 //! decay/prox is dense (dpSGD has no recovery rules — this O(d)-per-step
-//! cost is precisely one of the inefficiencies pSCOPE removes; see
-//! EXPERIMENTS.md E1 discussion).
+//! cost is precisely one of the inefficiencies pSCOPE removes; the fig1
+//! bench shows the resulting gap).
 
 use crate::data::Dataset;
 use crate::linalg::soft_threshold;

@@ -18,14 +18,21 @@
 //!
 //! Executables are compiled once per program name and cached; the worker
 //! hot path only pays literal conversion + execution.
+//!
+//! ## Feature gating
+//!
+//! The actual PJRT client needs the external `xla` crate, which the offline
+//! image does not ship. The [`Manifest`] parser is pure rust and always
+//! available; [`XlaRuntime`] is the real client when the crate is built
+//! with `--features xla`, and otherwise a stub whose `open` returns a
+//! clear [`Error::Runtime`] — so every `backend = xla` path degrades to an
+//! actionable error instead of a panic or a link failure.
 
 mod manifest;
 
 pub use manifest::{IoSpec, Manifest, ProgramSpec};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::PathBuf;
 
 use crate::error::{Error, Result};
 
@@ -38,63 +45,69 @@ pub enum Input<'a> {
 }
 
 impl Input<'_> {
+    /// Declared shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Input::F32(_, s) | Input::I32(_, s) => s,
+        }
+    }
+
+    /// Manifest dtype tag.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Input::F32(..) => "float32",
+            Input::I32(..) => "int32",
+        }
+    }
+
+    /// Check the element count matches the declared shape.
+    pub fn validate_len(&self) -> Result<()> {
+        let (len, shape) = match self {
+            Input::F32(data, shape) => (data.len(), *shape),
+            Input::I32(data, shape) => (data.len(), *shape),
+        };
+        let expected: usize = shape.iter().product();
+        if len != expected {
+            return Err(Error::Runtime(format!(
+                "{} input has {len} elements, shape {shape:?} wants {expected}",
+                self.dtype()
+            )));
+        }
+        Ok(())
+    }
+
+    #[cfg(feature = "xla")]
     fn to_literal(&self) -> Result<xla::Literal> {
+        self.validate_len()?;
         let lit = match self {
             Input::F32(data, shape) => {
-                let expected: usize = shape.iter().product();
-                if data.len() != expected {
-                    return Err(Error::Runtime(format!(
-                        "f32 input has {} elements, shape {:?} wants {}",
-                        data.len(),
-                        shape,
-                        expected
-                    )));
-                }
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
                 xla::Literal::vec1(data).reshape(&dims)?
             }
             Input::I32(data, shape) => {
-                let expected: usize = shape.iter().product();
-                if data.len() != expected {
-                    return Err(Error::Runtime(format!(
-                        "i32 input has {} elements, shape {:?} wants {}",
-                        data.len(),
-                        shape,
-                        expected
-                    )));
-                }
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
                 xla::Literal::vec1(data).reshape(&dims)?
             }
         };
         Ok(lit)
     }
-
-    fn shape(&self) -> &[usize] {
-        match self {
-            Input::F32(_, s) | Input::I32(_, s) => s,
-        }
-    }
-
-    fn dtype(&self) -> &'static str {
-        match self {
-            Input::F32(..) => "float32",
-            Input::I32(..) => "int32",
-        }
-    }
 }
 
 /// The PJRT runtime: CPU client + compiled-executable cache.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: std::sync::Mutex<
+        std::collections::HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>,
+    >,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Open the artifact directory (must contain `manifest.json`).
-    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+    pub fn open<P: AsRef<std::path::Path>>(dir: P) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))?;
         let client = xla::PjRtClient::cpu()?;
@@ -102,7 +115,7 @@ impl XlaRuntime {
             client,
             dir,
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: std::sync::Mutex::new(std::collections::HashMap::new()),
         })
     }
 
@@ -183,6 +196,63 @@ impl XlaRuntime {
     }
 }
 
+/// Stub runtime used when the crate is built without the `xla` feature
+/// (the default on the offline image). [`XlaRuntime::open`] validates the
+/// manifest — so a missing `artifacts/` directory still produces the
+/// actionable "run `make artifacts`" error — and then reports that the
+/// PJRT client itself is unavailable. No method panics.
+#[cfg(not(feature = "xla"))]
+#[derive(Debug)]
+pub struct XlaRuntime {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Open the artifact directory. Always returns an error in stub mode,
+    /// but checks the manifest first so the most common operator mistake
+    /// (artifacts never generated) gets the most specific message.
+    pub fn open<P: AsRef<std::path::Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let _manifest = Manifest::load(dir.join("manifest.json"))?;
+        Err(Error::Runtime(format!(
+            "XLA/PJRT runtime unavailable: pscope was built without the `xla` feature \
+             (artifact dir {}); rebuild with `--features xla` and a vendored `xla` crate, \
+             or use the `sparse`/`dense` worker backends",
+            dir.display()
+        )))
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        format!("unavailable (stub; artifact dir {})", self.dir.display())
+    }
+
+    /// Stub: compilation is unavailable without the `xla` feature.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<()>> {
+        Err(Error::Runtime(format!(
+            "cannot compile {name:?}: built without the `xla` feature"
+        )))
+    }
+
+    /// Stub: execution is unavailable without the `xla` feature.
+    pub fn execute(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        for inp in inputs {
+            inp.validate_len()?;
+        }
+        Err(Error::Runtime(format!(
+            "cannot execute {name:?}: built without the `xla` feature"
+        )))
+    }
+}
+
+#[cfg(feature = "xla")]
 impl std::fmt::Debug for XlaRuntime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("XlaRuntime")
@@ -203,9 +273,11 @@ mod tests {
     fn input_shape_validation() {
         let data = vec![1f32; 6];
         let inp = Input::F32(&data, &[2, 3]);
-        assert!(inp.to_literal().is_ok());
+        assert!(inp.validate_len().is_ok());
         let bad = Input::F32(&data, &[2, 4]);
-        assert!(bad.to_literal().is_err());
+        assert!(bad.validate_len().is_err());
+        let ints = vec![0i32; 4];
+        assert!(Input::I32(&ints, &[5]).validate_len().is_err());
     }
 
     #[test]
@@ -214,5 +286,13 @@ mod tests {
         let i = vec![0i32; 2];
         assert_eq!(Input::F32(&f, &[2]).dtype(), "float32");
         assert_eq!(Input::I32(&i, &[2]).dtype(), "int32");
+    }
+
+    #[test]
+    #[cfg(not(feature = "xla"))]
+    fn stub_open_reports_missing_manifest_first() {
+        let err = XlaRuntime::open("no-such-artifact-dir").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "unexpected error: {msg}");
     }
 }

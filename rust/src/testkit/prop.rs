@@ -1,7 +1,7 @@
 //! Mini property-testing framework.
 //!
 //! ```no_run
-//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! // (no_run: the check below is illustrative, not a real property run)
 //! use pscope::testkit::prop;
 //! use pscope::rng::Rng;
 //!

@@ -157,9 +157,57 @@ fn prop_monotone_objective_over_epochs() {
 }
 
 #[test]
+fn panicking_worker_surfaces_as_error_not_hang() {
+    // A worker that dies mid-epoch must turn into Err(..) on the caller's
+    // thread — not a deadlocked reduce loop, not a propagated panic.
+    // eta * lam1 >= 1 trips the engine's `assert!(decay > 0.0)` inside every
+    // worker thread after the ShardGrad exchange, i.e. genuinely mid-epoch.
+    let ds = synth::tiny(46).generate();
+    let cfg = PscopeConfig {
+        p: 3,
+        outer_iters: 2,
+        eta: 50.0,
+        m_inner: 10,
+        reg: Reg { lam1: 1.0, lam2: 1e-3 },
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, 3, 1);
+    let start = std::time::Instant::now();
+    let result = train_with(&ds, &part, &cfg, None, NetModel::zero());
+    let err = result.expect_err("worker panic must surface as Err");
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(30),
+        "coordinator took too long to notice the dead worker"
+    );
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("panicked") || msg.contains("died"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn empty_shard_rejected_without_spawning() {
+    // p > n uniform splits can produce empty shards; the coordinator must
+    // refuse them up front rather than hang a worker with no data.
+    let ds = synth::tiny(47).generate();
+    let part = pscope::partition::Partition {
+        assignment: vec![(0..ds.n()).collect(), Vec::new(), Vec::new()],
+        tag: "two_empty".into(),
+    };
+    let cfg = PscopeConfig {
+        p: 3,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let err = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap_err();
+    assert!(format!("{err}").contains("empty shard"), "{err}");
+}
+
+#[test]
 fn replicated_partition_beats_separated_on_skewed_data() {
-    // E5 shape at integration scale. Two ingredients put the run in the
-    // regime Theorem 2 is about (see fig2b bench / EXPERIMENTS.md E4):
+    // Figure-2(b) shape at integration scale. Two ingredients put the run
+    // in the regime Theorem 2 is about (see the fig2b bench and the
+    // SynthSpec::class_scale field docs):
     // class-conditional curvature (class_scale > 1 — real datasets have
     // it, symmetric synthetic data does not) and inner epochs long enough
     // that workers approach their local optima, so the averaged iterate

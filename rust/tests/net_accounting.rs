@@ -1,0 +1,96 @@
+//! Simulated-interconnect accounting: a `train_with` run moves exactly
+//! O(1) communication rounds and O(p·d) bytes per outer epoch — the
+//! paper's communication-efficiency claim (§5, contrasted with minibatch
+//! methods' O(n/b) rounds), pinned to the byte.
+
+use pscope::config::{Model, PscopeConfig};
+use pscope::coordinator::protocol::{vec_bytes, MSG_HEADER_BYTES};
+use pscope::coordinator::train_with;
+use pscope::data::synth;
+use pscope::loss::Reg;
+use pscope::net::NetModel;
+use pscope::partition::Partitioner;
+
+/// Exact wire bytes of one outer epoch with `p` workers over `d` features:
+/// Broadcast(w) + ShardGrad(zsum, count) + FullGrad(z) + LocalIterate(u,
+/// compute_s, materializations) per worker.
+fn epoch_bytes(p: usize, d: usize) -> u64 {
+    p as u64 * (vec_bytes(d) + (vec_bytes(d) + 8) + vec_bytes(d) + (vec_bytes(d) + 16))
+}
+
+fn run(ds: &pscope::data::Dataset, p: usize, epochs: usize) -> (u64, u64) {
+    let cfg = PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(ds, p, 1);
+    let out = train_with(ds, &part, &cfg, None, NetModel::zero()).unwrap();
+    out.comm
+}
+
+#[test]
+fn bytes_are_exactly_4pd_per_epoch() {
+    let ds = synth::tiny(21).generate();
+    let d = ds.d();
+    for (p, epochs) in [(1usize, 2usize), (2, 3), (4, 5)] {
+        let (bytes, _) = run(&ds, p, epochs);
+        // + one Stop header per worker at shutdown
+        let expect = epochs as u64 * epoch_bytes(p, d) + p as u64 * MSG_HEADER_BYTES;
+        assert_eq!(bytes, expect, "p={p} epochs={epochs}");
+    }
+}
+
+#[test]
+fn rounds_are_constant_per_epoch() {
+    // O(1) rounds per epoch: exactly 4 messages per worker per epoch
+    // (2 broadcasts down, 2 reductions up), independent of epoch count.
+    let ds = synth::tiny(22).generate();
+    for (p, epochs) in [(2usize, 2usize), (2, 6), (3, 4)] {
+        let (_, msgs) = run(&ds, p, epochs);
+        let expect = epochs as u64 * 4 * p as u64 + p as u64; // + Stop each
+        assert_eq!(msgs, expect, "p={p} epochs={epochs}");
+    }
+}
+
+#[test]
+fn per_epoch_bytes_scale_with_d_not_n() {
+    // Doubling the instance count must not change per-epoch wire traffic:
+    // the protocol only ever moves d-sized vectors (this is the entire
+    // contrast with the O(n)-per-epoch minibatch baselines).
+    let small = synth::tiny(23).generate();
+    let big = synth::tiny(23).with_n(2 * small.n()).generate();
+    assert_eq!(small.d(), big.d());
+    let epochs = 3;
+    let (b_small, m_small) = run(&small, 4, epochs);
+    let (b_big, m_big) = run(&big, 4, epochs);
+    assert_eq!(b_small, b_big, "per-epoch bytes depend on n");
+    assert_eq!(m_small, m_big, "per-epoch rounds depend on n");
+}
+
+#[test]
+fn wire_time_uses_metered_totals() {
+    // The trace's modeled wire time must equal the NetModel applied to the
+    // metered counters — no hidden traffic, no double counting.
+    let ds = synth::tiny(24).generate();
+    let net = NetModel { latency_s: 1e-4, bandwidth_bps: 1e8 };
+    let cfg = PscopeConfig {
+        p: 2,
+        outer_iters: 4,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, 2, 1);
+    let out = train_with(&ds, &part, &cfg, None, net).unwrap();
+    let last = out.trace.points.last().unwrap();
+    let expect = net.wire_time(last.comm_bytes, last.comm_msgs);
+    assert!(
+        (last.net_s - expect).abs() < 1e-12,
+        "net_s {} vs model {}",
+        last.net_s,
+        expect
+    );
+}
