@@ -114,14 +114,19 @@ fn main() {
                     .map(|pt| pt.objective - opt.objective)
                     .fold(p0 - opt.objective, f64::min);
                 let last = trace.points.last().unwrap();
-                table.row(&[
-                    solver.name().into(),
+                let cells = [
+                    solver.name().to_string(),
                     fmt_t(1e-3),
                     fmt_t(1e-5),
                     format!("{best:.2e}"),
                     format!("{}", last.epoch),
                     format!("{:.2}", last.comm_bytes as f64 / 1e6),
-                ]);
+                ];
+                // primary timing for the JSON trajectory: time to the 1e-3 gap
+                match trace.time_to_gap(opt.objective, 1e-3) {
+                    Some(t) => table.row_timed(&cells, t),
+                    None => table.row(&cells),
+                }
                 // dump the curve
                 if std::fs::create_dir_all("bench_out").is_ok() {
                     let path = format!(

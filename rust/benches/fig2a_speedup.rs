@@ -69,13 +69,18 @@ fn main() {
             if p == 1 {
                 t1 = t;
             }
-            table.row(&[
+            let cells = [
                 name.to_string(),
                 p.to_string(),
                 if t.is_finite() { format!("{t:.3}") } else { "—".into() },
                 out.epochs_run.to_string(),
                 format!("{:.2}", t1 / t),
-            ]);
+            ];
+            if t.is_finite() {
+                table.row_timed(&cells, t);
+            } else {
+                table.row(&cells);
+            }
         }
     }
     table.emit();

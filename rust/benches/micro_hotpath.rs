@@ -2,11 +2,18 @@
 //!
 //! * §6 lazy engine vs naive dense engine — the recovery-rule speedup
 //!   (E6), plus the conditional-statement reduction counter;
+//! * workspace reuse: the same lazy epoch with a fresh allocation per
+//!   epoch vs the zero-allocation [`EpochWorkspace`] path;
 //! * `lazy_advance` scalar cost (phase decomposition, O(log k));
-//! * shard-gradient kernel (the epoch-start pass);
+//! * shard-gradient kernel, serial and parallel (the deterministic blocked
+//!   reduction — bit-exact at every thread count);
 //! * coordinator protocol overhead: one full epoch at M = 0 (pure
 //!   broadcast/reduce) vs the per-epoch compute at the default M;
 //! * PJRT inner-epoch artifact execution (when `artifacts/` exists).
+//!
+//! Pass `--quick` (the CI bench-smoke mode) for 1 sample on a tiny
+//! instance — enough to exercise every path and emit the
+//! `bench_out/BENCH_*.json` trajectory point without burning minutes.
 
 use pscope::bench_util::{human_time, time_fn, Table};
 use pscope::config::{Model, PscopeConfig, WorkerBackend};
@@ -14,23 +21,28 @@ use pscope::coordinator::train_with;
 use pscope::data::synth;
 use pscope::loss::{Objective, Reg};
 use pscope::net::NetModel;
-use pscope::optim::lazy::{lazy_advance, lazy_inner_epoch, LazyStats};
+use pscope::optim::lazy::{lazy_advance, lazy_inner_epoch, lazy_inner_epoch_ws, LazyStats};
 use pscope::optim::svrg::dense_inner_epoch;
+use pscope::optim::workspace::EpochWorkspace;
 use pscope::partition::Partitioner;
 use pscope::rng::Rng;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let s = |n: usize| if quick { 1 } else { n };
     let mut table = Table::new("micro hotpath", &["benchmark", "median", "notes"]);
 
     // ---- lazy vs dense inner epoch on rcv1-like sparsity ----
-    let ds = synth::rcv1_like(42).with_n(4000).generate();
+    // quick n stays above 2×GRAD_BLOCK_ROWS so the smoke run still drives
+    // the multi-block parallel gradient path, not just the serial kernel
+    let ds = synth::rcv1_like(42).with_n(if quick { 2500 } else { 4000 }).generate();
     let reg = Reg { lam1: 1e-4, lam2: 1e-5 };
     let obj = Objective::new(&ds, pscope::loss::Loss::Logistic, reg);
     let w = vec![0.01; ds.d()];
     let z = obj.data_grad(&w);
     let eta = 0.5 / obj.smoothness();
     let m = ds.n();
-    let t_lazy = time_fn(1, 7, || {
+    let t_lazy = time_fn(s(1), s(7), || {
         let mut rng = Rng::new(7);
         let mut stats = LazyStats::default();
         std::hint::black_box(lazy_inner_epoch(
@@ -38,7 +50,7 @@ fn main() {
             &mut stats,
         ));
     });
-    let t_dense = time_fn(1, 3, || {
+    let t_dense = time_fn(s(1), s(3), || {
         let mut rng = Rng::new(7);
         std::hint::black_box(dense_inner_epoch(
             &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
@@ -49,44 +61,99 @@ fn main() {
     let _ = lazy_inner_epoch(
         &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats,
     );
-    table.row(&[
-        format!("lazy inner epoch (M={m}, d={})", ds.d()),
-        human_time(t_lazy.median),
-        format!(
-            "{:.1} Msteps/s, {:.2}% coord work saved",
-            m as f64 / t_lazy.median / 1e6,
-            100.0 * stats.savings()
-        ),
-    ]);
-    table.row(&[
-        format!("dense inner epoch (M={m}, d={})", ds.d()),
-        human_time(t_dense.median),
-        format!("recovery-rule speedup {:.1}x", t_dense.median / t_lazy.median),
-    ]);
+    table.row_timed(
+        &[
+            format!("lazy inner epoch (M={m}, d={})", ds.d()),
+            human_time(t_lazy.median),
+            format!(
+                "{:.1} Msteps/s, {:.2}% coord work saved",
+                m as f64 / t_lazy.median / 1e6,
+                100.0 * stats.savings()
+            ),
+        ],
+        t_lazy.median,
+    );
+    table.row_timed(
+        &[
+            format!("dense inner epoch (M={m}, d={})", ds.d()),
+            human_time(t_dense.median),
+            format!("recovery-rule speedup {:.1}x", t_dense.median / t_lazy.median),
+        ],
+        t_dense.median,
+    );
+
+    // ---- workspace reuse: zero-allocation steady state ----
+    let mut ws = EpochWorkspace::new();
+    let t_ws = time_fn(s(1), s(7), || {
+        let mut rng = Rng::new(7);
+        let mut stats = LazyStats::default();
+        std::hint::black_box(lazy_inner_epoch_ws(
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
+            &mut stats, &mut ws,
+        ));
+    });
+    table.row_timed(
+        &[
+            "lazy epoch, reused EpochWorkspace".into(),
+            human_time(t_ws.median),
+            format!(
+                "{:.1}% vs fresh-alloc epoch, {} alloc events total",
+                100.0 * t_ws.median / t_lazy.median,
+                ws.allocations()
+            ),
+        ],
+        t_ws.median,
+    );
 
     // ---- lazy_advance scalar ----
-    let t_adv = time_fn(10, 21, || {
+    let t_adv = time_fn(s(10), s(21), || {
         let mut acc = 0.0;
         for i in 0..10_000 {
             acc += lazy_advance(1.0 + (i % 7) as f64, 1000 + i % 97, 1e-4, 2e-5, 1e-5);
         }
         std::hint::black_box(acc);
     });
-    table.row(&[
-        "lazy_advance x10k (k~1000)".into(),
-        human_time(t_adv.median),
-        format!("{:.0} ns/advance", t_adv.median / 10_000.0 * 1e9),
-    ]);
+    table.row_timed(
+        &[
+            "lazy_advance x10k (k~1000)".into(),
+            human_time(t_adv.median),
+            format!("{:.0} ns/advance", t_adv.median / 10_000.0 * 1e9),
+        ],
+        t_adv.median,
+    );
 
-    // ---- shard gradient pass ----
-    let t_grad = time_fn(1, 9, || {
-        std::hint::black_box(obj.shard_grad_sum(&w));
+    // ---- shard gradient pass: serial vs parallel blocked reduction ----
+    let mut g = vec![0.0; ds.d()];
+    let mut scratch = Vec::new();
+    let t_grad = time_fn(s(1), s(9), || {
+        obj.shard_grad_sum_into(&w, &mut g, 1, &mut scratch);
+        std::hint::black_box(&g);
     });
-    table.row(&[
-        format!("shard grad (nnz={})", ds.nnz()),
-        human_time(t_grad.median),
-        format!("{:.0} Mnnz/s", ds.nnz() as f64 / t_grad.median / 1e6),
-    ]);
+    table.row_timed(
+        &[
+            format!("shard grad serial (nnz={})", ds.nnz()),
+            human_time(t_grad.median),
+            format!("{:.0} Mnnz/s", ds.nnz() as f64 / t_grad.median / 1e6),
+        ],
+        t_grad.median,
+    );
+    for threads in [2usize, 4] {
+        let t_par = time_fn(s(1), s(9), || {
+            obj.shard_grad_sum_into(&w, &mut g, threads, &mut scratch);
+            std::hint::black_box(&g);
+        });
+        table.row_timed(
+            &[
+                format!("shard grad parallel t={threads}"),
+                human_time(t_par.median),
+                format!(
+                    "{:.2}x vs serial (bit-exact, 1024-row blocks)",
+                    t_grad.median / t_par.median
+                ),
+            ],
+            t_par.median,
+        );
+    }
 
     // ---- coordinator protocol overhead ----
     let part = Partitioner::Uniform.split(&ds, 8, 7);
@@ -99,30 +166,36 @@ fn main() {
         record_every: 100,
         ..PscopeConfig::for_dataset("rcv1_like", Model::Logistic)
     };
-    let t_proto = time_fn(1, 5, || {
+    let t_proto = time_fn(s(1), s(5), || {
         let cfg = mk(1); // M=1: epoch cost ~= pure protocol + grad pass
         std::hint::black_box(train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap());
     });
-    let t_epoch = time_fn(1, 5, || {
+    let t_epoch = time_fn(s(1), s(5), || {
         let cfg = mk(0); // default M = 2n/p
         std::hint::black_box(train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap());
     });
-    table.row(&[
-        "3 epochs, M=1 (protocol+grad)".into(),
-        human_time(t_proto.median),
-        "coordination floor".into(),
-    ]);
-    table.row(&[
-        "3 epochs, M=2n/p (default)".into(),
-        human_time(t_epoch.median),
-        format!(
-            "coordination overhead {:.1}%",
-            100.0 * t_proto.median / t_epoch.median
-        ),
-    ]);
+    table.row_timed(
+        &[
+            "3 epochs, M=1 (protocol+grad)".into(),
+            human_time(t_proto.median),
+            "coordination floor".into(),
+        ],
+        t_proto.median,
+    );
+    table.row_timed(
+        &[
+            "3 epochs, M=2n/p (default)".into(),
+            human_time(t_epoch.median),
+            format!(
+                "coordination overhead {:.1}%",
+                100.0 * t_proto.median / t_epoch.median
+            ),
+        ],
+        t_epoch.median,
+    );
 
     // ---- PJRT artifact execution ----
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    if std::path::Path::new("artifacts/manifest.json").exists() && !quick {
         let dsd = synth::cov_like(42).with_n(1500).generate();
         let partd = Partitioner::Uniform.split(&dsd, 1, 7);
         let cfg = PscopeConfig {
@@ -141,16 +214,19 @@ fn main() {
                     .unwrap(),
             );
         });
-        table.row(&[
-            "2 epochs via PJRT artifact (2048x64, M=512)".into(),
-            human_time(t_xla.median),
-            "includes per-run client + compile".into(),
-        ]);
+        table.row_timed(
+            &[
+                "2 epochs via PJRT artifact (2048x64, M=512)".into(),
+                human_time(t_xla.median),
+                "includes per-run client + compile".into(),
+            ],
+            t_xla.median,
+        );
     } else {
         table.row(&[
             "PJRT artifact exec".into(),
             "skipped".into(),
-            "run `make artifacts`".into(),
+            if quick { "--quick mode".into() } else { "run `make artifacts`".into() },
         ]);
     }
 

@@ -72,13 +72,18 @@ fn main() {
                 (Some(a), None) => format!(">{:.0}x", dbcd_cap_s / a),
                 _ => "—".into(),
             };
-            table.row(&[
-                model.name().into(),
+            let cells = [
+                model.name().to_string(),
                 name.to_string(),
                 fmt(t_ps, 120.0),
                 fmt(t_db, dbcd_cap_s),
                 ratio,
-            ]);
+            ];
+            // primary timing for the JSON trajectory: pSCOPE's time-to-gap
+            match t_ps {
+                Some(t) => table.row_timed(&cells, t),
+                None => table.row(&cells),
+            }
         }
     }
     table.emit();

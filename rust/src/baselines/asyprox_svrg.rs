@@ -60,22 +60,31 @@ impl DistSolver for AsyProxSvrg {
         let mut clock = SimClock::new(opts.net);
         let mut trace = Trace::new(self.name(), &ds.name);
         let mut w = vec![0.0; d];
+        // round-loop scratch, allocated once (zero steady-state allocations)
+        let mut z = vec![0.0; d];
+        let mut zs = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        let mut w_anchor = vec![0.0; d];
+        let mut grad_scratch = Vec::new();
+        let mut times: Vec<f64> = Vec::with_capacity(p);
+        let mut async_times = vec![0.0f64; p];
         trace.push(clock.point(0, obj.value(&w)));
         // staleness ring buffer of recent parameter snapshots
         let mut history: Vec<Vec<f64>> = vec![w.clone(); self.max_delay + 1];
         let mut hpos = 0usize;
         'outer: for round in 0..opts.max_rounds {
             // ---- full gradient phase (synchronous reduce, like pSCOPE) ----
-            let mut z = vec![0.0; d];
-            let mut times = Vec::with_capacity(p);
+            crate::linalg::zero(&mut z);
+            times.clear();
             for sh in &shards {
                 let tm = Timer::start();
                 let so = Objective::new(sh, loss, reg);
-                crate::linalg::axpy(1.0, &so.shard_grad_sum(&w), &mut z);
+                so.shard_grad_sum_into(&w, &mut zs, 1, &mut grad_scratch);
+                crate::linalg::axpy(1.0, &zs, &mut z);
                 times.push(tm.elapsed_s());
             }
             crate::linalg::scale(&mut z, 1.0 / n);
-            let w_anchor = w.clone();
+            w_anchor.copy_from_slice(&w);
             // anchor activations h'(x.w_anchor) per shard row are computed
             // lazily inside the update loop (rows are sampled)
             clock.advance_round(&times, 0.0);
@@ -89,7 +98,7 @@ impl DistSolver for AsyProxSvrg {
             } else {
                 (ds.n() / (self.batch * p).max(1)).max(1)
             };
-            let mut async_times = vec![0.0f64; p];
+            crate::linalg::zero(&mut async_times);
             for _ in 0..per_worker {
                 for k in 0..p {
                     let tm = Timer::start();
@@ -97,7 +106,7 @@ impl DistSolver for AsyProxSvrg {
                     // stale read: parameter as of `delay` updates ago
                     let delay = rngs[k].below(self.max_delay + 1);
                     let stale = &history[(hpos + history.len() - delay) % history.len()];
-                    let mut v = z.clone();
+                    v.copy_from_slice(&z);
                     let inv = 1.0 / self.batch as f64;
                     for _ in 0..self.batch {
                         let i = rngs[k].below(sh.n());
@@ -110,7 +119,7 @@ impl DistSolver for AsyProxSvrg {
                         w[j] = soft_threshold(decay * w[j] - eta * v[j], thr);
                     }
                     hpos = (hpos + 1) % history.len();
-                    history[hpos] = w.clone();
+                    history[hpos].copy_from_slice(&w);
                     async_times[k] += tm.elapsed_s();
                     clock.charge_vecs(1, d); // pull stale w
                     clock.charge_vecs(1, d); // push update

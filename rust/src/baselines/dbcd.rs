@@ -62,15 +62,21 @@ impl DistSolver for Dbcd {
         let mut trace = Trace::new(self.name(), &ds.name);
         let mut w = vec![0.0; ds.d()];
         let mut v = vec![0.0; n];
+        // round-loop scratch, allocated once and re-zeroed (the only
+        // steady-state allocation left is the small `picks` working set)
+        let mut dw = vec![0.0; ds.d()];
+        let mut dv_total = vec![0.0; n];
+        let mut dv = vec![0.0; n];
+        let mut times: Vec<f64> = Vec::with_capacity(opts.p);
         trace.push(clock.point(0, obj.value(&w)));
         for round in 0..opts.max_rounds {
             // ---- direction phase: working-set CD against frozen activations ----
-            let mut dw = vec![0.0; ds.d()];
-            let mut dv_total = vec![0.0; n];
-            let mut times = Vec::with_capacity(opts.p);
+            crate::linalg::zero(&mut dw);
+            crate::linalg::zero(&mut dv_total);
+            times.clear();
             for block in &fp.blocks {
                 let tm = Timer::start();
-                let mut dv = vec![0.0; n];
+                crate::linalg::zero(&mut dv);
                 let ws = ((block.len() as f64 * self.working_frac).ceil() as usize)
                     .clamp(1, block.len());
                 let picks: Vec<usize> = if ws >= block.len() {

@@ -51,9 +51,14 @@ impl DistSolver for Dfal {
         let mut wbar = vec![0.0; d];
         let mut w_k = vec![vec![0.0; d]; p];
         let mut u_k = vec![vec![0.0; d]; p];
+        // round-loop scratch, allocated once (zero steady-state allocations)
+        let mut g = vec![0.0; d];
+        let mut mean = vec![0.0; d];
+        let mut grad_scratch = Vec::new();
+        let mut times: Vec<f64> = Vec::with_capacity(p);
         trace.push(clock.point(0, obj.value(&wbar)));
         for round in 0..opts.max_rounds {
-            let mut times = Vec::with_capacity(p);
+            times.clear();
             for k in 0..p {
                 let tm = Timer::start();
                 let so = Objective::new(&shards[k], loss, reg);
@@ -61,7 +66,7 @@ impl DistSolver for Dfal {
                 let step = 1.0 / local_l;
                 // inexact local solve: gradient steps on the augmented local
                 for _ in 0..self.local_steps {
-                    let mut g = so.data_grad(&w_k[k]);
+                    so.data_grad_into_threaded(&w_k[k], &mut g, 1, &mut grad_scratch);
                     for j in 0..d {
                         g[j] += reg.lam1 * w_k[k][j] + rho * (w_k[k][j] - wbar[j] + u_k[k][j]);
                     }
@@ -73,7 +78,7 @@ impl DistSolver for Dfal {
             }
             // master: consensus + prox + duals
             let tm = Timer::start();
-            let mut mean = vec![0.0; d];
+            crate::linalg::zero(&mut mean);
             for k in 0..p {
                 for j in 0..d {
                     mean[j] += w_k[k][j] + u_k[k][j];

@@ -37,15 +37,21 @@ impl DistSolver for DistFista {
         let mut w = vec![0.0; d];
         let mut v = w.clone();
         let mut t = 1.0f64;
+        // round-loop scratch, allocated once (zero steady-state allocations)
+        let mut g = vec![0.0; d];
+        let mut gs = vec![0.0; d];
+        let mut w_next = vec![0.0; d];
+        let mut grad_scratch = Vec::new();
+        let mut times: Vec<f64> = Vec::with_capacity(shards.len());
         trace.push(clock.point(0, obj.value(&w)));
         for round in 0..opts.max_rounds {
             // workers: shard gradient at v (timed per worker)
-            let mut g = vec![0.0; d];
-            let mut times = Vec::with_capacity(shards.len());
+            crate::linalg::zero(&mut g);
+            times.clear();
             for sh in &shards {
                 let tm = Timer::start();
                 let so = Objective::new(sh, loss, reg);
-                let gs = so.shard_grad_sum(&v);
+                so.shard_grad_sum_into(&v, &mut gs, 1, &mut grad_scratch);
                 crate::linalg::axpy(1.0, &gs, &mut g);
                 times.push(tm.elapsed_s());
             }
@@ -54,7 +60,6 @@ impl DistSolver for DistFista {
                 g[j] = g[j] / n + reg.lam1 * v[j];
             }
             // master: accelerated prox step
-            let mut w_next = vec![0.0; d];
             for j in 0..d {
                 w_next[j] = soft_threshold(v[j] - eta * g[j], thr);
             }
@@ -64,7 +69,7 @@ impl DistSolver for DistFista {
                 v[j] = w_next[j] + beta * (w_next[j] - w[j]);
             }
             t = t_next;
-            w = w_next;
+            std::mem::swap(&mut w, &mut w_next);
             let master_s = tm.elapsed_s();
             clock.advance_round(&times, master_s);
             clock.charge_vecs(opts.p, d); // broadcast v

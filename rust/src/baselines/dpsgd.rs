@@ -52,12 +52,15 @@ impl DistSolver for DpSgd {
         let mut trace = Trace::new(self.name(), &ds.name);
         let mut w = vec![0.0; d];
         let mut t_step = 0usize;
+        // step-loop scratch, allocated once (zero steady-state allocations)
+        let mut g = vec![0.0; d];
+        let mut times: Vec<f64> = Vec::with_capacity(p);
         trace.push(clock.point(0, obj.value(&w)));
         'outer: for round in 0..opts.max_rounds {
             for _ in 0..steps_per_epoch {
                 let eta = eta0 / (1.0 + t_step as f64 / self.t0);
-                let mut g = vec![0.0; d];
-                let mut times = Vec::with_capacity(p);
+                crate::linalg::zero(&mut g);
+                times.clear();
                 for k in 0..p {
                     let tm = Timer::start();
                     let sh = &shards[k];

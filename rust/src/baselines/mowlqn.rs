@@ -43,15 +43,21 @@ impl DistSolver for DistMOwlQn {
         let mut trace = Trace::new(self.name(), &ds.name);
         let mut state = OwlQnState::new(self.memory);
         let mut w = vec![0.0; d];
+        // round-loop scratch, allocated once
+        let mut g = vec![0.0; d];
+        let mut gs = vec![0.0; d];
+        let mut grad_scratch = Vec::new();
+        let mut times: Vec<f64> = Vec::with_capacity(shards.len());
         trace.push(clock.point(0, obj.value(&w)));
         for round in 0..opts.max_rounds {
             // distributed gradient
-            let mut g = vec![0.0; d];
-            let mut times = Vec::with_capacity(shards.len());
+            crate::linalg::zero(&mut g);
+            times.clear();
             for sh in &shards {
                 let tm = Timer::start();
                 let so = Objective::new(sh, loss, reg);
-                crate::linalg::axpy(1.0, &so.shard_grad_sum(&w), &mut g);
+                so.shard_grad_sum_into(&w, &mut gs, 1, &mut grad_scratch);
+                crate::linalg::axpy(1.0, &gs, &mut g);
                 times.push(tm.elapsed_s());
             }
             for j in 0..d {

@@ -52,15 +52,18 @@ impl DistSolver for ProxCocoa {
         let mut trace = Trace::new(self.name(), &ds.name);
         let mut w = vec![0.0; ds.d()];
         let mut v = vec![0.0; n]; // shared activations Xw
+        // per-worker activation deltas, allocated once and re-zeroed per
+        // round (zero steady-state allocations)
+        let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; n]; fp.blocks.len()];
+        let mut times: Vec<f64> = Vec::with_capacity(opts.p);
         trace.push(clock.point(0, obj.value(&w)));
         for round in 0..opts.max_rounds {
-            let mut times = Vec::with_capacity(opts.p);
-            let mut deltas: Vec<Vec<f64>> = Vec::with_capacity(opts.p);
-            for block in &fp.blocks {
+            times.clear();
+            for (block, dv) in fp.blocks.iter().zip(deltas.iter_mut()) {
                 let tm = Timer::start();
                 // local view: v is frozen for the round; the worker tracks
                 // its own activation delta
-                let mut dv = vec![0.0; n];
+                crate::linalg::zero(dv);
                 for _ in 0..self.local_sweeps {
                     for &j in block {
                         let col = csc.col(j);
@@ -84,7 +87,6 @@ impl DistSolver for ProxCocoa {
                         }
                     }
                 }
-                deltas.push(dv);
                 times.push(tm.elapsed_s());
             }
             // master: aggregate activation deltas (gamma = 1 with sigma'=p)

@@ -6,13 +6,19 @@
 //!   (median / MAD / p10 / p90) for microbenchmarks;
 //! * [`Table`] — aligned text tables matching the paper's reporting format,
 //!   with a CSV dump under `bench_out/` so every figure's data is
-//!   regenerable and diffable.
+//!   regenerable and diffable, **plus** a machine-readable
+//!   `bench_out/BENCH_<slug>.json` with the stable schema
+//!   `{"bench": ..., "rows": [{"name", "median_ns", "notes"}]}` — the
+//!   per-PR perf trajectory CI tracks (rows added with [`Table::row_timed`]
+//!   carry a numeric `median_ns`; plain [`Table::row`] rows carry `null`).
 //!
 //! `cargo bench` binaries (`rust/benches/*.rs`, `harness = false`) are
 //! plain `main()`s built on these.
 
 use std::io::Write;
 use std::time::Instant;
+
+use crate::json::Json;
 
 /// Bench-scale dataset specs for the paper's four datasets.
 ///
@@ -119,12 +125,15 @@ pub fn time_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> TimingSta
     }
 }
 
-/// An aligned text table that also dumps CSV.
+/// An aligned text table that also dumps CSV and machine-readable JSON.
 #[derive(Debug)]
 pub struct Table {
     title: String,
     headers: Vec<String>,
     rows: Vec<Vec<String>>,
+    /// Per-row primary timing in nanoseconds (`None` for untimed rows);
+    /// parallel to `rows`.
+    medians_ns: Vec<Option<f64>>,
 }
 
 impl Table {
@@ -134,6 +143,7 @@ impl Table {
             title: title.into(),
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            medians_ns: Vec::new(),
         }
     }
 
@@ -141,6 +151,14 @@ impl Table {
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
+        self.medians_ns.push(None);
+    }
+
+    /// Append a row carrying a primary timing (`median_s` in seconds,
+    /// recorded as `median_ns` in the JSON dump).
+    pub fn row_timed(&mut self, cells: &[String], median_s: f64) {
+        self.row(cells);
+        *self.medians_ns.last_mut().unwrap() = Some(median_s * 1e9);
     }
 
     /// Render aligned text.
@@ -171,26 +189,73 @@ impl Table {
         out
     }
 
-    /// Print to stdout and dump CSV under `bench_out/<slug>.csv`.
+    /// Print to stdout, dump CSV under `bench_out/<slug>.csv`, and dump the
+    /// machine-readable `bench_out/BENCH_<slug>.json`.
     pub fn emit(&self) {
         println!("{}", self.render());
         if let Err(e) = self.write_csv() {
             eprintln!("warning: could not write bench_out CSV: {e}");
         }
+        if let Err(e) = self.write_json() {
+            eprintln!("warning: could not write bench_out JSON: {e}");
+        }
+    }
+
+    fn slug(&self) -> String {
+        self.title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect()
     }
 
     fn write_csv(&self) -> std::io::Result<()> {
         std::fs::create_dir_all("bench_out")?;
-        let slug: String = self
-            .title
-            .chars()
-            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
-            .collect();
-        let mut f = std::fs::File::create(format!("bench_out/{slug}.csv"))?;
+        let mut f = std::fs::File::create(format!("bench_out/{}.csv", self.slug()))?;
         writeln!(f, "{}", self.headers.join(","))?;
         for row in &self.rows {
             writeln!(f, "{}", row.join(","))?;
         }
+        Ok(())
+    }
+
+    /// Machine-readable form: stable schema
+    /// `{"bench", "title", "rows": [{"name", "median_ns", "notes"}]}`.
+    /// `name` is the first cell, `notes` the remaining cells joined with
+    /// `"; "`, `median_ns` the [`Table::row_timed`] timing or `null`.
+    pub fn json_value(&self) -> Json {
+        use std::collections::BTreeMap;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .zip(&self.medians_ns)
+            .map(|(row, med)| {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "name".to_string(),
+                    Json::Str(row.first().cloned().unwrap_or_default()),
+                );
+                m.insert(
+                    "median_ns".to_string(),
+                    med.map(Json::Num).unwrap_or(Json::Null),
+                );
+                m.insert(
+                    "notes".to_string(),
+                    Json::Str(row.iter().skip(1).cloned().collect::<Vec<_>>().join("; ")),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(self.slug()));
+        top.insert("title".to_string(), Json::Str(self.title.clone()));
+        top.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+
+    fn write_json(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_out")?;
+        let mut f = std::fs::File::create(format!("bench_out/BENCH_{}.json", self.slug()))?;
+        writeln!(f, "{}", self.json_value().dump())?;
         Ok(())
     }
 }
@@ -232,5 +297,24 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("x", &["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn json_schema_stable() {
+        let mut t = Table::new("demo bench", &["benchmark", "median", "notes"]);
+        t.row_timed(&["lazy epoch".into(), "1.500ms".into(), "8.2 Msteps/s".into()], 1.5e-3);
+        t.row(&["skipped thing".into(), "—".into(), "n/a".into()]);
+        let j = t.json_value();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("demo_bench"));
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("lazy epoch"));
+        let ns = rows[0].get("median_ns").unwrap().as_f64().unwrap();
+        assert!((ns - 1.5e6).abs() < 1e-6, "median_ns {ns}");
+        assert_eq!(rows[0].get("notes").unwrap().as_str(), Some("1.500ms; 8.2 Msteps/s"));
+        assert_eq!(rows[1].get("median_ns"), Some(&crate::json::Json::Null));
+        // round-trips through the in-crate parser
+        let parsed = crate::json::Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed, j);
     }
 }

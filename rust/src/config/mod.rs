@@ -96,6 +96,10 @@ pub struct PscopeConfig {
     pub target_objective: f64,
     /// Record the objective every `record_every` epochs (1 = always).
     pub record_every: usize,
+    /// Threads per worker for the epoch-start shard-gradient pass
+    /// (0 = auto: available cores / p). The blocked reduction is
+    /// bit-identical at every thread count, so this is purely a speed knob.
+    pub grad_threads: usize,
 }
 
 impl Default for PscopeConfig {
@@ -113,6 +117,7 @@ impl Default for PscopeConfig {
             tol: 0.0,
             target_objective: f64::NEG_INFINITY,
             record_every: 1,
+            grad_threads: 1,
         }
     }
 }
@@ -164,6 +169,7 @@ impl PscopeConfig {
                 "seed" => self.seed = v.as_usize_or()? as u64,
                 "tol" => self.tol = v.as_f64_or()?,
                 "record_every" => self.record_every = v.as_usize_or()?.max(1),
+                "grad_threads" => self.grad_threads = v.as_usize_or()?,
                 other => {
                     return Err(Error::Config(format!("unknown config key {other:?}")));
                 }
@@ -201,13 +207,14 @@ mod tests {
     fn toml_overrides() {
         let mut c = PscopeConfig::default();
         c.apply_toml(
-            "model = \"lasso\"\nlam2 = 1e-4\np = 4\nbackend = \"dense\"\n# comment\n",
+            "model = \"lasso\"\nlam2 = 1e-4\np = 4\nbackend = \"dense\"\ngrad_threads = 2\n# comment\n",
         )
         .unwrap();
         assert_eq!(c.model, Model::Lasso);
         assert_eq!(c.reg.lam2, 1e-4);
         assert_eq!(c.p, 4);
         assert_eq!(c.backend, WorkerBackend::RustDense);
+        assert_eq!(c.grad_threads, 2);
     }
 
     #[test]

@@ -150,6 +150,17 @@ pub fn train_with(
         }
     }
 
+    // threads per worker for the epoch-start gradient pass; the blocked
+    // reduction is bit-exact at every count, so auto-detection cannot
+    // perturb trajectories
+    let grad_threads = if cfg.grad_threads == 0 {
+        std::thread::available_parallelism()
+            .map(|v| (v.get() / p).max(1))
+            .unwrap_or(1)
+    } else {
+        cfg.grad_threads
+    };
+
     let meter = ByteMeter::new();
     let root_rng = Rng::new(cfg.seed);
 
@@ -194,7 +205,8 @@ pub fn train_with(
             handles.push(scope.spawn(move || -> Result<()> {
                 let mut guard = DownGuard { tx: tx.clone(), worker: k, armed: true };
                 let result = (|| -> Result<()> {
-                    let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt);
+                    let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt)
+                        .with_grad_threads(grad_threads);
                     loop {
                         let (epoch, w_t) = match rx.recv() {
                             // Stop (or a vanished master) is a clean

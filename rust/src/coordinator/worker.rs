@@ -22,8 +22,9 @@ use crate::config::WorkerBackend;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::loss::{Loss, Reg};
-use crate::optim::lazy::{lazy_inner_epoch, LazyStats};
-use crate::optim::svrg::dense_inner_epoch;
+use crate::optim::lazy::{lazy_inner_epoch_ws, LazyStats};
+use crate::optim::svrg::dense_inner_epoch_ws;
+use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 use crate::runtime::{Input, XlaRuntime};
 
@@ -43,6 +44,13 @@ pub struct Worker {
     pub rng: Rng,
     /// Lazy-engine counters (RustSparse only).
     pub lazy_stats: LazyStats,
+    /// Reusable scratch for every epoch kernel (inner-loop buffers,
+    /// gradient accumulators, f32 pads): sized on the first epoch, then no
+    /// further heap allocations on the worker hot path (DESIGN.md §6).
+    pub workspace: EpochWorkspace,
+    /// Threads for the epoch-start shard-gradient pass (bit-exact at any
+    /// count; see [`crate::loss::shard_grad_sum_blocked`]).
+    pub grad_threads: usize,
     /// Artifact directory (Xla backend only). The PJRT client is created
     /// lazily *inside* the worker thread: the xla crate's client/executable
     /// handles are not Send, so every worker owns a private runtime.
@@ -102,18 +110,30 @@ impl Worker {
             backend,
             rng,
             lazy_stats: LazyStats::default(),
+            workspace: EpochWorkspace::new(),
+            grad_threads: 1,
             artifact_dir,
             runtime: None,
             xla_cache: None,
         }
     }
 
+    /// Set the shard-gradient thread count (builder style; default 1).
+    pub fn with_grad_threads(mut self, grad_threads: usize) -> Self {
+        self.grad_threads = grad_threads.max(1);
+        self
+    }
+
     /// Shard gradient sum `Σ_{i∈D_k} h'(xᵢᵀw) xᵢ` (Algorithm 1 line 12).
+    ///
+    /// Accumulates in the workspace (zero steady-state allocations beyond
+    /// the returned message payload) through the deterministic blocked
+    /// kernel, optionally parallel across `grad_threads`.
     pub fn shard_grad(&mut self, w: &[f64]) -> Result<Vec<f64>> {
         match self.backend {
             WorkerBackend::RustSparse | WorkerBackend::RustDense => {
                 let obj = crate::loss::Objective::new(&self.shard, self.loss, self.reg);
-                Ok(obj.shard_grad_sum(w))
+                Ok(self.workspace.shard_grad_sum(&obj, w, self.grad_threads).to_vec())
             }
             WorkerBackend::Xla => self.xla_shard_grad(w),
         }
@@ -121,6 +141,10 @@ impl Worker {
 
     /// Run the inner epoch (Algorithm 1 lines 14–18): `m` prox-SVRG steps
     /// from `w_t` with full data gradient `z`; returns `u_{k,M}`.
+    ///
+    /// All scratch comes from the worker's [`EpochWorkspace`]; the only
+    /// allocation per epoch is the returned iterate, which the protocol
+    /// message owns.
     pub fn inner_epoch(
         &mut self,
         w_t: &[f64],
@@ -129,7 +153,7 @@ impl Worker {
         m: usize,
     ) -> Result<Vec<f64>> {
         match self.backend {
-            WorkerBackend::RustSparse => Ok(lazy_inner_epoch(
+            WorkerBackend::RustSparse => Ok(lazy_inner_epoch_ws(
                 &self.shard,
                 self.loss,
                 w_t,
@@ -140,8 +164,10 @@ impl Worker {
                 m,
                 &mut self.rng,
                 &mut self.lazy_stats,
-            )),
-            WorkerBackend::RustDense => Ok(dense_inner_epoch(
+                &mut self.workspace,
+            )
+            .to_vec()),
+            WorkerBackend::RustDense => Ok(dense_inner_epoch_ws(
                 &self.shard,
                 self.loss,
                 w_t,
@@ -151,7 +177,9 @@ impl Worker {
                 self.reg.lam2,
                 m,
                 &mut self.rng,
-            )),
+                &mut self.workspace,
+            )
+            .to_vec()),
             WorkerBackend::Xla => self.xla_inner_epoch(w_t, z, eta, m),
         }
     }
@@ -210,19 +238,26 @@ impl Worker {
 
     fn xla_shard_grad(&mut self, w: &[f64]) -> Result<Vec<f64>> {
         self.ensure_xla_shard()?;
-        let rt = self.runtime.as_ref().unwrap();
         let cache = self.xla_cache.as_ref().unwrap();
         let d = self.shard.d();
-        let mut w32 = vec![0f32; cache.d_pad];
-        for j in 0..d {
-            w32[j] = w[j] as f32;
+        {
+            // the f32 pad comes from the workspace — no per-call buffer
+            let ws = &mut self.workspace;
+            ws.ensure_f32_pads(cache.d_pad, 0);
+            for v in &mut ws.w32[..cache.d_pad] {
+                *v = 0.0;
+            }
+            for j in 0..d {
+                ws.w32[j] = w[j] as f32;
+            }
         }
+        let rt = self.runtime.as_ref().unwrap();
         let outs = rt.execute(
             &cache.grad_prog,
             &[
                 Input::F32(&cache.x_dense, &[cache.n_pad, cache.d_pad]),
                 Input::F32(&cache.y_pad, &[cache.n_pad]),
-                Input::F32(&w32, &[cache.d_pad]),
+                Input::F32(&self.workspace.w32[..cache.d_pad], &[cache.d_pad]),
             ],
         )?;
         Ok(outs[0][..d].iter().map(|&v| v as f64).collect())
@@ -233,46 +268,61 @@ impl Worker {
         let cache = self.xla_cache.take().unwrap();
         let d = self.shard.d();
         let n = self.shard.n();
-        let mut w32 = vec![0f32; cache.d_pad];
-        let mut z32 = vec![0f32; cache.d_pad];
-        for j in 0..d {
-            w32[j] = w_t[j] as f32;
-            z32[j] = z[j] as f32;
-        }
-        let scal = [eta as f32, self.reg.lam1 as f32, self.reg.lam2 as f32];
         if m % cache.m_step != 0 {
+            let m_step = cache.m_step;
+            self.xla_cache = Some(cache);
             return Err(Error::Runtime(format!(
                 "m_inner {} must be a multiple of the artifact step {} for the Xla backend \
                  (the driver rounds M up automatically)",
-                m, cache.m_step
+                m, m_step
             )));
         }
-        let mut u32 = w32.clone();
-        let mut done = 0usize;
-        // pre-sample the whole index stream (keeps the rng/runtime borrows
-        // disjoint and preserves the one-below(n)-per-step stream contract)
-        let total_idx: Vec<i32> = (0..m).map(|_| self.rng.below(n) as i32).collect();
+        {
+            // pads + pre-sampled index stream live in the workspace; the
+            // upfront sampling keeps the rng/runtime borrows disjoint and
+            // preserves the one-below(n)-per-step stream contract
+            let ws = &mut self.workspace;
+            ws.ensure_f32_pads(cache.d_pad, m);
+            for v in &mut ws.w32[..cache.d_pad] {
+                *v = 0.0;
+            }
+            for v in &mut ws.z32[..cache.d_pad] {
+                *v = 0.0;
+            }
+            for j in 0..d {
+                ws.w32[j] = w_t[j] as f32;
+                ws.z32[j] = z[j] as f32;
+            }
+            ws.u32f.clear();
+            ws.u32f.extend_from_slice(&ws.w32[..cache.d_pad]);
+            for slot in ws.idx32[..m].iter_mut() {
+                *slot = self.rng.below(n) as i32;
+            }
+        }
+        let scal = [eta as f32, self.reg.lam1 as f32, self.reg.lam2 as f32];
         let rt = self.runtime.as_ref().unwrap();
+        let mut done = 0usize;
         while done < m {
             // chain fixed-M artifact calls: u0 of call j+1 = output of call j
-            let idx = &total_idx[done..done + cache.m_step];
             let outs = rt.execute(
                 &cache.epoch_prog,
                 &[
                     Input::F32(&cache.x_dense, &[cache.n_pad, cache.d_pad]),
                     Input::F32(&cache.y_pad, &[cache.n_pad]),
-                    Input::F32(&w32, &[cache.d_pad]),
-                    Input::F32(&u32, &[cache.d_pad]),
-                    Input::F32(&z32, &[cache.d_pad]),
-                    Input::I32(idx, &[cache.m_step]),
+                    Input::F32(&self.workspace.w32[..cache.d_pad], &[cache.d_pad]),
+                    Input::F32(&self.workspace.u32f, &[cache.d_pad]),
+                    Input::F32(&self.workspace.z32[..cache.d_pad], &[cache.d_pad]),
+                    Input::I32(&self.workspace.idx32[done..done + cache.m_step], &[cache.m_step]),
                     Input::F32(&scal, &[3]),
                 ],
             )?;
-            u32 = outs[0].clone();
+            self.workspace.u32f.clear();
+            self.workspace.u32f.extend_from_slice(&outs[0]);
             done += cache.m_step;
         }
+        let out = self.workspace.u32f[..d].iter().map(|&v| v as f64).collect();
         self.xla_cache = Some(cache);
-        Ok(u32[..d].iter().map(|&v| v as f64).collect())
+        Ok(out)
     }
 }
 

@@ -23,20 +23,24 @@ impl<'a> SparseRow<'a> {
     }
 
     /// Sparse dot with a dense vector.
+    ///
+    /// Zip-based iteration over the parallel `(idx, val)` slices lets LLVM
+    /// drop the per-element bounds checks on both (only the gather into
+    /// `w` keeps one); the accumulation order is unchanged.
     #[inline]
     pub fn dot(&self, w: &[f64]) -> f64 {
         let mut s = 0.0;
-        for k in 0..self.idx.len() {
-            s += self.val[k] * w[self.idx[k] as usize];
+        for (&j, &v) in self.idx.iter().zip(self.val.iter()) {
+            s += v * w[j as usize];
         }
         s
     }
 
-    /// `w[idx] += a * val` scatter-add.
+    /// `w[idx] += a * val` scatter-add (same zip idiom as [`Self::dot`]).
     #[inline]
     pub fn axpy_into(&self, a: f64, w: &mut [f64]) {
-        for k in 0..self.idx.len() {
-            w[self.idx[k] as usize] += a * self.val[k];
+        for (&j, &v) in self.idx.iter().zip(self.val.iter()) {
+            w[j as usize] += a * v;
         }
     }
 
@@ -153,18 +157,38 @@ impl CsrMatrix {
 
     /// `y = X w` (dense result over all rows).
     pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.nrows];
+        self.matvec_into(w, &mut out);
+        out
+    }
+
+    /// `out = X w` into a caller buffer — the hot-loop form, so solvers
+    /// that refresh activations every round stop collecting fresh vectors.
+    pub fn matvec_into(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.ncols);
-        (0..self.nrows).map(|i| self.row(i).dot(w)).collect()
+        assert_eq!(out.len(), self.nrows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.row(i).dot(w);
+        }
     }
 
     /// `g = X^T c` (dense result over columns).
     pub fn tmatvec(&self, c: &[f64]) -> Vec<f64> {
-        assert_eq!(c.len(), self.nrows);
         let mut g = vec![0.0; self.ncols];
-        for i in 0..self.nrows {
-            self.row(i).axpy_into(c[i], &mut g);
-        }
+        self.tmatvec_into(c, &mut g);
         g
+    }
+
+    /// `out = X^T c` into a caller buffer (see [`Self::matvec_into`]).
+    pub fn tmatvec_into(&self, c: &[f64], out: &mut [f64]) {
+        assert_eq!(c.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..self.nrows {
+            self.row(i).axpy_into(c[i], out);
+        }
     }
 
     /// Max squared row norm — the data part of the per-sample smoothness
@@ -197,6 +221,12 @@ impl CsrMatrix {
     }
 
     /// Transpose into feature-major CSC.
+    ///
+    /// `colptr` itself serves as the scatter cursor (each write advances
+    /// `colptr[j]`, which afterwards holds the *next* column's start, so
+    /// one reverse shift restores the pointers) — no cloned cursor vector,
+    /// dropping the extra `O(ncols)` allocation this paid per baseline
+    /// setup on wide data.
     pub fn to_csc(&self) -> CscMatrix {
         let mut colptr = vec![0usize; self.ncols + 1];
         for &j in &self.indices {
@@ -207,16 +237,21 @@ impl CsrMatrix {
         }
         let mut rows = vec![0u32; self.nnz()];
         let mut vals = vec![0f64; self.nnz()];
-        let mut cursor = colptr.clone();
         for i in 0..self.nrows {
             let (a, b) = (self.indptr[i], self.indptr[i + 1]);
             for k in a..b {
                 let j = self.indices[k] as usize;
-                rows[cursor[j]] = i as u32;
-                vals[cursor[j]] = self.values[k];
-                cursor[j] += 1;
+                rows[colptr[j]] = i as u32;
+                vals[colptr[j]] = self.values[k];
+                colptr[j] += 1;
             }
         }
+        // undo the cursor advance: colptr[j] now equals the start of
+        // column j+1; shift right and reset the origin
+        for j in (1..=self.ncols).rev() {
+            colptr[j] = colptr[j - 1];
+        }
+        colptr[0] = 0;
         CscMatrix {
             nrows: self.nrows,
             ncols: self.ncols,
@@ -299,6 +334,46 @@ mod tests {
         assert_eq!(m.matvec(&w), vec![7.0, 6.0]);
         let c = vec![1.0, 2.0];
         assert_eq!(m.tmatvec(&c), vec![1.0, 6.0, 2.0]);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let m = small();
+        let mut y = vec![9.0, 9.0];
+        m.matvec_into(&[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![7.0, 6.0]);
+        let mut g = vec![9.0, 9.0, 9.0];
+        m.tmatvec_into(&[1.0, 2.0], &mut g);
+        assert_eq!(g, vec![1.0, 6.0, 2.0]);
+    }
+
+    #[test]
+    fn csc_roundtrip_randomized() {
+        // in-place cursor trick: colptr must be fully restored
+        let mut rng = crate::rng::Rng::new(77);
+        for _ in 0..20 {
+            let nrows = 1 + rng.below(30);
+            let ncols = 1 + rng.below(40);
+            let rows: Vec<Vec<(u32, f64)>> = (0..nrows)
+                .map(|_| {
+                    (0..ncols as u32)
+                        .filter(|_| rng.bool(0.2))
+                        .map(|j| (j, rng.range(-2.0, 2.0)))
+                        .collect()
+                })
+                .collect();
+            let m = CsrMatrix::from_rows(ncols, &rows);
+            let t = m.to_csc();
+            assert_eq!(t.colptr.len(), ncols + 1);
+            assert_eq!(t.colptr[0], 0);
+            assert_eq!(t.colptr[ncols], m.nnz());
+            let c: Vec<f64> = (0..nrows).map(|_| rng.range(-1.0, 1.0)).collect();
+            let via_csr = m.tmatvec(&c);
+            let via_csc: Vec<f64> = (0..ncols).map(|j| t.col(j).dot(&c)).collect();
+            for (a, b) in via_csr.iter().zip(&via_csc) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

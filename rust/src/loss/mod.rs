@@ -130,16 +130,24 @@ impl<'a> Objective<'a> {
         g
     }
 
-    /// As [`Self::data_grad`] but into a caller buffer; returns the buffer.
+    /// As [`Self::data_grad`] but into a caller buffer.
     pub fn data_grad_into(&self, w: &[f64], g: &mut [f64]) {
-        crate::linalg::zero(g);
-        let n = self.ds.n() as f64;
-        for i in 0..self.ds.n() {
-            let row = self.ds.x.row(i);
-            let c = self.loss.hprime(row.dot(w), self.ds.y[i]);
-            row.axpy_into(c, g);
-        }
-        crate::linalg::scale(g, self.weight / n);
+        let mut scratch = Vec::new();
+        self.data_grad_into_threaded(w, g, 1, &mut scratch);
+    }
+
+    /// As [`Self::data_grad_into`] with an explicit thread count and
+    /// reusable block-partial scratch (see [`shard_grad_sum_blocked`]).
+    /// Bit-identical for every `threads ≥ 1`.
+    pub fn data_grad_into_threaded(
+        &self,
+        w: &[f64],
+        g: &mut [f64],
+        threads: usize,
+        scratch: &mut Vec<f64>,
+    ) {
+        shard_grad_sum_blocked(self.ds, self.loss, w, g, threads, scratch);
+        crate::linalg::scale(g, self.weight / self.ds.n() as f64);
     }
 
     /// Gradient of the full smooth part: `data_grad + λ₁ w`.
@@ -153,12 +161,22 @@ impl<'a> Objective<'a> {
     /// reports to the master (Algorithm 1 line 12; the master divides by n).
     pub fn shard_grad_sum(&self, w: &[f64]) -> Vec<f64> {
         let mut g = vec![0.0; self.ds.d()];
-        for i in 0..self.ds.n() {
-            let row = self.ds.x.row(i);
-            let c = self.loss.hprime(row.dot(w), self.ds.y[i]);
-            row.axpy_into(c, &mut g);
-        }
+        let mut scratch = Vec::new();
+        self.shard_grad_sum_into(w, &mut g, 1, &mut scratch);
         g
+    }
+
+    /// As [`Self::shard_grad_sum`] but into a caller buffer, with an
+    /// explicit thread count and reusable scratch. Bit-identical for every
+    /// `threads ≥ 1` (see [`shard_grad_sum_blocked`]).
+    pub fn shard_grad_sum_into(
+        &self,
+        w: &[f64],
+        g: &mut [f64],
+        threads: usize,
+        scratch: &mut Vec<f64>,
+    ) {
+        shard_grad_sum_blocked(self.ds, self.loss, w, g, threads, scratch);
     }
 
     /// Per-sample smoothness constant:
@@ -171,6 +189,110 @@ impl<'a> Objective<'a> {
     /// lower bound; the paper's theory only needs some μ > 0).
     pub fn strong_convexity(&self) -> f64 {
         self.reg.lam1.max(1e-12)
+    }
+}
+
+/// Rows per reduction block of the deterministic parallel gradient.
+///
+/// The block size — not the thread count — fixes the floating-point
+/// reduction tree, which is what makes the kernel's output independent of
+/// parallelism; datasets with `n ≤ GRAD_BLOCK_ROWS` reduce in a single
+/// block and are additionally bit-identical to the plain serial
+/// accumulation the seed used.
+pub const GRAD_BLOCK_ROWS: usize = 1024;
+
+/// Consecutive blocks a spawned thread handles per wave (amortizes the
+/// thread-spawn cost on block-rich shards without touching the reduction
+/// tree — each block still gets its own partial). Kept modest because the
+/// scratch bound scales with it (`threads · RUN · d` floats).
+const GRAD_BLOCKS_PER_THREAD: usize = 4;
+
+/// Deterministic blocked shard-gradient kernel:
+/// `g = Σ_{i<n} h'(xᵢᵀw; yᵢ) xᵢ` (unscaled).
+///
+/// Rows are split into fixed blocks of [`GRAD_BLOCK_ROWS`]; each block is
+/// accumulated in row order into its own partial, and partials are merged
+/// into `g` in ascending block order. The reduction tree therefore depends
+/// only on `n` — **never** on `threads` — so every thread count produces
+/// bit-identical output (pinned by `rust/tests/workspace_equivalence.rs`).
+/// Blocks run in waves of `threads` scoped threads, each thread computing
+/// a contiguous run of up to [`GRAD_BLOCKS_PER_THREAD`] block partials (one
+/// spawn per run, not per block); `scratch` holds the wave's partials
+/// (≤ `threads · GRAD_BLOCKS_PER_THREAD · d` floats, grown once, reused).
+pub fn shard_grad_sum_blocked(
+    ds: &Dataset,
+    loss: Loss,
+    w: &[f64],
+    g: &mut [f64],
+    threads: usize,
+    scratch: &mut Vec<f64>,
+) {
+    let n = ds.n();
+    let d = ds.d();
+    assert_eq!(w.len(), d);
+    assert_eq!(g.len(), d);
+    crate::linalg::zero(g);
+    if n == 0 || d == 0 {
+        return;
+    }
+    let nb = n.div_ceil(GRAD_BLOCK_ROWS);
+    if nb == 1 {
+        // single block: accumulate straight into g (0 + x == x, so this is
+        // bit-identical to routing through a zeroed partial)
+        grad_block(ds, loss, w, 0, n, g);
+        return;
+    }
+    let block_range = |blk: usize| (blk * GRAD_BLOCK_ROWS, ((blk + 1) * GRAD_BLOCK_ROWS).min(n));
+    let t = threads.max(1).min(nb);
+    if t == 1 {
+        // serial: same tree, one reusable partial
+        if scratch.len() < d {
+            scratch.resize(d, 0.0);
+        }
+        for blk in 0..nb {
+            let (lo, hi) = block_range(blk);
+            let partial = &mut scratch[..d];
+            crate::linalg::zero(partial);
+            grad_block(ds, loss, w, lo, hi, partial);
+            crate::linalg::axpy(1.0, partial, g);
+        }
+        return;
+    }
+    let run = (nb / t).clamp(1, GRAD_BLOCKS_PER_THREAD);
+    let wave_blocks = t * run;
+    if scratch.len() < wave_blocks * d {
+        scratch.resize(wave_blocks * d, 0.0);
+    }
+    let mut b = 0usize;
+    while b < nb {
+        let wave = wave_blocks.min(nb - b);
+        std::thread::scope(|s| {
+            // one spawn per contiguous run of `run` blocks
+            for (ti, tchunk) in scratch[..wave * d].chunks_mut(run * d).enumerate() {
+                let b0 = b + ti * run;
+                s.spawn(move || {
+                    for (bi, partial) in tchunk.chunks_mut(d).enumerate() {
+                        let (lo, hi) = block_range(b0 + bi);
+                        crate::linalg::zero(partial);
+                        grad_block(ds, loss, w, lo, hi, partial);
+                    }
+                });
+            }
+        });
+        // merge in ascending block order — the fixed part of the tree
+        for partial in scratch[..wave * d].chunks(d) {
+            crate::linalg::axpy(1.0, partial, g);
+        }
+        b += wave;
+    }
+}
+
+/// Accumulate rows `[lo, hi)` of the shard gradient into `acc` (row order).
+fn grad_block(ds: &Dataset, loss: Loss, w: &[f64], lo: usize, hi: usize, acc: &mut [f64]) {
+    for i in lo..hi {
+        let row = ds.x.row(i);
+        let c = loss.hprime(row.dot(w), ds.y[i]);
+        row.axpy_into(c, acc);
     }
 }
 
@@ -267,5 +389,27 @@ mod tests {
         for loss in [Loss::Logistic, Loss::Squared] {
             assert!(obj(&ds, loss).smoothness() > 0.0);
         }
+    }
+
+    #[test]
+    fn blocked_grad_is_thread_invariant() {
+        // multi-block dataset (n > GRAD_BLOCK_ROWS): every thread count
+        // must reproduce the serial blocked reduction bit-for-bit
+        let ds = synth::tiny(6).with_n(3 * GRAD_BLOCK_ROWS / 2).generate();
+        let o = obj(&ds, Loss::Logistic);
+        let w = vec![0.03; ds.d()];
+        let mut scratch = Vec::new();
+        let mut serial = vec![0.0; ds.d()];
+        o.shard_grad_sum_into(&w, &mut serial, 1, &mut scratch);
+        for t in [2usize, 3, 8] {
+            let mut par = vec![0.0; ds.d()];
+            o.shard_grad_sum_into(&w, &mut par, t, &mut scratch);
+            assert_eq!(serial, par, "threads={t} diverged");
+        }
+        // and the scaled data gradient goes through the same tree
+        let z = o.data_grad(&w);
+        let mut zt = vec![0.0; ds.d()];
+        o.data_grad_into_threaded(&w, &mut zt, 4, &mut scratch);
+        assert_eq!(z, zt);
     }
 }

@@ -38,9 +38,10 @@ impl CdState {
     }
 
     /// Recompute activations for an arbitrary `w` (e.g. after a global
-    /// line-search step changed many coordinates at once).
+    /// line-search step changed many coordinates at once). Writes into the
+    /// existing buffer — no fresh vector per refresh.
     pub fn reset_activations(&mut self, ds: &Dataset, w: &[f64]) {
-        self.activations = ds.x.matvec(w);
+        ds.x.matvec_into(w, &mut self.activations);
     }
 
     /// One prox-Newton coordinate update of feature `j`; returns the delta

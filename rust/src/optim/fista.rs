@@ -71,18 +71,19 @@ pub fn fista(obj: &Objective<'_>, linear: Option<&[f64]>, w0: &[f64], opts: &Fis
     let mut t = 1.0f64;
     let mut prev_obj = value(&w);
     let mut grad = vec![0.0; d];
+    let mut grad_scratch = Vec::new();
+    let mut w_next = vec![0.0; d];
     let mut converged = false;
     let mut iters = 0;
     for k in 0..opts.max_iter {
         iters = k + 1;
         // gradient of the smooth part at v (+ linear shift)
-        obj.data_grad_into(&v, &mut grad);
+        obj.data_grad_into_threaded(&v, &mut grad, 1, &mut grad_scratch);
         axpy(obj.reg.lam1, &v, &mut grad);
         if let Some(l) = linear {
             axpy(1.0, l, &mut grad);
         }
-        // prox step
-        let mut w_next = vec![0.0; d];
+        // prox step (into the reused buffer; fully overwritten each iter)
         for j in 0..d {
             w_next[j] = soft_threshold(v[j] - eta * grad[j], thr);
         }
@@ -94,7 +95,7 @@ pub fn fista(obj: &Objective<'_>, linear: Option<&[f64]>, w0: &[f64], opts: &Fis
             v[j] = w_next[j] + beta * (w_next[j] - w[j]);
         }
         t = t_next;
-        w = w_next;
+        std::mem::swap(&mut w, &mut w_next);
         if opts.adaptive_restart {
             let cur = value(&w);
             if cur > prev_obj {

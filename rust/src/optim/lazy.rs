@@ -33,6 +33,7 @@
 use crate::data::Dataset;
 use crate::linalg::soft_threshold;
 use crate::loss::Loss;
+use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 
 /// Operation counters proving the §6 cost claim (`O(nnz)` vs `O(M·d)`).
@@ -181,6 +182,11 @@ pub fn lazy_advance(u0: f64, k: usize, eps: f64, c: f64, tau: f64) -> f64 {
 /// Semantically identical to [`crate::optim::svrg::dense_inner_epoch`]
 /// (same rng stream contract: one `below(n)` per step) at `O(M·nnz/n + d)`
 /// cost instead of `O(M·d)`.
+///
+/// Convenience wrapper that allocates a throwaway [`EpochWorkspace`]; the
+/// steady-state coordinator path uses [`lazy_inner_epoch_ws`] with a
+/// long-lived workspace and performs no per-epoch heap allocations. Both
+/// produce bit-identical output.
 pub fn lazy_inner_epoch(
     shard: &Dataset,
     loss: Loss,
@@ -193,6 +199,32 @@ pub fn lazy_inner_epoch(
     rng: &mut Rng,
     stats: &mut LazyStats,
 ) -> Vec<f64> {
+    let mut ws = EpochWorkspace::new();
+    lazy_inner_epoch_ws(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, stats, &mut ws)
+        .to_vec()
+}
+
+/// Zero-allocation form of [`lazy_inner_epoch`]: all scratch (`u`, `cw`,
+/// the generation-stamped `last`) comes from `ws`, which is sized on first
+/// use and reused untouched thereafter. Returns `u_M` as a slice into the
+/// workspace (copy it out if it must outlive the next epoch).
+///
+/// The generation stamps are `u64`, fixing the seed's latent wrap at
+/// `m_steps > u32::MAX` (see [`EpochWorkspace`] module docs for the
+/// stamping scheme and its overflow guard).
+pub fn lazy_inner_epoch_ws<'ws>(
+    shard: &Dataset,
+    loss: Loss,
+    w_t: &[f64],
+    z: &[f64],
+    eta: f64,
+    lam1: f64,
+    lam2: f64,
+    m_steps: usize,
+    rng: &mut Rng,
+    stats: &mut LazyStats,
+    ws: &'ws mut EpochWorkspace,
+) -> &'ws [f64] {
     let d = shard.d();
     let n = shard.n();
     assert!(n > 0, "empty shard");
@@ -203,14 +235,17 @@ pub fn lazy_inner_epoch(
     let decay = 1.0 - eps;
     assert!(decay > 0.0, "eta*lam1 must be < 1");
 
-    // h'(x_i . w_t) is epoch-constant: one O(nnz) pass.
-    let cw: Vec<f64> = (0..n)
-        .map(|i| loss.hprime(shard.x.row(i).dot(w_t), shard.y[i]))
-        .collect();
+    let base = ws.begin_epoch(d, n, m_steps);
+    let u = &mut ws.u[..d];
+    let cw = &mut ws.cw[..n];
+    let last = &mut ws.last[..d];
 
-    let mut u = w_t.to_vec();
-    // last step each coordinate is materialized at
-    let mut last = vec![0u32; d];
+    u.copy_from_slice(w_t);
+    // h'(x_i . w_t) is epoch-constant: one O(nnz) pass.
+    for (i, c) in cw.iter_mut().enumerate() {
+        *c = loss.hprime(shard.x.row(i).dot(w_t), shard.y[i]);
+    }
+
     for m in 0..m_steps {
         let i = rng.below(n);
         let row = shard.x.row(i);
@@ -218,35 +253,37 @@ pub fn lazy_inner_epoch(
         // inner product in the same pass (one gather over the support
         // instead of two — measured by `cargo bench --bench micro_hotpath`)
         let mut a_u = 0.0;
-        for k in 0..row.idx.len() {
-            let j = row.idx[k] as usize;
-            let behind = m as u32 - last[j];
+        for (&jj, &xv) in row.idx.iter().zip(row.val.iter()) {
+            let j = jj as usize;
+            // stale stamps from earlier epochs clamp to base = "untouched"
+            let behind = m as u64 - (last[j].max(base) - base);
             if behind > 0 {
                 u[j] = lazy_advance(u[j], behind as usize, eps, eta * z[j], tau);
             }
-            a_u += row.val[k] * u[j];
+            a_u += xv * u[j];
         }
         let coeff = loss.hprime(a_u, shard.y[i]) - cw[i];
         // materialized fused update on the support
-        for k in 0..row.idx.len() {
-            let j = row.idx[k] as usize;
-            let g = coeff * row.val[k] + z[j];
+        for (&jj, &xv) in row.idx.iter().zip(row.val.iter()) {
+            let j = jj as usize;
+            let g = coeff * xv + z[j];
             u[j] = soft_threshold(decay * u[j] - eta * g, tau);
-            last[j] = m as u32 + 1;
+            last[j] = base + m as u64 + 1;
         }
         stats.materializations += row.idx.len() as u64;
         stats.steps += 1;
     }
     // fast-forward every coordinate to step M
     for j in 0..d {
-        let behind = m_steps as u32 - last[j];
+        let behind = m_steps as u64 - (last[j].max(base) - base);
         if behind > 0 {
             u[j] = lazy_advance(u[j], behind as usize, eps, eta * z[j], tau);
         }
     }
     stats.materializations += d as u64;
     stats.dense_equivalent += (m_steps as u64) * d as u64;
-    u
+    ws.end_epoch(m_steps);
+    &ws.u[..d]
 }
 
 #[cfg(test)]

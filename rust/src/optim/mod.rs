@@ -15,6 +15,9 @@
 //! * [`sgd`] — proximal stochastic gradient (dpSGD worker core).
 //! * [`scope`] — the original SCOPE correction term `c(u − w_t)` as a
 //!   re-parameterization of the same engines (the §3 ablation).
+//! * [`workspace`] — the reusable [`workspace::EpochWorkspace`] holding
+//!   every scratch buffer the inner loops need, so steady-state training
+//!   performs no per-epoch heap allocations (DESIGN.md §6).
 
 pub mod cd;
 pub mod fista;
@@ -23,7 +26,9 @@ pub mod owlqn;
 pub mod scope;
 pub mod sgd;
 pub mod svrg;
+pub mod workspace;
 
 pub use fista::{fista, FistaOpts, FistaResult};
-pub use lazy::{lazy_inner_epoch, LazyStats};
-pub use svrg::dense_inner_epoch;
+pub use lazy::{lazy_inner_epoch, lazy_inner_epoch_ws, LazyStats};
+pub use svrg::{dense_inner_epoch, dense_inner_epoch_ws};
+pub use workspace::EpochWorkspace;

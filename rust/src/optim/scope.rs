@@ -20,11 +20,15 @@
 
 use crate::data::Dataset;
 use crate::loss::Loss;
-use crate::optim::lazy::{lazy_inner_epoch, LazyStats};
+use crate::optim::lazy::{lazy_inner_epoch_ws, LazyStats};
+use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 
 /// Inner epoch with the SCOPE correction `c(u − w_t)` added to every
 /// stochastic step; `c = 0` is exactly pSCOPE's update.
+///
+/// Convenience wrapper over [`scope_inner_epoch_ws`] with a throwaway
+/// workspace; both produce bit-identical output.
 pub fn scope_inner_epoch(
     shard: &Dataset,
     loss: Loss,
@@ -38,22 +42,55 @@ pub fn scope_inner_epoch(
     rng: &mut Rng,
     stats: &mut LazyStats,
 ) -> Vec<f64> {
+    let mut ws = EpochWorkspace::new();
+    scope_inner_epoch_ws(
+        shard, loss, w_t, z, eta, lam1, lam2, scope_c, m_steps, rng, stats, &mut ws,
+    )
+    .to_vec()
+}
+
+/// Zero-allocation form of [`scope_inner_epoch`]: the shifted gradient
+/// `z' = z − c·w_t` is built in the workspace's scratch and the lazy
+/// engine runs on the workspace's epoch buffers.
+pub fn scope_inner_epoch_ws<'ws>(
+    shard: &Dataset,
+    loss: Loss,
+    w_t: &[f64],
+    z: &[f64],
+    eta: f64,
+    lam1: f64,
+    lam2: f64,
+    scope_c: f64,
+    m_steps: usize,
+    rng: &mut Rng,
+    stats: &mut LazyStats,
+    ws: &'ws mut EpochWorkspace,
+) -> &'ws [f64] {
     if scope_c == 0.0 {
-        return lazy_inner_epoch(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, stats);
+        return lazy_inner_epoch_ws(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, stats, ws);
     }
-    let z_shift: Vec<f64> = (0..z.len()).map(|j| z[j] - scope_c * w_t[j]).collect();
-    lazy_inner_epoch(
+    let d = shard.d();
+    // the shift buffer is taken out of the workspace (never aliases the
+    // engine's borrows) and restored after the epoch
+    let mut zs = ws.take_zshift(d);
+    for j in 0..d {
+        zs[j] = z[j] - scope_c * w_t[j];
+    }
+    lazy_inner_epoch_ws(
         shard,
         loss,
         w_t,
-        &z_shift,
+        &zs[..d],
         eta,
         lam1 + scope_c,
         lam2,
         m_steps,
         rng,
         stats,
-    )
+        ws,
+    );
+    ws.zshift = zs;
+    &ws.u[..d]
 }
 
 #[cfg(test)]
@@ -62,6 +99,7 @@ mod tests {
     use crate::data::synth;
     use crate::linalg::soft_threshold;
     use crate::loss::{Objective, Reg};
+    use crate::optim::lazy::lazy_inner_epoch;
 
     #[test]
     fn c_zero_is_plain_pscope() {

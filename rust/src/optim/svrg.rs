@@ -13,6 +13,7 @@
 use crate::data::Dataset;
 use crate::linalg::{soft_threshold, SparseRow};
 use crate::loss::Loss;
+use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 
 /// Run `m_steps` proximal-SVRG inner iterations on `shard`, starting from
@@ -22,6 +23,9 @@ use crate::rng::Rng;
 /// Sampling consumes exactly one `rng.below(n)` per step — the same stream
 /// contract as [`crate::optim::lazy::lazy_inner_epoch`], which is what
 /// makes the two engines trajectory-equivalent for a shared seed.
+///
+/// Convenience wrapper over [`dense_inner_epoch_ws`] with a throwaway
+/// workspace; both produce bit-identical output.
 pub fn dense_inner_epoch(
     shard: &Dataset,
     loss: Loss,
@@ -33,6 +37,25 @@ pub fn dense_inner_epoch(
     m_steps: usize,
     rng: &mut Rng,
 ) -> Vec<f64> {
+    let mut ws = EpochWorkspace::new();
+    dense_inner_epoch_ws(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, &mut ws).to_vec()
+}
+
+/// Zero-allocation form of [`dense_inner_epoch`]: `u` and the per-row
+/// anchor activations come from `ws`. Returns `u_M` as a slice into the
+/// workspace.
+pub fn dense_inner_epoch_ws<'ws>(
+    shard: &Dataset,
+    loss: Loss,
+    w_t: &[f64],
+    z: &[f64],
+    eta: f64,
+    lam1: f64,
+    lam2: f64,
+    m_steps: usize,
+    rng: &mut Rng,
+    ws: &'ws mut EpochWorkspace,
+) -> &'ws [f64] {
     let d = shard.d();
     let n = shard.n();
     assert!(n > 0, "empty shard");
@@ -42,16 +65,20 @@ pub fn dense_inner_epoch(
     let thr = eta * lam2;
     assert!(decay > 0.0, "eta*lam1 must be < 1");
 
-    // h'(x_i . w_t) is constant during the epoch — precompute per row.
-    let cw: Vec<f64> = (0..n)
-        .map(|i| loss.hprime(shard.x.row(i).dot(w_t), shard.y[i]))
-        .collect();
+    ws.ensure_dims(d, n);
+    let u = &mut ws.u[..d];
+    let cw = &mut ws.cw[..n];
 
-    let mut u = w_t.to_vec();
+    u.copy_from_slice(w_t);
+    // h'(x_i . w_t) is constant during the epoch — precompute per row.
+    for (i, c) in cw.iter_mut().enumerate() {
+        *c = loss.hprime(shard.x.row(i).dot(w_t), shard.y[i]);
+    }
+
     for _ in 0..m_steps {
         let i = rng.below(n);
         let row: SparseRow<'_> = shard.x.row(i);
-        let coeff = loss.hprime(row.dot(&u), shard.y[i]) - cw[i];
+        let coeff = loss.hprime(row.dot(u), shard.y[i]) - cw[i];
         // dense update: every coordinate decays, shifts by -eta*z and
         // (on the row support) by -eta*coeff*x_ij, then shrinks.
         let mut k = 0usize;
@@ -64,7 +91,7 @@ pub fn dense_inner_epoch(
             u[j] = soft_threshold(decay * u[j] - eta * g, thr);
         }
     }
-    u
+    &ws.u[..d]
 }
 
 #[cfg(test)]

@@ -1,0 +1,266 @@
+//! The epoch workspace: every scratch buffer the inner loops need, owned
+//! once and reused forever.
+//!
+//! The §6 cost model makes the inner epoch `O(nnz)` — but the seed
+//! implementation re-allocated `O(d) + O(n)` scratch per epoch (`u`, `cw`,
+//! `last`, gradient accumulators, the worker's f32 pad buffers), so a long
+//! training run performed `O(T·d)` allocator work that the recovery rules
+//! had just saved. [`EpochWorkspace`] holds all of it; after the first
+//! epoch at a given shard geometry, a full training run performs **no
+//! further heap allocations** in the engine hot paths (the only per-epoch
+//! allocations left are the protocol message payloads, which the wire
+//! owns by design).
+//!
+//! ## Generation stamping
+//!
+//! The lazy engine tracks, per coordinate, the last inner step at which it
+//! was materialized (`last`). A naive reusable buffer would need an `O(d)`
+//! reset per epoch — exactly the cost we are deleting. Instead `last`
+//! stores *generation stamps*: epoch `e` claims the stamp range
+//! `[base_e, base_e + M]` (`base_{e+1} = base_e + M`), and a coordinate's
+//! step-within-epoch is recovered as `last[j].max(base) - base`, which
+//! reads stale stamps from any earlier epoch as "untouched this epoch"
+//! without ever writing them. Stamps are `u64`, which also retires the
+//! seed's latent `u32` wrap when `m_steps > u32::MAX`; the (astronomically
+//! distant) `u64` exhaustion is guarded in [`EpochWorkspace::begin_epoch`]
+//! by a one-off stamp-space reset instead of a silent wrap.
+//!
+//! ## Determinism
+//!
+//! Reusing the workspace is bit-exact with the fresh-allocation path: the
+//! engines overwrite `u[..d]` / `cw[..n]` wholesale at epoch start and the
+//! stamp clamp reproduces the zeroed-`last` semantics exactly
+//! (`rust/tests/workspace_equivalence.rs` pins this across epochs).
+//!
+//! See `DESIGN.md` §6 for the ownership and threading model.
+
+use crate::loss::Objective;
+
+/// Reusable scratch for the inner-epoch engines, the worker gradient
+/// kernel, and the PJRT pad buffers. One per worker / per solver loop;
+/// **not** shared across threads (each worker owns its own).
+#[derive(Clone, Debug, Default)]
+pub struct EpochWorkspace {
+    /// Inner iterate `u` (length grown to the largest `d` seen).
+    pub(crate) u: Vec<f64>,
+    /// Epoch-constant anchor activations `h'(xᵢ·w_t)` (grown to `n`).
+    pub(crate) cw: Vec<f64>,
+    /// Generation-stamped last-materialized marks (grown to `d`).
+    pub(crate) last: Vec<u64>,
+    /// Stamp base handed to the next epoch (see module docs).
+    pub(crate) gen: u64,
+    /// Dense gradient accumulator for the worker shard-gradient kernel.
+    pub(crate) grad: Vec<f64>,
+    /// Per-block partial accumulators for the parallel gradient
+    /// ([`crate::loss::shard_grad_sum_blocked`] grows this on first use).
+    pub(crate) partials: Vec<f64>,
+    /// Shifted data gradient `z − c·w_t` for the SCOPE-correction
+    /// re-parameterization.
+    pub(crate) zshift: Vec<f64>,
+    /// f32 pad of `w` (PJRT artifact boundary).
+    pub(crate) w32: Vec<f32>,
+    /// f32 pad of `z`.
+    pub(crate) z32: Vec<f32>,
+    /// f32 pad of the chained inner iterate.
+    pub(crate) u32f: Vec<f32>,
+    /// Pre-sampled index stream for the fixed-step artifacts.
+    pub(crate) idx32: Vec<i32>,
+    /// Buffer (re)allocation events since construction (growth only;
+    /// steady-state epochs add zero).
+    pub(crate) allocs: u64,
+}
+
+fn grow_f64(buf: &mut Vec<f64>, len: usize, allocs: &mut u64) {
+    if buf.len() < len {
+        *allocs += 1;
+        buf.resize(len, 0.0);
+    }
+}
+
+impl EpochWorkspace {
+    /// Empty workspace; buffers grow on first use and then stay.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer (re)allocation events so far. Steady-state training must not
+    /// increase this — asserted by `rust/tests/workspace_equivalence.rs`.
+    pub fn allocations(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Grow the iterate/activation/stamp buffers to `(d, n)`.
+    pub(crate) fn ensure_dims(&mut self, d: usize, n: usize) {
+        grow_f64(&mut self.u, d, &mut self.allocs);
+        grow_f64(&mut self.cw, n, &mut self.allocs);
+        if self.last.len() < d {
+            self.allocs += 1;
+            self.last.resize(d, 0);
+        }
+    }
+
+    /// Grow the gradient accumulator to `d`.
+    pub(crate) fn ensure_grad(&mut self, d: usize) {
+        grow_f64(&mut self.grad, d, &mut self.allocs);
+    }
+
+    /// Grow the PJRT pad buffers (`d_pad` floats, `m` sampled indices).
+    pub(crate) fn ensure_f32_pads(&mut self, d_pad: usize, m: usize) {
+        if self.w32.len() < d_pad {
+            self.allocs += 1;
+            self.w32.resize(d_pad, 0.0);
+        }
+        if self.z32.len() < d_pad {
+            self.allocs += 1;
+            self.z32.resize(d_pad, 0.0);
+        }
+        if self.u32f.capacity() < d_pad {
+            self.allocs += 1;
+            self.u32f.reserve(d_pad - self.u32f.len());
+        }
+        if self.idx32.len() < m {
+            self.allocs += 1;
+            self.idx32.resize(m, 0);
+        }
+    }
+
+    /// Start a lazy epoch of `m_steps` on a `(d, n)` shard: sizes the
+    /// buffers and returns the stamp base for this epoch. Guards the `u64`
+    /// stamp space: if `gen + m_steps + 1` would overflow (once per 2⁶⁴
+    /// total inner steps), the stamps are reset in one `O(d)` pass instead
+    /// of wrapping silently — the `u32` variant of this hazard wrapped at
+    /// `m_steps > u32::MAX` and corrupted the recovery schedule.
+    pub(crate) fn begin_epoch(&mut self, d: usize, n: usize, m_steps: usize) -> u64 {
+        self.ensure_dims(d, n);
+        let span = (m_steps as u64).saturating_add(1);
+        if self.gen.checked_add(span).is_none() {
+            for s in &mut self.last {
+                *s = 0;
+            }
+            self.gen = 0;
+        }
+        self.gen
+    }
+
+    /// Close the epoch started at the current base: stamps written during
+    /// it are `≤ base + m_steps`, so the next epoch's base clamps them all
+    /// to "untouched".
+    pub(crate) fn end_epoch(&mut self, m_steps: usize) {
+        self.gen += m_steps as u64;
+    }
+
+    /// Blocked shard-gradient sum `Σᵢ h'(xᵢ·w) xᵢ` into the workspace's
+    /// accumulator (unscaled — Algorithm 1 line 12); returns the slice.
+    /// Deterministic for every `threads ≥ 1` (see
+    /// [`crate::loss::shard_grad_sum_blocked`]).
+    pub fn shard_grad_sum<'a>(
+        &'a mut self,
+        obj: &Objective<'_>,
+        w: &[f64],
+        threads: usize,
+    ) -> &'a [f64] {
+        let d = obj.ds.d();
+        self.ensure_grad(d);
+        let partials_before = self.partials.len();
+        crate::loss::shard_grad_sum_blocked(
+            obj.ds,
+            obj.loss,
+            w,
+            &mut self.grad[..d],
+            threads,
+            &mut self.partials,
+        );
+        // the kernel grows its block-partial scratch internally; surface
+        // that growth in the allocation counter so the zero-allocation
+        // invariant covers the gradient path too
+        if self.partials.len() > partials_before {
+            self.allocs += 1;
+        }
+        &self.grad[..d]
+    }
+
+    /// Hand out the (grown) SCOPE z-shift buffer, counting any growth in
+    /// the allocation counter; the caller fills it and puts it back
+    /// (`ws.zshift = zs`) after the epoch — taking it out keeps the shift
+    /// and the engine's workspace borrows from ever aliasing.
+    pub(crate) fn take_zshift(&mut self, d: usize) -> Vec<f64> {
+        grow_f64(&mut self.zshift, d, &mut self.allocs);
+        std::mem::take(&mut self.zshift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::loss::{Loss, Objective, Reg};
+    use crate::optim::lazy::{lazy_inner_epoch, lazy_inner_epoch_ws, LazyStats};
+    use crate::rng::Rng;
+
+    #[test]
+    fn buffers_grow_once() {
+        let mut ws = EpochWorkspace::new();
+        ws.ensure_dims(50, 20);
+        let a = ws.allocations();
+        assert!(a >= 3);
+        ws.ensure_dims(50, 20);
+        ws.ensure_dims(30, 10); // smaller dims: no work
+        assert_eq!(ws.allocations(), a);
+        ws.ensure_dims(51, 20); // growth: one more event
+        assert_eq!(ws.allocations(), a + 1);
+    }
+
+    #[test]
+    fn generation_overflow_resets_instead_of_wrapping() {
+        // push the stamp space to the brink, then verify an epoch run with
+        // the near-exhausted workspace matches a fresh one bit-for-bit
+        let ds = synth::tiny(881).generate();
+        let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+        let obj = Objective::new(&ds, Loss::Logistic, reg);
+        let w = vec![0.02; ds.d()];
+        let z = obj.data_grad(&w);
+        let eta = 0.2 / obj.smoothness();
+
+        let mut ws = EpochWorkspace::new();
+        ws.ensure_dims(ds.d(), ds.n());
+        ws.gen = u64::MAX - 3; // next begin_epoch must reset, not wrap
+        for s in &mut ws.last {
+            *s = u64::MAX - 4; // stale stamps from the "previous" epochs
+        }
+        let mut r1 = Rng::new(5);
+        let mut s1 = LazyStats::default();
+        let (l1, l2, m) = (reg.lam1, reg.lam2, 120);
+        let got = lazy_inner_epoch_ws(
+            &ds, Loss::Logistic, &w, &z, eta, l1, l2, m, &mut r1, &mut s1, &mut ws,
+        )
+        .to_vec();
+        let mut r2 = Rng::new(5);
+        let mut s2 = LazyStats::default();
+        let want =
+            lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, l1, l2, m, &mut r2, &mut s2);
+        assert_eq!(got, want);
+        assert!(ws.gen < u64::MAX / 2, "stamp space was not reset");
+    }
+
+    #[test]
+    fn workspace_grad_matches_objective() {
+        let ds = synth::tiny(882).generate();
+        let obj = Objective::new(&ds, Loss::Logistic, Reg { lam1: 1e-3, lam2: 1e-3 });
+        let w = vec![0.1; ds.d()];
+        let mut ws = EpochWorkspace::new();
+        assert_eq!(ws.shard_grad_sum(&obj, &w, 1), obj.shard_grad_sum(&w).as_slice());
+        assert_eq!(ws.shard_grad_sum(&obj, &w, 3), obj.shard_grad_sum(&w).as_slice());
+    }
+
+    #[test]
+    fn take_zshift_counts_growth_once() {
+        let mut ws = EpochWorkspace::new();
+        let zs = ws.take_zshift(40);
+        assert_eq!(zs.len(), 40);
+        let a = ws.allocations();
+        ws.zshift = zs;
+        let zs = ws.take_zshift(40);
+        assert_eq!(ws.allocations(), a, "reuse must not count as growth");
+        ws.zshift = zs;
+    }
+}

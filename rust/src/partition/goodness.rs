@@ -92,7 +92,14 @@ pub fn local_global_gap(
     local_iters: usize,
 ) -> (f64, usize) {
     let obj = Objective::new(ds, loss, reg);
-    let z_global = obj.data_grad(a);
+    let d = ds.d();
+    // gradient buffers reused across the p shards (this helper runs once
+    // per probe point per shard inside `analyze`)
+    let mut grad_scratch = Vec::new();
+    let mut z_global = vec![0.0; d];
+    obj.data_grad_into_threaded(a, &mut z_global, 1, &mut grad_scratch);
+    let mut z_local = vec![0.0; d];
+    let mut g_k = vec![0.0; d];
     let p = part.p();
     let total: usize = part.assignment.iter().map(|a| a.len()).sum();
     let mut sum_min = 0.0;
@@ -105,8 +112,10 @@ pub fn local_global_gap(
         let weight = shard.n() as f64 * p as f64 / total as f64;
         let shard_obj = Objective::new(&shard, loss, reg).with_weight(weight);
         // G_k(a) = ∇F(a) − ∇F_k(a); the λ₁ terms cancel so data grads suffice
-        let z_local = shard_obj.data_grad(a);
-        let g_k: Vec<f64> = (0..ds.d()).map(|j| z_global[j] - z_local[j]).collect();
+        shard_obj.data_grad_into_threaded(a, &mut z_local, 1, &mut grad_scratch);
+        for j in 0..d {
+            g_k[j] = z_global[j] - z_local[j];
+        }
         let r = fista(
             &shard_obj,
             Some(&g_k),
@@ -187,7 +196,12 @@ pub fn lemma1_identity_check(
     p_star: f64,
 ) -> (f64, f64) {
     let obj = Objective::new(ds, loss, reg);
-    let z_global = obj.data_grad(a);
+    let d = ds.d();
+    let mut grad_scratch = Vec::new();
+    let mut z_global = vec![0.0; d];
+    obj.data_grad_into_threaded(a, &mut z_global, 1, &mut grad_scratch);
+    let mut z_local = vec![0.0; d];
+    let mut g_k = vec![0.0; d];
     let p = part.p();
     let total: usize = part.assignment.iter().map(|a| a.len()).sum();
     let mut via_conjugate = p_star;
@@ -195,8 +209,10 @@ pub fn lemma1_identity_check(
         let shard = ds.select(&part.assignment[k]);
         let weight = shard.n() as f64 * p as f64 / total as f64;
         let shard_obj = Objective::new(&shard, loss, reg).with_weight(weight);
-        let z_local = shard_obj.data_grad(a);
-        let g_k: Vec<f64> = (0..ds.d()).map(|j| z_global[j] - z_local[j]).collect();
+        shard_obj.data_grad_into_threaded(a, &mut z_local, 1, &mut grad_scratch);
+        for j in 0..d {
+            g_k[j] = z_global[j] - z_local[j];
+        }
         let r = fista(
             &shard_obj,
             Some(&g_k),

@@ -1,0 +1,235 @@
+//! The zero-allocation contract of the epoch workspace (DESIGN.md §6):
+//!
+//! 1. reusing one `EpochWorkspace` across many epochs is **bit-identical**
+//!    to the fresh-allocation path (generation stamping never leaks state
+//!    between epochs);
+//! 2. the deterministic blocked shard gradient is **bit-exact** at every
+//!    thread count (the reduction tree is fixed by the block size, not the
+//!    parallelism);
+//! 3. after the first epoch at a given geometry the workspace performs
+//!    **zero further allocations** (the `LazyStats`-style counter stays
+//!    flat) — the steady-state training loop does no per-epoch heap work.
+
+use pscope::config::{Model, PscopeConfig};
+use pscope::coordinator::train_with;
+use pscope::data::synth;
+use pscope::loss::{Loss, Objective, Reg, GRAD_BLOCK_ROWS};
+use pscope::net::NetModel;
+use pscope::optim::lazy::{lazy_inner_epoch, lazy_inner_epoch_ws, LazyStats};
+use pscope::optim::scope::{scope_inner_epoch, scope_inner_epoch_ws};
+use pscope::optim::svrg::{dense_inner_epoch, dense_inner_epoch_ws};
+use pscope::optim::workspace::EpochWorkspace;
+use pscope::partition::Partitioner;
+use pscope::rng::Rng;
+
+/// 4-epoch chained training run through the legacy fresh-alloc entry point.
+fn chain_fresh(
+    ds: &pscope::data::Dataset,
+    obj: &Objective<'_>,
+    eta: f64,
+    reg: Reg,
+    m: usize,
+    epochs: usize,
+) -> Vec<Vec<f64>> {
+    let mut w = vec![0.0; ds.d()];
+    let mut rng = Rng::new(31);
+    let mut stats = LazyStats::default();
+    let mut iterates = Vec::new();
+    for _ in 0..epochs {
+        let z = obj.data_grad(&w);
+        w = lazy_inner_epoch(
+            ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats,
+        );
+        iterates.push(w.clone());
+    }
+    iterates
+}
+
+#[test]
+fn workspace_reuse_is_bit_identical_lazy() {
+    let ds = synth::rcv1_like(9).with_n(500).generate();
+    let reg = Reg { lam1: 1e-4, lam2: 1e-4 };
+    let obj = Objective::new(&ds, Loss::Logistic, reg);
+    let eta = 0.4 / obj.smoothness();
+    let m = ds.n();
+    let epochs = 4;
+    let fresh = chain_fresh(&ds, &obj, eta, reg, m, epochs);
+
+    let mut w = vec![0.0; ds.d()];
+    let mut rng = Rng::new(31);
+    let mut stats = LazyStats::default();
+    let mut ws = EpochWorkspace::new();
+    for want in fresh.iter().take(epochs) {
+        let z = obj.data_grad(&w);
+        let u = lazy_inner_epoch_ws(
+            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats, &mut ws,
+        );
+        assert_eq!(u, want.as_slice(), "workspace reuse diverged");
+        w.copy_from_slice(u);
+    }
+}
+
+#[test]
+fn workspace_reuse_is_bit_identical_dense() {
+    let ds = synth::tiny(10).generate();
+    let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+    let obj = Objective::new(&ds, Loss::Logistic, reg);
+    let eta = 0.3 / obj.smoothness();
+    let m = 2 * ds.n();
+
+    let mut w1 = vec![0.0; ds.d()];
+    let mut r1 = Rng::new(8);
+    let mut w2 = w1.clone();
+    let mut r2 = Rng::new(8);
+    let mut ws = EpochWorkspace::new();
+    for _ in 0..3 {
+        let z1 = obj.data_grad(&w1);
+        w1 = dense_inner_epoch(&ds, Loss::Logistic, &w1, &z1, eta, reg.lam1, reg.lam2, m, &mut r1);
+        let z2 = obj.data_grad(&w2);
+        let u = dense_inner_epoch_ws(
+            &ds, Loss::Logistic, &w2, &z2, eta, reg.lam1, reg.lam2, m, &mut r2, &mut ws,
+        );
+        assert_eq!(u, w1.as_slice(), "dense workspace reuse diverged");
+        w2.copy_from_slice(u);
+    }
+}
+
+#[test]
+fn workspace_reuse_is_bit_identical_scope_correction() {
+    // the c > 0 path exercises the z-shift scratch buffer
+    let ds = synth::tiny(11).generate();
+    let reg = Reg { lam1: 1e-3, lam2: 1e-3 };
+    let obj = Objective::new(&ds, Loss::Logistic, reg);
+    let eta = 0.2 / obj.smoothness();
+    let c = 0.5 * obj.smoothness();
+    let w = vec![0.01; ds.d()];
+    let z = obj.data_grad(&w);
+    let mut ws = EpochWorkspace::new();
+    for seed in [1u64, 2, 3] {
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        let a = scope_inner_epoch(
+            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c, 150, &mut r1,
+            &mut Default::default(),
+        );
+        let b = scope_inner_epoch_ws(
+            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c, 150, &mut r2,
+            &mut Default::default(), &mut ws,
+        );
+        assert_eq!(a.as_slice(), b, "scope-correction workspace path diverged");
+    }
+}
+
+#[test]
+fn steady_state_performs_no_allocations() {
+    // the LazyStats-style counter: after the warm-up epoch, reuse adds zero
+    let ds = synth::rcv1_like(12).with_n(400).generate();
+    let reg = Reg { lam1: 1e-4, lam2: 1e-4 };
+    let obj = Objective::new(&ds, Loss::Logistic, reg);
+    let eta = 0.4 / obj.smoothness();
+    let mut w = vec![0.0; ds.d()];
+    let mut rng = Rng::new(5);
+    let mut stats = LazyStats::default();
+    let mut ws = EpochWorkspace::new();
+
+    let z = obj.data_grad(&w);
+    let u = lazy_inner_epoch_ws(
+        &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, ds.n(), &mut rng, &mut stats, &mut ws,
+    );
+    w.copy_from_slice(u);
+    let warm = ws.allocations();
+    assert!(warm > 0, "warm-up should have sized the buffers");
+
+    for _ in 0..5 {
+        let z = obj.data_grad(&w);
+        let u = lazy_inner_epoch_ws(
+            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, ds.n(), &mut rng, &mut stats,
+            &mut ws,
+        );
+        w.copy_from_slice(u);
+    }
+    assert_eq!(
+        ws.allocations(),
+        warm,
+        "steady-state epochs must not allocate workspace buffers"
+    );
+
+    // the worker gradient path shares the same workspace and is also flat
+    let g1 = ws.shard_grad_sum(&obj, &w, 1).to_vec();
+    let after_grad = ws.allocations();
+    for _ in 0..3 {
+        let g = ws.shard_grad_sum(&obj, &w, 1);
+        assert_eq!(g, g1.as_slice());
+    }
+    assert_eq!(ws.allocations(), after_grad);
+}
+
+#[test]
+fn threaded_gradient_path_allocations_flat() {
+    // multi-block + threads: the block-partial scratch grows once (and is
+    // counted), then every further pass is allocation-free
+    let ds = synth::rcv1_like(15).with_n(2 * GRAD_BLOCK_ROWS + 100).generate();
+    let reg = Reg { lam1: 1e-4, lam2: 1e-4 };
+    let obj = Objective::new(&ds, Loss::Logistic, reg);
+    let w = vec![0.02; ds.d()];
+    let mut ws = EpochWorkspace::new();
+    let g1 = ws.shard_grad_sum(&obj, &w, 3).to_vec();
+    let warm = ws.allocations();
+    assert!(warm >= 2, "grad buffer and partials growth must both be counted, got {warm}");
+    for _ in 0..3 {
+        assert_eq!(ws.shard_grad_sum(&obj, &w, 3), g1.as_slice());
+    }
+    assert_eq!(ws.allocations(), warm, "threaded gradient passes must not allocate");
+}
+
+#[test]
+fn parallel_data_grad_bit_exact_across_thread_counts() {
+    // n spans several reduction blocks so real merging happens; 7 threads
+    // exceeds the block count and must clamp without changing the tree
+    let n = 4 * GRAD_BLOCK_ROWS + GRAD_BLOCK_ROWS / 3;
+    let ds = synth::rcv1_like(13).with_n(n).generate();
+    let reg = Reg { lam1: 1e-5, lam2: 1e-5 };
+    let obj = Objective::new(&ds, Loss::Logistic, reg);
+    let mut rng = Rng::new(17);
+    let w: Vec<f64> = (0..ds.d()).map(|_| 0.05 * rng.normal()).collect();
+
+    let serial = obj.data_grad(&w); // threads = 1 reference
+    let mut scratch = Vec::new();
+    for threads in [1usize, 2, 4, 7] {
+        let mut g = vec![0.0; ds.d()];
+        obj.data_grad_into_threaded(&w, &mut g, threads, &mut scratch);
+        assert_eq!(serial, g, "data_grad diverged at {threads} threads");
+        let mut gs = vec![0.0; ds.d()];
+        obj.shard_grad_sum_into(&w, &mut gs, threads, &mut scratch);
+        // same scaling op as data_grad_into (one multiply by weight/n)
+        let factor = obj.weight / ds.n() as f64;
+        for v in gs.iter_mut() {
+            *v *= factor;
+        }
+        assert_eq!(serial, gs, "shard sum tree diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn coordinator_trajectory_independent_of_grad_threads() {
+    // end-to-end: the worker epoch path must be bit-identical whether the
+    // epoch-start gradient pass runs on 1 thread or several
+    let ds = synth::rcv1_like(14).with_n(2 * GRAD_BLOCK_ROWS + 200).generate();
+    let reg = Reg { lam1: 1e-4, lam2: 1e-5 };
+    let run = |grad_threads: usize| {
+        let cfg = PscopeConfig {
+            p: 2,
+            outer_iters: 3,
+            reg,
+            seed: 42,
+            grad_threads,
+            ..PscopeConfig::for_dataset("rcv1_like", Model::Logistic)
+        };
+        let part = Partitioner::Uniform.split(&ds, 2, 3);
+        train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap().w
+    };
+    let w1 = run(1);
+    for t in [2usize, 3] {
+        assert_eq!(w1, run(t), "grad_threads={t} perturbed the trajectory");
+    }
+}
