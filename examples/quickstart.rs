@@ -8,7 +8,7 @@
 use pscope::loss::Reg;
 use pscope::prelude::*;
 
-fn main() {
+fn main() -> pscope::error::Result<()> {
     // 1. data: an rcv1-flavored sparse problem, scaled to run in seconds
     let ds = pscope::data::synth::rcv1_like(42).with_n(4000).generate();
     println!(
@@ -30,7 +30,8 @@ fn main() {
         reg: Reg { lam1: 1e-4, lam2: 1e-4 },
         ..PscopeConfig::for_dataset("rcv1_like", Model::Logistic)
     };
-    let out = pscope::coordinator::train(&ds, &part, &cfg);
+    // a dead worker propagates as Err (nonzero exit), not an abort
+    let out = pscope::coordinator::train(&ds, &part, &cfg)?;
 
     // 4. inspect
     for p in &out.trace.points {
@@ -56,4 +57,5 @@ fn main() {
         dense_equiv,
         100.0 * (1.0 - out.materializations as f64 / dense_equiv as f64)
     );
+    Ok(())
 }

@@ -124,6 +124,8 @@ impl SimClock {
             wall_s: self.wall_s,
             sim_wall_s: self.wall_s,
             net_s: self.net.wire_time(self.bytes, self.msgs),
+            // simulated baselines have no real transport to measure
+            net_io_s: 0.0,
             objective,
             comm_bytes: self.bytes,
             comm_msgs: self.msgs,

@@ -67,6 +67,40 @@ impl WorkerBackend {
     }
 }
 
+/// Which wire the coordinator runs on (see `crate::net::transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Metered in-process channels — the simulated cluster (default;
+    /// workers are OS threads in this process).
+    #[default]
+    InProc,
+    /// Real TCP sockets with the binary frame codec — workers are
+    /// separate processes (self-hosted on loopback by `pscope train`, or
+    /// launched by hand with `pscope master` / `pscope worker`).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "inproc" | "in-proc" | "sim" => Ok(TransportKind::InProc),
+            "tcp" => Ok(TransportKind::Tcp),
+            _ => Err(Error::Config(format!(
+                "unknown transport {s:?} (expected \"inproc\" or \"tcp\")"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Full pSCOPE run configuration (Algorithm 1 parameters + engineering).
 #[derive(Clone, Debug)]
 pub struct PscopeConfig {
@@ -100,6 +134,10 @@ pub struct PscopeConfig {
     /// (0 = auto: available cores / p). The blocked reduction is
     /// bit-identical at every thread count, so this is purely a speed knob.
     pub grad_threads: usize,
+    /// Which wire the coordinator runs on. `InProc` and `Tcp` (loopback)
+    /// produce bit-identical trajectories and byte-meter totals for the
+    /// same seed/config/partition.
+    pub transport: TransportKind,
 }
 
 impl Default for PscopeConfig {
@@ -118,6 +156,7 @@ impl Default for PscopeConfig {
             target_objective: f64::NEG_INFINITY,
             record_every: 1,
             grad_threads: 1,
+            transport: TransportKind::InProc,
         }
     }
 }
@@ -170,6 +209,7 @@ impl PscopeConfig {
                 "tol" => self.tol = v.as_f64_or()?,
                 "record_every" => self.record_every = v.as_usize_or()?.max(1),
                 "grad_threads" => self.grad_threads = v.as_usize_or()?,
+                "transport" => self.transport = TransportKind::parse(v.as_str_or()?)?,
                 other => {
                     return Err(Error::Config(format!("unknown config key {other:?}")));
                 }
@@ -227,5 +267,17 @@ mod tests {
     fn model_parse() {
         assert_eq!(Model::parse("lr").unwrap(), Model::Logistic);
         assert!(Model::parse("svm").is_err());
+    }
+
+    #[test]
+    fn transport_parse_and_toml() {
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::InProc);
+        let err = TransportKind::parse("carrier-pigeon").unwrap_err();
+        assert!(format!("{err}").contains("unknown transport"), "{err}");
+        let mut c = PscopeConfig::default();
+        c.apply_toml("transport = \"tcp\"\n").unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
+        assert!(c.apply_toml("transport = \"udp\"\n").is_err());
     }
 }

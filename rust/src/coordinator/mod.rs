@@ -1,7 +1,7 @@
 //! The CALL coordinator — Algorithm 1 of the paper.
 //!
-//! One master thread and `p` worker threads, wired with byte-metered
-//! channels ([`crate::net`]). Per outer iteration the master
+//! One master and `p` workers, wired through a pluggable transport
+//! ([`crate::net::transport`]). Per outer iteration the master
 //!
 //! 1. broadcasts `w_t`,
 //! 2. reduces the shard gradient sums into `z = (1/n) Σᵢ ∇fᵢ(w_t)`,
@@ -12,48 +12,63 @@
 //! its own shard (no communication inside the epoch — the framework's
 //! communication cost is `O(1)` rounds / `O(p·d)` bytes per epoch).
 //!
+//! The protocol code is transport-generic: [`run_master`] drives any
+//! [`MasterTransport`] and [`worker::run_worker`] any
+//! [`crate::net::transport::WorkerTransport`], so the identical loops run
+//! over in-process metered channels ([`train_with`]: workers are OS
+//! threads in this process — the simulated cluster) and over real TCP
+//! ([`remote`]: workers are separate processes speaking the
+//! [`crate::net::frame`] binary codec). For the same seed/config/partition
+//! the two modes produce bit-identical iterates and byte-meter totals
+//! (`tests/net_accounting.rs`).
+//!
 //! The master additionally records a [`Trace`] point per epoch: objective
 //! (evaluated off the clock), compute wall time, modeled network time from
-//! the byte meter, and lazy-engine counters. Early stopping triggers when
-//! the objective gap vs a known reference optimum crosses `cfg.tol`.
+//! the byte meter, measured transport-blocked time, and lazy-engine
+//! counters. Early stopping triggers when the objective gap vs a known
+//! reference optimum crosses `cfg.tol`.
 //!
 //! ## Failure model
 //!
 //! The reduce loops must never hang, whatever a worker does:
 //!
-//! * every worker thread carries a drop guard that emits a
+//! * every in-process worker thread carries a drop guard that emits a
 //!   [`protocol::ToMaster::WorkerDown`] sentinel on any non-clean exit —
 //!   including a panic mid-unwind — so the master's `recv` loops fail fast
 //!   with [`Error::Protocol`] instead of waiting for a message that will
-//!   never arrive;
+//!   never arrive; over TCP, a dropped connection synthesizes the *same*
+//!   sentinel (and a crashing worker process sends it best-effort before
+//!   dying), so both wires share one failure path;
 //! * [`protocol::ToWorker::Stop`] is a clean shutdown at *every* worker
-//!   receive point (epoch start or mid-epoch), so an aborting master can
-//!   always drain its workers;
-//! * channel senders are dropped deterministically (master clone before the
-//!   loop, worker channels right after `Stop`), and every join handle is
-//!   reaped explicitly — a panicking worker surfaces as `Err`, never as a
-//!   propagated panic or a deadlocked join;
+//!   receive point (epoch start or mid-epoch), as is a vanished master, so
+//!   an aborting master can always drain its workers;
+//! * transports tear down deterministically (senders dropped / sockets
+//!   shut down, internal threads joined within a bounded interval), and
+//!   every join handle is reaped explicitly — a panicking worker surfaces
+//!   as `Err`, never as a propagated panic;
 //! * degenerate configurations (zero workers, empty shards) are rejected
 //!   before any thread spawns.
 
 pub mod protocol;
+pub mod remote;
 pub mod worker;
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::config::{PscopeConfig, WorkerBackend};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::{scale, zero};
 use crate::loss::Objective;
-use crate::metrics::{ThreadCpuTimer, Timer, Trace, TracePoint};
-use crate::net::{sim_channel, ByteMeter, NetModel, SimSender};
+use crate::metrics::{Timer, Trace, TracePoint};
+use crate::net::transport::{in_proc_pair, MasterTransport};
+use crate::net::{ByteMeter, NetModel, SimSender};
 use crate::partition::Partition;
 use crate::rng::Rng;
 use crate::runtime::Manifest;
 
-use protocol::{ToMaster, ToWorker};
-use worker::Worker;
+use protocol::ToMaster;
+use worker::{run_worker, Worker};
 
 /// Result of a [`train`] run.
 #[derive(Clone, Debug)]
@@ -71,18 +86,20 @@ pub struct TrainOutput {
 }
 
 /// Train with the default artifact directory resolution (only touched when
-/// `cfg.backend == Xla`).
-pub fn train(ds: &Dataset, part: &Partition, cfg: &PscopeConfig) -> TrainOutput {
+/// `cfg.backend == Xla`). A dead worker surfaces as `Err(..)`, never an
+/// abort.
+pub fn train(ds: &Dataset, part: &Partition, cfg: &PscopeConfig) -> Result<TrainOutput> {
     let dir = match cfg.backend {
         WorkerBackend::Xla => Some(PathBuf::from("artifacts")),
         _ => None,
     };
-    train_with(ds, part, cfg, dir, NetModel::ten_gbe()).expect("training failed")
+    train_with(ds, part, cfg, dir, NetModel::ten_gbe())
 }
 
-/// Drop guard held by every worker thread: if the thread exits without
-/// disarming (i.e. it returned an error or is unwinding from a panic), the
-/// guard notifies the master so its reduce loop cannot deadlock.
+/// Drop guard held by every in-process worker thread: if the thread exits
+/// without disarming (i.e. it returned an error or is unwinding from a
+/// panic), the guard notifies the master so its reduce loop cannot
+/// deadlock.
 struct DownGuard {
     tx: SimSender<ToMaster>,
     worker: usize,
@@ -102,14 +119,16 @@ impl Drop for DownGuard {
     }
 }
 
-/// Full-control entry point.
-pub fn train_with(
+/// Validate `(ds, part, cfg)` and resolve the run's auto parameters:
+/// `(m_inner, eta, grad_threads)`. Shared by [`train_with`] and the
+/// TCP job spec ([`remote::RunSpec::derive`]) so both wires resolve the
+/// exact same scalars — the parity guarantee starts here.
+pub(crate) fn resolve_run(
     ds: &Dataset,
     part: &Partition,
     cfg: &PscopeConfig,
-    artifact_dir: Option<PathBuf>,
-    net: NetModel,
-) -> Result<TrainOutput> {
+    artifact_dir: Option<&Path>,
+) -> Result<(usize, f64, usize)> {
     let p = part.p();
     if p == 0 {
         return Err(Error::Config("partition has zero workers".into()));
@@ -135,15 +154,12 @@ pub fn train_with(
         // up to the step of the artifact the workers will actually pick
         // (largest shard decides — all shards of a partition use the same
         // (n_pad, d_pad) class in practice)
-        if let Some(dir) = &artifact_dir {
+        if let Some(dir) = artifact_dir {
             let manifest = Manifest::load(dir.join("manifest.json"))?;
             let max_shard = part.assignment.iter().map(|a| a.len()).max().unwrap_or(0);
-            if let Some((_, _, step, _)) = worker::select_epoch_artifact(
-                &manifest,
-                loss.name(),
-                max_shard,
-                d,
-            ) {
+            if let Some((_, _, step, _)) =
+                worker::select_epoch_artifact(&manifest, loss.name(), max_shard, d)
+            {
                 let step = step.max(1);
                 m_inner = m_inner.div_ceil(step) * step;
             }
@@ -160,24 +176,39 @@ pub fn train_with(
     } else {
         cfg.grad_threads
     };
+    Ok((m_inner, eta, grad_threads))
+}
 
-    let meter = ByteMeter::new();
-    let root_rng = Rng::new(cfg.seed);
+/// Outcome of the transport-generic master loop (no meter snapshot — the
+/// caller owns the [`ByteMeter`] and takes the final total after its
+/// transport has shut down).
+#[derive(Debug)]
+pub struct MasterRun {
+    /// Final iterate.
+    pub w: Vec<f64>,
+    /// Per-epoch trace.
+    pub trace: Trace,
+    /// Total lazy-engine materializations reported by workers.
+    pub materializations: u64,
+    /// Epochs actually executed.
+    pub epochs_run: usize,
+}
 
-    // build channels: one per worker for master->worker, one shared for
-    // worker->master. The worker->master bound (4p) exceeds the worst-case
-    // number of in-flight messages (≤ 2 data messages + 1 WorkerDown per
-    // worker), so no send can ever block against an aborting master.
-    let (to_master_tx, to_master_rx) = sim_channel::<ToMaster>(meter.clone(), 4 * p);
-    let mut to_worker_tx: Vec<SimSender<ToWorker>> = Vec::with_capacity(p);
-    let mut to_worker_rx = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = sim_channel::<ToWorker>(meter.clone(), 4);
-        to_worker_tx.push(tx);
-        to_worker_rx.push(rx);
-    }
-
-    let mut trace = Trace::new("pscope", &ds.name);
+/// The master loop of Algorithm 1 (lines 2–8), generic over the wire.
+///
+/// Reduces are buffered per worker and folded in ascending worker order,
+/// so the f64 sums are deterministic regardless of message arrival order —
+/// this is what makes `InProc` and `Tcp` trajectories bit-identical.
+pub fn run_master<T: MasterTransport>(
+    transport: &mut T,
+    obj: &Objective<'_>,
+    d: usize,
+    cfg: &PscopeConfig,
+    net: NetModel,
+    dataset_name: &str,
+) -> Result<MasterRun> {
+    let p = transport.p();
+    let mut trace = Trace::new("pscope", dataset_name);
     let mut w = vec![0.0; d];
     let mut materializations = 0u64;
     let mut epochs_run = 0usize;
@@ -187,70 +218,180 @@ pub fn train_with(
         wall_s: 0.0,
         sim_wall_s: 0.0,
         net_s: 0.0,
+        net_io_s: 0.0,
         objective: obj.value(&w),
         comm_bytes: 0,
         comm_msgs: 0,
     });
 
+    let mut wall_s = 0.0f64;
+    let mut sim_wall_s = 0.0f64;
+    let mut z = vec![0.0; d];
+    let mut u_mean = vec![0.0; d];
+    for t_epoch in 0..cfg.outer_iters {
+        let timer = Timer::start();
+        for k in 0..p {
+            transport.send(k, protocol::ToWorker::Broadcast { epoch: t_epoch, w: w.clone() })?;
+        }
+        // reduce shard gradients — buffered per worker and reduced in
+        // worker order so the f64 sum is deterministic regardless of
+        // message arrival order
+        let mut zsums: Vec<Option<(Vec<f64>, usize)>> = vec![None; p];
+        let mut seen = 0usize;
+        while seen < p {
+            match transport.recv()? {
+                ToMaster::ShardGrad { worker, epoch, zsum, count } if epoch == t_epoch => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    if zsums[worker].is_some() {
+                        return Err(duplicate_sender(worker, t_epoch));
+                    }
+                    zsums[worker] = Some((zsum, count));
+                    seen += 1;
+                }
+                ToMaster::WorkerDown { worker } => {
+                    return Err(Error::Protocol(format!(
+                        "worker {worker} died during epoch {t_epoch} \
+                         (panic, backend failure, or lost connection)"
+                    )))
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "master: expected ShardGrad({t_epoch}), got {other:?}"
+                    )))
+                }
+            }
+        }
+        zero(&mut z);
+        let mut total_count = 0usize;
+        for slot in zsums.iter().flatten() {
+            crate::linalg::axpy(1.0, &slot.0, &mut z);
+            total_count += slot.1;
+        }
+        scale(&mut z, 1.0 / total_count as f64);
+        for k in 0..p {
+            transport.send(k, protocol::ToWorker::FullGrad { epoch: t_epoch, z: z.clone() })?;
+        }
+        // collect local iterates (same deterministic-order reduce)
+        let mut us: Vec<Option<Vec<f64>>> = vec![None; p];
+        let mut seen = 0usize;
+        let mut max_worker_s = 0.0f64;
+        while seen < p {
+            match transport.recv()? {
+                ToMaster::LocalIterate { worker, epoch, u, materializations: mat, compute_s }
+                    if epoch == t_epoch =>
+                {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    if us[worker].is_some() {
+                        return Err(duplicate_sender(worker, t_epoch));
+                    }
+                    us[worker] = Some(u);
+                    materializations += mat;
+                    max_worker_s = max_worker_s.max(compute_s);
+                    seen += 1;
+                }
+                ToMaster::WorkerDown { worker } => {
+                    return Err(Error::Protocol(format!(
+                        "worker {worker} died during epoch {t_epoch} \
+                         (panic, backend failure, or lost connection)"
+                    )))
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "master: expected LocalIterate({t_epoch}), got {other:?}"
+                    )))
+                }
+            }
+        }
+        let t_master = Timer::start();
+        zero(&mut u_mean);
+        for u in us.iter().flatten() {
+            crate::linalg::axpy(1.0, u, &mut u_mean);
+        }
+        scale(&mut u_mean, 1.0 / p as f64);
+        w.copy_from_slice(&u_mean);
+        let epoch_wall = timer.elapsed_s();
+        wall_s += epoch_wall;
+        // cluster-equivalent epoch time: slowest worker + master reduction
+        // work (in-process workers time-share one box, so the measured
+        // epoch_wall is ~sum over workers, not max)
+        sim_wall_s += max_worker_s + t_master.elapsed_s();
+        epochs_run = t_epoch + 1;
+
+        // telemetry (off the clock)
+        if t_epoch % cfg.record_every == 0 || t_epoch + 1 == cfg.outer_iters {
+            let (bytes, msgs) = transport.comm();
+            let objective = obj.value(&w);
+            trace.push(TracePoint {
+                epoch: t_epoch + 1,
+                wall_s,
+                sim_wall_s,
+                net_s: net.wire_time(bytes, msgs),
+                net_io_s: transport.io_seconds(),
+                objective,
+                comm_bytes: bytes,
+                comm_msgs: msgs,
+            });
+            if cfg.target_objective.is_finite() && objective - cfg.target_objective <= cfg.tol {
+                break;
+            }
+        }
+    }
+    Ok(MasterRun { w, trace, materializations, epochs_run })
+}
+
+/// Reject an out-of-range sender id before it is used as a reduce-buffer
+/// index. Impossible over the in-process wire; a corrupt/malicious TCP
+/// peer could otherwise panic the index.
+fn check_worker_in_range(worker: usize, p: usize, epoch: usize) -> Result<()> {
+    if worker >= p {
+        return Err(Error::Protocol(format!(
+            "epoch {epoch}: message from out-of-range worker {worker} (p={p})"
+        )));
+    }
+    Ok(())
+}
+
+/// A second message from the same worker inside one reduce would skew the
+/// deterministic fold (also only reachable from a corrupt TCP peer).
+fn duplicate_sender(worker: usize, epoch: usize) -> Error {
+    Error::Protocol(format!("epoch {epoch}: duplicate message from worker {worker}"))
+}
+
+/// Full-control entry point over the in-process transport (the simulated
+/// cluster: `p` worker threads in this process, byte-metered channels).
+pub fn train_with(
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    artifact_dir: Option<PathBuf>,
+    net: NetModel,
+) -> Result<TrainOutput> {
+    let p = part.p();
+    let (m_inner, eta, grad_threads) = resolve_run(ds, part, cfg, artifact_dir.as_deref())?;
+    let d = ds.d();
+    let loss = cfg.model.loss();
+    let obj = Objective::new(ds, loss, cfg.reg);
+
+    let meter = ByteMeter::new();
+    let root_rng = Rng::new(cfg.seed);
+    let (mut master_t, worker_ts) = in_proc_pair(p, meter.clone());
+
+    let mut run: Option<MasterRun> = None;
     let scope_result: Result<()> = std::thread::scope(|scope| {
         // ---- spawn workers (Algorithm 1, lines 9–20) ----
         let mut handles = Vec::with_capacity(p);
-        for (k, rx) in to_worker_rx.into_iter().enumerate() {
+        for (k, mut wt) in worker_ts.into_iter().enumerate() {
             let shard = ds.select(&part.assignment[k]);
-            let tx = to_master_tx.clone();
             let rng = root_rng.fork(k as u64 + 1);
             let rt = artifact_dir.clone();
             let reg = cfg.reg;
             let backend = cfg.backend;
             handles.push(scope.spawn(move || -> Result<()> {
-                let mut guard = DownGuard { tx: tx.clone(), worker: k, armed: true };
-                let result = (|| -> Result<()> {
+                let mut guard = DownGuard { tx: wt.down_sender(), worker: k, armed: true };
+                let result = (|| {
                     let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt)
                         .with_grad_threads(grad_threads);
-                    loop {
-                        let (epoch, w_t) = match rx.recv() {
-                            // Stop (or a vanished master) is a clean
-                            // shutdown at any protocol point.
-                            Ok(ToWorker::Stop) | Err(_) => return Ok(()),
-                            Ok(ToWorker::Broadcast { epoch, w }) => (epoch, w),
-                            Ok(other) => {
-                                return Err(Error::Protocol(format!(
-                                    "worker {k}: expected Broadcast, got {other:?}"
-                                )))
-                            }
-                        };
-                        let t = ThreadCpuTimer::start();
-                        let zsum = wk.shard_grad(&w_t)?;
-                        let grad_s = t.elapsed_s();
-                        let count = wk.shard.n();
-                        let m = ToMaster::ShardGrad { worker: k, epoch, zsum, count };
-                        let bytes = m.wire_bytes();
-                        tx.send(m, bytes)
-                            .map_err(|_| Error::Protocol("master gone".into()))?;
-                        let z_buf = match rx.recv() {
-                            Ok(ToWorker::FullGrad { epoch: e2, z }) if e2 == epoch => z,
-                            // master aborted the epoch mid-flight
-                            Ok(ToWorker::Stop) | Err(_) => return Ok(()),
-                            Ok(other) => {
-                                return Err(Error::Protocol(format!(
-                                    "worker {k}: expected FullGrad({epoch}), got {other:?}"
-                                )))
-                            }
-                        };
-                        let t2 = ThreadCpuTimer::start();
-                        let before = wk.lazy_stats.materializations;
-                        let u = wk.inner_epoch(&w_t, &z_buf, eta, m_inner)?;
-                        let msg = ToMaster::LocalIterate {
-                            worker: k,
-                            epoch,
-                            u,
-                            compute_s: grad_s + t2.elapsed_s(),
-                            materializations: wk.lazy_stats.materializations - before,
-                        };
-                        let bytes = msg.wire_bytes();
-                        tx.send(msg, bytes)
-                            .map_err(|_| Error::Protocol("master gone".into()))?;
-                    }
+                    run_worker(&mut wt, &mut wk, eta, m_inner)
                 })();
                 if result.is_ok() {
                     guard.armed = false;
@@ -258,152 +399,15 @@ pub fn train_with(
                 result
             }));
         }
-        // the master's clone must go away so worker-side disconnects are
-        // observable; workers hold the remaining sender clones
-        drop(to_master_tx);
 
-        // ---- master loop (Algorithm 1, lines 2–8) ----
-        let mut wall_s = 0.0f64;
-        let mut sim_wall_s = 0.0f64;
-        let mut z = vec![0.0; d];
-        let mut u_mean = vec![0.0; d];
-        let master_result: Result<()> = (|| {
-            for t_epoch in 0..cfg.outer_iters {
-                let timer = Timer::start();
-                for (k, tx) in to_worker_tx.iter().enumerate() {
-                    let msg = ToWorker::Broadcast { epoch: t_epoch, w: w.clone() };
-                    let bytes = msg.wire_bytes();
-                    tx.send(msg, bytes).map_err(|_| {
-                        Error::Protocol(format!("worker {k} died before Broadcast"))
-                    })?;
-                }
-                // reduce shard gradients — buffered per worker and reduced
-                // in worker order so the f64 sum is deterministic regardless
-                // of message arrival order
-                let mut zsums: Vec<Option<(Vec<f64>, usize)>> = vec![None; p];
-                let mut seen = 0usize;
-                while seen < p {
-                    match to_master_rx.recv() {
-                        Ok(ToMaster::ShardGrad { worker, epoch, zsum, count })
-                            if epoch == t_epoch =>
-                        {
-                            zsums[worker] = Some((zsum, count));
-                            seen += 1;
-                        }
-                        Ok(ToMaster::WorkerDown { worker }) => {
-                            return Err(Error::Protocol(format!(
-                                "worker {worker} died during epoch {t_epoch} \
-                                 (panic or backend failure)"
-                            )))
-                        }
-                        Ok(other) => {
-                            return Err(Error::Protocol(format!(
-                                "master: expected ShardGrad({t_epoch}), got {other:?}"
-                            )))
-                        }
-                        Err(_) => {
-                            return Err(Error::Protocol(
-                                "all workers disconnected mid-reduce".into(),
-                            ))
-                        }
-                    }
-                }
-                zero(&mut z);
-                let mut total_count = 0usize;
-                for slot in zsums.iter().flatten() {
-                    crate::linalg::axpy(1.0, &slot.0, &mut z);
-                    total_count += slot.1;
-                }
-                scale(&mut z, 1.0 / total_count as f64);
-                for tx in &to_worker_tx {
-                    let msg = ToWorker::FullGrad { epoch: t_epoch, z: z.clone() };
-                    let bytes = msg.wire_bytes();
-                    tx.send(msg, bytes)
-                        .map_err(|_| Error::Protocol("worker died before FullGrad".into()))?;
-                }
-                // collect local iterates (same deterministic-order reduce)
-                let mut us: Vec<Option<Vec<f64>>> = vec![None; p];
-                let mut seen = 0usize;
-                let mut max_worker_s = 0.0f64;
-                while seen < p {
-                    match to_master_rx.recv() {
-                        Ok(ToMaster::LocalIterate {
-                            worker,
-                            epoch,
-                            u,
-                            materializations: mat,
-                            compute_s,
-                        }) if epoch == t_epoch => {
-                            us[worker] = Some(u);
-                            materializations += mat;
-                            max_worker_s = max_worker_s.max(compute_s);
-                            seen += 1;
-                        }
-                        Ok(ToMaster::WorkerDown { worker }) => {
-                            return Err(Error::Protocol(format!(
-                                "worker {worker} died during epoch {t_epoch} \
-                                 (panic or backend failure)"
-                            )))
-                        }
-                        Ok(other) => {
-                            return Err(Error::Protocol(format!(
-                                "master: expected LocalIterate({t_epoch}), got {other:?}"
-                            )))
-                        }
-                        Err(_) => {
-                            return Err(Error::Protocol(
-                                "all workers disconnected mid-reduce".into(),
-                            ))
-                        }
-                    }
-                }
-                let t_master = Timer::start();
-                zero(&mut u_mean);
-                for u in us.iter().flatten() {
-                    crate::linalg::axpy(1.0, u, &mut u_mean);
-                }
-                scale(&mut u_mean, 1.0 / p as f64);
-                w.copy_from_slice(&u_mean);
-                let epoch_wall = timer.elapsed_s();
-                wall_s += epoch_wall;
-                // cluster-equivalent epoch time: slowest worker + master
-                // reduction work (workers time-share this 1-core box, so the
-                // measured epoch_wall is ~sum over workers, not max)
-                sim_wall_s += max_worker_s + t_master.elapsed_s();
-                epochs_run = t_epoch + 1;
-
-                // telemetry (off the clock)
-                if t_epoch % cfg.record_every == 0 || t_epoch + 1 == cfg.outer_iters {
-                    let (bytes, msgs) = meter.snapshot();
-                    let objective = obj.value(&w);
-                    trace.push(TracePoint {
-                        epoch: t_epoch + 1,
-                        wall_s,
-                        sim_wall_s,
-                        net_s: net.wire_time(bytes, msgs),
-                        objective,
-                        comm_bytes: bytes,
-                        comm_msgs: msgs,
-                    });
-                    if cfg.target_objective.is_finite()
-                        && objective - cfg.target_objective <= cfg.tol
-                    {
-                        break;
-                    }
-                }
-            }
-            Ok(())
-        })();
+        // ---- master loop ----
+        let master_result = run_master(&mut master_t, &obj, d, cfg, net, &ds.name);
 
         // ---- deterministic shutdown ----
-        // One Stop per worker (workers treat it as clean shutdown at any
-        // receive point), then drop the senders so even a worker that
-        // missed the Stop observes a closed channel. Send failures mean
-        // the worker is already gone — its join below tells us why.
-        for tx in &to_worker_tx {
-            let _ = tx.send(ToWorker::Stop, ToWorker::Stop.wire_bytes());
-        }
-        drop(to_worker_tx);
+        // Stop every worker (clean shutdown at any receive point) and drop
+        // the senders so even a worker that missed the Stop observes a
+        // closed channel.
+        master_t.shutdown();
 
         // Reap every worker explicitly: a panic becomes Err, never a
         // propagated unwind out of the scope.
@@ -418,29 +422,30 @@ pub fn train_with(
                 }
                 Err(_) => {
                     if worker_err.is_none() {
-                        worker_err = Some(Error::Protocol(format!(
-                            "worker {k} panicked mid-epoch"
-                        )));
+                        worker_err =
+                            Some(Error::Protocol(format!("worker {k} panicked mid-epoch")));
                     }
                 }
             }
         }
         // A worker failure is the root cause; the master error it induced
         // ("worker died during epoch ...") is secondary.
-        match worker_err {
-            Some(e) => Err(e),
-            None => master_result,
+        if let Some(e) = worker_err {
+            return Err(e);
         }
+        run = Some(master_result?);
+        Ok(())
     });
     scope_result?;
 
+    let r = run.expect("master run present on success");
     let comm = meter.snapshot();
     Ok(TrainOutput {
-        w,
-        trace,
+        w: r.w,
+        trace: r.trace,
         comm,
-        materializations,
-        epochs_run,
+        materializations: r.materializations,
+        epochs_run: r.epochs_run,
     })
 }
 
@@ -610,5 +615,15 @@ mod tests {
         let part = Partition { assignment: Vec::new(), tag: "none".into() };
         let cfg = PscopeConfig::for_dataset("tiny", Model::Logistic);
         assert!(train_with(&ds, &part, &cfg, None, NetModel::zero()).is_err());
+    }
+
+    #[test]
+    fn train_returns_result_not_abort() {
+        // the convenience entry point must propagate worker death, not
+        // panic — an empty partition is the cheapest guaranteed error
+        let ds = synth::tiny(110).generate();
+        let part = Partition { assignment: Vec::new(), tag: "none".into() };
+        let cfg = PscopeConfig::for_dataset("tiny", Model::Logistic);
+        assert!(train(&ds, &part, &cfg).is_err());
     }
 }

@@ -11,8 +11,12 @@
 //!
 //! i.e. `O(1)` rounds and `O(p·d)` bytes per epoch — the communication
 //! claim the benches verify against the minibatch baselines' `O(n/b)`
-//! rounds. Sizes are charged through [`crate::net::SimSender`]; the
-//! constants below define the accounting.
+//! rounds. The constants below define the accounting; both wires charge
+//! it identically: the in-process transport meters `wire_bytes()` per
+//! message through [`crate::net::SimSender`], and the TCP transport's
+//! binary frames ([`crate::net::frame`]) encode each message in *exactly*
+//! `wire_bytes()` bytes, so the meter fed by real traffic reports the
+//! same totals (`tests/net_accounting.rs` pins the identity).
 
 /// Fixed per-message header charge (type tag + epoch + worker id + len).
 pub const MSG_HEADER_BYTES: u64 = 24;

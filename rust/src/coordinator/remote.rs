@@ -1,0 +1,645 @@
+//! Multi-process TCP clusters: the job-spec handshake, the worker client
+//! (`pscope worker`), the master endpoint (`pscope master`), and the
+//! one-command loopback self-host (`pscope train --transport tcp`).
+//!
+//! ## Job distribution
+//!
+//! Shards never travel over the wire. The master ships every worker a
+//! [`RunSpec`] — dataset name + generation seed, partition strategy +
+//! seed, and the *resolved* run scalars (`m_inner`, `eta`, the exact
+//! f64 bits of the regularization) — inside the unmetered `Setup` control
+//! frame; the worker deterministically regenerates the dataset, replays
+//! the partition split, and selects its own shard. Because generation and
+//! splitting are seed-exact, worker `k`'s shard is bit-identical to the
+//! `ds.select(&part.assignment[k])` an in-process worker would get, which
+//! is what makes the TCP trajectory equal to the in-process one.
+//!
+//! A dataset loaded from `data/<name>.libsvm` must be readable on every
+//! node (same working directory on one box, or a shared filesystem);
+//! synthetic presets need nothing. The spec carries the master's
+//! `(n, d, nnz)` fingerprint and every worker validates its
+//! reconstruction against it, so a node that resolves the name
+//! differently (missing file → same-named preset) fails loudly instead
+//! of training on divergent data.
+//!
+//! ## Handshake
+//!
+//! ```text
+//! worker ── connect ──────────────> master   (accept order assigns ids)
+//! master ── Setup{k, RunSpec} ────> worker   (unmetered control frame)
+//! worker ── builds shard, Ready{k} > master  (unmetered control frame)
+//! master ── Broadcast(w_0) ───────> worker   (metered; Algorithm 1 starts)
+//! ```
+//!
+//! ## Failure semantics
+//!
+//! Identical to the in-process coordinator: a dying worker process sends
+//! `WorkerDown` best-effort before exiting, and a dropped connection
+//! synthesizes the same sentinel master-side, so a killed worker surfaces
+//! as `Error::Protocol` at the master within the transport's poll
+//! interval — never a hung reduce loop. All accepts, handshakes, joins
+//! and child reaps are bounded by the caller's timeout.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::config::{Model, PscopeConfig, WorkerBackend};
+use crate::coordinator::worker::{run_worker, Worker};
+use crate::coordinator::{resolve_run, run_master, TrainOutput};
+use crate::data::{self, Dataset};
+use crate::error::{Error, Result};
+use crate::loss::{Objective, Reg};
+use crate::net::frame::{self, FrameRead};
+use crate::net::transport::{MasterTransport, TcpMaster, TcpWorker};
+use crate::net::{ByteMeter, NetModel};
+use crate::partition::{Partition, Partitioner};
+use crate::rng::Rng;
+
+/// Spec version stamped into every `Setup` payload; bumped on layout
+/// changes so mismatched binaries fail with a clear error instead of
+/// garbage decoding.
+const SPEC_VERSION: u64 = 1;
+
+/// Everything a worker process needs to reconstruct its side of a run.
+///
+/// Carries *resolved* scalars (not auto-placeholders): `m_inner`, `eta`
+/// and `grad_threads` are fixed master-side by
+/// [`resolve_run`](crate::coordinator) and shipped as exact bits, so both
+/// wires run the identical algorithm.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Dataset preset name (or `data/<name>.libsvm` stem).
+    pub dataset: String,
+    /// Dataset generation seed.
+    pub data_seed: u64,
+    /// Partition strategy name (see [`Partitioner::parse`]).
+    pub partition: String,
+    /// Partition split seed.
+    pub part_seed: u64,
+    /// Dataset fingerprint `(n, d, nnz)` of the master's copy. Workers
+    /// validate their reconstruction against it, so a node that silently
+    /// resolves `dataset` differently (e.g. the master loaded
+    /// `data/<name>.libsvm` but the worker lacks the file and would fall
+    /// back to the same-named synthetic preset) fails loudly instead of
+    /// training on divergent data.
+    pub fingerprint: (u64, u64, u64),
+    /// Worker count (the worker validates its assigned id against it).
+    pub p: usize,
+    /// Model flavor.
+    pub model: Model,
+    /// Regularization (exact f64 bits on the wire).
+    pub reg: Reg,
+    /// Worker compute backend.
+    pub backend: WorkerBackend,
+    /// Master RNG seed (worker `k` forks stream `k + 1`).
+    pub seed: u64,
+    /// Resolved learning rate η.
+    pub eta: f64,
+    /// Resolved inner steps per epoch `M`.
+    pub m_inner: usize,
+    /// Resolved threads for the shard-gradient pass.
+    pub grad_threads: usize,
+    /// Artifact directory for the Xla backend (must exist on the worker's
+    /// filesystem), if any.
+    pub artifact_dir: Option<String>,
+}
+
+impl RunSpec {
+    /// Build the spec for `(ds, part, cfg)`, resolving the auto parameters
+    /// exactly like the in-process coordinator does. `dataset`/`data_seed`
+    /// and `partition`/`part_seed` must be the inputs `ds` and `part` were
+    /// actually built from — workers regenerate both from these names.
+    pub fn derive(
+        ds: &Dataset,
+        part: &Partition,
+        cfg: &PscopeConfig,
+        dataset: &str,
+        data_seed: u64,
+        partition: &str,
+        part_seed: u64,
+        artifact_dir: Option<&str>,
+    ) -> Result<RunSpec> {
+        // fail fast on a partition name the workers will not be able to
+        // replay (the split they perform must equal `part`)
+        Partitioner::parse(partition)?;
+        let (m_inner, eta, grad_threads) =
+            resolve_run(ds, part, cfg, artifact_dir.map(std::path::Path::new))?;
+        Ok(RunSpec {
+            dataset: dataset.to_string(),
+            data_seed,
+            partition: partition.to_string(),
+            part_seed,
+            fingerprint: (ds.n() as u64, ds.d() as u64, ds.nnz() as u64),
+            p: part.p(),
+            model: cfg.model,
+            reg: cfg.reg,
+            backend: cfg.backend,
+            seed: cfg.seed,
+            eta,
+            m_inner,
+            grad_threads,
+            artifact_dir: artifact_dir.map(str::to_string),
+        })
+    }
+
+    /// Binary encoding for the `Setup` frame payload (little-endian;
+    /// floats as raw bits, strings as `u16` length + UTF-8 bytes).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(96 + self.dataset.len() + self.partition.len());
+        for v in [
+            SPEC_VERSION,
+            self.data_seed,
+            self.part_seed,
+            self.fingerprint.0,
+            self.fingerprint.1,
+            self.fingerprint.2,
+            self.p as u64,
+            self.seed,
+            self.eta.to_bits(),
+            self.reg.lam1.to_bits(),
+            self.reg.lam2.to_bits(),
+            self.m_inner as u64,
+            self.grad_threads as u64,
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.push(match self.model {
+            Model::Logistic => 0,
+            Model::Lasso => 1,
+        });
+        b.push(match self.backend {
+            WorkerBackend::RustSparse => 0,
+            WorkerBackend::RustDense => 1,
+            WorkerBackend::Xla => 2,
+        });
+        push_str(&mut b, &self.dataset);
+        push_str(&mut b, &self.partition);
+        push_str(&mut b, self.artifact_dir.as_deref().unwrap_or(""));
+        b
+    }
+
+    /// Decode a `Setup` frame payload.
+    pub fn decode(payload: &[u8]) -> Result<RunSpec> {
+        let mut c = Cursor { b: payload, off: 0 };
+        let version = c.u64()?;
+        if version != SPEC_VERSION {
+            return Err(Error::Protocol(format!(
+                "job spec version {version} != {SPEC_VERSION} (mismatched pscope binaries?)"
+            )));
+        }
+        let data_seed = c.u64()?;
+        let part_seed = c.u64()?;
+        let fingerprint = (c.u64()?, c.u64()?, c.u64()?);
+        let p = c.usize()?;
+        let seed = c.u64()?;
+        let eta = f64::from_bits(c.u64()?);
+        let lam1 = f64::from_bits(c.u64()?);
+        let lam2 = f64::from_bits(c.u64()?);
+        let m_inner = c.usize()?;
+        let grad_threads = c.usize()?;
+        let model = match c.u8()? {
+            0 => Model::Logistic,
+            1 => Model::Lasso,
+            t => return Err(Error::Protocol(format!("bad model tag {t}"))),
+        };
+        let backend = match c.u8()? {
+            0 => WorkerBackend::RustSparse,
+            1 => WorkerBackend::RustDense,
+            2 => WorkerBackend::Xla,
+            t => return Err(Error::Protocol(format!("bad backend tag {t}"))),
+        };
+        let dataset = c.str()?;
+        let partition = c.str()?;
+        let artifact_dir = c.str()?;
+        c.done()?;
+        Ok(RunSpec {
+            dataset,
+            data_seed,
+            partition,
+            part_seed,
+            fingerprint,
+            p,
+            model,
+            reg: Reg { lam1, lam2 },
+            backend,
+            seed,
+            eta,
+            m_inner,
+            grad_threads,
+            artifact_dir: if artifact_dir.is_empty() { None } else { Some(artifact_dir) },
+        })
+    }
+}
+
+fn push_str(b: &mut Vec<u8>, s: &str) {
+    let len = u16::try_from(s.len()).expect("spec string exceeds u16 length");
+    b.extend_from_slice(&len.to_le_bytes());
+    b.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a spec payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.off + n > self.b.len() {
+            return Err(Error::Protocol("truncated job spec".into()));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| Error::Protocol("spec field overflows usize".into()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| Error::Protocol("spec string is not UTF-8".into()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.off != self.b.len() {
+            return Err(Error::Protocol(format!(
+                "trailing bytes in job spec ({} of {})",
+                self.b.len() - self.off,
+                self.b.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Reconstruct worker `k`'s state from a spec: regenerate the dataset,
+/// replay the partition, select the shard, fork the RNG stream.
+pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
+    if k >= spec.p {
+        return Err(Error::Protocol(format!(
+            "assigned worker id {k} out of range (p={})",
+            spec.p
+        )));
+    }
+    let ds = data::load_or_synth(&spec.dataset, spec.data_seed)?;
+    let local = (ds.n() as u64, ds.d() as u64, ds.nnz() as u64);
+    if local != spec.fingerprint {
+        return Err(Error::Config(format!(
+            "dataset {:?} resolved differently on this node: local (n, d, nnz) = {local:?} \
+             vs master's {:?} — is a data/{}.libsvm file present on one side only?",
+            spec.dataset, spec.fingerprint, spec.dataset
+        )));
+    }
+    let part = Partitioner::parse(&spec.partition)?.split(&ds, spec.p, spec.part_seed);
+    let rows = &part.assignment[k];
+    if rows.is_empty() {
+        return Err(Error::Config(format!("worker {k} got an empty shard")));
+    }
+    let shard = ds.select(rows);
+    let rng = Rng::new(spec.seed).fork(k as u64 + 1);
+    Ok(Worker::new(
+        k,
+        shard,
+        spec.model.loss(),
+        spec.reg,
+        spec.backend,
+        rng,
+        spec.artifact_dir.clone().map(PathBuf::from),
+    )
+    .with_grad_threads(spec.grad_threads.max(1)))
+}
+
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Protocol(format!(
+                        "cannot connect to master at {addr} within {timeout:?}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// The `pscope worker` client: connect to a master, receive the job spec,
+/// build the local shard, ack `Ready`, and run the worker loop until
+/// `Stop` (or master disappearance, which is the same thing).
+///
+/// `timeout` bounds connecting and the handshake; the data plane then
+/// blocks on the master's pace (a vanished master reads as clean EOF →
+/// `Stop`). On error the master is notified best-effort (`WorkerDown`)
+/// before the error propagates — the process-level drop guard.
+pub fn serve_worker(addr: &str, timeout: Duration) -> Result<()> {
+    let mut stream = connect_with_retry(addr, timeout)?;
+    let _ = stream.set_nodelay(true);
+    // Short poll timeout + hard deadline: the handshake stays bounded
+    // even against a master that dribbles half a frame and stalls.
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let setup_deadline = Instant::now() + timeout;
+    let setup = loop {
+        match frame::read_frame_deadline(&mut stream, Some(setup_deadline))? {
+            FrameRead::Frame(f) => break f,
+            FrameRead::Eof => {
+                return Err(Error::Protocol(
+                    "master closed the connection before Setup (cluster already full?)".into(),
+                ))
+            }
+            FrameRead::TimedOut => {
+                if Instant::now() >= setup_deadline {
+                    return Err(Error::Protocol(format!(
+                        "no Setup from master within {timeout:?}"
+                    )));
+                }
+            }
+        }
+    };
+    let (tag, _epoch, worker, payload) = frame::parts(&setup)?;
+    if tag != frame::TAG_SETUP {
+        return Err(Error::Protocol(format!("expected Setup, got tag {tag}")));
+    }
+    let k = usize::try_from(worker)
+        .map_err(|_| Error::Protocol("worker id overflows usize".into()))?;
+    let spec = RunSpec::decode(payload)?;
+    let mut wk = build_worker(&spec, k)?;
+    frame::write_frame(&mut stream, &frame::encode_control(frame::TAG_READY, worker, &[]))?;
+    // Data plane: block on the master's pace (objective evaluation between
+    // epochs can take arbitrarily long; EOF covers master death).
+    stream.set_read_timeout(None)?;
+    let mut transport = TcpWorker::new(stream, k);
+    let result = run_worker(&mut transport, &mut wk, spec.eta, spec.m_inner);
+    if result.is_err() {
+        transport.send_down();
+    }
+    result
+}
+
+/// A bound master listener: split from the training call so callers can
+/// learn the ephemeral port (`--listen 127.0.0.1:0`) before any worker
+/// connects.
+pub struct MasterEndpoint {
+    listener: TcpListener,
+}
+
+impl MasterEndpoint {
+    /// Bind the listen address (e.g. `"127.0.0.1:0"` for an ephemeral
+    /// loopback port).
+    pub fn bind(addr: &str) -> Result<MasterEndpoint> {
+        Ok(MasterEndpoint { listener: TcpListener::bind(addr)? })
+    }
+
+    /// The actually-bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run Algorithm 1 as the master over TCP: accept `part.p()` workers,
+    /// ship them `spec`, drive [`run_master`], and tear the cluster down
+    /// (`Stop` broadcast, bounded joins) whatever the outcome.
+    ///
+    /// `spec` must describe the same `(ds, part, cfg)` — build it with
+    /// [`RunSpec::derive`] on the same inputs. `timeout` bounds the accept
+    /// + handshake phase and the shutdown teardown.
+    pub fn train(
+        &self,
+        ds: &Dataset,
+        part: &Partition,
+        cfg: &PscopeConfig,
+        net: NetModel,
+        spec: &RunSpec,
+        timeout: Duration,
+    ) -> Result<TrainOutput> {
+        let p = part.p();
+        // Same caller-thread validations as the in-process entry point —
+        // and a consistency check: the spec the workers will obey must
+        // resolve to exactly what this (ds, part, cfg) resolves to, or
+        // the cluster would run a different algorithm than the master
+        // believes it launched.
+        let (m_inner, eta, _grad_threads) = resolve_run(
+            ds,
+            part,
+            cfg,
+            spec.artifact_dir.as_deref().map(std::path::Path::new),
+        )?;
+        if spec.p != p || spec.m_inner != m_inner || spec.eta.to_bits() != eta.to_bits() {
+            return Err(Error::Config(format!(
+                "job spec disagrees with this run: spec (p={}, m={}, eta={:e}) vs resolved \
+                 (p={p}, m={m_inner}, eta={eta:e}) — build the spec with RunSpec::derive on \
+                 the same (ds, part, cfg)",
+                spec.p, spec.m_inner, spec.eta
+            )));
+        }
+        let d = ds.d();
+        let obj = Objective::new(ds, cfg.model.loss(), cfg.reg);
+        let meter = ByteMeter::new();
+        let mut transport =
+            TcpMaster::accept(&self.listener, p, meter.clone(), &spec.encode(), timeout)?;
+        let master_result = run_master(&mut transport, &obj, d, cfg, net, &ds.name);
+        transport.shutdown();
+        let r = master_result?;
+        let comm = meter.snapshot();
+        Ok(TrainOutput {
+            w: r.w,
+            trace: r.trace,
+            comm,
+            materializations: r.materializations,
+            epochs_run: r.epochs_run,
+        })
+    }
+}
+
+/// One-command loopback cluster: bind an ephemeral port, spawn `part.p()`
+/// `pscope worker` child processes against it (re-invoking the current
+/// executable), run the master, and reap every child within `timeout`.
+///
+/// Only meaningful from the `pscope` binary itself (the children are
+/// `current_exe() worker --connect ...`).
+pub fn self_host_train(
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    net: NetModel,
+    spec: &RunSpec,
+    timeout: Duration,
+) -> Result<TrainOutput> {
+    let ep = MasterEndpoint::bind("127.0.0.1:0")?;
+    let addr = ep.local_addr()?.to_string();
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(part.p());
+    for _ in 0..part.p() {
+        children.push(
+            Command::new(&exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--timeout")
+                .arg(timeout.as_secs().max(1).to_string())
+                .stdout(Stdio::null())
+                .spawn()?,
+        );
+    }
+    let result = ep.train(ds, part, cfg, net, spec, timeout);
+    let reaped = reap_children(children, timeout);
+    let out = result?;
+    reaped?;
+    Ok(out)
+}
+
+/// Wait for every child within `deadline`; kill stragglers. The first
+/// nonzero exit (or forced kill) becomes the returned error.
+fn reap_children(mut children: Vec<Child>, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    let mut first_err: Option<Error> = None;
+    for (i, child) in children.iter_mut().enumerate() {
+        loop {
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    if !status.success() && first_err.is_none() {
+                        first_err = Some(Error::Protocol(format!(
+                            "worker process {i} exited with {status}"
+                        )));
+                    }
+                    break;
+                }
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        if first_err.is_none() {
+                            first_err = Some(Error::Protocol(format!(
+                                "worker process {i} did not exit within {timeout:?}; killed"
+                            )));
+                        }
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.into());
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Model;
+    use crate::data::synth;
+    use crate::partition::Partitioner;
+
+    fn spec_fixture() -> RunSpec {
+        RunSpec {
+            dataset: "tiny".into(),
+            data_seed: 7,
+            partition: "uniform".into(),
+            part_seed: 3,
+            fingerprint: (200, 50, 1234),
+            p: 4,
+            model: Model::Lasso,
+            reg: Reg { lam1: f64::from_bits(0x3FF0_0000_0000_0001), lam2: 0.0 },
+            backend: WorkerBackend::RustDense,
+            seed: 42,
+            eta: 0.125,
+            m_inner: 5000,
+            grad_threads: 2,
+            artifact_dir: None,
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_exactly() {
+        let spec = spec_fixture();
+        let back = RunSpec::decode(&spec.encode()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.reg.lam1.to_bits(), spec.reg.lam1.to_bits());
+        let mut with_dir = spec;
+        with_dir.artifact_dir = Some("artifacts".into());
+        assert_eq!(RunSpec::decode(&with_dir.encode()).unwrap(), with_dir);
+    }
+
+    #[test]
+    fn spec_decode_rejects_garbage() {
+        assert!(RunSpec::decode(&[]).is_err());
+        let spec = spec_fixture();
+        let mut buf = spec.encode();
+        buf.truncate(buf.len() - 1);
+        assert!(RunSpec::decode(&buf).is_err(), "truncated spec accepted");
+        let mut vbad = spec.encode();
+        vbad[0] = 0xFF; // version
+        assert!(RunSpec::decode(&vbad).is_err());
+        let mut trailing = spec.encode();
+        trailing.push(0);
+        assert!(RunSpec::decode(&trailing).is_err(), "trailing bytes accepted");
+    }
+
+    #[test]
+    fn derive_resolves_like_the_coordinator() {
+        let ds = synth::tiny(9).generate();
+        let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        let part = Partitioner::Uniform.split(&ds, 2, 1);
+        let spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 9, "uniform", 1, None).unwrap();
+        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+        let (m, eta) = cfg.resolve(ds.n(), obj.smoothness());
+        assert_eq!(spec.m_inner, m);
+        assert_eq!(spec.eta.to_bits(), eta.to_bits());
+        assert_eq!(spec.p, 2);
+        // unknown partition names fail fast, before any socket exists
+        assert!(RunSpec::derive(&ds, &part, &cfg, "tiny", 9, "mystery", 1, None).is_err());
+    }
+
+    #[test]
+    fn build_worker_matches_master_side_shard() {
+        let ds = synth::tiny(11).generate();
+        let cfg = PscopeConfig { p: 3, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        let part = Partitioner::Uniform.split(&ds, 3, 5);
+        let spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 11, "uniform", 5, None).unwrap();
+        for k in 0..3 {
+            let wk = build_worker(&spec, k).unwrap();
+            let expect = ds.select(&part.assignment[k]);
+            assert_eq!(wk.shard.y, expect.y, "worker {k} labels");
+            assert_eq!(wk.shard.x.values, expect.x.values, "worker {k} values");
+            assert_eq!(wk.shard.x.indices, expect.x.indices, "worker {k} indices");
+        }
+        assert!(build_worker(&spec, 3).is_err(), "id out of range accepted");
+    }
+
+    #[test]
+    fn build_worker_rejects_divergent_dataset() {
+        let ds = synth::tiny(12).generate();
+        let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        let part = Partitioner::Uniform.split(&ds, 2, 1);
+        let mut spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 12, "uniform", 1, None).unwrap();
+        // a master whose copy differs by a single stored nonzero must be
+        // detected before any training happens on mismatched shards
+        spec.fingerprint.2 ^= 1;
+        let err = build_worker(&spec, 0).unwrap_err();
+        assert!(format!("{err}").contains("resolved differently"), "{err}");
+    }
+}

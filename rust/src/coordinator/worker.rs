@@ -19,14 +19,72 @@
 use std::path::PathBuf;
 
 use crate::config::WorkerBackend;
+use crate::coordinator::protocol::{ToMaster, ToWorker};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::loss::{Loss, Reg};
+use crate::metrics::ThreadCpuTimer;
+use crate::net::transport::WorkerTransport;
 use crate::optim::lazy::{lazy_inner_epoch_ws, LazyStats};
 use crate::optim::svrg::dense_inner_epoch_ws;
 use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 use crate::runtime::{Input, XlaRuntime};
+
+/// The worker loop of Algorithm 1 (lines 9–20), generic over the wire:
+/// per epoch, receive `w_t`, send the shard gradient sum, receive the
+/// full gradient `z`, run `m_inner` proximal-SVRG steps, send the local
+/// iterate. `Stop` — or a vanished master, which every transport maps to
+/// `Stop` — is a clean shutdown at either receive point.
+///
+/// The in-process coordinator runs this on `p` threads over channel
+/// transports; `pscope worker` runs it in its own process over TCP. Both
+/// consume the identical RNG stream, so the trajectory is transport-
+/// independent.
+pub fn run_worker<T: WorkerTransport>(
+    transport: &mut T,
+    wk: &mut Worker,
+    eta: f64,
+    m_inner: usize,
+) -> Result<()> {
+    let k = wk.id;
+    loop {
+        let (epoch, w_t) = match transport.recv()? {
+            ToWorker::Stop => return Ok(()),
+            ToWorker::Broadcast { epoch, w } => (epoch, w),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "worker {k}: expected Broadcast, got {other:?}"
+                )))
+            }
+        };
+        let t = ThreadCpuTimer::start();
+        let zsum = wk.shard_grad(&w_t)?;
+        let grad_s = t.elapsed_s();
+        let count = wk.shard.n();
+        transport.send(ToMaster::ShardGrad { worker: k, epoch, zsum, count })?;
+        let z_buf = match transport.recv()? {
+            ToWorker::FullGrad { epoch: e2, z } if e2 == epoch => z,
+            // master aborted the epoch mid-flight
+            ToWorker::Stop => return Ok(()),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "worker {k}: expected FullGrad({epoch}), got {other:?}"
+                )))
+            }
+        };
+        let t2 = ThreadCpuTimer::start();
+        let before = wk.lazy_stats.materializations;
+        let u = wk.inner_epoch(&w_t, &z_buf, eta, m_inner)?;
+        transport.send(ToMaster::LocalIterate {
+            worker: k,
+            epoch,
+            u,
+            compute_s: grad_s + t2.elapsed_s(),
+            materializations: wk.lazy_stats.materializations - before,
+        })?;
+    }
+}
 
 /// Worker state (one per thread).
 pub struct Worker {

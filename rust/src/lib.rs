@@ -29,21 +29,30 @@
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas HLO
 //!   artifacts (`artifacts/*.hlo.txt`) and runs them on the worker hot path
 //!   for dense shards. Python never executes at train time.
-//! * [`data`], [`linalg`], [`loss`], [`net`], [`metrics`], [`config`] —
+//! * [`net`] — the cluster interconnect: byte metering, the modeled
+//!   wire-time `NetModel`, the binary frame codec ([`net::frame`]), and
+//!   the pluggable transports ([`net::transport`]) — in-process metered
+//!   channels and real TCP — that the coordinator's master/worker loops
+//!   are generic over (bit-identical trajectories on both wires;
+//!   DESIGN.md §7).
+//! * [`data`], [`linalg`], [`loss`], [`metrics`], [`config`] —
 //!   substrates: synthetic dataset generators matched to the paper's four
-//!   LibSVM datasets, CSR/CSC sparse algebra, loss models, the simulated
-//!   cluster interconnect, experiment telemetry, and the config system.
+//!   LibSVM datasets, CSR/CSC sparse algebra, loss models, experiment
+//!   telemetry, and the config system.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
 //! use pscope::prelude::*;
 //!
+//! # fn main() -> pscope::error::Result<()> {
 //! let ds = pscope::data::synth::rcv1_like(42).generate();
 //! let part = Partitioner::Uniform.split(&ds, 8, 7);
 //! let cfg = PscopeConfig::for_dataset("rcv1_like", Model::Logistic);
-//! let out = pscope::coordinator::train(&ds, &part, &cfg);
+//! let out = pscope::coordinator::train(&ds, &part, &cfg)?;
 //! println!("final objective {:.6e}", out.trace.last_objective());
+//! # Ok(())
+//! # }
 //! ```
 #![warn(missing_docs)]
 // Indexed loops are deliberate in the hot kernels (LLVM auto-vectorizes

@@ -72,7 +72,7 @@ impl Loss {
 }
 
 /// Regularization parameters of the composite objective.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Reg {
     /// Ridge coefficient λ₁ (elastic net; 0 for pure Lasso).
     pub lam1: f64,

@@ -2,6 +2,14 @@
 //!
 //! ```text
 //! pscope train          --dataset rcv1_like --model logistic --p 8 ...
+//!                       (--transport tcp self-hosts master + p worker
+//!                        processes on loopback — a one-command cluster)
+//! pscope master         --listen 127.0.0.1:7070 --p 8 --dataset ...
+//!                       (bind, wait for p `pscope worker`s, run Algorithm 1
+//!                        over real TCP)
+//! pscope worker         --connect 127.0.0.1:7070
+//!                       (join a master; receives the full job spec over
+//!                        the wire, needs no other flags)
 //! pscope info           --dataset rcv1_like
 //! pscope partition-eval --dataset tiny --p 8
 //! pscope gen-data       --dataset rcv1_like --out data/rcv1_like.libsvm
@@ -9,57 +17,57 @@
 //! ```
 
 use std::process::ExitCode;
+use std::time::Duration;
 
-use pscope::cli::{flag, switch, Command};
-use pscope::config::{Model, PscopeConfig, WorkerBackend};
-use pscope::coordinator::train_with;
-use pscope::data::{libsvm, stats, synth};
+use pscope::cli::{flag, switch, Args, Command, FlagSpec};
+use pscope::config::{Model, PscopeConfig, TransportKind, WorkerBackend};
+use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec};
+use pscope::coordinator::{train_with, TrainOutput};
+use pscope::data::{libsvm, load_or_synth, stats, synth, Dataset};
 use pscope::error::{Error, Result};
 use pscope::loss::Objective;
 use pscope::net::NetModel;
 use pscope::optim::fista::reference_optimum;
-use pscope::partition::{goodness, Partitioner};
+use pscope::partition::{goodness, Partition, Partitioner};
 use pscope::runtime::XlaRuntime;
 
-fn load_dataset(name: &str, seed: u64) -> Result<pscope::data::Dataset> {
-    // real LibSVM file wins when present (data/<name>.libsvm)
-    let path = format!("data/{name}.libsvm");
-    if std::path::Path::new(&path).exists() {
-        return libsvm::read_file(&path, 0);
-    }
-    synth::preset(name, seed)
-        .map(|s| s.generate())
-        .ok_or_else(|| Error::Config(format!("unknown dataset {name:?}")))
+/// Everything a training run needs, assembled from CLI flags (shared by
+/// `train` and `master`, which must agree so the TCP job spec describes
+/// exactly the run the master executes).
+struct Job {
+    name: String,
+    seed: u64,
+    ds: Dataset,
+    cfg: PscopeConfig,
+    part: Partition,
+    partition_name: String,
+    artifact_dir: Option<String>,
 }
 
-fn cmd_train() -> Command {
-    Command {
-        name: "train",
-        about: "run pSCOPE (Algorithm 1) on a dataset",
-        flags: vec![
-            flag("dataset", "preset or data/<name>.libsvm", Some("tiny")),
-            flag("model", "logistic | lasso", Some("logistic")),
-            flag("p", "workers", Some("8")),
-            flag("epochs", "outer iterations T", Some("30")),
-            flag("m", "inner steps M (0 = 2n/p)", Some("0")),
-            flag("eta", "learning rate (0 = auto)", Some("0")),
-            flag("backend", "sparse | dense | xla", Some("sparse")),
-            flag("partition", "uniform | skew75 | separated | replicated", Some("uniform")),
-            flag("seed", "PRNG seed", Some("42")),
-            flag("config", "TOML config file overriding defaults", None),
-            flag("trace-out", "write per-epoch CSV here", None),
-            switch("gap", "also compute a reference optimum and report gaps"),
-        ],
-    }
+/// Flags shared by `train` and `master`.
+fn train_flags() -> Vec<FlagSpec> {
+    vec![
+        flag("dataset", "preset or data/<name>.libsvm", Some("tiny")),
+        flag("model", "logistic | lasso", Some("logistic")),
+        flag("p", "workers", Some("8")),
+        flag("epochs", "outer iterations T", Some("30")),
+        flag("m", "inner steps M (0 = 2n/p)", Some("0")),
+        flag("eta", "learning rate (0 = auto)", Some("0")),
+        flag("backend", "sparse | dense | xla", Some("sparse")),
+        flag("partition", "uniform | skew75 | separated | replicated", Some("uniform")),
+        flag("seed", "PRNG seed", Some("42")),
+        flag("config", "TOML config file overriding defaults", None),
+        flag("trace-out", "write per-epoch CSV here", None),
+        switch("gap", "also compute a reference optimum and report gaps"),
+    ]
 }
 
-fn run_train(raw: &[String]) -> Result<()> {
-    let args = cmd_train().parse(raw)?;
-    let name = args.get("dataset").unwrap_or("tiny");
+fn build_job(args: &Args) -> Result<Job> {
+    let name = args.get("dataset").unwrap_or("tiny").to_string();
     let seed: u64 = args.get_parse("seed", 42u64)?;
-    let ds = load_dataset(name, seed)?;
+    let ds = load_or_synth(&name, seed)?;
     let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
-    let mut cfg = PscopeConfig::for_dataset(name, model);
+    let mut cfg = PscopeConfig::for_dataset(&name, model);
     if let Some(path) = args.get("config") {
         cfg.apply_toml(&std::fs::read_to_string(path)?)?;
     }
@@ -68,30 +76,35 @@ fn run_train(raw: &[String]) -> Result<()> {
     cfg.m_inner = args.get_parse("m", cfg.m_inner)?;
     cfg.eta = args.get_parse("eta", cfg.eta)?;
     cfg.seed = seed;
-    cfg.backend = WorkerBackend::parse(args.get("backend").unwrap_or("sparse"))?;
-    let partitioner = match args.get("partition").unwrap_or("uniform") {
-        "uniform" => Partitioner::Uniform,
-        "skew75" => Partitioner::LabelSkew75,
-        "separated" => Partitioner::LabelSeparated,
-        "replicated" => Partitioner::Replicated,
-        other => return Err(Error::Config(format!("unknown partition {other:?}"))),
-    };
+    if let Some(b) = args.get("backend") {
+        cfg.backend = WorkerBackend::parse(b)?;
+    }
+    let partition_name = args.get("partition").unwrap_or("uniform").to_string();
+    let partitioner = Partitioner::parse(&partition_name)?;
     println!("dataset {name}: n={} d={} nnz={}", ds.n(), ds.d(), ds.nnz());
     let part = partitioner.split(&ds, cfg.p, seed);
     let artifact_dir = if cfg.backend == WorkerBackend::Xla {
-        Some(std::path::PathBuf::from("artifacts"))
+        Some("artifacts".to_string())
     } else {
         None
     };
-    let p_star = if args.has("gap") {
-        let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
+    Ok(Job { name, seed, ds, cfg, part, partition_name, artifact_dir })
+}
+
+/// Reference-optimum computation for `--gap` (off unless requested).
+fn maybe_reference(args: &Args, job: &Job) -> f64 {
+    if args.has("gap") {
+        let obj = Objective::new(&job.ds, job.cfg.model.loss(), job.cfg.reg);
         let r = reference_optimum(&obj, 50_000);
         println!("reference optimum P(w*) = {:.12e}", r.objective);
         r.objective
     } else {
         f64::NEG_INFINITY
-    };
-    let out = train_with(&ds, &part, &cfg, artifact_dir, NetModel::ten_gbe())?;
+    }
+}
+
+/// Shared post-run reporting: per-epoch lines, totals, optional CSV.
+fn report(out: &TrainOutput, p_star: f64, args: &Args) -> Result<()> {
     for pt in &out.trace.points {
         if p_star.is_finite() {
             println!(
@@ -112,6 +125,12 @@ fn run_train(raw: &[String]) -> Result<()> {
             );
         }
     }
+    if let Some(last) = out.trace.points.last() {
+        println!(
+            "net time: modeled {:.6}s, measured-blocked {:.6}s (DESIGN.md §7)",
+            last.net_s, last.net_io_s
+        );
+    }
     println!(
         "done: {} epochs, {} bytes / {} msgs, {} lazy materializations",
         out.epochs_run, out.comm.0, out.comm.1, out.materializations
@@ -121,6 +140,123 @@ fn run_train(raw: &[String]) -> Result<()> {
         out.trace.write_csv(f, if p_star.is_finite() { p_star } else { 0.0 })?;
         println!("trace written to {path}");
     }
+    Ok(())
+}
+
+fn cmd_train() -> Command {
+    let mut flags = train_flags();
+    flags.push(flag(
+        "transport",
+        "inproc (threads in-process) | tcp (self-host p worker processes on loopback)",
+        Some("inproc"),
+    ));
+    flags.push(flag("accept-timeout", "tcp: seconds to wait for workers/teardown", Some("60")));
+    Command { name: "train", about: "run pSCOPE (Algorithm 1) on a dataset", flags }
+}
+
+fn run_train(raw: &[String]) -> Result<()> {
+    let args = cmd_train().parse(raw)?;
+    let mut job = build_job(&args)?;
+    if let Some(t) = args.get("transport") {
+        // fail fast on unknown transports, before any data work is redone
+        job.cfg.transport = TransportKind::parse(t)?;
+    }
+    let p_star = maybe_reference(&args, &job);
+    let out = match job.cfg.transport {
+        TransportKind::InProc => train_with(
+            &job.ds,
+            &job.part,
+            &job.cfg,
+            job.artifact_dir.clone().map(std::path::PathBuf::from),
+            NetModel::ten_gbe(),
+        )?,
+        TransportKind::Tcp => {
+            let timeout = Duration::from_secs(args.get_parse("accept-timeout", 60u64)?.max(1));
+            let spec = RunSpec::derive(
+                &job.ds,
+                &job.part,
+                &job.cfg,
+                &job.name,
+                job.seed,
+                &job.partition_name,
+                job.seed,
+                job.artifact_dir.as_deref(),
+            )?;
+            println!(
+                "self-hosting a loopback TCP cluster: master + {} worker processes",
+                job.part.p()
+            );
+            remote::self_host_train(
+                &job.ds,
+                &job.part,
+                &job.cfg,
+                NetModel::ten_gbe(),
+                &spec,
+                timeout,
+            )?
+        }
+    };
+    report(&out, p_star, &args)
+}
+
+fn cmd_master() -> Command {
+    let mut flags = train_flags();
+    flags.push(flag("listen", "address to bind (0 port = ephemeral)", Some("127.0.0.1:7070")));
+    flags.push(flag("accept-timeout", "seconds to wait for workers/teardown", Some("60")));
+    Command {
+        name: "master",
+        about: "run the pSCOPE master over TCP; workers join with `pscope worker`",
+        flags,
+    }
+}
+
+fn run_master_cmd(raw: &[String]) -> Result<()> {
+    let args = cmd_master().parse(raw)?;
+    let job = build_job(&args)?;
+    let timeout = Duration::from_secs(args.get_parse("accept-timeout", 60u64)?.max(1));
+    let spec = RunSpec::derive(
+        &job.ds,
+        &job.part,
+        &job.cfg,
+        &job.name,
+        job.seed,
+        &job.partition_name,
+        job.seed,
+        job.artifact_dir.as_deref(),
+    )?;
+    // compute the (potentially minutes-long) --gap reference BEFORE
+    // binding: once the port is open, workers connect and start their
+    // handshake timeout clocks — they must not starve behind FISTA
+    let p_star = maybe_reference(&args, &job);
+    let ep = MasterEndpoint::bind(args.get("listen").unwrap_or("127.0.0.1:7070"))?;
+    println!(
+        "master: listening on {}, waiting for {} worker(s) (`pscope worker --connect {}`)",
+        ep.local_addr()?,
+        job.part.p(),
+        ep.local_addr()?
+    );
+    let out = ep.train(&job.ds, &job.part, &job.cfg, NetModel::ten_gbe(), &spec, timeout)?;
+    report(&out, p_star, &args)
+}
+
+fn cmd_worker() -> Command {
+    Command {
+        name: "worker",
+        about: "join a pSCOPE master over TCP (the job spec arrives over the wire)",
+        flags: vec![
+            flag("connect", "master address", Some("127.0.0.1:7070")),
+            flag("timeout", "seconds for connect + handshake", Some("30")),
+        ],
+    }
+}
+
+fn run_worker_cmd(raw: &[String]) -> Result<()> {
+    let args = cmd_worker().parse(raw)?;
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
+    let timeout = Duration::from_secs(args.get_parse("timeout", 30u64)?.max(1));
+    println!("worker: connecting to {addr}");
+    remote::serve_worker(addr, timeout)?;
+    println!("worker: clean shutdown");
     Ok(())
 }
 
@@ -138,7 +274,7 @@ fn cmd_info() -> Command {
 fn run_info(raw: &[String]) -> Result<()> {
     let args = cmd_info().parse(raw)?;
     let name = args.get("dataset").unwrap_or("tiny");
-    let ds = load_dataset(name, args.get_parse("seed", 42u64)?)?;
+    let ds = load_or_synth(name, args.get_parse("seed", 42u64)?)?;
     println!("dataset {name}");
     println!("{}", stats::compute(&ds));
     Ok(())
@@ -161,7 +297,7 @@ fn run_partition_eval(raw: &[String]) -> Result<()> {
     let args = cmd_partition_eval().parse(raw)?;
     let name = args.get("dataset").unwrap_or("tiny");
     let seed: u64 = args.get_parse("seed", 42u64)?;
-    let ds = load_dataset(name, seed)?;
+    let ds = load_or_synth(name, seed)?;
     let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
     let cfg = PscopeConfig::for_dataset(name, model);
     let p: usize = args.get_parse("p", 8usize)?;
@@ -251,7 +387,9 @@ const TOPLEVEL: &str = "\
 pscope — proximal SCOPE for distributed sparse learning (NeurIPS'18 reproduction)
 
 subcommands:
-  train            run pSCOPE on a dataset
+  train            run pSCOPE on a dataset (--transport tcp = loopback cluster)
+  master           run the master over TCP; workers join with `pscope worker`
+  worker           join a TCP master (job spec arrives over the wire)
   info             dataset statistics
   partition-eval   measure partition goodness γ(π; ε)
   gen-data         write a synthetic dataset as LibSVM text
@@ -269,6 +407,8 @@ fn main() -> ExitCode {
     let rest = &argv[1..];
     let result = match sub.as_str() {
         "train" => run_train(rest),
+        "master" => run_master_cmd(rest),
+        "worker" => run_worker_cmd(rest),
         "info" => run_info(rest),
         "partition-eval" => run_partition_eval(rest),
         "gen-data" => run_gen_data(rest),

@@ -22,6 +22,13 @@ pub struct TracePoint {
     pub sim_wall_s: f64,
     /// Modeled network seconds accumulated so far (see [`crate::net`]).
     pub net_s: f64,
+    /// *Measured* seconds the master has spent blocked in transport
+    /// send/recv so far — real I/O plus waiting for straggling workers.
+    /// Near the epoch wall time in-process (the master idles while worker
+    /// threads compute); over TCP it is the operational
+    /// communication-and-wait segment to compare against the modeled
+    /// `net_s` (DESIGN.md §7).
+    pub net_io_s: f64,
     /// Objective value `P(w)`.
     pub objective: f64,
     /// Communication payload bytes so far.
@@ -93,17 +100,21 @@ impl Trace {
             .map(|p| p.epoch)
     }
 
-    /// Write as CSV (`epoch,wall_s,net_s,total_s,objective,gap,comm_bytes`).
+    /// Write as CSV (`epoch,wall_s,...,objective,gap,comm_bytes,...`).
     pub fn write_csv<W: Write>(&self, mut w: W, p_star: f64) -> std::io::Result<()> {
-        writeln!(w, "epoch,wall_s,sim_wall_s,net_s,total_s,objective,gap,comm_bytes,comm_msgs")?;
+        writeln!(
+            w,
+            "epoch,wall_s,sim_wall_s,net_s,net_io_s,total_s,objective,gap,comm_bytes,comm_msgs"
+        )?;
         for p in &self.points {
             writeln!(
                 w,
-                "{},{:.6},{:.6},{:.6},{:.6},{:.12e},{:.6e},{},{}",
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.12e},{:.6e},{},{}",
                 p.epoch,
                 p.wall_s,
                 p.sim_wall_s,
                 p.net_s,
+                p.net_io_s,
                 p.total_s(),
                 p.objective,
                 p.objective - p_star,
@@ -219,6 +230,7 @@ mod tests {
             wall_s: t,
             sim_wall_s: t,
             net_s: 0.1 * t,
+            net_io_s: 0.05 * t,
             objective: obj,
             comm_bytes: 100 * epoch as u64,
             comm_msgs: epoch as u64,

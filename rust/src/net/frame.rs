@@ -1,0 +1,472 @@
+//! Binary wire codec for the CALL protocol.
+//!
+//! Little-endian, length-prefixed frames. The encoded size of every
+//! data-plane message is **exactly** its
+//! [`wire_bytes()`](crate::coordinator::protocol::ToWorker::wire_bytes)
+//! charge, so the byte meter fed by real frames over TCP reports the same
+//! totals as the modeled in-process accounting — the meter stops being a
+//! model and becomes ground truth (`tests/net_accounting.rs` pins the two
+//! to the byte).
+//!
+//! ## Frame layout
+//!
+//! | offset | size | field                                             |
+//! |--------|------|---------------------------------------------------|
+//! | 0      | 4    | `u32` total frame length (including these 4 bytes)|
+//! | 4      | 4    | `u32` message tag                                 |
+//! | 8      | 8    | `u64` epoch (0 when the message carries none)     |
+//! | 16     | 8    | `u64` worker id (0 when the message carries none) |
+//! | 24     | ...  | payload (tag-specific, see below)                 |
+//!
+//! The 24-byte header is precisely the protocol's
+//! [`MSG_HEADER_BYTES`] charge (type tag + epoch + worker id + len).
+//!
+//! | tag | message        | payload                                        |
+//! |-----|----------------|------------------------------------------------|
+//! | 1   | `Broadcast`    | `len·8` bytes of `f64` (`w`)                   |
+//! | 2   | `FullGrad`     | `len·8` bytes of `f64` (`z`)                   |
+//! | 3   | `Stop`         | empty                                          |
+//! | 4   | `ShardGrad`    | `u64` count, then `len·8` bytes of `f64`       |
+//! | 5   | `LocalIterate` | `f64` compute_s, `u64` materializations, `f64`s|
+//! | 6   | `WorkerDown`   | empty                                          |
+//! | 100 | `Setup`        | opaque job spec (control plane, unmetered)     |
+//! | 101 | `Ready`        | empty (control plane, unmetered)               |
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`f64::to_le_bytes`), so
+//! NaN payloads, signed zeros, subnormals and ±inf all round-trip
+//! bit-exactly (`tests/frame_codec_props.rs`).
+
+use std::io::{Read, Write};
+use std::time::Instant;
+
+use crate::coordinator::protocol::{ToMaster, ToWorker, MSG_HEADER_BYTES};
+use crate::error::{Error, Result};
+
+/// Tag for [`ToWorker::Broadcast`].
+pub const TAG_BROADCAST: u32 = 1;
+/// Tag for [`ToWorker::FullGrad`].
+pub const TAG_FULL_GRAD: u32 = 2;
+/// Tag for [`ToWorker::Stop`].
+pub const TAG_STOP: u32 = 3;
+/// Tag for [`ToMaster::ShardGrad`].
+pub const TAG_SHARD_GRAD: u32 = 4;
+/// Tag for [`ToMaster::LocalIterate`].
+pub const TAG_LOCAL_ITERATE: u32 = 5;
+/// Tag for [`ToMaster::WorkerDown`].
+pub const TAG_WORKER_DOWN: u32 = 6;
+/// Control-plane tag: master → worker job spec (see
+/// [`crate::coordinator::remote::RunSpec`]). Unmetered — setup traffic is
+/// not part of the per-epoch accounting.
+pub const TAG_SETUP: u32 = 100;
+/// Control-plane tag: worker → master handshake ack. Unmetered.
+pub const TAG_READY: u32 = 101;
+
+/// Header size in bytes (`== MSG_HEADER_BYTES`).
+pub const FRAME_HEADER_BYTES: usize = MSG_HEADER_BYTES as usize;
+
+/// Hard cap on a single frame; anything larger is treated as stream
+/// corruption rather than an allocation request (1 GiB ≈ a 134M-feature
+/// dense broadcast — far beyond any supported problem).
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Outcome of one [`read_frame`] call.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame (length prefix included).
+    Frame(Vec<u8>),
+    /// Clean end-of-stream at a frame boundary (peer closed the
+    /// connection between messages).
+    Eof,
+    /// The socket's read timeout elapsed at a frame boundary with no
+    /// bytes read (poll point for shutdown checks; never returned
+    /// mid-frame — a started frame is waited out until data or EOF).
+    TimedOut,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one length-prefixed frame from `r`, waiting out mid-frame read
+/// timeouts indefinitely (a started frame either completes or the
+/// connection dies — callers that need a hard bound on a stalled peer
+/// use [`read_frame_deadline`], or unblock the read by shutting the
+/// socket down, as the master's reader teardown does).
+///
+/// Distinguishes a clean close at a frame boundary ([`FrameRead::Eof`])
+/// from a connection dying mid-frame (`Err(Error::Protocol)`), so the
+/// caller can map the former to a clean `Stop` and the latter to a dead
+/// peer.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<FrameRead> {
+    read_frame_deadline(r, None)
+}
+
+/// [`read_frame`] with a hard deadline on mid-frame stalls: if the peer
+/// has started a frame but the deadline passes between (timed-out) reads,
+/// the frame is abandoned with `Err(Error::Protocol)` instead of waiting
+/// forever. Timeouts at a frame boundary still return
+/// [`FrameRead::TimedOut`] so the caller owns the boundary-level retry
+/// policy. Used for handshakes, whose bound must hold even against a
+/// half-open connection that dribbled part of a frame and stalled.
+pub fn read_frame_deadline<R: Read>(r: &mut R, deadline: Option<Instant>) -> Result<FrameRead> {
+    let stalled = |got: usize| -> Error {
+        Error::Protocol(format!(
+            "peer stalled mid-frame ({got} bytes in, deadline exceeded)"
+        ))
+    };
+    let past = |d: &Option<Instant>| matches!(d, Some(t) if Instant::now() >= *t);
+    let mut head = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(FrameRead::Eof)
+                } else {
+                    Err(Error::Protocol("connection closed mid-frame header".into()))
+                };
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if got == 0 {
+                    return Ok(FrameRead::TimedOut);
+                }
+                // Mid-header timeout: the peer started a frame; keep
+                // waiting (until the deadline, when one is set).
+                if past(&deadline) {
+                    return Err(stalled(got));
+                }
+                continue;
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(head);
+    if len < FRAME_HEADER_BYTES as u32 || len > MAX_FRAME_BYTES {
+        return Err(Error::Protocol(format!(
+            "bad frame length {len} (valid: {FRAME_HEADER_BYTES}..={MAX_FRAME_BYTES})"
+        )));
+    }
+    let mut frame = vec![0u8; len as usize];
+    frame[..4].copy_from_slice(&head);
+    let mut got = 4usize;
+    while got < frame.len() {
+        match r.read(&mut frame[got..]) {
+            Ok(0) => return Err(Error::Protocol("connection closed mid-frame".into())),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if past(&deadline) {
+                    return Err(stalled(got));
+                }
+                continue;
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(FrameRead::Frame(frame))
+}
+
+/// Write one already-encoded frame to `w`.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    w.write_all(frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---- encoding ----------------------------------------------------------
+
+fn push_header(buf: &mut Vec<u8>, tag: u32, epoch: u64, worker: u64) {
+    buf.extend_from_slice(&0u32.to_le_bytes()); // length — patched by seal()
+    buf.extend_from_slice(&tag.to_le_bytes());
+    buf.extend_from_slice(&epoch.to_le_bytes());
+    buf.extend_from_slice(&worker.to_le_bytes());
+}
+
+fn push_f64s(buf: &mut Vec<u8>, v: &[f64]) {
+    buf.reserve(8 * v.len());
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn seal(mut buf: Vec<u8>) -> Vec<u8> {
+    let len = u32::try_from(buf.len()).expect("frame exceeds u32 length");
+    buf[0..4].copy_from_slice(&len.to_le_bytes());
+    buf
+}
+
+/// Encode a master → worker message; `encoded.len() == msg.wire_bytes()`.
+pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
+    let buf = match msg {
+        ToWorker::Broadcast { epoch, w } => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 8 * w.len());
+            push_header(&mut b, TAG_BROADCAST, *epoch as u64, 0);
+            push_f64s(&mut b, w);
+            b
+        }
+        ToWorker::FullGrad { epoch, z } => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 8 * z.len());
+            push_header(&mut b, TAG_FULL_GRAD, *epoch as u64, 0);
+            push_f64s(&mut b, z);
+            b
+        }
+        ToWorker::Stop => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES);
+            push_header(&mut b, TAG_STOP, 0, 0);
+            b
+        }
+    };
+    let buf = seal(buf);
+    debug_assert_eq!(buf.len() as u64, msg.wire_bytes());
+    buf
+}
+
+/// Encode a worker → master message; `encoded.len() == msg.wire_bytes()`.
+pub fn encode_to_master(msg: &ToMaster) -> Vec<u8> {
+    let buf = match msg {
+        ToMaster::ShardGrad { worker, epoch, zsum, count } => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 8 + 8 * zsum.len());
+            push_header(&mut b, TAG_SHARD_GRAD, *epoch as u64, *worker as u64);
+            b.extend_from_slice(&(*count as u64).to_le_bytes());
+            push_f64s(&mut b, zsum);
+            b
+        }
+        ToMaster::LocalIterate { worker, epoch, u, compute_s, materializations } => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 16 + 8 * u.len());
+            push_header(&mut b, TAG_LOCAL_ITERATE, *epoch as u64, *worker as u64);
+            b.extend_from_slice(&compute_s.to_le_bytes());
+            b.extend_from_slice(&materializations.to_le_bytes());
+            push_f64s(&mut b, u);
+            b
+        }
+        ToMaster::WorkerDown { worker } => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES);
+            push_header(&mut b, TAG_WORKER_DOWN, 0, *worker as u64);
+            b
+        }
+    };
+    let buf = seal(buf);
+    debug_assert_eq!(buf.len() as u64, msg.wire_bytes());
+    buf
+}
+
+/// Encode a control-plane frame (Setup/Ready) with an opaque payload.
+pub fn encode_control(tag: u32, worker: u64, payload: &[u8]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+    push_header(&mut b, tag, 0, worker);
+    b.extend_from_slice(payload);
+    seal(b)
+}
+
+// ---- decoding ----------------------------------------------------------
+
+fn rd_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn rd_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+fn rd_f64(b: &[u8], off: usize) -> f64 {
+    f64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+fn rd_usize(b: &[u8], off: usize, what: &str) -> Result<usize> {
+    usize::try_from(rd_u64(b, off))
+        .map_err(|_| Error::Protocol(format!("{what} overflows usize")))
+}
+
+fn rd_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Split a complete frame into `(tag, epoch, worker, payload)`.
+pub fn parts(frame: &[u8]) -> Result<(u32, u64, u64, &[u8])> {
+    if frame.len() < FRAME_HEADER_BYTES {
+        return Err(Error::Protocol(format!("frame too short: {}", frame.len())));
+    }
+    let len = rd_u32(frame, 0) as usize;
+    if len != frame.len() {
+        return Err(Error::Protocol(format!(
+            "frame length field {len} != frame size {}",
+            frame.len()
+        )));
+    }
+    Ok((
+        rd_u32(frame, 4),
+        rd_u64(frame, 8),
+        rd_u64(frame, 16),
+        &frame[FRAME_HEADER_BYTES..],
+    ))
+}
+
+fn expect_vec_payload(payload: &[u8], skip: usize, tag: u32) -> Result<&[u8]> {
+    if payload.len() < skip || (payload.len() - skip) % 8 != 0 {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: bad payload length {}",
+            payload.len()
+        )));
+    }
+    Ok(&payload[skip..])
+}
+
+/// Decode a master → worker frame.
+pub fn decode_to_worker(frame: &[u8]) -> Result<ToWorker> {
+    let (tag, epoch, _worker, payload) = parts(frame)?;
+    let epoch = usize::try_from(epoch)
+        .map_err(|_| Error::Protocol("epoch overflows usize".into()))?;
+    match tag {
+        TAG_BROADCAST => Ok(ToWorker::Broadcast {
+            epoch,
+            w: rd_f64s(expect_vec_payload(payload, 0, tag)?),
+        }),
+        TAG_FULL_GRAD => Ok(ToWorker::FullGrad {
+            epoch,
+            z: rd_f64s(expect_vec_payload(payload, 0, tag)?),
+        }),
+        TAG_STOP => Ok(ToWorker::Stop),
+        other => Err(Error::Protocol(format!(
+            "unexpected master→worker tag {other}"
+        ))),
+    }
+}
+
+/// Decode a worker → master frame.
+pub fn decode_to_master(frame: &[u8]) -> Result<ToMaster> {
+    let (tag, epoch, worker, payload) = parts(frame)?;
+    let epoch = usize::try_from(epoch)
+        .map_err(|_| Error::Protocol("epoch overflows usize".into()))?;
+    let worker = usize::try_from(worker)
+        .map_err(|_| Error::Protocol("worker id overflows usize".into()))?;
+    match tag {
+        TAG_SHARD_GRAD => {
+            let rest = expect_vec_payload(payload, 8, tag)?;
+            Ok(ToMaster::ShardGrad {
+                worker,
+                epoch,
+                count: rd_usize(payload, 0, "shard count")?,
+                zsum: rd_f64s(rest),
+            })
+        }
+        TAG_LOCAL_ITERATE => {
+            let rest = expect_vec_payload(payload, 16, tag)?;
+            Ok(ToMaster::LocalIterate {
+                worker,
+                epoch,
+                compute_s: rd_f64(payload, 0),
+                materializations: rd_u64(payload, 8),
+                u: rd_f64s(rest),
+            })
+        }
+        TAG_WORKER_DOWN => Ok(ToMaster::WorkerDown { worker }),
+        other => Err(Error::Protocol(format!(
+            "unexpected worker→master tag {other}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoded_size_is_wire_bytes() {
+        let msgs = [
+            ToWorker::Broadcast { epoch: 3, w: vec![1.0, f64::NAN, -0.0] },
+            ToWorker::FullGrad { epoch: 9, z: vec![] },
+            ToWorker::Stop,
+        ];
+        for m in &msgs {
+            assert_eq!(encode_to_worker(m).len() as u64, m.wire_bytes(), "{m:?}");
+        }
+        let msgs = [
+            ToMaster::ShardGrad { worker: 2, epoch: 1, zsum: vec![0.5; 7], count: 99 },
+            ToMaster::LocalIterate {
+                worker: 0,
+                epoch: 4,
+                u: vec![f64::INFINITY],
+                compute_s: 0.25,
+                materializations: 12,
+            },
+            ToMaster::WorkerDown { worker: 5 },
+        ];
+        for m in &msgs {
+            assert_eq!(encode_to_master(m).len() as u64, m.wire_bytes(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_nan_bits() {
+        let weird = f64::from_bits(0x7FF8_DEAD_BEEF_0001); // NaN with payload
+        let m = ToWorker::Broadcast { epoch: 1, w: vec![weird, f64::NEG_INFINITY] };
+        let back = decode_to_worker(&encode_to_worker(&m)).unwrap();
+        match back {
+            ToWorker::Broadcast { epoch, w } => {
+                assert_eq!(epoch, 1);
+                assert_eq!(w[0].to_bits(), weird.to_bits());
+                assert_eq!(w[1], f64::NEG_INFINITY);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_read_write_and_eof() {
+        let mut buf = Vec::new();
+        let a = ToWorker::Broadcast { epoch: 0, w: vec![1.5, 2.5] };
+        let b = ToWorker::Stop;
+        write_frame(&mut buf, &encode_to_worker(&a)).unwrap();
+        write_frame(&mut buf, &encode_to_worker(&b)).unwrap();
+        let mut cur = std::io::Cursor::new(&buf[..]);
+        let f1 = match read_frame(&mut cur).unwrap() {
+            FrameRead::Frame(f) => f,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(decode_to_worker(&f1).unwrap(), ToWorker::Broadcast { .. }));
+        let f2 = match read_frame(&mut cur).unwrap() {
+            FrameRead::Frame(f) => f,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(decode_to_worker(&f2).unwrap(), ToWorker::Stop));
+        assert!(matches!(read_frame(&mut cur).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn truncated_frame_is_protocol_error_not_eof() {
+        let full = encode_to_worker(&ToWorker::Broadcast { epoch: 0, w: vec![1.0; 4] });
+        let cut = &full[..full.len() - 1];
+        let mut cur = std::io::Cursor::new(cut);
+        assert!(read_frame(&mut cur).is_err());
+        // truncation inside the header is an error too
+        let mut cur = std::io::Cursor::new(&full[..2]);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let mut f = encode_to_worker(&ToWorker::Stop);
+        f[0..4].copy_from_slice(&3u32.to_le_bytes()); // shorter than a header
+        let mut cur = std::io::Cursor::new(&f[..]);
+        assert!(read_frame(&mut cur).is_err());
+        assert!(parts(&f).is_err());
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        let f = encode_control(TAG_SETUP, 7, b"payload");
+        let (tag, epoch, worker, payload) = parts(&f).unwrap();
+        assert_eq!((tag, epoch, worker), (TAG_SETUP, 0, 7));
+        assert_eq!(payload, b"payload");
+        // data decoders refuse control tags
+        assert!(decode_to_worker(&f).is_err());
+        assert!(decode_to_master(&f).is_err());
+    }
+}

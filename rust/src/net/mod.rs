@@ -1,14 +1,24 @@
-//! Simulated cluster interconnect.
+//! Cluster interconnect: byte metering, wire-time model, and transports.
 //!
-//! Workers here are OS threads on one box; the paper's testbed is a
-//! 10 GbE cluster. This module makes communication *observable and
-//! chargeable*: every master↔worker message flows through a metered
-//! channel ([`sim_channel`]), which counts messages and payload bytes, and a
-//! [`NetModel`] converts those counts into modeled wire time
+//! This module makes communication *observable and chargeable*. Every
+//! master↔worker message is counted by a [`ByteMeter`], and a [`NetModel`]
+//! converts those counts into modeled wire time
 //! (`latency · msgs + bytes / bandwidth`) that the bench harness adds to
 //! the time axis. Figure-1-style comparisons hinge on exactly this cost
-//! (pSCOPE's O(1) rounds/epoch vs minibatch O(n) rounds), so it must be
-//! modeled rather than measured on shared-memory channels.
+//! (pSCOPE's O(1) rounds/epoch vs minibatch O(n) rounds).
+//!
+//! Two wires feed the meter (see [`transport`]):
+//!
+//! * the **in-process simulation** — workers are OS threads on one box,
+//!   messages flow through metered channels ([`sim_channel`]) and are
+//!   charged their hand-computed `wire_bytes()`;
+//! * **real TCP** — messages are encoded by the [`frame`] binary codec
+//!   (whose frame size is *exactly* `wire_bytes()`) and the meter is fed
+//!   by actual bytes on the wire, making the modeled accounting ground
+//!   truth (`tests/net_accounting.rs` pins the two modes to the byte).
+
+pub mod frame;
+pub mod transport;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};

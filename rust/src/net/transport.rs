@@ -1,0 +1,623 @@
+//! Pluggable master↔worker transports for the CALL coordinator.
+//!
+//! The coordinator's master loop ([`crate::coordinator::run_master`]) and
+//! worker loop ([`crate::coordinator::worker::run_worker`]) are written
+//! against the two traits here, so the same protocol code drives both
+//! deployment modes:
+//!
+//! * [`InProcMaster`] / [`InProcWorker`] — the metered in-process
+//!   simulation (OS threads + [`crate::net::sim_channel`]); behavior and
+//!   byte accounting are bit-for-bit those of the original thread
+//!   coordinator.
+//! * [`TcpMaster`] / [`TcpWorker`] — real `std::net` sockets speaking the
+//!   [`crate::net::frame`] binary codec. The byte meter is fed by actual
+//!   frame sizes, which the codec guarantees equal the modeled
+//!   `wire_bytes()` charges, so the two modes report identical
+//!   communication totals for identical runs.
+//!
+//! ## Failure mapping
+//!
+//! A dropped TCP connection maps onto the in-process failure model: the
+//! per-connection reader thread synthesizes
+//! [`ToMaster::WorkerDown`] on EOF/read error (the exact sentinel a dying
+//! in-process worker's drop guard emits), so the master's reduce loops
+//! fail fast with `Error::Protocol` instead of hanging. On the worker
+//! side, a vanished master reads as a clean `Stop`. Shutdown joins reader
+//! threads within a bounded interval (read timeouts + socket shutdown) —
+//! never an unbounded join.
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::protocol::{ToMaster, ToWorker};
+use crate::error::{Error, Result};
+use crate::net::frame::{self, FrameRead};
+use crate::net::{sim_channel, ByteMeter, SimSender};
+
+/// Master side of a transport: one endpoint per run, addressing `p`
+/// workers by index. Every data-plane send/recv is charged to the run's
+/// [`ByteMeter`]; implementations also account the wall time the master
+/// spends blocked inside transport calls ([`MasterTransport::io_seconds`]).
+pub trait MasterTransport {
+    /// Number of workers on the other side.
+    fn p(&self) -> usize;
+
+    /// Send `msg` to worker `worker` (metered).
+    fn send(&mut self, worker: usize, msg: ToWorker) -> Result<()>;
+
+    /// Receive the next worker→master message, from any worker. Worker
+    /// death surfaces as [`ToMaster::WorkerDown`] (or `Err` once every
+    /// worker is gone) — never an indefinite block.
+    fn recv(&mut self) -> Result<ToMaster>;
+
+    /// Byte-meter snapshot `(bytes, messages)`.
+    fn comm(&self) -> (u64, u64);
+
+    /// Cumulative wall seconds the master has spent blocked in
+    /// [`send`](MasterTransport::send)/[`recv`](MasterTransport::recv) —
+    /// the *measured* communication time (includes waiting for straggling
+    /// workers), vs the meter-derived *modeled* wire time.
+    fn io_seconds(&self) -> f64;
+
+    /// Broadcast `Stop` (metered, matching the in-process accounting) and
+    /// tear the transport down, joining any internal threads within a
+    /// bounded interval. Idempotent; send failures are ignored (a dead
+    /// worker cannot be stopped twice).
+    fn shutdown(&mut self);
+}
+
+/// Worker side of a transport: a single connection back to the master.
+pub trait WorkerTransport {
+    /// Receive the next master→worker message. A vanished master (closed
+    /// channel / clean EOF) is mapped to [`ToWorker::Stop`]: master
+    /// disappearance is a clean shutdown at every protocol point.
+    fn recv(&mut self) -> Result<ToWorker>;
+
+    /// Send `msg` to the master.
+    fn send(&mut self, msg: ToMaster) -> Result<()>;
+}
+
+// ---- in-process (simulated cluster) ------------------------------------
+
+/// Master endpoint over metered in-process channels.
+pub struct InProcMaster {
+    to_worker: Vec<SimSender<ToWorker>>,
+    from_workers: Receiver<ToMaster>,
+    meter: Arc<ByteMeter>,
+    io_s: f64,
+}
+
+/// Worker endpoint over metered in-process channels.
+pub struct InProcWorker {
+    rx: Receiver<ToWorker>,
+    tx: SimSender<ToMaster>,
+}
+
+impl InProcWorker {
+    /// Clone of the worker→master sender, for the coordinator's drop
+    /// guard (the `WorkerDown` sentinel must be sendable while the
+    /// transport itself is mutably borrowed by the worker loop).
+    pub fn down_sender(&self) -> SimSender<ToMaster> {
+        self.tx.clone()
+    }
+}
+
+/// Build the in-process transport pair for `p` workers sharing `meter`.
+///
+/// Channel bounds replicate the original coordinator: the worker→master
+/// bound (`4p`) exceeds the worst-case number of in-flight messages
+/// (≤ 2 data messages + 1 `WorkerDown` per worker), so no worker send can
+/// ever block against an aborting master.
+pub fn in_proc_pair(p: usize, meter: Arc<ByteMeter>) -> (InProcMaster, Vec<InProcWorker>) {
+    let (to_master_tx, to_master_rx) = sim_channel::<ToMaster>(meter.clone(), 4 * p);
+    let mut workers = Vec::with_capacity(p);
+    let mut to_worker = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = sim_channel::<ToWorker>(meter.clone(), 4);
+        to_worker.push(tx);
+        workers.push(InProcWorker { rx, tx: to_master_tx.clone() });
+    }
+    // `to_master_tx` drops here: workers hold the only remaining sender
+    // clones, so the master observes a closed channel the moment the last
+    // worker exits (the disconnect-detection the failure model relies on).
+    drop(to_master_tx);
+    let master = InProcMaster {
+        to_worker,
+        from_workers: to_master_rx,
+        meter,
+        io_s: 0.0,
+    };
+    (master, workers)
+}
+
+impl MasterTransport for InProcMaster {
+    fn p(&self) -> usize {
+        self.to_worker.len()
+    }
+
+    fn send(&mut self, worker: usize, msg: ToWorker) -> Result<()> {
+        let t = Instant::now();
+        let bytes = msg.wire_bytes();
+        let r = self.to_worker[worker].send(msg, bytes);
+        self.io_s += t.elapsed().as_secs_f64();
+        r.map_err(|_| Error::Protocol(format!("worker {worker} died (channel closed)")))
+    }
+
+    fn recv(&mut self) -> Result<ToMaster> {
+        let t = Instant::now();
+        let r = self.from_workers.recv();
+        self.io_s += t.elapsed().as_secs_f64();
+        r.map_err(|_| Error::Protocol("all workers disconnected mid-reduce".into()))
+    }
+
+    fn comm(&self) -> (u64, u64) {
+        self.meter.snapshot()
+    }
+
+    fn io_seconds(&self) -> f64 {
+        self.io_s
+    }
+
+    fn shutdown(&mut self) {
+        // One Stop per worker (clean shutdown at any receive point), then
+        // drop the senders so even a worker that missed the Stop observes
+        // a closed channel. Send failures mean the worker is already gone.
+        for tx in &self.to_worker {
+            let _ = tx.send(ToWorker::Stop, ToWorker::Stop.wire_bytes());
+        }
+        self.to_worker.clear();
+    }
+}
+
+impl WorkerTransport for InProcWorker {
+    fn recv(&mut self) -> Result<ToWorker> {
+        // A closed channel means the master is gone — clean shutdown.
+        Ok(self.rx.recv().unwrap_or(ToWorker::Stop))
+    }
+
+    fn send(&mut self, msg: ToMaster) -> Result<()> {
+        let bytes = msg.wire_bytes();
+        self.tx
+            .send(msg, bytes)
+            .map_err(|_| Error::Protocol("master gone".into()))
+    }
+}
+
+// ---- TCP ---------------------------------------------------------------
+
+/// Read timeout on master-side reader threads: the poll interval at which
+/// a reader checks the shutdown flag between frames.
+const READER_POLL: Duration = Duration::from_millis(200);
+
+/// Master endpoint over real TCP connections (one per worker).
+///
+/// Each connection gets a reader thread that decodes worker→master frames
+/// into an internal queue, meters them by their actual on-wire size, and
+/// synthesizes [`ToMaster::WorkerDown`] when the connection dies — the
+/// same sentinel an in-process worker's drop guard emits, so the master
+/// loop needs no transport-specific failure handling.
+pub struct TcpMaster {
+    streams: Vec<TcpStream>,
+    from_workers: Receiver<ToMaster>,
+    readers: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    meter: Arc<ByteMeter>,
+    io_s: f64,
+    down: bool,
+}
+
+impl TcpMaster {
+    /// Accept `p` worker connections on `listener`, send each its `Setup`
+    /// control frame (`spec` payload, worker id in the header, unmetered),
+    /// and wait for every `Ready` ack. `timeout` bounds the whole accept
+    /// phase and each handshake read (workers build their shards between
+    /// `Setup` and `Ready`, concurrently across connections).
+    pub fn accept(
+        listener: &TcpListener,
+        p: usize,
+        meter: Arc<ByteMeter>,
+        spec: &[u8],
+        timeout: Duration,
+    ) -> Result<TcpMaster> {
+        if p == 0 {
+            return Err(Error::Config("cannot accept zero workers".into()));
+        }
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + timeout;
+        let mut streams: Vec<TcpStream> = Vec::with_capacity(p);
+        while streams.len() < p {
+            match listener.accept() {
+                Ok((mut s, _peer)) => {
+                    s.set_nonblocking(false)?;
+                    let _ = s.set_nodelay(true);
+                    let k = streams.len() as u64;
+                    frame::write_frame(&mut s, &frame::encode_control(frame::TAG_SETUP, k, spec))?;
+                    streams.push(s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        listener.set_nonblocking(false)?;
+                        return Err(Error::Protocol(format!(
+                            "timed out waiting for workers: {}/{p} connected within {timeout:?}",
+                            streams.len()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    listener.set_nonblocking(false)?;
+                    return Err(e.into());
+                }
+            }
+        }
+        listener.set_nonblocking(false)?;
+        // Handshake: one Ready per worker. Serial reads are fine — the
+        // expensive part (shard construction) runs in the worker processes
+        // concurrently; each read gets a full timeout budget, enforced as
+        // a hard deadline even against a peer that dribbles half a frame
+        // and stalls (read_frame_deadline), so accept + handshake is
+        // always bounded.
+        for (k, s) in streams.iter_mut().enumerate() {
+            s.set_read_timeout(Some(READER_POLL))?;
+            let ready_deadline = Instant::now() + timeout;
+            let got = loop {
+                match frame::read_frame_deadline(s, Some(ready_deadline))? {
+                    FrameRead::TimedOut => {
+                        if Instant::now() >= ready_deadline {
+                            return Err(Error::Protocol(format!(
+                                "worker {k}: no Ready within {timeout:?}"
+                            )));
+                        }
+                    }
+                    other => break other,
+                }
+            };
+            match got {
+                FrameRead::Frame(f) => {
+                    let (tag, _epoch, worker, _payload) = frame::parts(&f)?;
+                    if tag != frame::TAG_READY || worker != k as u64 {
+                        return Err(Error::Protocol(format!(
+                            "worker {k}: bad handshake (tag {tag}, claimed id {worker})"
+                        )));
+                    }
+                }
+                FrameRead::Eof => {
+                    return Err(Error::Protocol(format!(
+                        "worker {k} hung up during handshake (likely failed to build its shard)"
+                    )))
+                }
+                FrameRead::TimedOut => unreachable!("boundary timeouts retried above"),
+            }
+        }
+        // Reader threads: forward decoded frames, meter them by wire size,
+        // map connection death to the WorkerDown sentinel.
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, from_workers) = std::sync::mpsc::channel::<ToMaster>();
+        let mut readers = Vec::with_capacity(p);
+        for (k, s) in streams.iter().enumerate() {
+            let mut rs = s.try_clone()?;
+            rs.set_read_timeout(Some(READER_POLL))?;
+            readers.push(std::thread::spawn(reader_loop(
+                rs,
+                k,
+                tx.clone(),
+                stop.clone(),
+                meter.clone(),
+            )));
+        }
+        drop(tx);
+        Ok(TcpMaster {
+            streams,
+            from_workers,
+            readers,
+            stop,
+            meter,
+            io_s: 0.0,
+            down: false,
+        })
+    }
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    worker: usize,
+    tx: Sender<ToMaster>,
+    stop: Arc<AtomicBool>,
+    meter: Arc<ByteMeter>,
+) -> impl FnOnce() {
+    move || loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match frame::read_frame(&mut stream) {
+            Ok(FrameRead::TimedOut) => continue,
+            Ok(FrameRead::Eof) | Err(_) => {
+                // Connection died (or the stream is corrupt): same failure
+                // class as a dead in-process worker. Suppressed during
+                // shutdown — workers closing after Stop is the clean path.
+                if !stop.load(Ordering::Relaxed) {
+                    let _ = tx.send(ToMaster::WorkerDown { worker });
+                }
+                return;
+            }
+            Ok(FrameRead::Frame(f)) => match frame::decode_to_master(&f) {
+                // A worker's own failure sentinel travels unmetered, just
+                // like the in-process drop guard's.
+                Ok(ToMaster::WorkerDown { worker: w }) => {
+                    let _ = tx.send(ToMaster::WorkerDown { worker: w });
+                    return;
+                }
+                Ok(msg) => {
+                    // Meter first, then forward: by the time the master
+                    // has received a message, its bytes are on the books
+                    // (matches the sender-side metering of the sim).
+                    meter.record(f.len() as u64);
+                    if tx.send(msg).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => {
+                    if !stop.load(Ordering::Relaxed) {
+                        let _ = tx.send(ToMaster::WorkerDown { worker });
+                    }
+                    return;
+                }
+            },
+        }
+    }
+}
+
+impl MasterTransport for TcpMaster {
+    fn p(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send(&mut self, worker: usize, msg: ToWorker) -> Result<()> {
+        let t = Instant::now();
+        let buf = frame::encode_to_worker(&msg);
+        // Meter before the write attempt, matching SimSender::send (which
+        // records even when the peer is gone) — keeps failure-path
+        // accounting identical across transports.
+        self.meter.record(buf.len() as u64);
+        let r = frame::write_frame(&mut self.streams[worker], &buf);
+        self.io_s += t.elapsed().as_secs_f64();
+        r.map_err(|_| {
+            Error::Protocol(format!("worker {worker} died (connection lost mid-send)"))
+        })
+    }
+
+    fn recv(&mut self) -> Result<ToMaster> {
+        let t = Instant::now();
+        let r = self.from_workers.recv();
+        self.io_s += t.elapsed().as_secs_f64();
+        r.map_err(|_| Error::Protocol("all workers disconnected mid-reduce".into()))
+    }
+
+    fn comm(&self) -> (u64, u64) {
+        self.meter.snapshot()
+    }
+
+    fn io_seconds(&self) -> f64 {
+        self.io_s
+    }
+
+    fn shutdown(&mut self) {
+        if self.down {
+            return;
+        }
+        self.down = true;
+        for s in &mut self.streams {
+            let msg = ToWorker::Stop;
+            let buf = frame::encode_to_worker(&msg);
+            self.meter.record(buf.len() as u64);
+            let _ = frame::write_frame(s, &buf);
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        for s in &self.streams {
+            // Both halves: the send direction still drains the queued Stop
+            // before the FIN (a worker that misses the frame observes clean
+            // EOF == Stop), and closing the read half forces any reader
+            // blocked mid-frame to see EOF immediately — without this, a
+            // peer stalled mid-frame could hold its reader (and this join)
+            // forever, since read_frame only polls the flag at frame
+            // boundaries.
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // Bounded join: readers wake at least every READER_POLL at frame
+        // boundaries, and the shutdown above unblocks mid-frame reads.
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        self.streams.clear();
+    }
+}
+
+impl Drop for TcpMaster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Worker endpoint over a TCP connection to the master.
+pub struct TcpWorker {
+    stream: TcpStream,
+    worker: usize,
+}
+
+impl TcpWorker {
+    /// Wrap an already-handshaken stream for worker `worker`.
+    pub fn new(stream: TcpStream, worker: usize) -> Self {
+        TcpWorker { stream, worker }
+    }
+
+    /// Best-effort `WorkerDown` notification before dying — the TCP
+    /// equivalent of the in-process drop guard. Failures are ignored: if
+    /// the master is already gone there is nobody left to deadlock.
+    pub fn send_down(&mut self) {
+        let msg = ToMaster::WorkerDown { worker: self.worker };
+        let _ = frame::write_frame(&mut self.stream, &frame::encode_to_master(&msg));
+    }
+}
+
+impl WorkerTransport for TcpWorker {
+    fn recv(&mut self) -> Result<ToWorker> {
+        match frame::read_frame(&mut self.stream)? {
+            FrameRead::Frame(f) => frame::decode_to_worker(&f),
+            // Master gone = clean shutdown at every protocol point.
+            FrameRead::Eof => Ok(ToWorker::Stop),
+            FrameRead::TimedOut => Err(Error::Protocol(format!(
+                "worker {}: master idle past the read timeout",
+                self.worker
+            ))),
+        }
+    }
+
+    fn send(&mut self, msg: ToMaster) -> Result<()> {
+        frame::write_frame(&mut self.stream, &frame::encode_to_master(&msg))
+            .map_err(|_| Error::Protocol("master gone".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_proc_pair_meters_like_the_sim() {
+        let meter = ByteMeter::new();
+        let (mut m, mut ws) = in_proc_pair(2, meter.clone());
+        assert_eq!(m.p(), 2);
+        let msg = ToWorker::Broadcast { epoch: 0, w: vec![0.0; 10] };
+        let bytes = msg.wire_bytes();
+        m.send(0, msg).unwrap();
+        match ws[0].recv().unwrap() {
+            ToWorker::Broadcast { epoch: 0, w } => assert_eq!(w.len(), 10),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(meter.snapshot(), (bytes, 1));
+        let up = ToMaster::WorkerDown { worker: 1 };
+        let up_bytes = up.wire_bytes();
+        ws[1].send(up).unwrap();
+        assert!(matches!(m.recv().unwrap(), ToMaster::WorkerDown { worker: 1 }));
+        assert_eq!(meter.snapshot(), (bytes + up_bytes, 2));
+    }
+
+    #[test]
+    fn in_proc_shutdown_sends_metered_stop_and_closes() {
+        let meter = ByteMeter::new();
+        let (mut m, mut ws) = in_proc_pair(1, meter.clone());
+        m.shutdown();
+        assert!(matches!(ws[0].recv().unwrap(), ToWorker::Stop));
+        // channel now closed: further recv maps to Stop (clean shutdown)
+        assert!(matches!(ws[0].recv().unwrap(), ToWorker::Stop));
+        assert_eq!(meter.snapshot(), (ToWorker::Stop.wire_bytes(), 1));
+    }
+
+    #[test]
+    fn in_proc_worker_drop_disconnects_master() {
+        let meter = ByteMeter::new();
+        let (mut m, ws) = in_proc_pair(2, meter);
+        drop(ws);
+        assert!(m.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_meters_actual_frame_sizes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let meter = ByteMeter::new();
+        let spec = b"spec".to_vec();
+        let client = std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut s = TcpStream::connect(addr).map_err(Error::Io)?;
+            // handshake: read Setup, ack Ready
+            let f = match frame::read_frame(&mut s)? {
+                FrameRead::Frame(f) => f,
+                other => return Err(Error::Protocol(format!("{other:?}"))),
+            };
+            let (tag, _e, k, payload) = frame::parts(&f)?;
+            assert_eq!(tag, frame::TAG_SETUP);
+            assert_eq!(payload, b"spec");
+            frame::write_frame(&mut s, &frame::encode_control(frame::TAG_READY, k, &[]))?;
+            let mut t = TcpWorker::new(s, k as usize);
+            let w = match t.recv()? {
+                ToWorker::Broadcast { w, .. } => w,
+                other => return Err(Error::Protocol(format!("{other:?}"))),
+            };
+            t.send(ToMaster::ShardGrad { worker: k as usize, epoch: 0, zsum: w.clone(), count: 3 })?;
+            // master shutdown: Stop frame, then EOF also reads as Stop
+            assert!(matches!(t.recv()?, ToWorker::Stop));
+            Ok(w)
+        });
+        let mut m =
+            TcpMaster::accept(&listener, 1, meter.clone(), &spec, Duration::from_secs(10)).unwrap();
+        let payload = vec![1.5, f64::NAN, -0.25];
+        let down = ToWorker::Broadcast { epoch: 0, w: payload.clone() };
+        let down_bytes = down.wire_bytes();
+        m.send(0, down).unwrap();
+        let up = m.recv().unwrap();
+        let up_bytes = match &up {
+            ToMaster::ShardGrad { zsum, count, .. } => {
+                assert_eq!(*count, 3);
+                assert_eq!(zsum[0], 1.5);
+                assert!(zsum[1].is_nan());
+                ToMaster::ShardGrad {
+                    worker: 0,
+                    epoch: 0,
+                    zsum: zsum.clone(),
+                    count: 3,
+                }
+                .wire_bytes()
+            }
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(m.comm(), (down_bytes + up_bytes, 2));
+        m.shutdown();
+        let echoed = client.join().unwrap().unwrap();
+        assert_eq!(echoed.len(), 3);
+        // + one metered Stop
+        let total = down_bytes + up_bytes + ToWorker::Stop.wire_bytes();
+        assert_eq!(m.comm(), (total, 3));
+    }
+
+    #[test]
+    fn tcp_accept_times_out_without_workers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let meter = ByteMeter::new();
+        let start = Instant::now();
+        let err = TcpMaster::accept(&listener, 1, meter, &[], Duration::from_millis(200))
+            .expect_err("must time out");
+        assert!(start.elapsed() < Duration::from_secs(10));
+        assert!(format!("{err}").contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn tcp_dead_connection_synthesizes_worker_down() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let meter = ByteMeter::new();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let f = match frame::read_frame(&mut s).unwrap() {
+                FrameRead::Frame(f) => f,
+                other => panic!("{other:?}"),
+            };
+            let (_, _, k, _) = frame::parts(&f).unwrap();
+            frame::write_frame(&mut s, &frame::encode_control(frame::TAG_READY, k, &[])).unwrap();
+            // die without a word — the master must notice
+        });
+        let mut m =
+            TcpMaster::accept(&listener, 1, meter.clone(), &[], Duration::from_secs(10)).unwrap();
+        client.join().unwrap();
+        let start = Instant::now();
+        assert!(matches!(m.recv().unwrap(), ToMaster::WorkerDown { worker: 0 }));
+        assert!(start.elapsed() < Duration::from_secs(10));
+        // death is not wire traffic
+        assert_eq!(m.comm(), (0, 0));
+        m.shutdown();
+    }
+}

@@ -113,6 +113,22 @@ impl Partitioner {
         }
     }
 
+    /// Parse a CLI/config strategy name (`uniform`, `skew75`, `separated`,
+    /// `replicated`). The canonical spelling set shared by `pscope train`,
+    /// the TOML config, and the TCP job spec — a remote worker replays the
+    /// master's split from exactly this name plus a seed.
+    pub fn parse(s: &str) -> crate::error::Result<Partitioner> {
+        match s {
+            "uniform" => Ok(Partitioner::Uniform),
+            "skew75" => Ok(Partitioner::LabelSkew75),
+            "separated" => Ok(Partitioner::LabelSeparated),
+            "replicated" => Ok(Partitioner::Replicated),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown partition {other:?} (expected uniform | skew75 | separated | replicated)"
+            ))),
+        }
+    }
+
     /// Paper tag.
     pub fn tag(self) -> &'static str {
         match self {

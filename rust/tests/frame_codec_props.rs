@@ -1,0 +1,196 @@
+//! Property tests for the binary wire codec (`net::frame`): encode/decode
+//! roundtrip for every `ToWorker`/`ToMaster` variant — including NaN
+//! payloads, ±inf, signed zeros and arbitrary bit patterns — and the
+//! frame-length == `wire_bytes()` identity that makes the TCP byte meter
+//! equal the modeled accounting.
+
+use pscope::coordinator::protocol::{ToMaster, ToWorker};
+use pscope::net::frame::{self, FrameRead};
+use pscope::rng::Rng;
+use pscope::testkit::prop;
+
+/// Adversarial float generator: specials, arbitrary bit patterns
+/// (NaN payloads, subnormals), and plain finite values.
+fn arb_f64(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => 0.0,
+        4 => -0.0,
+        5 => f64::from_bits(rng.next_u64()),
+        _ => rng.range(-1e9, 1e9),
+    }
+}
+
+fn arb_vec(rng: &mut Rng, shrink: u32) -> Vec<f64> {
+    let cap = 64usize >> shrink.min(3);
+    let len = rng.below(cap + 1);
+    (0..len).map(|_| arb_f64(rng)).collect()
+}
+
+/// Bitwise comparison (NaN-safe — `==` would reject equal NaNs).
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn arb_to_worker(rng: &mut Rng, shrink: u32) -> ToWorker {
+    match rng.below(3) {
+        0 => ToWorker::Broadcast { epoch: rng.below(1 << 20), w: arb_vec(rng, shrink) },
+        1 => ToWorker::FullGrad { epoch: rng.below(1 << 20), z: arb_vec(rng, shrink) },
+        _ => ToWorker::Stop,
+    }
+}
+
+fn arb_to_master(rng: &mut Rng, shrink: u32) -> ToMaster {
+    match rng.below(3) {
+        0 => ToMaster::ShardGrad {
+            worker: rng.below(64),
+            epoch: rng.below(1 << 20),
+            zsum: arb_vec(rng, shrink),
+            count: rng.below(1 << 30),
+        },
+        1 => ToMaster::LocalIterate {
+            worker: rng.below(64),
+            epoch: rng.below(1 << 20),
+            u: arb_vec(rng, shrink),
+            compute_s: arb_f64(rng),
+            materializations: rng.next_u64(),
+        },
+        _ => ToMaster::WorkerDown { worker: rng.below(64) },
+    }
+}
+
+fn same_to_worker(a: &ToWorker, b: &ToWorker) -> bool {
+    match (a, b) {
+        (ToWorker::Broadcast { epoch: e1, w: v1 }, ToWorker::Broadcast { epoch: e2, w: v2 }) => {
+            e1 == e2 && bits(v1) == bits(v2)
+        }
+        (ToWorker::FullGrad { epoch: e1, z: v1 }, ToWorker::FullGrad { epoch: e2, z: v2 }) => {
+            e1 == e2 && bits(v1) == bits(v2)
+        }
+        (ToWorker::Stop, ToWorker::Stop) => true,
+        _ => false,
+    }
+}
+
+fn same_to_master(a: &ToMaster, b: &ToMaster) -> bool {
+    match (a, b) {
+        (
+            ToMaster::ShardGrad { worker: w1, epoch: e1, zsum: v1, count: c1 },
+            ToMaster::ShardGrad { worker: w2, epoch: e2, zsum: v2, count: c2 },
+        ) => w1 == w2 && e1 == e2 && c1 == c2 && bits(v1) == bits(v2),
+        (
+            ToMaster::LocalIterate {
+                worker: w1,
+                epoch: e1,
+                u: v1,
+                compute_s: s1,
+                materializations: m1,
+            },
+            ToMaster::LocalIterate {
+                worker: w2,
+                epoch: e2,
+                u: v2,
+                compute_s: s2,
+                materializations: m2,
+            },
+        ) => {
+            w1 == w2 && e1 == e2 && m1 == m2 && s1.to_bits() == s2.to_bits() && bits(v1) == bits(v2)
+        }
+        (ToMaster::WorkerDown { worker: w1 }, ToMaster::WorkerDown { worker: w2 }) => w1 == w2,
+        _ => false,
+    }
+}
+
+#[test]
+fn prop_to_worker_roundtrip_and_length_identity() {
+    prop::check("ToWorker codec", 300, |rng, shrink| {
+        let msg = arb_to_worker(rng, shrink);
+        let buf = frame::encode_to_worker(&msg);
+        if buf.len() as u64 != msg.wire_bytes() {
+            return prop::that(
+                false,
+                format!("encoded {} bytes != wire_bytes {} for {msg:?}", buf.len(), msg.wire_bytes()),
+            );
+        }
+        match frame::decode_to_worker(&buf) {
+            Ok(back) => prop::that(
+                same_to_worker(&msg, &back),
+                format!("roundtrip mismatch: {msg:?} vs {back:?}"),
+            ),
+            Err(e) => prop::that(false, format!("decode failed: {e} for {msg:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_to_master_roundtrip_and_length_identity() {
+    prop::check("ToMaster codec", 300, |rng, shrink| {
+        let msg = arb_to_master(rng, shrink);
+        let buf = frame::encode_to_master(&msg);
+        if buf.len() as u64 != msg.wire_bytes() {
+            return prop::that(
+                false,
+                format!("encoded {} bytes != wire_bytes {} for {msg:?}", buf.len(), msg.wire_bytes()),
+            );
+        }
+        match frame::decode_to_master(&buf) {
+            Ok(back) => prop::that(
+                same_to_master(&msg, &back),
+                format!("roundtrip mismatch: {msg:?} vs {back:?}"),
+            ),
+            Err(e) => prop::that(false, format!("decode failed: {e} for {msg:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_framed_streams_roundtrip_and_reject_truncation() {
+    prop::check("framed stream", 120, |rng, shrink| {
+        let n_msgs = 1 + rng.below(6);
+        let msgs: Vec<ToMaster> = (0..n_msgs).map(|_| arb_to_master(rng, shrink)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            frame::write_frame(&mut wire, &frame::encode_to_master(m)).unwrap();
+        }
+        // the full stream reads back message-for-message, then clean EOF
+        let mut cur = std::io::Cursor::new(&wire[..]);
+        for (i, m) in msgs.iter().enumerate() {
+            let f = match frame::read_frame(&mut cur) {
+                Ok(FrameRead::Frame(f)) => f,
+                other => return prop::that(false, format!("msg {i}: expected frame, got {other:?}")),
+            };
+            let back = match frame::decode_to_master(&f) {
+                Ok(b) => b,
+                Err(e) => return prop::that(false, format!("msg {i}: decode failed: {e}")),
+            };
+            if !same_to_master(m, &back) {
+                return prop::that(false, format!("msg {i}: {m:?} vs {back:?}"));
+            }
+        }
+        if !matches!(frame::read_frame(&mut cur), Ok(FrameRead::Eof)) {
+            return prop::that(false, "no clean EOF at stream end".to_string());
+        }
+        // cutting the stream anywhere mid-frame must be an error, never a
+        // silent truncation: drop 1..=8 trailing bytes (every frame is
+        // ≥ 24 bytes, so the cut always lands inside the final frame)
+        let cut = wire.len() - (1 + rng.below(8));
+        let mut cur = std::io::Cursor::new(&wire[..cut]);
+        loop {
+            match frame::read_frame(&mut cur) {
+                Ok(FrameRead::Frame(_)) => continue, // earlier intact frames are fine
+                Ok(FrameRead::Eof) => {
+                    // only legal if the cut landed exactly on a frame
+                    // boundary — impossible here: we removed at least one
+                    // byte of the final frame
+                    return prop::that(false, format!("truncated stream (cut at {cut}) read as clean EOF"));
+                }
+                Ok(FrameRead::TimedOut) => {
+                    return prop::that(false, "cursor cannot time out".to_string())
+                }
+                Err(_) => return prop::that(true, ""),
+            }
+        }
+    });
+}

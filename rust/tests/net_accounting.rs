@@ -1,14 +1,19 @@
-//! Simulated-interconnect accounting: a `train_with` run moves exactly
-//! O(1) communication rounds and O(p·d) bytes per outer epoch — the
-//! paper's communication-efficiency claim (§5, contrasted with minibatch
-//! methods' O(n/b) rounds), pinned to the byte.
+//! Interconnect accounting: a `train_with` run moves exactly O(1)
+//! communication rounds and O(p·d) bytes per outer epoch — the paper's
+//! communication-efficiency claim (§5, contrasted with minibatch methods'
+//! O(n/b) rounds), pinned to the byte — and the real-TCP transport
+//! reproduces both the trajectory and the byte totals bit-for-bit, with
+//! the meter fed by actual bytes on the wire.
+
+use std::time::{Duration, Instant};
 
 use pscope::config::{Model, PscopeConfig};
 use pscope::coordinator::protocol::{vec_bytes, MSG_HEADER_BYTES};
+use pscope::coordinator::remote::{serve_worker, MasterEndpoint, RunSpec};
 use pscope::coordinator::train_with;
 use pscope::data::synth;
 use pscope::loss::Reg;
-use pscope::net::NetModel;
+use pscope::net::{frame, NetModel};
 use pscope::partition::Partitioner;
 
 /// Exact wire bytes of one outer epoch with `p` workers over `d` features:
@@ -68,6 +73,154 @@ fn per_epoch_bytes_scale_with_d_not_n() {
     let (b_big, m_big) = run(&big, 4, epochs);
     assert_eq!(b_small, b_big, "per-epoch bytes depend on n");
     assert_eq!(m_small, m_big, "per-epoch rounds depend on n");
+}
+
+// ---- real-TCP transport: parity with the simulation ---------------------
+
+/// Spin up a loopback cluster — master endpoint + `p` worker *threads*
+/// each running the genuine `pscope worker` client over real sockets —
+/// and train.
+fn tcp_train(
+    ds: &pscope::data::Dataset,
+    part: &pscope::partition::Partition,
+    cfg: &PscopeConfig,
+    data_seed: u64,
+    part_seed: u64,
+) -> pscope::coordinator::TrainOutput {
+    let spec =
+        RunSpec::derive(ds, part, cfg, "tiny", data_seed, "uniform", part_seed, None).unwrap();
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..part.p())
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || serve_worker(&addr, Duration::from_secs(30)))
+        })
+        .collect();
+    let out = ep
+        .train(ds, part, cfg, NetModel::ten_gbe(), &spec, Duration::from_secs(30))
+        .unwrap();
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+    out
+}
+
+#[test]
+fn tcp_loopback_is_bit_identical_to_inproc() {
+    // Same seed/config/partition ⇒ the TCP run must reproduce the InProc
+    // run exactly: final iterate bit-for-bit, meter totals to the byte.
+    let (data_seed, part_seed, p, epochs) = (21u64, 1u64, 3usize, 4usize);
+    let ds = synth::tiny(data_seed).generate();
+    let cfg = PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let inproc = train_with(&ds, &part, &cfg, None, NetModel::ten_gbe()).unwrap();
+    let tcp = tcp_train(&ds, &part, &cfg, data_seed, part_seed);
+
+    assert_eq!(inproc.w.len(), tcp.w.len());
+    for j in 0..inproc.w.len() {
+        assert_eq!(
+            inproc.w[j].to_bits(),
+            tcp.w[j].to_bits(),
+            "coord {j}: inproc {} vs tcp {}",
+            inproc.w[j],
+            tcp.w[j]
+        );
+    }
+    assert_eq!(inproc.epochs_run, tcp.epochs_run);
+    assert_eq!(inproc.materializations, tcp.materializations);
+    assert_eq!(inproc.comm, tcp.comm, "byte-meter totals differ across transports");
+    // per-epoch objectives equal bit-for-bit too (same trace shape)
+    assert_eq!(inproc.trace.points.len(), tcp.trace.points.len());
+    for (a, b) in inproc.trace.points.iter().zip(&tcp.trace.points) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "epoch {}", a.epoch);
+        assert_eq!((a.comm_bytes, a.comm_msgs), (b.comm_bytes, b.comm_msgs), "epoch {}", a.epoch);
+    }
+}
+
+#[test]
+fn tcp_measured_bytes_equal_modeled_accounting_exactly() {
+    // Over TCP the meter is fed by actual frame sizes; the total must
+    // still equal the modeled 4·p·d·8 (+headers) per epoch, + Stop each.
+    let (p, epochs) = (2usize, 3usize);
+    let ds = synth::tiny(27).generate();
+    let d = ds.d();
+    let cfg = PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, p, 1);
+    let out = tcp_train(&ds, &part, &cfg, 27, 1);
+    let expect_bytes = epochs as u64 * epoch_bytes(p, d) + p as u64 * MSG_HEADER_BYTES;
+    let expect_msgs = epochs as u64 * 4 * p as u64 + p as u64;
+    assert_eq!(out.comm.0, expect_bytes, "measured wire bytes != modeled accounting");
+    assert_eq!(out.comm.1, expect_msgs, "measured message count != modeled accounting");
+}
+
+#[test]
+fn killed_tcp_worker_is_protocol_error_within_timeout_not_hang() {
+    // One real worker + one impostor that completes the handshake and then
+    // drops the connection. The master must surface Error::Protocol fast
+    // (the WorkerDown mapping), and the surviving worker must drain
+    // cleanly — no hung reduce loop, no leaked thread.
+    let (data_seed, part_seed, p) = (26u64, 1u64, 2usize);
+    let ds = synth::tiny(data_seed).generate();
+    let cfg = PscopeConfig {
+        p,
+        outer_iters: 50,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let spec =
+        RunSpec::derive(&ds, &part, &cfg, "tiny", data_seed, "uniform", part_seed, None).unwrap();
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+
+    let survivor = {
+        let addr = addr.clone();
+        std::thread::spawn(move || serve_worker(&addr, Duration::from_secs(30)))
+    };
+    let impostor = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        let setup = match frame::read_frame(&mut s).unwrap() {
+            frame::FrameRead::Frame(f) => f,
+            other => panic!("expected Setup, got {other:?}"),
+        };
+        let (tag, _epoch, k, _payload) = frame::parts(&setup).unwrap();
+        assert_eq!(tag, frame::TAG_SETUP);
+        frame::write_frame(&mut s, &frame::encode_control(frame::TAG_READY, k, &[])).unwrap();
+        // die mid-epoch without a word — the connection drop is the signal
+    });
+
+    let start = Instant::now();
+    let err = ep
+        .train(&ds, &part, &cfg, NetModel::zero(), &spec, Duration::from_secs(30))
+        .expect_err("a dead worker must fail the run");
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "master took {:?} to notice the dead worker",
+        start.elapsed()
+    );
+    assert!(
+        matches!(err, pscope::error::Error::Protocol(_)),
+        "expected Error::Protocol, got {err:?}"
+    );
+    assert!(format!("{err}").contains("died"), "unexpected message: {err}");
+
+    impostor.join().unwrap();
+    // the surviving worker drains on Stop/EOF — a clean exit, not an error
+    survivor.join().unwrap().unwrap();
 }
 
 #[test]
