@@ -43,7 +43,7 @@ fn main() {
     println!("γ̂(π; ε) on Lasso ({} n={} d={}):", ds_lasso.name, ds_lasso.n(), ds_lasso.d());
     println!("{:<18} {:>12} {:>14}", "partition", "gamma_hat", "gap@optimum");
     let mut gammas = Vec::new();
-    for strat in Partitioner::all() {
+    for strat in Partitioner::all_with_engineered() {
         let part = strat.split(&ds_lasso, 8, 3);
         let rep = analyze(&ds_lasso, &part, Model::Lasso.loss(), reg_lasso, &gopts);
         println!("{:<18} {:>12.4e} {:>14.4e}", rep.tag, rep.gamma_hat, rep.gap_at_optimum);

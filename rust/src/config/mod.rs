@@ -134,6 +134,12 @@ pub struct PscopeConfig {
     /// (0 = auto: available cores / p). The blocked reduction is
     /// bit-identical at every thread count, so this is purely a speed knob.
     pub grad_threads: usize,
+    /// Default partition strategy name (see
+    /// [`Partitioner::parse`](crate::partition::Partitioner::parse));
+    /// the `--partition` CLI flag overrides it. Stored as the canonical
+    /// name because that string — not the split itself — is what the TCP
+    /// job spec ships for workers to replay.
+    pub partition: String,
     /// Which wire the coordinator runs on. `InProc` and `Tcp` (loopback)
     /// produce bit-identical trajectories and byte-meter totals for the
     /// same seed/config/partition.
@@ -156,6 +162,7 @@ impl Default for PscopeConfig {
             target_objective: f64::NEG_INFINITY,
             record_every: 1,
             grad_threads: 1,
+            partition: "uniform".into(),
             transport: TransportKind::InProc,
         }
     }
@@ -209,6 +216,13 @@ impl PscopeConfig {
                 "tol" => self.tol = v.as_f64_or()?,
                 "record_every" => self.record_every = v.as_usize_or()?.max(1),
                 "grad_threads" => self.grad_threads = v.as_usize_or()?,
+                "partition" => {
+                    let name = v.as_str_or()?;
+                    // validate eagerly so a typo fails at config load, not
+                    // at job launch
+                    crate::partition::Partitioner::parse(name)?;
+                    self.partition = name.to_string();
+                }
                 "transport" => self.transport = TransportKind::parse(v.as_str_or()?)?,
                 other => {
                     return Err(Error::Config(format!("unknown config key {other:?}")));
@@ -267,6 +281,17 @@ mod tests {
     fn model_parse() {
         assert_eq!(Model::parse("lr").unwrap(), Model::Logistic);
         assert!(Model::parse("svm").is_err());
+    }
+
+    #[test]
+    fn partition_key_validated_in_toml() {
+        let mut c = PscopeConfig::default();
+        assert_eq!(c.partition, "uniform");
+        c.apply_toml("partition = \"engineered\"\n").unwrap();
+        assert_eq!(c.partition, "engineered");
+        assert!(c.apply_toml("partition = \"diagonal\"\n").is_err());
+        // the failed apply must not clobber the previous value
+        assert_eq!(c.partition, "engineered");
     }
 
     #[test]

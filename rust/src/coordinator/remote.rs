@@ -20,7 +20,11 @@
 //! `(n, d, nnz)` fingerprint and every worker validates its
 //! reconstruction against it, so a node that resolves the name
 //! differently (missing file → same-named preset) fails loudly instead
-//! of training on divergent data.
+//! of training on divergent data. The spec also carries the master's
+//! [`Partition::fingerprint`] digest; each worker replays the split and
+//! validates the digest before training, which pins the whole
+//! deterministic-regeneration path — including the `engineered`
+//! strategy's full sketch → assign → refine search — end to end.
 //!
 //! ## Handshake
 //!
@@ -59,8 +63,8 @@ use crate::rng::Rng;
 
 /// Spec version stamped into every `Setup` payload; bumped on layout
 /// changes so mismatched binaries fail with a clear error instead of
-/// garbage decoding.
-const SPEC_VERSION: u64 = 1;
+/// garbage decoding. v2 added `part_fingerprint`.
+const SPEC_VERSION: u64 = 2;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -78,6 +82,13 @@ pub struct RunSpec {
     pub partition: String,
     /// Partition split seed.
     pub part_seed: u64,
+    /// [`Partition::fingerprint`] of the master's split. Workers replay
+    /// the split from `(partition, part_seed)` and validate the digest,
+    /// so any divergence in the deterministic regeneration path — most
+    /// valuable for the searched `engineered` strategy, where the split
+    /// is the output of a whole construction pipeline — fails loudly
+    /// before training instead of silently training on different shards.
+    pub part_fingerprint: u64,
     /// Dataset fingerprint `(n, d, nnz)` of the master's copy. Workers
     /// validate their reconstruction against it, so a node that silently
     /// resolves `dataset` differently (e.g. the master loaded
@@ -131,6 +142,7 @@ impl RunSpec {
             data_seed,
             partition: partition.to_string(),
             part_seed,
+            part_fingerprint: part.fingerprint(),
             fingerprint: (ds.n() as u64, ds.d() as u64, ds.nnz() as u64),
             p: part.p(),
             model: cfg.model,
@@ -152,6 +164,7 @@ impl RunSpec {
             SPEC_VERSION,
             self.data_seed,
             self.part_seed,
+            self.part_fingerprint,
             self.fingerprint.0,
             self.fingerprint.1,
             self.fingerprint.2,
@@ -191,6 +204,7 @@ impl RunSpec {
         }
         let data_seed = c.u64()?;
         let part_seed = c.u64()?;
+        let part_fingerprint = c.u64()?;
         let fingerprint = (c.u64()?, c.u64()?, c.u64()?);
         let p = c.usize()?;
         let seed = c.u64()?;
@@ -219,6 +233,7 @@ impl RunSpec {
             data_seed,
             partition,
             part_seed,
+            part_fingerprint,
             fingerprint,
             p,
             model,
@@ -305,6 +320,14 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
         )));
     }
     let part = Partitioner::parse(&spec.partition)?.split(&ds, spec.p, spec.part_seed);
+    let local_fp = part.fingerprint();
+    if local_fp != spec.part_fingerprint {
+        return Err(Error::Config(format!(
+            "partition {:?} (seed {}) regenerated differently on this node: fingerprint \
+             {local_fp:#018x} vs master's {:#018x} — mismatched pscope builds?",
+            spec.partition, spec.part_seed, spec.part_fingerprint
+        )));
+    }
     let rows = &part.assignment[k];
     if rows.is_empty() {
         return Err(Error::Config(format!("worker {k} got an empty shard")));
@@ -380,6 +403,13 @@ pub fn serve_worker(addr: &str, timeout: Duration) -> Result<()> {
         .map_err(|_| Error::Protocol("worker id overflows usize".into()))?;
     let spec = RunSpec::decode(payload)?;
     let mut wk = build_worker(&spec, k)?;
+    // the digest below was validated against the regenerated split by
+    // build_worker — printed so operators (and CI) can cross-check it
+    // against the master's "partition ... fingerprint" line
+    println!(
+        "worker {k}: partition {} fingerprint {:#018x} verified",
+        spec.partition, spec.part_fingerprint
+    );
     frame::write_frame(&mut stream, &frame::encode_control(frame::TAG_READY, worker, &[]))?;
     // Data plane: block on the master's pace (objective evaluation between
     // epochs can take arbitrarily long; EOF covers master death).
@@ -560,6 +590,7 @@ mod tests {
             data_seed: 7,
             partition: "uniform".into(),
             part_seed: 3,
+            part_fingerprint: 0xDEAD_BEEF_0123_4567,
             fingerprint: (200, 50, 1234),
             p: 4,
             model: Model::Lasso,
@@ -628,6 +659,27 @@ mod tests {
             assert_eq!(wk.shard.x.indices, expect.x.indices, "worker {k} indices");
         }
         assert!(build_worker(&spec, 3).is_err(), "id out of range accepted");
+    }
+
+    #[test]
+    fn build_worker_rejects_divergent_partition() {
+        let ds = synth::tiny(13).generate();
+        let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        for name in ["uniform", "engineered"] {
+            let part = Partitioner::parse(name).unwrap().split(&ds, 2, 4);
+            let mut spec =
+                RunSpec::derive(&ds, &part, &cfg, "tiny", 13, name, 4, None).unwrap();
+            assert_eq!(spec.part_fingerprint, part.fingerprint());
+            // the regenerated split matches an honest spec...
+            build_worker(&spec, 0).unwrap();
+            // ...and a single flipped digest bit is detected before training
+            spec.part_fingerprint ^= 1;
+            let err = build_worker(&spec, 0).unwrap_err();
+            assert!(
+                format!("{err}").contains("regenerated differently"),
+                "{name}: {err}"
+            );
+        }
     }
 
     #[test]

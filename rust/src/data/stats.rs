@@ -1,7 +1,13 @@
 //! Dataset statistics — printed by `pscope info` and recorded in traces so
-//! every experiment documents the data it actually ran on.
+//! every experiment documents the data it actually ran on — plus the
+//! per-row **feature sketches** the partition-construction engine
+//! ([`crate::partition::engine`]) streams over the data: a compact
+//! curvature signature (label, squared norm, bucketed per-feature mass)
+//! cheap enough to compute in one CSR pass and rich enough to drive the
+//! closed-form goodness proxy.
 
 use super::Dataset;
+use crate::rng::splitmix64;
 
 /// Summary statistics of a dataset.
 #[derive(Clone, Debug)]
@@ -63,6 +69,99 @@ impl std::fmt::Display for DatasetStats {
     }
 }
 
+/// Feature → bucket map for per-row curvature sketches.
+///
+/// The `top` heaviest features (by total squared mass `Σᵢ xᵢⱼ²`) each get
+/// a dedicated bucket — they dominate the diagonal curvature the goodness
+/// proxy cares about — and every remaining feature is hashed into one of
+/// `tail` shared buckets, so a sketch is `O(top + tail)` wide regardless
+/// of `d`. Deterministic in the dataset alone (ties rank by feature
+/// index), which is what lets a remote worker rebuild the identical plan
+/// from the regenerated dataset.
+#[derive(Clone, Debug)]
+pub struct SketchPlan {
+    /// Bucket id per feature, length `d`.
+    pub bucket_of: Vec<u32>,
+    /// Total buckets (`≤ top + tail`).
+    pub n_buckets: usize,
+    /// Dedicated (top-feature) buckets in this plan.
+    pub top: usize,
+}
+
+/// Rank features by total squared mass and build the bucket map.
+///
+/// `top` is clamped to `d`; `tail` is ignored when every feature already
+/// has a dedicated bucket.
+pub fn sketch_plan(ds: &Dataset, top: usize, tail: usize) -> SketchPlan {
+    let d = ds.d();
+    let mut col_mass = vec![0.0f64; d];
+    for i in 0..ds.n() {
+        let row = ds.x.row(i);
+        for k in 0..row.idx.len() {
+            let v = row.val[k];
+            col_mass[row.idx[k] as usize] += v * v;
+        }
+    }
+    let top = top.min(d);
+    let mut order: Vec<usize> = (0..d).collect();
+    // heaviest first; ties broken by feature index so the plan is a pure
+    // function of the dataset (total_cmp: even NaN-poisoned masses from a
+    // degenerate input file must rank deterministically, not panic)
+    order.sort_by(|&a, &b| col_mass[b].total_cmp(&col_mass[a]).then(a.cmp(&b)));
+    let tail = if d > top { tail.max(1) } else { 0 };
+    let n_buckets = top + tail;
+    let mut bucket_of = vec![0u32; d];
+    for (rank, &j) in order.iter().enumerate() {
+        bucket_of[j] = if rank < top {
+            rank as u32
+        } else {
+            let mut s = j as u64;
+            (top + (splitmix64(&mut s) % tail as u64) as usize) as u32
+        };
+    }
+    SketchPlan { bucket_of, n_buckets, top }
+}
+
+/// One row's sketch: the inputs the partition engine assigns and swaps on.
+#[derive(Clone, Debug)]
+pub struct RowSketch {
+    /// Label sign (`y > 0`); regression rows report `y > 0` too, which
+    /// still stratifies target sign.
+    pub positive: bool,
+    /// Squared row norm (total curvature mass, loss-constant aside).
+    pub nrm2_sq: f64,
+    /// Bucketed squared mass: `(bucket, Σ xᵢⱼ² over features in bucket)`,
+    /// sorted by bucket, duplicates merged.
+    pub mass: Vec<(u32, f64)>,
+}
+
+/// Stream all row sketches in one CSR pass.
+pub fn row_sketches(ds: &Dataset, plan: &SketchPlan) -> Vec<RowSketch> {
+    let mut out = Vec::with_capacity(ds.n());
+    for i in 0..ds.n() {
+        let row = ds.x.row(i);
+        let mut mass: Vec<(u32, f64)> = Vec::with_capacity(row.idx.len().min(plan.n_buckets));
+        let mut nrm2 = 0.0;
+        for k in 0..row.idx.len() {
+            let v = row.val[k];
+            let m = v * v;
+            nrm2 += m;
+            let b = plan.bucket_of[row.idx[k] as usize];
+            match mass.iter_mut().find(|(eb, _)| *eb == b) {
+                Some((_, em)) => *em += m,
+                None => mass.push((b, m)),
+            }
+        }
+        mass.sort_unstable_by_key(|&(b, _)| b);
+        out.push(RowSketch {
+            positive: ds.y[i] > 0.0,
+            nrm2_sq: nrm2,
+            mass,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +184,58 @@ mod tests {
         let ds = synth::tiny(1).generate();
         let s = format!("{}", compute(&ds));
         assert!(s.contains("density"));
+    }
+
+    #[test]
+    fn sketch_plan_covers_every_feature() {
+        let ds = synth::tiny(3).generate();
+        let plan = sketch_plan(&ds, 16, 8);
+        assert_eq!(plan.bucket_of.len(), ds.d());
+        assert_eq!(plan.n_buckets, 24);
+        assert!(plan.bucket_of.iter().all(|&b| (b as usize) < plan.n_buckets));
+        // the 16 dedicated buckets are each used by exactly one feature
+        for b in 0..plan.top {
+            let owners = plan.bucket_of.iter().filter(|&&x| x as usize == b).count();
+            assert_eq!(owners, 1, "bucket {b} owned by {owners} features");
+        }
+    }
+
+    #[test]
+    fn sketch_plan_dedicates_all_when_d_small() {
+        let ds = synth::tiny(3).generate(); // d = 50
+        let plan = sketch_plan(&ds, 100, 8);
+        assert_eq!(plan.top, ds.d());
+        assert_eq!(plan.n_buckets, ds.d());
+    }
+
+    #[test]
+    fn row_sketch_mass_conserves_row_norm() {
+        let ds = synth::tiny(4).generate();
+        let plan = sketch_plan(&ds, 16, 8);
+        let sk = row_sketches(&ds, &plan);
+        assert_eq!(sk.len(), ds.n());
+        for (i, s) in sk.iter().enumerate() {
+            let total: f64 = s.mass.iter().map(|&(_, m)| m).sum();
+            assert!(
+                (total - s.nrm2_sq).abs() < 1e-12 * (1.0 + s.nrm2_sq),
+                "row {i}: bucket mass {total} != ||x||^2 {}",
+                s.nrm2_sq
+            );
+            assert_eq!(s.positive, ds.y[i] > 0.0);
+            // buckets sorted and unique
+            for w in s.mass.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn sketches_deterministic() {
+        let ds = synth::tiny(5).generate();
+        let a = row_sketches(&ds, &sketch_plan(&ds, 16, 8));
+        let b = row_sketches(&ds, &sketch_plan(&ds, 16, 8));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.mass, y.mass);
+        }
     }
 }

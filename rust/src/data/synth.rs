@@ -242,8 +242,21 @@ pub fn tiny(seed: u64) -> SynthSpec {
     }
 }
 
+/// `tiny` with class-conditional curvature (`class_scale = 3`): the
+/// label-skew-sensitive instance the partition studies run on — label
+/// imbalance across shards translates directly into the `(m − m_k)²/m_k`
+/// curvature spread of §A.2, so π₂/π₃ score badly and there is real
+/// headroom for [`crate::partition::engine`] to beat uniform π₁.
+pub fn tiny_skew(seed: u64) -> SynthSpec {
+    SynthSpec {
+        name: "tiny_skew".into(),
+        class_scale: 3.0,
+        ..tiny(seed)
+    }
+}
+
 /// Look up a preset by name (`cov_like`, `rcv1_like`, `avazu_like`,
-/// `kdd2012_like`, `tiny`).
+/// `kdd2012_like`, `tiny`, `tiny_skew`).
 pub fn preset(name: &str, seed: u64) -> Option<SynthSpec> {
     Some(match name {
         "cov_like" => cov_like(seed),
@@ -251,6 +264,7 @@ pub fn preset(name: &str, seed: u64) -> Option<SynthSpec> {
         "avazu_like" => avazu_like(seed),
         "kdd2012_like" => kdd2012_like(seed),
         "tiny" => tiny(seed),
+        "tiny_skew" => tiny_skew(seed),
         _ => return None,
     })
 }
@@ -322,9 +336,21 @@ mod tests {
 
     #[test]
     fn presets_resolve() {
-        for name in ["cov_like", "rcv1_like", "avazu_like", "kdd2012_like", "tiny"] {
+        for name in [
+            "cov_like",
+            "rcv1_like",
+            "avazu_like",
+            "kdd2012_like",
+            "tiny",
+            "tiny_skew",
+        ] {
             assert!(preset(name, 0).is_some(), "{name}");
         }
         assert!(preset("nope", 0).is_none());
+        // tiny_skew differs from tiny only by the class-conditional scale
+        let a = tiny(3).generate();
+        let b = tiny_skew(3).generate();
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.x.values, b.x.values);
     }
 }

@@ -21,9 +21,12 @@
 //!   `O(nnz(x_i))` instead of `O(d)`, plus every serial solver the baselines
 //!   need (FISTA, OWL-QN, SGD, CD, SDCA, ADMM).
 //! * [`partition`] — partition strategies (π*, uniform π₁, skewed π₂/π₃,
-//!   feature partitions) and the **partition-goodness analyzer** that
+//!   feature partitions), the **partition-goodness analyzer** that
 //!   measures the paper's local–global gap `l_π(a)` and goodness constant
-//!   `γ(π; ε)` (Definitions 4–5).
+//!   `γ(π; ε)` (Definitions 4–5), and the **partition engine**
+//!   ([`partition::engine`]) that *constructs* a low-γ partition by
+//!   sketch → stratified assignment → proxy-guided refinement — the
+//!   theory's production lever (DESIGN.md §8).
 //! * [`baselines`] — the six §7.1 comparison systems (dist-FISTA,
 //!   dist-mOWL-QN, DFAL, AsyProx-SVRG, ProxCOCOA+, DBCD) behind one trait.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas HLO

@@ -12,6 +12,9 @@
 //!                        the wire, needs no other flags)
 //! pscope info           --dataset rcv1_like
 //! pscope partition-eval --dataset tiny --p 8
+//! pscope partition      --dataset tiny_skew --p 8
+//!                       (search for a low-γ partition and emit a JSON
+//!                        goodness report under bench_out/)
 //! pscope gen-data       --dataset rcv1_like --out data/rcv1_like.libsvm
 //! pscope artifacts      (inspect artifacts/manifest.json + PJRT smoke run)
 //! ```
@@ -54,7 +57,11 @@ fn train_flags() -> Vec<FlagSpec> {
         flag("m", "inner steps M (0 = 2n/p)", Some("0")),
         flag("eta", "learning rate (0 = auto)", Some("0")),
         flag("backend", "sparse | dense | xla", Some("sparse")),
-        flag("partition", "uniform | skew75 | separated | replicated", Some("uniform")),
+        flag(
+            "partition",
+            "uniform | skew75 | separated | replicated | engineered",
+            Some("uniform"),
+        ),
         flag("seed", "PRNG seed", Some("42")),
         flag("config", "TOML config file overriding defaults", None),
         flag("trace-out", "write per-epoch CSV here", None),
@@ -79,10 +86,19 @@ fn build_job(args: &Args) -> Result<Job> {
     if let Some(b) = args.get("backend") {
         cfg.backend = WorkerBackend::parse(b)?;
     }
-    let partition_name = args.get("partition").unwrap_or("uniform").to_string();
+    let partition_name = args
+        .get("partition")
+        .unwrap_or(cfg.partition.as_str())
+        .to_string();
     let partitioner = Partitioner::parse(&partition_name)?;
     println!("dataset {name}: n={} d={} nnz={}", ds.n(), ds.d(), ds.nnz());
     let part = partitioner.split(&ds, cfg.p, seed);
+    // the digest a TCP worker must reproduce (its log prints the same line)
+    println!(
+        "partition {partition_name}: p={} fingerprint {:#018x}",
+        cfg.p,
+        part.fingerprint()
+    );
     let artifact_dir = if cfg.backend == WorkerBackend::Xla {
         Some("artifacts".to_string())
     } else {
@@ -314,6 +330,155 @@ fn run_partition_eval(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_partition_study() -> Command {
+    Command {
+        name: "partition",
+        about: "engineer a low-γ partition and report proxy + measured goodness for \
+                every strategy (JSON report under bench_out/)",
+        flags: vec![
+            flag("dataset", "preset name or data/<name>.libsvm stem", Some("tiny_skew")),
+            flag("model", "logistic | lasso", Some("logistic")),
+            flag("p", "workers", Some("8")),
+            flag("seed", "PRNG seed", Some("42")),
+            flag("out", "JSON report path", Some("bench_out/partition_<dataset>_p<p>.json")),
+            switch("quick", "fewer probes / FISTA iterations for the measured γ̂"),
+            switch("skip-measure", "proxy-only sweep (no FISTA solves; fast on big data)"),
+        ],
+    }
+}
+
+fn run_partition_study(raw: &[String]) -> Result<()> {
+    use pscope::json::Json;
+    use pscope::partition::engine::{self, EngineOpts};
+    use std::collections::BTreeMap;
+
+    let args = cmd_partition_study().parse(raw)?;
+    let name = args.get("dataset").unwrap_or("tiny_skew");
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let ds = load_or_synth(name, seed)?;
+    let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
+    let cfg = PscopeConfig::for_dataset(name, model);
+    let p: usize = args.get_parse("p", 8usize)?;
+    let eopts = EngineOpts::default();
+    let gopts = if args.has("quick") {
+        goodness::GoodnessOpts::quick()
+    } else {
+        Default::default()
+    };
+    println!(
+        "partition study on {name} (n={} d={} nnz={}), p={p}, model {}",
+        ds.n(),
+        ds.d(),
+        ds.nnz(),
+        model.name()
+    );
+
+    let (engineered, report) = engine::engineer_with(&ds, p, seed, &eopts);
+    println!(
+        "engine: {} buckets, proxy γ {:.4e} → {:.4e} ({} of {} swaps accepted)",
+        report.n_buckets,
+        report.proxy_gamma_seed,
+        report.proxy_gamma_final,
+        report.accepted,
+        report.proposals
+    );
+
+    let mut table = pscope::bench_util::Table::new(
+        &format!("partition study {name}"),
+        &["partition", "proxy_gamma", "gamma_hat", "gap@optimum", "imbalance", "fingerprint"],
+    );
+    let mut rows_json: Vec<Json> = Vec::new();
+    // sketch once; the proxy only re-accumulates shard diagonals per strategy
+    let psketch = engine::ProxySketch::new(&ds, &eopts);
+    for strat in Partitioner::all_with_engineered() {
+        let part = if strat == Partitioner::Engineered {
+            engineered.clone()
+        } else {
+            strat.split(&ds, p, seed)
+        };
+        let proxy = psketch.gamma(&part);
+        let measured = if args.has("skip-measure") {
+            None
+        } else {
+            Some(goodness::analyze(&ds, &part, model.loss(), cfg.reg, &gopts))
+        };
+        let sizes: Vec<usize> = part.assignment.iter().map(|a| a.len()).collect();
+        let (mn, mx) = (
+            *sizes.iter().min().unwrap_or(&1),
+            *sizes.iter().max().unwrap_or(&1),
+        );
+        let imbalance = mx as f64 / mn.max(1) as f64 - 1.0;
+        table.row(&[
+            part.tag.clone(),
+            format!("{proxy:.4e}"),
+            measured
+                .as_ref()
+                .map(|r| format!("{:.4e}", r.gamma_hat))
+                .unwrap_or_else(|| "-".into()),
+            measured
+                .as_ref()
+                .map(|r| format!("{:.4e}", r.gap_at_optimum))
+                .unwrap_or_else(|| "-".into()),
+            format!("{imbalance:.3}"),
+            format!("{:#018x}", part.fingerprint()),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("partition".into(), Json::Str(part.tag.clone()));
+        row.insert("proxy_gamma".into(), Json::Num(proxy));
+        row.insert(
+            "gamma_hat".into(),
+            measured.as_ref().map(|r| Json::Num(r.gamma_hat)).unwrap_or(Json::Null),
+        );
+        row.insert(
+            "gap_at_optimum".into(),
+            measured
+                .as_ref()
+                .map(|r| Json::Num(r.gap_at_optimum))
+                .unwrap_or(Json::Null),
+        );
+        row.insert("imbalance".into(), Json::Num(imbalance));
+        row.insert(
+            "shard_sizes".into(),
+            Json::Arr(sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        row.insert(
+            "fingerprint".into(),
+            Json::Str(format!("{:#018x}", part.fingerprint())),
+        );
+        rows_json.push(Json::Obj(row));
+    }
+    table.emit();
+
+    let mut engine_json = BTreeMap::new();
+    engine_json.insert("n_buckets".into(), Json::Num(report.n_buckets as f64));
+    engine_json.insert("proxy_gamma_seed".into(), Json::Num(report.proxy_gamma_seed));
+    engine_json.insert("proxy_gamma_final".into(), Json::Num(report.proxy_gamma_final));
+    engine_json.insert("proposals".into(), Json::Num(report.proposals as f64));
+    engine_json.insert("accepted".into(), Json::Num(report.accepted as f64));
+    let mut top = BTreeMap::new();
+    top.insert("dataset".into(), Json::Str(name.into()));
+    top.insert("n".into(), Json::Num(ds.n() as f64));
+    top.insert("d".into(), Json::Num(ds.d() as f64));
+    top.insert("p".into(), Json::Num(p as f64));
+    top.insert("seed".into(), Json::Num(seed as f64));
+    top.insert("model".into(), Json::Str(model.name().into()));
+    top.insert("engine".into(), Json::Obj(engine_json));
+    top.insert("partitions".into(), Json::Arr(rows_json));
+    let default_out = format!("bench_out/partition_{name}_p{p}.json");
+    let out = match args.get("out") {
+        Some(path) => path.to_string(),
+        None => default_out,
+    };
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, Json::Obj(top).dump() + "\n")?;
+    println!("partition report written to {out}");
+    Ok(())
+}
+
 fn cmd_gen_data() -> Command {
     Command {
         name: "gen-data",
@@ -391,7 +556,8 @@ subcommands:
   master           run the master over TCP; workers join with `pscope worker`
   worker           join a TCP master (job spec arrives over the wire)
   info             dataset statistics
-  partition-eval   measure partition goodness γ(π; ε)
+  partition-eval   measure partition goodness γ(π; ε) of the §7.4 set
+  partition        engineer a low-γ partition + JSON goodness report
   gen-data         write a synthetic dataset as LibSVM text
   artifacts        inspect + smoke-run the AOT artifacts
 
@@ -411,6 +577,7 @@ fn main() -> ExitCode {
         "worker" => run_worker_cmd(rest),
         "info" => run_info(rest),
         "partition-eval" => run_partition_eval(rest),
+        "partition" => run_partition_study(rest),
         "gen-data" => run_gen_data(rest),
         "artifacts" => run_artifacts(rest),
         "--help" | "-h" | "help" => {

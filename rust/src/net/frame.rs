@@ -34,7 +34,25 @@
 //!
 //! Floats travel as raw IEEE-754 bit patterns (`f64::to_le_bytes`), so
 //! NaN payloads, signed zeros, subnormals and ±inf all round-trip
-//! bit-exactly (`tests/frame_codec_props.rs`).
+//! bit-exactly (`tests/frame_codec_props.rs`):
+//!
+//! ```
+//! use pscope::coordinator::protocol::ToWorker;
+//! use pscope::net::frame;
+//!
+//! let msg = ToWorker::Broadcast { epoch: 3, w: vec![1.0, f64::NAN] };
+//! let bytes = frame::encode_to_worker(&msg);
+//! // the length identity that makes the TCP byte meter ground truth
+//! assert_eq!(bytes.len() as u64, msg.wire_bytes());
+//! match frame::decode_to_worker(&bytes)? {
+//!     ToWorker::Broadcast { epoch, w } => {
+//!         assert_eq!(epoch, 3);
+//!         assert!(w[1].is_nan()); // bit-exact f64 roundtrip
+//!     }
+//!     other => panic!("wrong variant {other:?}"),
+//! }
+//! # Ok::<(), pscope::error::Error>(())
+//! ```
 
 use std::io::{Read, Write};
 use std::time::Instant;

@@ -79,6 +79,24 @@ impl Default for GoodnessOpts {
     }
 }
 
+impl GoodnessOpts {
+    /// Reduced-cost measurement profile: 2 directions per radius over
+    /// `[0.3, 1.0, 2.0]` with shortened FISTA budgets. The shared base
+    /// for `pscope partition --quick`, the fig2b bench, and the tier-1
+    /// partition-engine tests (which override the iteration caps via
+    /// struct update but keep the probe layout, so they all measure the
+    /// same γ̂ estimator).
+    pub fn quick() -> GoodnessOpts {
+        GoodnessOpts {
+            dirs_per_radius: 2,
+            radii: [0.3, 1.0, 2.0],
+            local_iters: 1500,
+            ref_iters: 8000,
+            seed: 5,
+        }
+    }
+}
+
 /// Measure `l_π(a)` at a single point `a`, given the precomputed `P(w*)`.
 ///
 /// Returns the gap and the number of local FISTA iterations spent.
@@ -133,6 +151,30 @@ pub fn local_global_gap(
 }
 
 /// Full goodness measurement of a partition.
+///
+/// Solves the reference optimum once, then probes `l_π(a)` at
+/// `dirs_per_radius × 3` points around `w*` and reports the worst
+/// observed ratio `l_π(a)/‖a − w*‖²` as `gamma_hat`:
+///
+/// ```
+/// use pscope::config::Model;
+/// use pscope::loss::Reg;
+/// use pscope::partition::{goodness, Partitioner};
+///
+/// let ds = pscope::data::synth::tiny(1).with_n(80).generate();
+/// let part = Partitioner::Uniform.split(&ds, 2, 3);
+/// let opts = goodness::GoodnessOpts {
+///     dirs_per_radius: 1,
+///     radii: [0.5, 1.0, 1.5],
+///     local_iters: 400,
+///     ref_iters: 2000,
+///     seed: 7,
+/// };
+/// let reg = Reg { lam1: 1e-2, lam2: 1e-3 };
+/// let rep = goodness::analyze(&ds, &part, Model::Logistic.loss(), reg, &opts);
+/// assert!(rep.gamma_hat >= 0.0);
+/// assert!(rep.gap_at_optimum.abs() < 1e-3); // l_π(w*) ≈ 0 (Lemma 1)
+/// ```
 pub fn analyze(
     ds: &Dataset,
     part: &Partition,
@@ -240,11 +282,9 @@ mod tests {
 
     fn opts() -> GoodnessOpts {
         GoodnessOpts {
-            dirs_per_radius: 2,
-            radii: [0.3, 1.0, 2.0],
             local_iters: 2000,
             ref_iters: 10_000,
-            seed: 5,
+            ..GoodnessOpts::quick()
         }
     }
 

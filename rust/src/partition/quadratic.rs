@@ -121,12 +121,22 @@ impl QuadraticPartition {
     /// Lemma 5's goodness constant:
     /// `γ = max_i (1/p) Σ_k (A(i,i) − A_k(i,i))² / A_k(i,i)`.
     pub fn gamma_lemma5(&self) -> f64 {
-        let g = self.global();
+        self.gamma_lemma5_with_global(&self.global().a)
+    }
+
+    /// [`Self::gamma_lemma5`] against a caller-supplied global diagonal.
+    ///
+    /// The partition engine's refinement loop scores thousands of
+    /// candidate swaps, and a swap only moves mass *between* parts — the
+    /// global diagonal `A = (1/p) Σ A_k` is invariant — so the hot loop
+    /// precomputes it once instead of re-deriving (and re-allocating) it
+    /// per proposal.
+    pub fn gamma_lemma5_with_global(&self, global_a: &[f64]) -> f64 {
         let mut gamma: f64 = 0.0;
         for i in 0..self.d() {
             let mut s = 0.0;
             for q in &self.parts {
-                let diff = g.a[i] - q.a[i];
+                let diff = global_a[i] - q.a[i];
                 s += diff * diff / q.a[i];
             }
             gamma = gamma.max(s / self.p() as f64);
@@ -256,6 +266,16 @@ mod tests {
         assert!(
             bound <= 100.0 * measured,
             "bound {bound} far above measured {measured}"
+        );
+    }
+
+    #[test]
+    fn gamma_with_precomputed_global_matches() {
+        let qp = random_partition(5, 7, 1.2, 0.3, 13);
+        let g = qp.global();
+        assert_eq!(
+            qp.gamma_lemma5().to_bits(),
+            qp.gamma_lemma5_with_global(&g.a).to_bits()
         );
     }
 

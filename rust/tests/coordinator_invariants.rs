@@ -38,6 +38,7 @@ fn prop_partitions_route_every_instance_exactly_once() {
             Partitioner::Uniform,
             Partitioner::LabelSkew75,
             Partitioner::LabelSeparated,
+            Partitioner::Engineered,
         ] {
             let part = strat.split(&ds, p, seed);
             if !part.is_disjoint_cover(ds.n()) {
