@@ -46,20 +46,20 @@ fn main() {
         let mut rng = Rng::new(7);
         let mut stats = LazyStats::default();
         std::hint::black_box(lazy_inner_epoch(
-            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg, m, &mut rng,
             &mut stats,
         ));
     });
     let t_dense = time_fn(s(1), s(3), || {
         let mut rng = Rng::new(7);
         std::hint::black_box(dense_inner_epoch(
-            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg, m, &mut rng,
         ));
     });
     let mut stats = LazyStats::default();
     let mut rng = Rng::new(7);
     let _ = lazy_inner_epoch(
-        &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats,
+        &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg, m, &mut rng, &mut stats,
     );
     table.row_timed(
         &[
@@ -88,7 +88,7 @@ fn main() {
         let mut rng = Rng::new(7);
         let mut stats = LazyStats::default();
         std::hint::black_box(lazy_inner_epoch_ws(
-            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng,
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg, m, &mut rng,
             &mut stats, &mut ws,
         ));
     });
@@ -121,6 +121,43 @@ fn main() {
         ],
         t_adv.median,
     );
+
+    // ---- prox kernels: per-regularizer vector prox over a d-sized
+    // iterate (the dense engine's per-step cost floor; tracked in
+    // BENCH_*.json so prox cost per regularizer regresses visibly) ----
+    {
+        use pscope::loss::ProxReg;
+        let dprox = if quick { 10_000 } else { 200_000 };
+        let mut rngp = Rng::new(3);
+        let base: Vec<f64> = (0..dprox).map(|_| rngp.normal()).collect();
+        let step = 0.05;
+        for (name, preg) in [
+            ("l1", ProxReg::L1 { lam: 1e-3 }),
+            ("elasticnet", ProxReg::ElasticNet { lam1: 1e-4, lam2: 1e-3 }),
+            ("group(8)", ProxReg::GroupLasso { lam: 1e-3, group: 8 }),
+            ("nonneg", ProxReg::NonnegL1 { lam: 1e-3 }),
+        ] {
+            // prox applied in place, repeatedly, with NO reset inside the
+            // timed region (a d-sized memcpy would be ~half the measured
+            // time). The threshold is tiny relative to the N(0,1) values,
+            // so the value/branch profile stays stable across samples;
+            // nonneg's first application zeroes the negative half — a
+            // transient the warmup iterations absorb before timing.
+            let mut buf = base.clone();
+            let t_prox = time_fn(s(3), s(11), || {
+                preg.prox_vec(&mut buf, step);
+                std::hint::black_box(&buf);
+            });
+            table.row_timed(
+                &[
+                    format!("prox kernel {name} (d={dprox})"),
+                    human_time(t_prox.median),
+                    format!("{:.2} Gcoord/s", dprox as f64 / t_prox.median / 1e9),
+                ],
+                t_prox.median,
+            );
+        }
+    }
 
     // ---- shard gradient pass: serial vs parallel blocked reduction ----
     let mut g = vec![0.0; ds.d()];

@@ -4,9 +4,13 @@
 pub mod toml_lite;
 
 use crate::error::{Error, Result};
-use crate::loss::{Loss, Reg};
+use crate::loss::{Loss, ProxReg, Reg, SmoothLoss};
 
-/// Which model (§7) to train.
+/// Which model (§7) to train — a *preset* naming one (loss, regularizer)
+/// corner of the composite-objective matrix. `Model` names are distinct
+/// from loss names: `lasso` is squared loss **plus** L1, and
+/// [`SmoothLoss::name`] for the squared loss is `"squared"`. The `loss` /
+/// `reg` config keys override the preset's corners independently.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Model {
     /// Logistic regression with elastic net.
@@ -38,6 +42,64 @@ impl Model {
             "logistic" | "lr" => Ok(Model::Logistic),
             "lasso" => Ok(Model::Lasso),
             _ => Err(Error::Config(format!("unknown model {s:?}"))),
+        }
+    }
+}
+
+/// Which regularizer *kind* a run uses; the λ parameters come from the
+/// [`Reg`] pack (`lam1`/`lam2` keys). `None` on
+/// [`PscopeConfig::reg_kind`] keeps the model preset's regularizer (the
+/// elastic net with Table-1 λs — bit-identical to the pre-composite
+/// behavior).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegKind {
+    /// `λ₂‖w‖₁` (requires `lam1 = 0`).
+    L1,
+    /// `(λ₁/2)‖w‖² + λ₂‖w‖₁`.
+    ElasticNet,
+    /// `λ₂ Σ_G ‖w_G‖₂` over contiguous groups of the given size
+    /// (requires `lam1 = 0`).
+    GroupLasso {
+        /// Coordinates per group (≥ 1).
+        group: usize,
+    },
+    /// `λ₂‖w‖₁ + ind{w ≥ 0}` (requires `lam1 = 0`).
+    NonnegL1,
+}
+
+impl RegKind {
+    /// Parse a config/CLI regularizer name: `l1`, `elasticnet` (alias
+    /// `en`), `group:<size>`, `nonneg`.
+    pub fn parse(s: &str) -> Result<RegKind> {
+        if let Some(g) = s.strip_prefix("group:") {
+            let group: usize = g
+                .parse()
+                .map_err(|e| Error::Config(format!("bad group size {g:?}: {e}")))?;
+            if group == 0 {
+                return Err(Error::Config("group size must be >= 1".into()));
+            }
+            return Ok(RegKind::GroupLasso { group });
+        }
+        match s {
+            "l1" => Ok(RegKind::L1),
+            "elasticnet" | "elastic-net" | "en" => Ok(RegKind::ElasticNet),
+            "group" => Err(Error::Config(
+                "group lasso needs a group size: use reg = \"group:<size>\"".into(),
+            )),
+            "nonneg" | "nonneg_l1" => Ok(RegKind::NonnegL1),
+            _ => Err(Error::Config(format!(
+                "unknown reg {s:?} (expected l1 | elasticnet | group:<size> | nonneg)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RegKind::L1 => "l1",
+            RegKind::ElasticNet => "elasticnet",
+            RegKind::GroupLasso { .. } => "group",
+            RegKind::NonnegL1 => "nonneg",
         }
     }
 }
@@ -104,10 +166,16 @@ impl TransportKind {
 /// Full pSCOPE run configuration (Algorithm 1 parameters + engineering).
 #[derive(Clone, Debug)]
 pub struct PscopeConfig {
-    /// Model (drives loss + default λ from Table 1).
+    /// Model preset (drives the default loss/regularizer + Table-1 λs).
     pub model: Model,
-    /// Regularization.
+    /// Regularization λ parameters (`lam1` ridge, `lam2` primary).
     pub reg: Reg,
+    /// Loss override (`loss` key / `--loss`); `None` = the model's loss.
+    pub loss: Option<SmoothLoss>,
+    /// Regularizer-kind override (`reg` key / `--reg`); `None` = the
+    /// model's (elastic net over the `reg` λs — the legacy objective,
+    /// bit-identical trajectories included).
+    pub reg_kind: Option<RegKind>,
     /// Workers `p`.
     pub p: usize,
     /// Outer iterations `T`.
@@ -151,6 +219,8 @@ impl Default for PscopeConfig {
         PscopeConfig {
             model: Model::Logistic,
             reg: Reg { lam1: 1e-5, lam2: 1e-5 },
+            loss: None,
+            reg_kind: None,
             p: 8,
             outer_iters: 30,
             m_inner: 0,
@@ -187,6 +257,50 @@ impl PscopeConfig {
         PscopeConfig { model, reg, ..Default::default() }
     }
 
+    /// The smooth loss this run trains: the `loss` override if set, else
+    /// the model preset's loss.
+    pub fn objective_loss(&self) -> SmoothLoss {
+        self.loss.unwrap_or_else(|| self.model.loss())
+    }
+
+    /// Resolve the run's [`ProxReg`] from the regularizer kind and the
+    /// `reg` λ pack. With no `reg_kind` override this is the legacy
+    /// elastic net over `(lam1, lam2)` — including `lam1 = 0` for the
+    /// Lasso preset — so existing configs produce bit-identical
+    /// trajectories. Kinds without a ridge term reject `lam1 != 0`
+    /// instead of silently dropping it.
+    pub fn prox_reg(&self) -> Result<ProxReg> {
+        let Reg { lam1, lam2 } = self.reg;
+        if !(lam1.is_finite() && lam1 >= 0.0 && lam2.is_finite() && lam2 >= 0.0) {
+            return Err(Error::Config(format!(
+                "regularization lambdas must be finite and >= 0, got ({lam1}, {lam2})"
+            )));
+        }
+        let no_ridge = |kind: &str| -> Result<()> {
+            if lam1 != 0.0 {
+                return Err(Error::Config(format!(
+                    "reg {kind:?} has no ridge term; set lam1 = 0 or use reg = \"elasticnet\""
+                )));
+            }
+            Ok(())
+        };
+        match self.reg_kind {
+            None | Some(RegKind::ElasticNet) => Ok(ProxReg::ElasticNet { lam1, lam2 }),
+            Some(RegKind::L1) => {
+                no_ridge("l1")?;
+                Ok(ProxReg::L1 { lam: lam2 })
+            }
+            Some(RegKind::GroupLasso { group }) => {
+                no_ridge("group")?;
+                Ok(ProxReg::GroupLasso { lam: lam2, group })
+            }
+            Some(RegKind::NonnegL1) => {
+                no_ridge("nonneg")?;
+                Ok(ProxReg::NonnegL1 { lam: lam2 })
+            }
+        }
+    }
+
     /// Resolve auto parameters against a concrete problem.
     pub fn resolve(&self, n: usize, smoothness: f64) -> (usize, f64) {
         let m = if self.m_inner == 0 {
@@ -204,6 +318,10 @@ impl PscopeConfig {
         for (k, v) in &table {
             match k.as_str() {
                 "model" => self.model = Model::parse(v.as_str_or()?)?,
+                // fail-fast parsing: a typo'd loss/reg kind dies at config
+                // load, not at job launch
+                "loss" => self.loss = Some(SmoothLoss::parse(v.as_str_or()?)?),
+                "reg" => self.reg_kind = Some(RegKind::parse(v.as_str_or()?)?),
                 "lam1" => self.reg.lam1 = v.as_f64_or()?,
                 "lam2" => self.reg.lam2 = v.as_f64_or()?,
                 "p" => self.p = v.as_usize_or()?,
@@ -281,6 +399,60 @@ mod tests {
     fn model_parse() {
         assert_eq!(Model::parse("lr").unwrap(), Model::Logistic);
         assert!(Model::parse("svm").is_err());
+    }
+
+    #[test]
+    fn loss_and_reg_keys_parse_fail_fast() {
+        let mut c = PscopeConfig::default();
+        c.apply_toml("loss = \"huber:0.5\"\nreg = \"group:4\"\nlam1 = 0\nlam2 = 1e-4\n")
+            .unwrap();
+        assert_eq!(c.objective_loss(), SmoothLoss::Huber { delta: 0.5 });
+        assert_eq!(c.prox_reg().unwrap(), ProxReg::GroupLasso { lam: 1e-4, group: 4 });
+        // unknown values are rejected at parse time (fail fast); the
+        // failing key itself is never assigned (apply_toml applies keys
+        // in order, so earlier keys of a mixed file do stick — callers
+        // treat any Err as fatal)
+        assert!(c.apply_toml("loss = \"spline\"\n").is_err());
+        assert!(c.apply_toml("reg = \"l0\"\n").is_err());
+        assert!(c.apply_toml("reg = \"group\"\n").is_err(), "group without size accepted");
+        assert!(c.apply_toml("reg = \"group:0\"\n").is_err());
+        assert!(c.apply_toml("loss = 3\n").is_err(), "non-string loss accepted");
+        assert_eq!(c.objective_loss(), SmoothLoss::Huber { delta: 0.5 });
+    }
+
+    #[test]
+    fn prox_reg_resolution_defaults_and_guards() {
+        // no override: the legacy elastic net over (lam1, lam2) — for both
+        // model presets (Lasso ships lam1 = 0, same bits as pure L1)
+        let c = PscopeConfig::for_dataset("tiny", Model::Lasso);
+        assert_eq!(
+            c.prox_reg().unwrap(),
+            ProxReg::ElasticNet { lam1: 0.0, lam2: 1e-5 }
+        );
+        assert_eq!(c.objective_loss(), SmoothLoss::Squared);
+        // ridge-free kinds reject a nonzero lam1 instead of dropping it
+        let mut c = PscopeConfig::default();
+        c.reg_kind = Some(RegKind::L1);
+        assert!(c.prox_reg().is_err(), "l1 with lam1 != 0 accepted");
+        c.reg.lam1 = 0.0;
+        assert_eq!(c.prox_reg().unwrap(), ProxReg::L1 { lam: 1e-5 });
+        c.reg_kind = Some(RegKind::NonnegL1);
+        assert_eq!(c.prox_reg().unwrap(), ProxReg::NonnegL1 { lam: 1e-5 });
+        // degenerate lambdas are config errors
+        c.reg.lam2 = f64::NAN;
+        assert!(c.prox_reg().is_err());
+    }
+
+    #[test]
+    fn reg_kind_parse() {
+        assert_eq!(RegKind::parse("en").unwrap(), RegKind::ElasticNet);
+        assert_eq!(RegKind::parse("group:16").unwrap(), RegKind::GroupLasso { group: 16 });
+        assert_eq!(RegKind::parse("nonneg").unwrap(), RegKind::NonnegL1);
+        assert!(RegKind::parse("group:-1").is_err());
+        assert!(RegKind::parse("ridge").is_err());
+        for kind in [RegKind::L1, RegKind::ElasticNet, RegKind::NonnegL1] {
+            assert_eq!(RegKind::parse(kind.name()).unwrap(), kind);
+        }
     }
 
     #[test]

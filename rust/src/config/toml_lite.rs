@@ -132,6 +132,31 @@ mod tests {
     }
 
     #[test]
+    fn negative_exponents_parse_exactly() {
+        // the Table-1 lambdas are written like 1e-8 — scientific notation
+        // with negative exponents must parse to the exact f64 literal
+        let t = parse("a = 1e-8\nb = -2.5e-3\nc = 1E-5\nd = 3.0e+2\ne = -1e-300\n").unwrap();
+        assert_eq!(t[0].1, Value::Num(1e-8));
+        assert_eq!(t[1].1, Value::Num(-2.5e-3));
+        assert_eq!(t[2].1, Value::Num(1e-5));
+        assert_eq!(t[3].1, Value::Num(300.0));
+        assert_eq!(t[4].1, Value::Num(-1e-300));
+        assert!(parse("x = 1e-\n").is_err());
+        assert!(parse("x = e-5\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quoted_strings_survives() {
+        // '#' only starts a comment outside quotes — group specs or paths
+        // containing '#' must come through intact, with or without a
+        // trailing real comment
+        let t = parse("a = \"x # y\"\nb = \"#lead\" # trailing comment\nc = \"a#b#c\"\n").unwrap();
+        assert_eq!(t[0].1, Value::Str("x # y".into()));
+        assert_eq!(t[1].1, Value::Str("#lead".into()));
+        assert_eq!(t[2].1, Value::Str("a#b#c".into()));
+    }
+
+    #[test]
     fn value_coercions() {
         assert_eq!(Value::Num(3.0).as_usize_or().unwrap(), 3);
         assert!(Value::Num(3.5).as_usize_or().is_err());

@@ -146,8 +146,21 @@ pub(crate) fn resolve_run(
     }
     let d = ds.d();
     let n_total = ds.n();
-    let loss = cfg.model.loss();
-    let obj = Objective::new(ds, loss, cfg.reg);
+    let loss = cfg.objective_loss();
+    // resolve + validate the composite objective before any thread exists
+    // (unknown kinds / inconsistent λs are config errors, not worker deaths)
+    let prox = cfg.prox_reg()?;
+    if cfg.backend == WorkerBackend::Xla && prox.lazy_skip().is_none() {
+        // the artifacts hard-code the fused soft-threshold step; reject
+        // here so the failure is a caller-thread config error, not p
+        // worker deaths at the first inner epoch
+        return Err(Error::Config(format!(
+            "the Xla artifacts implement the soft-threshold (l1/elasticnet) prox only; \
+             regularizer {:?} needs a rust backend",
+            prox.name()
+        )));
+    }
+    let obj = Objective::new(ds, loss, prox);
     let (mut m_inner, eta) = cfg.resolve(n_total, obj.smoothness());
     if cfg.backend == WorkerBackend::Xla {
         // the artifact executes a fixed number of steps per call; round M
@@ -158,7 +171,7 @@ pub(crate) fn resolve_run(
             let manifest = Manifest::load(dir.join("manifest.json"))?;
             let max_shard = part.assignment.iter().map(|a| a.len()).max().unwrap_or(0);
             if let Some((_, _, step, _)) =
-                worker::select_epoch_artifact(&manifest, loss.name(), max_shard, d)
+                worker::select_epoch_artifact(&manifest, loss, max_shard, d)
             {
                 let step = step.max(1);
                 m_inner = m_inner.div_ceil(step) * step;
@@ -369,8 +382,9 @@ pub fn train_with(
     let p = part.p();
     let (m_inner, eta, grad_threads) = resolve_run(ds, part, cfg, artifact_dir.as_deref())?;
     let d = ds.d();
-    let loss = cfg.model.loss();
-    let obj = Objective::new(ds, loss, cfg.reg);
+    let loss = cfg.objective_loss();
+    let prox = cfg.prox_reg()?;
+    let obj = Objective::new(ds, loss, prox);
 
     let meter = ByteMeter::new();
     let root_rng = Rng::new(cfg.seed);
@@ -384,7 +398,7 @@ pub fn train_with(
             let shard = ds.select(&part.assignment[k]);
             let rng = root_rng.fork(k as u64 + 1);
             let rt = artifact_dir.clone();
-            let reg = cfg.reg;
+            let reg = prox;
             let backend = cfg.backend;
             handles.push(scope.spawn(move || -> Result<()> {
                 let mut guard = DownGuard { tx: wt.down_sender(), worker: k, armed: true };
@@ -536,7 +550,7 @@ mod tests {
         for _ in 0..3 {
             let z = obj.data_grad(&w);
             w = crate::optim::lazy::lazy_inner_epoch(
-                &ds, cfg.model.loss(), &w, &z, 0.05, cfg.reg.lam1, cfg.reg.lam2, 50,
+                &ds, cfg.model.loss(), &w, &z, 0.05, cfg.reg, 50,
                 &mut rng, &mut Default::default(),
             );
         }

@@ -49,12 +49,12 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use crate::config::{Model, PscopeConfig, WorkerBackend};
+use crate::config::{PscopeConfig, WorkerBackend};
 use crate::coordinator::worker::{run_worker, Worker};
 use crate::coordinator::{resolve_run, run_master, TrainOutput};
 use crate::data::{self, Dataset};
 use crate::error::{Error, Result};
-use crate::loss::{Objective, Reg};
+use crate::loss::{Objective, ProxReg, SmoothLoss};
 use crate::net::frame::{self, FrameRead};
 use crate::net::transport::{MasterTransport, TcpMaster, TcpWorker};
 use crate::net::{ByteMeter, NetModel};
@@ -63,8 +63,11 @@ use crate::rng::Rng;
 
 /// Spec version stamped into every `Setup` payload; bumped on layout
 /// changes so mismatched binaries fail with a clear error instead of
-/// garbage decoding. v2 added `part_fingerprint`.
-const SPEC_VERSION: u64 = 2;
+/// garbage decoding. v2 added `part_fingerprint`; v3 replaced the
+/// `(model, Reg)` pair with the composite objective — loss kind +
+/// regularizer kind, parameters as exact f64 bits — and made regression
+/// datasets stratify partition sketches by `sign(y − ȳ)`.
+pub(crate) const SPEC_VERSION: u64 = 3;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -98,10 +101,12 @@ pub struct RunSpec {
     pub fingerprint: (u64, u64, u64),
     /// Worker count (the worker validates its assigned id against it).
     pub p: usize,
-    /// Model flavor.
-    pub model: Model,
-    /// Regularization (exact f64 bits on the wire).
-    pub reg: Reg,
+    /// Smooth loss (kind + parameters as exact f64 bits on the wire;
+    /// tag-validated by every worker on decode, like the fingerprints).
+    pub loss: SmoothLoss,
+    /// Proximal regularizer (kind + parameters as exact f64 bits on the
+    /// wire; tag-validated by every worker on decode).
+    pub reg: ProxReg,
     /// Worker compute backend.
     pub backend: WorkerBackend,
     /// Master RNG seed (worker `k` forks stream `k + 1`).
@@ -145,8 +150,8 @@ impl RunSpec {
             part_fingerprint: part.fingerprint(),
             fingerprint: (ds.n() as u64, ds.d() as u64, ds.nnz() as u64),
             p: part.p(),
-            model: cfg.model,
-            reg: cfg.reg,
+            loss: cfg.objective_loss(),
+            reg: cfg.prox_reg()?,
             backend: cfg.backend,
             seed: cfg.seed,
             eta,
@@ -159,7 +164,9 @@ impl RunSpec {
     /// Binary encoding for the `Setup` frame payload (little-endian;
     /// floats as raw bits, strings as `u16` length + UTF-8 bytes).
     pub fn encode(&self) -> Vec<u8> {
-        let mut b = Vec::with_capacity(96 + self.dataset.len() + self.partition.len());
+        let (loss_tag, loss_param) = self.loss.wire_encode();
+        let (reg_tag, reg_a, reg_b, reg_group) = self.reg.wire_encode();
+        let mut b = Vec::with_capacity(144 + self.dataset.len() + self.partition.len());
         for v in [
             SPEC_VERSION,
             self.data_seed,
@@ -171,17 +178,17 @@ impl RunSpec {
             self.p as u64,
             self.seed,
             self.eta.to_bits(),
-            self.reg.lam1.to_bits(),
-            self.reg.lam2.to_bits(),
+            loss_param,
+            reg_a,
+            reg_b,
+            reg_group,
             self.m_inner as u64,
             self.grad_threads as u64,
         ] {
             b.extend_from_slice(&v.to_le_bytes());
         }
-        b.push(match self.model {
-            Model::Logistic => 0,
-            Model::Lasso => 1,
-        });
+        b.push(loss_tag);
+        b.push(reg_tag);
         b.push(match self.backend {
             WorkerBackend::RustSparse => 0,
             WorkerBackend::RustDense => 1,
@@ -193,7 +200,10 @@ impl RunSpec {
         b
     }
 
-    /// Decode a `Setup` frame payload.
+    /// Decode a `Setup` frame payload. Loss/regularizer tags and
+    /// parameters are validated here — a corrupt or mismatched peer fails
+    /// loudly before any training, the same contract as the dataset and
+    /// partition fingerprints.
     pub fn decode(payload: &[u8]) -> Result<RunSpec> {
         let mut c = Cursor { b: payload, off: 0 };
         let version = c.u64()?;
@@ -209,15 +219,14 @@ impl RunSpec {
         let p = c.usize()?;
         let seed = c.u64()?;
         let eta = f64::from_bits(c.u64()?);
-        let lam1 = f64::from_bits(c.u64()?);
-        let lam2 = f64::from_bits(c.u64()?);
+        let loss_param = c.u64()?;
+        let reg_a = c.u64()?;
+        let reg_b = c.u64()?;
+        let reg_group = c.u64()?;
         let m_inner = c.usize()?;
         let grad_threads = c.usize()?;
-        let model = match c.u8()? {
-            0 => Model::Logistic,
-            1 => Model::Lasso,
-            t => return Err(Error::Protocol(format!("bad model tag {t}"))),
-        };
+        let loss = SmoothLoss::wire_decode(c.u8()?, loss_param)?;
+        let reg = ProxReg::wire_decode(c.u8()?, reg_a, reg_b, reg_group)?;
         let backend = match c.u8()? {
             0 => WorkerBackend::RustSparse,
             1 => WorkerBackend::RustDense,
@@ -236,8 +245,8 @@ impl RunSpec {
             part_fingerprint,
             fingerprint,
             p,
-            model,
-            reg: Reg { lam1, lam2 },
+            loss,
+            reg,
             backend,
             seed,
             eta,
@@ -337,7 +346,7 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
     Ok(Worker::new(
         k,
         shard,
-        spec.model.loss(),
+        spec.loss,
         spec.reg,
         spec.backend,
         rng,
@@ -410,6 +419,16 @@ pub fn serve_worker(addr: &str, timeout: Duration) -> Result<()> {
         "worker {k}: partition {} fingerprint {:#018x} verified",
         spec.partition, spec.part_fingerprint
     );
+    // the objective traveled as exact bits and was tag-validated on
+    // decode; print the bits so operators/CI can cross-check both sides
+    let (_, loss_param) = spec.loss.wire_encode();
+    let (_, reg_a, reg_b, reg_group) = spec.reg.wire_encode();
+    println!(
+        "worker {k}: objective {}/{} validated (param bits {loss_param:#018x} \
+         {reg_a:#018x} {reg_b:#018x} group {reg_group})",
+        spec.loss.name(),
+        spec.reg.name(),
+    );
     frame::write_frame(&mut stream, &frame::encode_control(frame::TAG_READY, worker, &[]))?;
     // Data plane: block on the master's pace (objective evaluation between
     // epochs can take arbitrarily long; EOF covers master death).
@@ -477,8 +496,24 @@ impl MasterEndpoint {
                 spec.p, spec.m_inner, spec.eta
             )));
         }
+        let loss = cfg.objective_loss();
+        let prox = cfg.prox_reg()?;
+        // bitwise objective check — the workers will obey the spec's exact
+        // loss/regularizer bits, so those must be the master's too
+        if spec.loss.wire_encode() != loss.wire_encode()
+            || spec.reg.wire_encode() != prox.wire_encode()
+        {
+            return Err(Error::Config(format!(
+                "job spec objective ({}/{}) disagrees with this run ({}/{}) — build the \
+                 spec with RunSpec::derive on the same (ds, part, cfg)",
+                spec.loss.name(),
+                spec.reg.name(),
+                loss.name(),
+                prox.name()
+            )));
+        }
         let d = ds.d();
-        let obj = Objective::new(ds, cfg.model.loss(), cfg.reg);
+        let obj = Objective::new(ds, loss, prox);
         let meter = ByteMeter::new();
         let mut transport =
             TcpMaster::accept(&self.listener, p, meter.clone(), &spec.encode(), timeout)?;
@@ -593,8 +628,9 @@ mod tests {
             part_fingerprint: 0xDEAD_BEEF_0123_4567,
             fingerprint: (200, 50, 1234),
             p: 4,
-            model: Model::Lasso,
-            reg: Reg { lam1: f64::from_bits(0x3FF0_0000_0000_0001), lam2: 0.0 },
+            loss: SmoothLoss::Squared,
+            // an off-by-one-ulp lambda: only exact bit transport survives it
+            reg: ProxReg::ElasticNet { lam1: f64::from_bits(0x3FF0_0000_0000_0001), lam2: 0.0 },
             backend: WorkerBackend::RustDense,
             seed: 42,
             eta: 0.125,
@@ -609,10 +645,28 @@ mod tests {
         let spec = spec_fixture();
         let back = RunSpec::decode(&spec.encode()).unwrap();
         assert_eq!(back, spec);
-        assert_eq!(back.reg.lam1.to_bits(), spec.reg.lam1.to_bits());
+        assert_eq!(back.reg.wire_encode(), spec.reg.wire_encode());
         let mut with_dir = spec;
         with_dir.artifact_dir = Some("artifacts".into());
         assert_eq!(RunSpec::decode(&with_dir.encode()).unwrap(), with_dir);
+    }
+
+    #[test]
+    fn spec_roundtrips_every_objective_kind() {
+        // the full composite matrix travels: loss params and regularizer
+        // params as exact bits (0.3 is inexact in binary — bit transport
+        // only), group size as an integer
+        let mut spec = spec_fixture();
+        for (loss, reg) in [
+            (SmoothLoss::Huber { delta: 0.3 }, ProxReg::GroupLasso { lam: 0.3, group: 8 }),
+            (SmoothLoss::SquaredHinge, ProxReg::NonnegL1 { lam: 1e-6 }),
+            (SmoothLoss::Logistic, ProxReg::L1 { lam: 0.1 }),
+        ] {
+            spec.loss = loss;
+            spec.reg = reg;
+            let back = RunSpec::decode(&spec.encode()).unwrap();
+            assert_eq!(back, spec);
+        }
     }
 
     #[test]
@@ -628,6 +682,15 @@ mod tests {
         let mut trailing = spec.encode();
         trailing.push(0);
         assert!(RunSpec::decode(&trailing).is_err(), "trailing bytes accepted");
+        // corrupt objective tags must be rejected, like a bad fingerprint
+        let good = spec.encode();
+        let tag_base = 16 * 8; // 16 u64 fields precede the loss tag
+        let mut bad_loss = good.clone();
+        bad_loss[tag_base] = 0x7F;
+        assert!(RunSpec::decode(&bad_loss).is_err(), "bad loss tag accepted");
+        let mut bad_reg = good.clone();
+        bad_reg[tag_base + 1] = 0x7F;
+        assert!(RunSpec::decode(&bad_reg).is_err(), "bad reg tag accepted");
     }
 
     #[test]

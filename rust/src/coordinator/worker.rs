@@ -4,12 +4,19 @@
 //! backends:
 //!
 //! * [`WorkerBackend::RustSparse`] — the §6 lazy recovery-rule engine
-//!   (production path for high-dimensional sparse data);
+//!   (production path for high-dimensional sparse data). Only
+//!   regularizers with the closed-form skip capability
+//!   ([`ProxReg::lazy_skip`]: L1 / elastic net) can run lazily; for the
+//!   rest (group Lasso, nonnegative L1) this backend transparently falls
+//!   back to the dense engine — correctness over speed, documented in
+//!   DESIGN.md §9.
 //! * [`WorkerBackend::RustDense`] — the naive dense engine (reference,
-//!   and competitive when `nnz ≈ d`);
+//!   competitive when `nnz ≈ d`, and the engine for every regularizer).
 //! * [`WorkerBackend::Xla`] — the AOT-compiled JAX/Pallas artifacts via
 //!   PJRT (dense shards; pads the shard into the artifact's static shape
-//!   and chains `inner_epoch` calls to reach the configured `M`).
+//!   and chains `inner_epoch` calls to reach the configured `M`). The
+//!   artifacts hard-code the soft-threshold prox, so this backend rejects
+//!   regularizers outside the L1/elastic-net family with a clear error.
 //!
 //! All three consume the identical RNG stream (one `below(n)` per inner
 //! step), so backend choice changes *performance*, not the trajectory
@@ -22,7 +29,7 @@ use crate::config::WorkerBackend;
 use crate::coordinator::protocol::{ToMaster, ToWorker};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
-use crate::loss::{Loss, Reg};
+use crate::loss::{Loss, ProxReg, SmoothLoss};
 use crate::metrics::ThreadCpuTimer;
 use crate::net::transport::WorkerTransport;
 use crate::optim::lazy::{lazy_inner_epoch_ws, LazyStats};
@@ -94,8 +101,8 @@ pub struct Worker {
     pub shard: Dataset,
     /// Loss flavor.
     pub loss: Loss,
-    /// Regularization.
-    pub reg: Reg,
+    /// Proximal regularizer.
+    pub reg: ProxReg,
     /// Backend.
     pub backend: WorkerBackend,
     /// Worker-local RNG (forked from the master seed per worker).
@@ -129,19 +136,33 @@ struct XlaShard {
     epoch_prog: String,
 }
 
+/// The manifest `model` names an artifact for `loss` may be filed under.
+/// Manifests predate the composite layer and say `"lasso"` where the loss
+/// is the squared loss — accepted here so existing artifact sets keep
+/// working after the `Loss::name()` rename.
+fn artifact_models(loss: SmoothLoss) -> &'static [&'static str] {
+    match loss {
+        SmoothLoss::Logistic => &["logistic"],
+        SmoothLoss::Squared => &["squared", "lasso"],
+        SmoothLoss::Huber { .. } => &["huber"],
+        SmoothLoss::SquaredHinge => &["squared_hinge"],
+    }
+}
+
 /// Pick the smallest inner-epoch artifact config that fits an `n x d`
 /// shard; returns `(n_pad, d_pad, m_step, program_name)`. Shared by the
 /// worker (artifact choice) and the driver (M rounding) so both agree.
 pub fn select_epoch_artifact(
     manifest: &crate::runtime::Manifest,
-    model: &str,
+    loss: SmoothLoss,
     n: usize,
     d: usize,
 ) -> Option<(usize, usize, usize, String)> {
+    let models = artifact_models(loss);
     let mut candidates: Vec<(usize, usize, usize, String)> = manifest
         .programs()
         .iter()
-        .filter(|p| p.kind == "inner_epoch" && p.model == model)
+        .filter(|p| p.kind == "inner_epoch" && models.contains(&p.model.as_str()))
         .map(|p| (p.n, p.d, p.m_inner, p.name.clone()))
         .filter(|&(pn, pd, _, _)| pn >= n && pd >= d)
         .collect();
@@ -150,12 +171,13 @@ pub fn select_epoch_artifact(
 }
 
 impl Worker {
-    /// Create a worker over `shard`.
+    /// Create a worker over `shard`. Accepts the legacy
+    /// [`Reg`](crate::loss::Reg) pack or any [`ProxReg`].
     pub fn new(
         id: usize,
         shard: Dataset,
         loss: Loss,
-        reg: Reg,
+        reg: impl Into<ProxReg>,
         backend: WorkerBackend,
         rng: Rng,
         artifact_dir: Option<PathBuf>,
@@ -164,7 +186,7 @@ impl Worker {
             id,
             shard,
             loss,
-            reg,
+            reg: reg.into(),
             backend,
             rng,
             lazy_stats: LazyStats::default(),
@@ -200,6 +222,12 @@ impl Worker {
     /// Run the inner epoch (Algorithm 1 lines 14–18): `m` prox-SVRG steps
     /// from `w_t` with full data gradient `z`; returns `u_{k,M}`.
     ///
+    /// The sparse backend runs the §6 lazy engine when the regularizer
+    /// has the closed-form skip ([`ProxReg::lazy_skip`]) and falls back
+    /// to the dense engine otherwise — same RNG stream contract, so the
+    /// fallback is bit-identical to an explicit
+    /// [`WorkerBackend::RustDense`] run.
+    ///
     /// All scratch comes from the worker's [`EpochWorkspace`]; the only
     /// allocation per epoch is the returned iterate, which the protocol
     /// message owns.
@@ -211,28 +239,28 @@ impl Worker {
         m: usize,
     ) -> Result<Vec<f64>> {
         match self.backend {
-            WorkerBackend::RustSparse => Ok(lazy_inner_epoch_ws(
+            WorkerBackend::RustSparse if self.reg.lazy_skip().is_some() => {
+                Ok(lazy_inner_epoch_ws(
+                    &self.shard,
+                    self.loss,
+                    w_t,
+                    z,
+                    eta,
+                    self.reg,
+                    m,
+                    &mut self.rng,
+                    &mut self.lazy_stats,
+                    &mut self.workspace,
+                )
+                .to_vec())
+            }
+            WorkerBackend::RustSparse | WorkerBackend::RustDense => Ok(dense_inner_epoch_ws(
                 &self.shard,
                 self.loss,
                 w_t,
                 z,
                 eta,
-                self.reg.lam1,
-                self.reg.lam2,
-                m,
-                &mut self.rng,
-                &mut self.lazy_stats,
-                &mut self.workspace,
-            )
-            .to_vec()),
-            WorkerBackend::RustDense => Ok(dense_inner_epoch_ws(
-                &self.shard,
-                self.loss,
-                w_t,
-                z,
-                eta,
-                self.reg.lam1,
-                self.reg.lam2,
+                self.reg,
                 m,
                 &mut self.rng,
                 &mut self.workspace,
@@ -259,15 +287,16 @@ impl Worker {
         let (n, d) = (self.shard.n(), self.shard.d());
         let model = self.loss.name();
         let (n_pad, d_pad, m_step, epoch_prog) =
-            select_epoch_artifact(rt.manifest(), model, n, d).ok_or_else(|| {
+            select_epoch_artifact(rt.manifest(), self.loss, n, d).ok_or_else(|| {
                 Error::Manifest(format!(
-                    "no inner_epoch artifact fits shard {n}x{d} for model {model}; \
+                    "no inner_epoch artifact fits shard {n}x{d} for loss {model}; \
                      regenerate artifacts with larger shapes"
                 ))
             })?;
-        let grad_prog = rt
-            .manifest()
-            .find("shard_grad", model, n_pad, d_pad)
+        let grad_prog = artifact_models(self.loss)
+            .iter()
+            .copied()
+            .find_map(|m| rt.manifest().find("shard_grad", m, n_pad, d_pad))
             .map(|p| p.name.clone())
             .ok_or_else(|| {
                 Error::Manifest(format!("no shard_grad artifact for {n_pad}x{d_pad}"))
@@ -322,6 +351,15 @@ impl Worker {
     }
 
     fn xla_inner_epoch(&mut self, w_t: &[f64], z: &[f64], eta: f64, m: usize) -> Result<Vec<f64>> {
+        // the compiled artifacts hard-code the fused soft-threshold step —
+        // only the L1/elastic-net family maps onto them
+        let skip = self.reg.lazy_skip().ok_or_else(|| {
+            Error::Runtime(format!(
+                "the Xla inner-epoch artifacts implement the soft-threshold prox only; \
+                 regularizer {:?} needs a rust backend",
+                self.reg.name()
+            ))
+        })?;
         self.ensure_xla_shard()?;
         let cache = self.xla_cache.take().unwrap();
         let d = self.shard.d();
@@ -357,7 +395,7 @@ impl Worker {
                 *slot = self.rng.below(n) as i32;
             }
         }
-        let scal = [eta as f32, self.reg.lam1 as f32, self.reg.lam2 as f32];
+        let scal = [eta as f32, skip.lam1 as f32, skip.lam2 as f32];
         let rt = self.runtime.as_ref().unwrap();
         let mut done = 0usize;
         while done < m {
@@ -388,6 +426,7 @@ impl Worker {
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::loss::Reg;
 
     #[test]
     fn rust_backends_agree() {

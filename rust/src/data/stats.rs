@@ -125,8 +125,13 @@ pub fn sketch_plan(ds: &Dataset, top: usize, tail: usize) -> SketchPlan {
 /// One row's sketch: the inputs the partition engine assigns and swaps on.
 #[derive(Clone, Debug)]
 pub struct RowSketch {
-    /// Label sign (`y > 0`); regression rows report `y > 0` too, which
-    /// still stratifies target sign.
+    /// Stratification class. Binary ±1 datasets stratify by label sign
+    /// (`y > 0`, unchanged from the classification-only engine);
+    /// everything else — regression targets — stratifies by the sign of
+    /// the centered label `y − ȳ`, so a Lasso/Huber dataset whose targets
+    /// are all positive still splits into meaningful above/below-mean
+    /// strata instead of one degenerate class. Part of the engineered
+    /// split's wire contract (SPEC_VERSION 3).
     pub positive: bool,
     /// Squared row norm (total curvature mass, loss-constant aside).
     pub nrm2_sq: f64,
@@ -137,6 +142,15 @@ pub struct RowSketch {
 
 /// Stream all row sketches in one CSR pass.
 pub fn row_sketches(ds: &Dataset, plan: &SketchPlan) -> Vec<RowSketch> {
+    // binary ±1 labels keep the 0 threshold bit-for-bit; real-valued
+    // (regression) labels stratify around their mean — deterministic: one
+    // fixed-order sum over the label vector
+    let binary = ds.y.iter().all(|&v| v == 1.0 || v == -1.0);
+    let threshold = if binary || ds.n() == 0 {
+        0.0
+    } else {
+        ds.y.iter().sum::<f64>() / ds.n() as f64
+    };
     let mut out = Vec::with_capacity(ds.n());
     for i in 0..ds.n() {
         let row = ds.x.row(i);
@@ -154,7 +168,7 @@ pub fn row_sketches(ds: &Dataset, plan: &SketchPlan) -> Vec<RowSketch> {
         }
         mass.sort_unstable_by_key(|&(b, _)| b);
         out.push(RowSketch {
-            positive: ds.y[i] > 0.0,
+            positive: ds.y[i] > threshold,
             nrm2_sq: nrm2,
             mass,
         });
@@ -226,6 +240,33 @@ mod tests {
             for w in s.mass.windows(2) {
                 assert!(w[0].0 < w[1].0);
             }
+        }
+    }
+
+    #[test]
+    fn regression_rows_stratify_around_label_mean() {
+        // real-valued targets: strata are sign(y - mean), so both classes
+        // are populated even when every target is positive
+        let mut ds = synth::tiny(6)
+            .with_task(crate::data::synth::Task::Regression)
+            .generate();
+        let shift = 10.0 - ds.y.iter().cloned().fold(f64::INFINITY, f64::min);
+        for v in ds.y.iter_mut() {
+            *v += shift; // all labels now > 0
+        }
+        assert!(ds.y.iter().all(|&v| v > 0.0));
+        let sk = row_sketches(&ds, &sketch_plan(&ds, 16, 8));
+        let mean = ds.y.iter().sum::<f64>() / ds.n() as f64;
+        let pos = sk.iter().filter(|s| s.positive).count();
+        assert!(pos > 0 && pos < ds.n(), "degenerate stratification: {pos}/{}", ds.n());
+        for (i, s) in sk.iter().enumerate() {
+            assert_eq!(s.positive, ds.y[i] > mean, "row {i}");
+        }
+        // binary +-1 labels keep the historical sign stratification
+        let cls = synth::tiny(6).generate();
+        let skc = row_sketches(&cls, &sketch_plan(&cls, 16, 8));
+        for (i, s) in skc.iter().enumerate() {
+            assert_eq!(s.positive, cls.y[i] > 0.0, "row {i}");
         }
     }
 

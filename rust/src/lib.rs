@@ -38,10 +38,17 @@
 //!   channels and real TCP — that the coordinator's master/worker loops
 //!   are generic over (bit-identical trajectories on both wires;
 //!   DESIGN.md §7).
-//! * [`data`], [`linalg`], [`loss`], [`metrics`], [`config`] —
-//!   substrates: synthetic dataset generators matched to the paper's four
-//!   LibSVM datasets, CSR/CSC sparse algebra, loss models, experiment
-//!   telemetry, and the config system.
+//! * [`loss`] — the **composite objective layer** (DESIGN.md §9):
+//!   pluggable smooth losses ([`loss::SmoothLoss`]: logistic, squared,
+//!   Huber, squared hinge) × proximal regularizers ([`loss::ProxReg`]:
+//!   L1, elastic net, group Lasso, nonnegative L1), each regularizer
+//!   advertising whether the §6 recovery rules apply to it
+//!   ([`loss::ProxReg::lazy_skip`]) so the coordinator picks the lazy or
+//!   dense engine per run.
+//! * [`data`], [`linalg`], [`metrics`], [`config`] — substrates:
+//!   synthetic dataset generators matched to the paper's four LibSVM
+//!   datasets, CSR/CSC sparse algebra, experiment telemetry, and the
+//!   config system.
 //!
 //! ## Quickstart
 //!
@@ -84,10 +91,10 @@ pub mod testkit;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{Model, PscopeConfig};
+    pub use crate::config::{Model, PscopeConfig, RegKind};
     pub use crate::coordinator::{train, TrainOutput};
     pub use crate::data::{synth::SynthSpec, Dataset};
-    pub use crate::loss::Objective;
+    pub use crate::loss::{Objective, ProxReg, Reg, SmoothLoss};
     pub use crate::metrics::Trace;
     pub use crate::partition::{Partition, Partitioner};
     pub use crate::rng::Rng;

@@ -23,12 +23,12 @@ use std::process::ExitCode;
 use std::time::Duration;
 
 use pscope::cli::{flag, switch, Args, Command, FlagSpec};
-use pscope::config::{Model, PscopeConfig, TransportKind, WorkerBackend};
+use pscope::config::{Model, PscopeConfig, RegKind, TransportKind, WorkerBackend};
 use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec};
 use pscope::coordinator::{train_with, TrainOutput};
 use pscope::data::{libsvm, load_or_synth, stats, synth, Dataset};
 use pscope::error::{Error, Result};
-use pscope::loss::Objective;
+use pscope::loss::{Objective, ProxReg, SmoothLoss};
 use pscope::net::NetModel;
 use pscope::optim::fista::reference_optimum;
 use pscope::partition::{goodness, Partition, Partitioner};
@@ -45,6 +45,10 @@ struct Job {
     part: Partition,
     partition_name: String,
     artifact_dir: Option<String>,
+    /// Resolved composite objective (validated in `build_job`, so later
+    /// stages never re-handle the config error).
+    loss: SmoothLoss,
+    prox: ProxReg,
 }
 
 /// Flags shared by `train` and `master`.
@@ -52,6 +56,16 @@ fn train_flags() -> Vec<FlagSpec> {
     vec![
         flag("dataset", "preset or data/<name>.libsvm", Some("tiny")),
         flag("model", "logistic | lasso", Some("logistic")),
+        flag(
+            "loss",
+            "logistic | squared | huber[:delta] | squared_hinge (default: model's loss)",
+            None,
+        ),
+        flag(
+            "reg",
+            "l1 | elasticnet | group:<size> | nonneg (default: model's elastic net)",
+            None,
+        ),
         flag("p", "workers", Some("8")),
         flag("epochs", "outer iterations T", Some("30")),
         flag("m", "inner steps M (0 = 2n/p)", Some("0")),
@@ -86,12 +100,23 @@ fn build_job(args: &Args) -> Result<Job> {
     if let Some(b) = args.get("backend") {
         cfg.backend = WorkerBackend::parse(b)?;
     }
+    if let Some(l) = args.get("loss") {
+        cfg.loss = Some(SmoothLoss::parse(l)?);
+    }
+    if let Some(r) = args.get("reg") {
+        cfg.reg_kind = Some(RegKind::parse(r)?);
+    }
+    // resolve + validate the composite objective up front (fail fast on
+    // e.g. reg = "l1" with a nonzero lam1)
+    let loss = cfg.objective_loss();
+    let prox = cfg.prox_reg()?;
     let partition_name = args
         .get("partition")
         .unwrap_or(cfg.partition.as_str())
         .to_string();
     let partitioner = Partitioner::parse(&partition_name)?;
     println!("dataset {name}: n={} d={} nnz={}", ds.n(), ds.d(), ds.nnz());
+    println!("objective: loss {} + reg {}", loss.name(), prox.name());
     let part = partitioner.split(&ds, cfg.p, seed);
     // the digest a TCP worker must reproduce (its log prints the same line)
     println!(
@@ -104,13 +129,13 @@ fn build_job(args: &Args) -> Result<Job> {
     } else {
         None
     };
-    Ok(Job { name, seed, ds, cfg, part, partition_name, artifact_dir })
+    Ok(Job { name, seed, ds, cfg, part, partition_name, artifact_dir, loss, prox })
 }
 
 /// Reference-optimum computation for `--gap` (off unless requested).
 fn maybe_reference(args: &Args, job: &Job) -> f64 {
     if args.has("gap") {
-        let obj = Objective::new(&job.ds, job.cfg.model.loss(), job.cfg.reg);
+        let obj = Objective::new(&job.ds, job.loss, job.prox);
         let r = reference_optimum(&obj, 50_000);
         println!("reference optimum P(w*) = {:.12e}", r.objective);
         r.objective
@@ -359,7 +384,9 @@ fn run_partition_study(raw: &[String]) -> Result<()> {
     let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
     let cfg = PscopeConfig::for_dataset(name, model);
     let p: usize = args.get_parse("p", 8usize)?;
-    let eopts = EngineOpts::default();
+    // proxy masses scale by the loss's curvature bound (comparable to the
+    // measured gamma); the *constructed* partition is provably unaffected
+    let eopts = EngineOpts::for_loss(model.loss());
     let gopts = if args.has("quick") {
         goodness::GoodnessOpts::quick()
     } else {

@@ -11,7 +11,7 @@
 //!    minimizes `P_k(w; a) = F_k(w) + G_k(a)ᵀw + R(w)`, which is exactly
 //!    this problem with an extra linear term.
 
-use crate::linalg::{axpy, dist_sq, soft_threshold};
+use crate::linalg::{axpy, dist_sq};
 use crate::loss::Objective;
 
 /// FISTA options.
@@ -55,10 +55,14 @@ pub struct FistaResult {
 
 /// Minimize `obj.value(w) + linearᵀw` (the linear term models the paper's
 /// `G_k(a)ᵀw` surrogate shift; pass `None` for the plain objective).
+///
+/// Works for every [`crate::loss::ProxReg`] — the prox step dispatches
+/// through [`crate::loss::ProxReg::prox_vec`], so FISTA doubles as the
+/// reference-optimum solver for the whole scenario matrix (group Lasso and
+/// nonnegative Lasso included), not just L1.
 pub fn fista(obj: &Objective<'_>, linear: Option<&[f64]>, w0: &[f64], opts: &FistaOpts) -> FistaResult {
     let d = w0.len();
     let eta = opts.step.unwrap_or_else(|| 1.0 / obj.smoothness());
-    let thr = eta * obj.reg.lam2;
     let value = |w: &[f64]| -> f64 {
         let mut v = obj.value(w);
         if let Some(l) = linear {
@@ -79,14 +83,16 @@ pub fn fista(obj: &Objective<'_>, linear: Option<&[f64]>, w0: &[f64], opts: &Fis
         iters = k + 1;
         // gradient of the smooth part at v (+ linear shift)
         obj.data_grad_into_threaded(&v, &mut grad, 1, &mut grad_scratch);
-        axpy(obj.reg.lam1, &v, &mut grad);
+        axpy(obj.reg.ridge(), &v, &mut grad);
         if let Some(l) = linear {
             axpy(1.0, l, &mut grad);
         }
-        // prox step (into the reused buffer; fully overwritten each iter)
+        // prox step (into the reused buffer; fully overwritten each iter):
+        // forward step, then the regularizer's vector prox
         for j in 0..d {
-            w_next[j] = soft_threshold(v[j] - eta * grad[j], thr);
+            w_next[j] = v[j] - eta * grad[j];
         }
+        obj.reg.prox_vec(&mut w_next, eta);
         let delta = dist_sq(&w_next, &w).sqrt();
         // momentum
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
@@ -135,7 +141,8 @@ pub fn reference_optimum(obj: &Objective<'_>, max_iter: usize) -> FistaResult {
 mod tests {
     use super::*;
     use crate::data::synth;
-    use crate::loss::{Loss, Objective, Reg};
+    use crate::linalg::soft_threshold;
+    use crate::loss::{Loss, Objective, ProxReg, Reg};
 
     #[test]
     fn solves_tiny_logistic() {
@@ -147,7 +154,7 @@ mod tests {
         let g = obj.smooth_grad(&r.w);
         let eta = 1.0 / obj.smoothness();
         for j in 0..ds.d() {
-            let fp = soft_threshold(r.w[j] - eta * g[j], eta * obj.reg.lam2);
+            let fp = soft_threshold(r.w[j] - eta * g[j], eta * obj.reg.lam_l1());
             assert!((fp - r.w[j]).abs() < 1e-7, "coord {j} not a fixed point");
         }
     }
@@ -178,8 +185,40 @@ mod tests {
         axpy(1.0, &shift, &mut g);
         let eta = 1.0 / obj.smoothness();
         for j in 0..ds.d() {
-            let fp = soft_threshold(shifted.w[j] - eta * g[j], eta * obj.reg.lam2);
+            let fp = soft_threshold(shifted.w[j] - eta * g[j], eta * obj.reg.lam_l1());
             assert!((fp - shifted.w[j]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn solves_group_and_nonneg_regularizers() {
+        // FISTA's prox dispatch covers the whole regularizer matrix: the
+        // solution must be a fixed point of the prox-gradient map for the
+        // same regularizer it was solved with.
+        let ds = synth::tiny(46).generate();
+        for reg in [
+            ProxReg::GroupLasso { lam: 1e-3, group: 5 },
+            ProxReg::NonnegL1 { lam: 1e-3 },
+        ] {
+            let obj = Objective::new(&ds, Loss::Logistic, reg);
+            let r = fista(&obj, None, &vec![0.0; ds.d()], &FistaOpts::default());
+            assert!(r.converged, "{reg:?}: no convergence in {} iters", r.iters);
+            assert!(r.objective.is_finite());
+            let g = obj.smooth_grad(&r.w);
+            let eta = 1.0 / obj.smoothness();
+            let mut fp: Vec<f64> = (0..ds.d()).map(|j| r.w[j] - eta * g[j]).collect();
+            reg.prox_vec(&mut fp, eta);
+            for j in 0..ds.d() {
+                assert!(
+                    (fp[j] - r.w[j]).abs() < 1e-7,
+                    "{reg:?} coord {j} not a fixed point: {} vs {}",
+                    fp[j],
+                    r.w[j]
+                );
+            }
+            if let ProxReg::NonnegL1 { .. } = reg {
+                assert!(r.w.iter().all(|&v| v >= 0.0), "infeasible nonneg solution");
+            }
         }
     }
 

@@ -32,7 +32,7 @@
 
 use crate::data::Dataset;
 use crate::linalg::soft_threshold;
-use crate::loss::Loss;
+use crate::loss::{Loss, ProxReg};
 use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 
@@ -183,6 +183,13 @@ pub fn lazy_advance(u0: f64, k: usize, eps: f64, c: f64, tau: f64) -> f64 {
 /// (same rng stream contract: one `below(n)` per step) at `O(M·nnz/n + d)`
 /// cost instead of `O(M·d)`.
 ///
+/// The regularizer must carry the closed-form k-step skip capability
+/// ([`ProxReg::lazy_skip`]: L1 / elastic net) — the recovery rules *are*
+/// that closed form. Regularizers without one (group Lasso, nonnegative
+/// L1) must go through the dense engine; the coordinator's worker does
+/// that fallback automatically, and this function panics if handed one
+/// directly.
+///
 /// Convenience wrapper that allocates a throwaway [`EpochWorkspace`]; the
 /// steady-state coordinator path uses [`lazy_inner_epoch_ws`] with a
 /// long-lived workspace and performs no per-epoch heap allocations. Both
@@ -193,15 +200,13 @@ pub fn lazy_inner_epoch(
     w_t: &[f64],
     z: &[f64],
     eta: f64,
-    lam1: f64,
-    lam2: f64,
+    reg: impl Into<ProxReg>,
     m_steps: usize,
     rng: &mut Rng,
     stats: &mut LazyStats,
 ) -> Vec<f64> {
     let mut ws = EpochWorkspace::new();
-    lazy_inner_epoch_ws(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, stats, &mut ws)
-        .to_vec()
+    lazy_inner_epoch_ws(shard, loss, w_t, z, eta, reg, m_steps, rng, stats, &mut ws).to_vec()
 }
 
 /// Zero-allocation form of [`lazy_inner_epoch`]: all scratch (`u`, `cw`,
@@ -218,20 +223,24 @@ pub fn lazy_inner_epoch_ws<'ws>(
     w_t: &[f64],
     z: &[f64],
     eta: f64,
-    lam1: f64,
-    lam2: f64,
+    reg: impl Into<ProxReg>,
     m_steps: usize,
     rng: &mut Rng,
     stats: &mut LazyStats,
     ws: &'ws mut EpochWorkspace,
 ) -> &'ws [f64] {
+    let reg: ProxReg = reg.into();
+    let skip = reg.lazy_skip().expect(
+        "lazy engine needs a regularizer with a closed-form skip (L1 / elastic net); \
+         route others through the dense engine",
+    );
     let d = shard.d();
     let n = shard.n();
     assert!(n > 0, "empty shard");
     assert_eq!(w_t.len(), d);
     assert_eq!(z.len(), d);
-    let eps = eta * lam1;
-    let tau = eta * lam2;
+    let eps = eta * skip.lam1;
+    let tau = eta * skip.lam2;
     let decay = 1.0 - eps;
     assert!(decay > 0.0, "eta*lam1 must be < 1");
 
@@ -415,8 +424,8 @@ mod tests {
         let mut r1 = Rng::new(5);
         let mut r2 = Rng::new(5);
         let mut stats = LazyStats::default();
-        let u_dense = dense_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r1);
-        let u_lazy = lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r2, &mut stats);
+        let u_dense = dense_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg, m, &mut r1);
+        let u_lazy = lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg, m, &mut r2, &mut stats);
         for j in 0..ds.d() {
             assert!(
                 (u_dense[j] - u_lazy[j]).abs() < 1e-9 * (1.0 + u_dense[j].abs()),
@@ -442,8 +451,8 @@ mod tests {
         let mut r1 = Rng::new(6);
         let mut r2 = Rng::new(6);
         let mut stats = LazyStats::default();
-        let u_dense = dense_inner_epoch(&ds, Loss::Squared, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r1);
-        let u_lazy = lazy_inner_epoch(&ds, Loss::Squared, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r2, &mut stats);
+        let u_dense = dense_inner_epoch(&ds, Loss::Squared, &w, &z, eta, reg, m, &mut r1);
+        let u_lazy = lazy_inner_epoch(&ds, Loss::Squared, &w, &z, eta, reg, m, &mut r2, &mut stats);
         for j in 0..ds.d() {
             assert!(
                 (u_dense[j] - u_lazy[j]).abs() < 1e-9 * (1.0 + u_dense[j].abs()),
@@ -463,7 +472,30 @@ mod tests {
         let eta = 0.1 / obj.smoothness();
         let mut rng = Rng::new(7);
         let mut stats = LazyStats::default();
-        let _ = lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, ds.n(), &mut rng, &mut stats);
+        let _ = lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg, ds.n(), &mut rng, &mut stats);
         assert!(stats.savings() > 0.95, "savings {}", stats.savings());
+    }
+
+    #[test]
+    #[should_panic(expected = "closed-form skip")]
+    fn rejects_regularizers_without_lazy_skip() {
+        // the group Lasso has no per-coordinate closed form — handing it
+        // to the lazy engine is a caller bug (the coordinator's worker
+        // falls back to the dense engine instead)
+        let ds = synth::tiny(79).generate();
+        let w = vec![0.0; ds.d()];
+        let z = vec![0.0; ds.d()];
+        let mut rng = Rng::new(1);
+        let _ = lazy_inner_epoch(
+            &ds,
+            Loss::Logistic,
+            &w,
+            &z,
+            0.1,
+            crate::loss::ProxReg::GroupLasso { lam: 1e-3, group: 5 },
+            10,
+            &mut rng,
+            &mut LazyStats::default(),
+        );
     }
 }

@@ -129,7 +129,9 @@ impl OwlQnState {
         grad: &[f64],
     ) -> (Vec<f64>, f64, usize) {
         let d = w.len();
-        let lam2 = obj.reg.lam2;
+        // OWL-QN is an L1-family method; lam_l1 is the l1 coefficient of
+        // the L1/elastic-net regularizers it is run with
+        let lam2 = obj.reg.lam_l1();
         let pg = pseudo_gradient(w, grad, lam2);
         let pg_inf = pg.iter().fold(0.0f64, |m, v| m.max(v.abs()));
         let dir = self.direction(&pg);

@@ -19,13 +19,17 @@
 //! c > 0 (SCOPE).
 
 use crate::data::Dataset;
-use crate::loss::Loss;
+use crate::loss::{Loss, ProxReg};
 use crate::optim::lazy::{lazy_inner_epoch_ws, LazyStats};
 use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 
 /// Inner epoch with the SCOPE correction `c(u − w_t)` added to every
 /// stochastic step; `c = 0` is exactly pSCOPE's update.
+///
+/// The re-parameterization folds `c` into the affine decay, so it needs a
+/// regularizer with the closed-form skip ([`ProxReg::lazy_skip`]:
+/// L1 / elastic net) — the same family the original SCOPE paper analyzes.
 ///
 /// Convenience wrapper over [`scope_inner_epoch_ws`] with a throwaway
 /// workspace; both produce bit-identical output.
@@ -35,18 +39,15 @@ pub fn scope_inner_epoch(
     w_t: &[f64],
     z: &[f64],
     eta: f64,
-    lam1: f64,
-    lam2: f64,
+    reg: impl Into<ProxReg>,
     scope_c: f64,
     m_steps: usize,
     rng: &mut Rng,
     stats: &mut LazyStats,
 ) -> Vec<f64> {
     let mut ws = EpochWorkspace::new();
-    scope_inner_epoch_ws(
-        shard, loss, w_t, z, eta, lam1, lam2, scope_c, m_steps, rng, stats, &mut ws,
-    )
-    .to_vec()
+    scope_inner_epoch_ws(shard, loss, w_t, z, eta, reg, scope_c, m_steps, rng, stats, &mut ws)
+        .to_vec()
 }
 
 /// Zero-allocation form of [`scope_inner_epoch`]: the shifted gradient
@@ -58,17 +59,20 @@ pub fn scope_inner_epoch_ws<'ws>(
     w_t: &[f64],
     z: &[f64],
     eta: f64,
-    lam1: f64,
-    lam2: f64,
+    reg: impl Into<ProxReg>,
     scope_c: f64,
     m_steps: usize,
     rng: &mut Rng,
     stats: &mut LazyStats,
     ws: &'ws mut EpochWorkspace,
 ) -> &'ws [f64] {
+    let reg: ProxReg = reg.into();
     if scope_c == 0.0 {
-        return lazy_inner_epoch_ws(shard, loss, w_t, z, eta, lam1, lam2, m_steps, rng, stats, ws);
+        return lazy_inner_epoch_ws(shard, loss, w_t, z, eta, reg, m_steps, rng, stats, ws);
     }
+    let skip = reg.lazy_skip().expect(
+        "SCOPE correction needs a regularizer with a closed-form skip (L1 / elastic net)",
+    );
     let d = shard.d();
     // the shift buffer is taken out of the workspace (never aliases the
     // engine's borrows) and restored after the epoch
@@ -82,8 +86,7 @@ pub fn scope_inner_epoch_ws<'ws>(
         w_t,
         &zs[..d],
         eta,
-        lam1 + scope_c,
-        lam2,
+        ProxReg::ElasticNet { lam1: skip.lam1 + scope_c, lam2: skip.lam2 },
         m_steps,
         rng,
         stats,
@@ -111,11 +114,11 @@ mod tests {
         let mut r1 = Rng::new(4);
         let mut r2 = Rng::new(4);
         let a = scope_inner_epoch(
-            &ds, Loss::Logistic, &w, &z, 0.1, reg.lam1, reg.lam2, 0.0, 100, &mut r1,
+            &ds, Loss::Logistic, &w, &z, 0.1, reg, 0.0, 100, &mut r1,
             &mut Default::default(),
         );
         let b = lazy_inner_epoch(
-            &ds, Loss::Logistic, &w, &z, 0.1, reg.lam1, reg.lam2, 100, &mut r2,
+            &ds, Loss::Logistic, &w, &z, 0.1, reg, 100, &mut r2,
             &mut Default::default(),
         );
         assert_eq!(a, b);
@@ -134,7 +137,7 @@ mod tests {
         let (eta, c) = (0.05, 0.7);
         let mut rng = Rng::new(9);
         let got = scope_inner_epoch(
-            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c, 2, &mut rng,
+            &ds, Loss::Logistic, &w, &z, eta, reg, c, 2, &mut rng,
             &mut Default::default(),
         );
         // manual: two steps, instance 0 each time
@@ -172,7 +175,7 @@ mod tests {
             for _ in 0..6 {
                 let z = obj.data_grad(&w);
                 w = scope_inner_epoch(
-                    &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c,
+                    &ds, Loss::Logistic, &w, &z, eta, reg, c,
                     2 * ds.n(), &mut rng, &mut Default::default(),
                 );
             }

@@ -229,15 +229,15 @@ mod tests {
         }
         let mut r1 = Rng::new(5);
         let mut s1 = LazyStats::default();
-        let (l1, l2, m) = (reg.lam1, reg.lam2, 120);
+        let m = 120;
         let got = lazy_inner_epoch_ws(
-            &ds, Loss::Logistic, &w, &z, eta, l1, l2, m, &mut r1, &mut s1, &mut ws,
+            &ds, Loss::Logistic, &w, &z, eta, reg, m, &mut r1, &mut s1, &mut ws,
         )
         .to_vec();
         let mut r2 = Rng::new(5);
         let mut s2 = LazyStats::default();
         let want =
-            lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, l1, l2, m, &mut r2, &mut s2);
+            lazy_inner_epoch(&ds, Loss::Logistic, &w, &z, eta, reg, m, &mut r2, &mut s2);
         assert_eq!(got, want);
         assert!(ws.gen < u64::MAX / 2, "stamp space was not reset");
     }

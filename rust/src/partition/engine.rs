@@ -51,6 +51,7 @@
 
 use crate::data::stats::{row_sketches, sketch_plan};
 use crate::data::Dataset;
+use crate::loss::SmoothLoss;
 use crate::partition::quadratic::{DiagQuadratic, QuadraticPartition};
 use crate::partition::Partition;
 use crate::rng::Rng;
@@ -83,6 +84,18 @@ pub struct EngineOpts {
     pub refine_passes: usize,
     /// Swap proposals per dataset row per pass.
     pub proposals_per_row: usize,
+    /// Loss curvature bound `sup h''` multiplying every sketch mass —
+    /// [`SmoothLoss::curvature_bound`] of the loss being trained, so the
+    /// proxy approximates that loss's Hessian diagonal instead of
+    /// assuming a fixed one. The default is the logistic bound (1/4; the
+    /// default model). A *constant* curvature bound scales the whole
+    /// proxy uniformly, so it provably never changes which partition the
+    /// search constructs (comparisons are scale-invariant, and the
+    /// implemented bounds are powers of two — exact in f64) — which is
+    /// why [`engineer`] can stay loss-free and the RunSpec
+    /// regenerate-on-worker contract is unaffected. It does change the
+    /// *reported* proxy values, making them comparable across losses.
+    pub curvature: f64,
 }
 
 impl Default for EngineOpts {
@@ -92,7 +105,17 @@ impl Default for EngineOpts {
             sketch_tail: 16,
             refine_passes: 3,
             proposals_per_row: 4,
+            curvature: SmoothLoss::Logistic.curvature_bound(),
         }
+    }
+}
+
+impl EngineOpts {
+    /// Default options with the curvature bound of `loss` — what the
+    /// `pscope partition` study and the goodness reports use so proxy
+    /// values line up with the measured γ̂ of the trained objective.
+    pub fn for_loss(loss: SmoothLoss) -> EngineOpts {
+        EngineOpts { curvature: loss.curvature_bound(), ..Default::default() }
     }
 }
 
@@ -155,8 +178,8 @@ pub fn engineer_with(
     }
 
     // -- refine: swap local search under the Lemma-5 proxy ---------------
-    let mut qp = proxy_state(&assignment, &masses, state_buckets, p);
-    let scale = mass_scale(&assignment, p);
+    let mut qp = proxy_state(&assignment, &masses, state_buckets, p, opts.curvature);
+    let scale = opts.curvature * mass_scale(&assignment, p);
     // swaps move mass between shards, never in or out, so the global
     // diagonal is loop-invariant — compute it once for the hot loop
     let global_a = qp.global().a;
@@ -203,7 +226,8 @@ pub fn engineer_with(
     }
     // report the final proxy from a fresh accumulation (the incremental
     // state carries harmless f64 add/sub residue)
-    let proxy_gamma_final = proxy_state(&assignment, &masses, state_buckets, p).gamma_lemma5();
+    let proxy_gamma_final =
+        proxy_state(&assignment, &masses, state_buckets, p, opts.curvature).gamma_lemma5();
     (
         Partition {
             assignment,
@@ -237,6 +261,7 @@ pub fn proxy_gamma(ds: &Dataset, part: &Partition, opts: &EngineOpts) -> f64 {
 pub struct ProxySketch {
     masses: Vec<Vec<(u32, f64)>>,
     state_buckets: usize,
+    curvature: f64,
 }
 
 impl ProxySketch {
@@ -245,12 +270,13 @@ impl ProxySketch {
         let plan = sketch_plan(ds, opts.sketch_top, opts.sketch_tail);
         let sketches = row_sketches(ds, &plan);
         let (masses, state_buckets) = class_conditional_masses(&sketches, plan.n_buckets);
-        ProxySketch { masses, state_buckets }
+        ProxySketch { masses, state_buckets, curvature: opts.curvature }
     }
 
     /// Lemma-5 proxy γ of `part` under this sketch.
     pub fn gamma(&self, part: &Partition) -> f64 {
-        proxy_state(&part.assignment, &self.masses, self.state_buckets, part.p()).gamma_lemma5()
+        proxy_state(&part.assignment, &self.masses, self.state_buckets, part.p(), self.curvature)
+            .gamma_lemma5()
     }
 }
 
@@ -289,8 +315,9 @@ fn proxy_state(
     masses: &[Vec<(u32, f64)>],
     state_buckets: usize,
     p: usize,
+    curvature: f64,
 ) -> QuadraticPartition {
-    let scale = mass_scale(assignment, p);
+    let scale = curvature * mass_scale(assignment, p);
     let total_mass: f64 = masses.iter().flatten().map(|&(_, m)| m).sum();
     let eps = (scale * total_mass / state_buckets.max(1) as f64 / p as f64) * FLOOR_REL
         + f64::MIN_POSITIVE;

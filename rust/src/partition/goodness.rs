@@ -21,7 +21,7 @@
 
 use crate::data::Dataset;
 use crate::linalg::{dist_sq, dot};
-use crate::loss::{Loss, Objective, Reg};
+use crate::loss::{Loss, Objective, ProxReg};
 use crate::optim::fista::{fista, reference_optimum, FistaOpts};
 use crate::partition::Partition;
 use crate::rng::Rng;
@@ -104,11 +104,12 @@ pub fn local_global_gap(
     ds: &Dataset,
     part: &Partition,
     loss: Loss,
-    reg: Reg,
+    reg: impl Into<ProxReg>,
     a: &[f64],
     p_star: f64,
     local_iters: usize,
 ) -> (f64, usize) {
+    let reg: ProxReg = reg.into();
     let obj = Objective::new(ds, loss, reg);
     let d = ds.d();
     // gradient buffers reused across the p shards (this helper runs once
@@ -179,9 +180,10 @@ pub fn analyze(
     ds: &Dataset,
     part: &Partition,
     loss: Loss,
-    reg: Reg,
+    reg: impl Into<ProxReg>,
     opts: &GoodnessOpts,
 ) -> GoodnessReport {
+    let reg: ProxReg = reg.into();
     let obj = Objective::new(ds, loss, reg);
     let ref_opt = reference_optimum(&obj, opts.ref_iters);
     let w_star = ref_opt.w;
@@ -233,10 +235,11 @@ pub fn lemma1_identity_check(
     ds: &Dataset,
     part: &Partition,
     loss: Loss,
-    reg: Reg,
+    reg: impl Into<ProxReg>,
     a: &[f64],
     p_star: f64,
 ) -> (f64, f64) {
+    let reg: ProxReg = reg.into();
     let obj = Objective::new(ds, loss, reg);
     let d = ds.d();
     let mut grad_scratch = Vec::new();
@@ -273,6 +276,7 @@ pub fn lemma1_identity_check(
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::loss::Reg;
     use crate::partition::Partitioner;
 
     fn small_problem() -> (Dataset, Loss, Reg) {

@@ -41,8 +41,7 @@ fn p1_trajectory_is_serial_prox_svrg() {
             &w,
             &z,
             eta,
-            reg.lam1,
-            reg.lam2,
+            reg,
             m,
             &mut rng,
             &mut stats,

@@ -48,8 +48,8 @@ fn prop_lazy_epoch_equals_dense_epoch() {
         let mut r1 = Rng::new(11);
         let mut r2 = Rng::new(11);
         let mut stats = LazyStats::default();
-        let ud = dense_inner_epoch(&ds, loss, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r1);
-        let ul = lazy_inner_epoch(&ds, loss, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r2, &mut stats);
+        let ud = dense_inner_epoch(&ds, loss, &w, &z, eta, reg, m, &mut r1);
+        let ul = lazy_inner_epoch(&ds, loss, &w, &z, eta, reg, m, &mut r2, &mut stats);
         for j in 0..ds.d() {
             let tol = 1e-9 * (1.0 + ud[j].abs());
             if (ud[j] - ul[j]).abs() >= tol {
@@ -110,7 +110,7 @@ fn prop_savings_match_sparsity() {
         let seed = rng.next_u64();
         let mut stats = LazyStats::default();
         let mut r = Rng::new(seed);
-        let _ = lazy_inner_epoch(&ds, loss, &w, &z, 0.01, reg.lam1, reg.lam2, m, &mut r, &mut stats);
+        let _ = lazy_inner_epoch(&ds, loss, &w, &z, 0.01, reg, m, &mut r, &mut stats);
         // replay the sampling
         let mut r2 = Rng::new(seed);
         let expect: u64 = (0..m).map(|_| ds.x.row(r2.below(ds.n())).nnz() as u64).sum::<u64>()

@@ -1,0 +1,276 @@
+//! The composite-objective scenario matrix: new (loss, regularizer)
+//! pairs train end-to-end on both worker engines.
+//!
+//! For each pair the full CALL coordinator runs and must (a) strictly
+//! decrease the objective, (b) close at least half of the initial
+//! suboptimality gap against a FISTA reference optimum (FISTA shares the
+//! prox dispatch, so it solves the whole matrix), and (c) agree between
+//! the lazy and dense paths where both apply:
+//!
+//! * regularizers **with** the closed-form skip (L1 / elastic net): the
+//!   lazy engine runs and must match the dense engine to 1e-9 per epoch;
+//! * regularizers **without** one (group Lasso, nonnegative L1): the
+//!   sparse backend falls back to the dense engine, pinned **bit for
+//!   bit** against an explicit dense-backend run (and reports zero lazy
+//!   materializations — proof the fallback actually took the dense path).
+//!
+//! One TCP-loopback run ships a non-default objective (Huber δ as exact
+//! f64 bits + group regularizer) through RunSpec v3 and must reproduce
+//! the in-process trajectory bit for bit — the wire validation of the
+//! composite layer, end to end.
+
+use std::time::Duration;
+
+use pscope::config::{Model, PscopeConfig, RegKind, WorkerBackend};
+use pscope::coordinator::remote::{serve_worker, MasterEndpoint, RunSpec};
+use pscope::coordinator::train_with;
+use pscope::data::{synth, Dataset};
+use pscope::loss::{Objective, ProxReg, Reg, SmoothLoss};
+use pscope::net::NetModel;
+use pscope::optim::fista::reference_optimum;
+use pscope::partition::Partitioner;
+use pscope::rng::Rng;
+
+struct Scenario {
+    tag: &'static str,
+    ds: Dataset,
+    loss: SmoothLoss,
+    reg_kind: RegKind,
+    reg: Reg,
+    has_lazy_skip: bool,
+}
+
+/// Four new (loss, regularizer) corners of the matrix — none of them the
+/// paper's two original models.
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            tag: "huber+l1",
+            ds: synth::tiny(901).with_task(synth::Task::Regression).generate(),
+            loss: SmoothLoss::Huber { delta: 1.0 },
+            reg_kind: RegKind::L1,
+            reg: Reg { lam1: 0.0, lam2: 1e-3 },
+            has_lazy_skip: true,
+        },
+        Scenario {
+            tag: "squared_hinge+elasticnet",
+            ds: synth::tiny(902).generate(),
+            loss: SmoothLoss::SquaredHinge,
+            reg_kind: RegKind::ElasticNet,
+            reg: Reg { lam1: 1e-4, lam2: 1e-4 },
+            has_lazy_skip: true,
+        },
+        Scenario {
+            tag: "logistic+group",
+            ds: synth::tiny(903).generate(),
+            loss: SmoothLoss::Logistic,
+            reg_kind: RegKind::GroupLasso { group: 5 },
+            reg: Reg { lam1: 0.0, lam2: 1e-3 },
+            has_lazy_skip: false,
+        },
+        Scenario {
+            tag: "squared+nonneg",
+            ds: synth::tiny(904).with_task(synth::Task::Regression).generate(),
+            loss: SmoothLoss::Squared,
+            reg_kind: RegKind::NonnegL1,
+            reg: Reg { lam1: 0.0, lam2: 1e-3 },
+            has_lazy_skip: false,
+        },
+    ]
+}
+
+fn cfg_for(s: &Scenario, backend: WorkerBackend, epochs: usize) -> PscopeConfig {
+    PscopeConfig {
+        p: 2,
+        outer_iters: epochs,
+        reg: s.reg,
+        loss: Some(s.loss),
+        reg_kind: Some(s.reg_kind),
+        seed: 11,
+        backend,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    }
+}
+
+#[test]
+fn every_new_pair_decreases_and_converges_on_both_engines() {
+    for s in scenarios() {
+        let prox = cfg_for(&s, WorkerBackend::RustSparse, 1).prox_reg().unwrap();
+        let obj = Objective::new(&s.ds, s.loss, prox);
+        let p_ref = reference_optimum(&obj, 20_000).objective;
+        for backend in [WorkerBackend::RustSparse, WorkerBackend::RustDense] {
+            let cfg = cfg_for(&s, backend, 60);
+            let part = Partitioner::Uniform.split(&s.ds, cfg.p, 3);
+            let out = train_with(&s.ds, &part, &cfg, None, NetModel::zero()).unwrap();
+            let p0 = out.trace.points.first().unwrap().objective;
+            let p_last = out.trace.last_objective();
+            assert!(
+                p_last < p0,
+                "{} [{backend:?}]: objective went {p0} -> {p_last}",
+                s.tag
+            );
+            let gap0 = p0 - p_ref;
+            let gap = p_last - p_ref;
+            // the FISTA reference is tight to ~1e-10 on these tiny
+            // problems; a small slack covers losses where it converges
+            // sublinearly (no strong convexity)
+            assert!(gap > -1e-6, "{} [{backend:?}]: beat the reference by {gap}", s.tag);
+            assert!(
+                gap < 0.5 * gap0,
+                "{} [{backend:?}]: gap {gap} did not close half of initial {gap0}",
+                s.tag
+            );
+        }
+    }
+}
+
+#[test]
+fn lazy_and_dense_agree_where_both_apply() {
+    // one inner epoch, engine-level: the lazy recovery rules must match
+    // the dense reference to 1e-9 for the new losses too
+    for s in scenarios().into_iter().filter(|s| s.has_lazy_skip) {
+        let prox = cfg_for(&s, WorkerBackend::RustSparse, 1).prox_reg().unwrap();
+        let obj = Objective::new(&s.ds, s.loss, prox);
+        let w = vec![0.02; s.ds.d()];
+        let z = obj.data_grad(&w);
+        let eta = 0.3 / obj.smoothness();
+        let m = 2 * s.ds.n();
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let ud = pscope::optim::svrg::dense_inner_epoch(&s.ds, s.loss, &w, &z, eta, prox, m, &mut r1);
+        let ul = pscope::optim::lazy::lazy_inner_epoch(
+            &s.ds, s.loss, &w, &z, eta, prox, m, &mut r2, &mut Default::default(),
+        );
+        for j in 0..s.ds.d() {
+            assert!(
+                (ud[j] - ul[j]).abs() < 1e-9 * (1.0 + ud[j].abs()),
+                "{} coord {j}: dense {} vs lazy {}",
+                s.tag,
+                ud[j],
+                ul[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_backend_fallback_is_bit_identical_to_dense_backend() {
+    // no closed-form skip -> the sparse backend must take the dense
+    // engine path: identical bits, and zero lazy materializations
+    for s in scenarios().into_iter().filter(|s| !s.has_lazy_skip) {
+        let part = Partitioner::Uniform.split(&s.ds, 2, 3);
+        let sparse_cfg = cfg_for(&s, WorkerBackend::RustSparse, 6);
+        let dense_cfg = cfg_for(&s, WorkerBackend::RustDense, 6);
+        let a = train_with(&s.ds, &part, &sparse_cfg, None, NetModel::zero()).unwrap();
+        let b = train_with(&s.ds, &part, &dense_cfg, None, NetModel::zero()).unwrap();
+        assert_eq!(a.w, b.w, "{}: fallback diverged from the dense backend", s.tag);
+        assert_eq!(
+            a.materializations, 0,
+            "{}: fallback still ran the lazy engine",
+            s.tag
+        );
+    }
+    // and regularizers with the skip do run lazily on the sparse backend
+    for s in scenarios().into_iter().filter(|s| s.has_lazy_skip).take(1) {
+        let part = Partitioner::Uniform.split(&s.ds, 2, 3);
+        let cfg = cfg_for(&s, WorkerBackend::RustSparse, 2);
+        let out = train_with(&s.ds, &part, &cfg, None, NetModel::zero()).unwrap();
+        assert!(out.materializations > 0, "{}: lazy engine never engaged", s.tag);
+    }
+}
+
+#[test]
+fn runspec_v3_ships_objective_bits_end_to_end_over_tcp() {
+    // a non-default composite objective — Huber with an inexact-in-binary
+    // delta, group-lasso regularizer, sparse backend falling back to the
+    // dense engine — through the real wire: the TCP cluster must
+    // reproduce the in-process trajectory bit for bit
+    let (data_seed, part_seed, p, epochs) = (21u64, 1u64, 2usize, 3usize);
+    let ds = synth::tiny(data_seed).generate();
+    let cfg = PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 0.0, lam2: 1e-3 },
+        loss: Some(SmoothLoss::Huber { delta: 0.3 }),
+        reg_kind: Some(RegKind::GroupLasso { group: 5 }),
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let inproc = train_with(&ds, &part, &cfg, None, NetModel::ten_gbe()).unwrap();
+
+    let spec =
+        RunSpec::derive(&ds, &part, &cfg, "tiny", data_seed, "uniform", part_seed, None).unwrap();
+    assert_eq!(spec.loss, SmoothLoss::Huber { delta: 0.3 });
+    assert_eq!(spec.reg, ProxReg::GroupLasso { lam: 1e-3, group: 5 });
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..p)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || serve_worker(&addr, Duration::from_secs(30)))
+        })
+        .collect();
+    let tcp = ep
+        .train(&ds, &part, &cfg, NetModel::ten_gbe(), &spec, Duration::from_secs(30))
+        .unwrap();
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+
+    for j in 0..inproc.w.len() {
+        assert_eq!(
+            inproc.w[j].to_bits(),
+            tcp.w[j].to_bits(),
+            "coord {j}: inproc {} vs tcp {}",
+            inproc.w[j],
+            tcp.w[j]
+        );
+    }
+    assert_eq!(inproc.comm, tcp.comm, "byte-meter totals differ across transports");
+    for (a, b) in inproc.trace.points.iter().zip(&tcp.trace.points) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "epoch {}", a.epoch);
+    }
+}
+
+#[test]
+fn xla_backend_rejects_non_soft_threshold_regularizers_at_resolve_time() {
+    // fail-fast contract: the rejection is a caller-thread config error
+    // during resolution, not p worker deaths at the first inner epoch
+    let scens = scenarios();
+    let s = &scens[2]; // logistic+group
+    let cfg = cfg_for(s, WorkerBackend::Xla, 2);
+    let part = Partitioner::Uniform.split(&s.ds, cfg.p, 3);
+    let err = train_with(&s.ds, &part, &cfg, Some("artifacts".into()), NetModel::zero())
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("soft-threshold"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn mismatched_spec_objective_is_rejected_before_training() {
+    // MasterEndpoint::train cross-checks the spec's objective bits
+    // against its own config resolution — a one-ulp lambda drift fails
+    let ds = synth::tiny(31).generate();
+    let cfg = PscopeConfig {
+        p: 1,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, 1, 1);
+    let mut spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 31, "uniform", 1, None).unwrap();
+    spec.reg = ProxReg::ElasticNet {
+        lam1: f64::from_bits(1e-3f64.to_bits() ^ 1),
+        lam2: 1e-3,
+    };
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let err = ep
+        .train(&ds, &part, &cfg, NetModel::zero(), &spec, Duration::from_secs(5))
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("objective"),
+        "unexpected error: {err}"
+    );
+}

@@ -1,0 +1,255 @@
+//! Bit-identical-trajectory regression for the composite-objective
+//! refactor: existing `logistic` and `lasso` configs must produce exactly
+//! the trajectories they produced before the `SmoothLoss`/`ProxReg` layer
+//! existed (PR 4 HEAD).
+//!
+//! Golden bits can't be stored here (they'd be toolchain-independent only
+//! by luck), so the pin is a *transcription*: `legacy_dense_epoch` below
+//! is a line-for-line port of the pre-refactor dense engine — hardcoded
+//! soft threshold, `(1 − ηλ₁)` decay, `thr = ηλ₂`, identical op order —
+//! and `legacy_call_round` replays the pre-refactor master fold (reduce
+//! in worker order, scale once). The refactored stack must match both
+//! **bit for bit**:
+//!
+//! 1. engine level — the new `dense_inner_epoch` (ProxReg-dispatched)
+//!    against the transcription, logistic and lasso;
+//! 2. coordinator level — a full `train_with` run (p = 2, dense backend)
+//!    against a serial replay of Algorithm 1 built only from the
+//!    transcription + the master's documented reduce order;
+//! 3. config level — the legacy Model-preset config path against an
+//!    explicit `loss`/`reg` override naming the same objective.
+//!
+//! The lazy engine is pinned to the dense engine elsewhere
+//! (`tests/lazy_equivalence.rs`), which closes the loop for the sparse
+//! backend.
+
+// the transcriptions mirror the pre-refactor signatures, scalars and all
+#![allow(clippy::too_many_arguments)]
+
+use pscope::config::{Model, PscopeConfig, RegKind, WorkerBackend};
+use pscope::coordinator::train_with;
+use pscope::data::{synth, Dataset};
+use pscope::loss::{Loss, Objective, Reg, SmoothLoss};
+use pscope::net::NetModel;
+use pscope::partition::Partitioner;
+use pscope::rng::Rng;
+
+/// Pre-refactor soft threshold (transcribed).
+fn legacy_soft_threshold(v: f64, t: f64) -> f64 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+/// Line-for-line port of the pre-refactor dense inner epoch: decay and
+/// threshold precomputed, fused per-coordinate update, one `below(n)` per
+/// step.
+fn legacy_dense_epoch(
+    shard: &Dataset,
+    loss: Loss,
+    w_t: &[f64],
+    z: &[f64],
+    eta: f64,
+    lam1: f64,
+    lam2: f64,
+    m_steps: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let d = shard.d();
+    let n = shard.n();
+    let decay = 1.0 - eta * lam1;
+    let thr = eta * lam2;
+    let mut u = w_t.to_vec();
+    let cw: Vec<f64> = (0..n)
+        .map(|i| loss.hprime(shard.x.row(i).dot(w_t), shard.y[i]))
+        .collect();
+    for _ in 0..m_steps {
+        let i = rng.below(n);
+        let row = shard.x.row(i);
+        let coeff = loss.hprime(row.dot(&u), shard.y[i]) - cw[i];
+        let mut k = 0usize;
+        for j in 0..d {
+            let mut g = z[j];
+            if k < row.idx.len() && row.idx[k] as usize == j {
+                g += coeff * row.val[k];
+                k += 1;
+            }
+            u[j] = legacy_soft_threshold(decay * u[j] - eta * g, thr);
+        }
+    }
+    u
+}
+
+fn problems() -> Vec<(Dataset, Loss, Reg, &'static str)> {
+    vec![
+        (
+            synth::tiny(1201).generate(),
+            SmoothLoss::Logistic,
+            Reg { lam1: 1e-3, lam2: 1e-3 },
+            "logistic",
+        ),
+        (
+            synth::tiny(1202)
+                .with_task(synth::Task::Regression)
+                .generate(),
+            SmoothLoss::Squared,
+            Reg { lam1: 0.0, lam2: 5e-3 }, // the Lasso corner: no ridge
+            "lasso",
+        ),
+    ]
+}
+
+#[test]
+fn dense_engine_is_bit_identical_to_legacy_transcription() {
+    for (ds, loss, reg, tag) in problems() {
+        let obj = Objective::new(&ds, loss, reg);
+        let w = vec![0.02; ds.d()];
+        let z = obj.data_grad(&w);
+        let eta = 0.3 / obj.smoothness();
+        let m = 2 * ds.n();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let legacy = legacy_dense_epoch(&ds, loss, &w, &z, eta, reg.lam1, reg.lam2, m, &mut r1);
+        let new = pscope::optim::svrg::dense_inner_epoch(&ds, loss, &w, &z, eta, reg, m, &mut r2);
+        for j in 0..ds.d() {
+            assert_eq!(
+                legacy[j].to_bits(),
+                new[j].to_bits(),
+                "{tag} coord {j}: legacy {} vs refactored {}",
+                legacy[j],
+                new[j]
+            );
+        }
+    }
+}
+
+/// Serial replay of Algorithm 1 exactly as the pre-refactor coordinator
+/// executed it for the dense backend: per epoch, (a) every worker's raw
+/// shard-gradient sum (single reduction block at these shard sizes — the
+/// plain row-order accumulation), (b) the master's worker-order fold and
+/// single 1/n scale, (c) every worker's dense epoch on its forked RNG
+/// stream, (d) the master's worker-order iterate fold and 1/p scale.
+fn legacy_call_trajectory(
+    ds: &Dataset,
+    part: &[Vec<usize>],
+    loss: Loss,
+    reg: Reg,
+    eta: f64,
+    m_inner: usize,
+    seed: u64,
+    epochs: usize,
+) -> Vec<f64> {
+    let p = part.len();
+    let d = ds.d();
+    let shards: Vec<Dataset> = part.iter().map(|rows| ds.select(rows)).collect();
+    let root = Rng::new(seed);
+    let mut rngs: Vec<Rng> = (0..p).map(|k| root.fork(k as u64 + 1)).collect();
+    let mut w = vec![0.0; d];
+    for _ in 0..epochs {
+        // (a) + (b): z = (sum_k zsum_k) / n, folded in worker order
+        let mut z = vec![0.0; d];
+        let mut total = 0usize;
+        for shard in &shards {
+            let mut zsum = vec![0.0; d];
+            for i in 0..shard.n() {
+                let row = shard.x.row(i);
+                let c = loss.hprime(row.dot(&w), shard.y[i]);
+                row.axpy_into(c, &mut zsum);
+            }
+            for j in 0..d {
+                z[j] += zsum[j];
+            }
+            total += shard.n();
+        }
+        for v in z.iter_mut() {
+            *v *= 1.0 / total as f64;
+        }
+        // (c) + (d): u_mean = (sum_k u_k) / p, folded in worker order
+        let mut u_mean = vec![0.0; d];
+        for (k, shard) in shards.iter().enumerate() {
+            let u = legacy_dense_epoch(
+                shard, loss, &w, &z, eta, reg.lam1, reg.lam2, m_inner, &mut rngs[k],
+            );
+            for j in 0..d {
+                u_mean[j] += u[j];
+            }
+        }
+        for v in u_mean.iter_mut() {
+            *v *= 1.0 / p as f64;
+        }
+        w.copy_from_slice(&u_mean);
+    }
+    w
+}
+
+#[test]
+fn coordinator_trajectory_is_bit_identical_to_legacy_replay() {
+    for (ds, _loss, reg, tag) in problems() {
+        let model = if tag == "logistic" { Model::Logistic } else { Model::Lasso };
+        let (p, epochs, m_inner, eta) = (2usize, 4usize, 150usize, 0.05f64);
+        let cfg = PscopeConfig {
+            p,
+            outer_iters: epochs,
+            m_inner,
+            eta,
+            reg,
+            seed: 77,
+            backend: WorkerBackend::RustDense,
+            ..PscopeConfig::for_dataset("tiny", model)
+        };
+        let part = Partitioner::Uniform.split(&ds, p, 3);
+        let out = train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap();
+        let legacy = legacy_call_trajectory(
+            &ds,
+            &part.assignment,
+            model.loss(),
+            reg,
+            eta,
+            m_inner,
+            77,
+            epochs,
+        );
+        for j in 0..ds.d() {
+            assert_eq!(
+                out.w[j].to_bits(),
+                legacy[j].to_bits(),
+                "{tag} coord {j}: coordinator {} vs legacy replay {}",
+                out.w[j],
+                legacy[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn explicit_loss_reg_overrides_reproduce_the_model_preset_bitwise() {
+    // naming the same objective explicitly (loss = "logistic",
+    // reg = "elasticnet") must be the identity — config plumbing only
+    for (ds, loss, reg, tag) in problems() {
+        let model = if tag == "logistic" { Model::Logistic } else { Model::Lasso };
+        let base = PscopeConfig {
+            p: 3,
+            outer_iters: 4,
+            reg,
+            seed: 5,
+            ..PscopeConfig::for_dataset("tiny", model)
+        };
+        let part = Partitioner::Uniform.split(&ds, 3, 1);
+        let a = train_with(&ds, &part, &base, None, NetModel::zero()).unwrap();
+        let explicit = PscopeConfig {
+            loss: Some(loss),
+            reg_kind: Some(RegKind::ElasticNet),
+            ..base
+        };
+        let b = train_with(&ds, &part, &explicit, None, NetModel::zero()).unwrap();
+        assert_eq!(a.w, b.w, "{tag}: explicit overrides perturbed the trajectory");
+        assert_eq!(a.comm, b.comm, "{tag}: comm accounting diverged");
+        for (x, y) in a.trace.points.iter().zip(&b.trace.points) {
+            assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{tag} epoch {}", x.epoch);
+        }
+    }
+}

@@ -37,9 +37,7 @@ fn chain_fresh(
     let mut iterates = Vec::new();
     for _ in 0..epochs {
         let z = obj.data_grad(&w);
-        w = lazy_inner_epoch(
-            ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats,
-        );
+        w = lazy_inner_epoch(ds, Loss::Logistic, &w, &z, eta, reg, m, &mut rng, &mut stats);
         iterates.push(w.clone());
     }
     iterates
@@ -62,7 +60,7 @@ fn workspace_reuse_is_bit_identical_lazy() {
     for want in fresh.iter().take(epochs) {
         let z = obj.data_grad(&w);
         let u = lazy_inner_epoch_ws(
-            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, m, &mut rng, &mut stats, &mut ws,
+            &ds, Loss::Logistic, &w, &z, eta, reg, m, &mut rng, &mut stats, &mut ws,
         );
         assert_eq!(u, want.as_slice(), "workspace reuse diverged");
         w.copy_from_slice(u);
@@ -84,10 +82,10 @@ fn workspace_reuse_is_bit_identical_dense() {
     let mut ws = EpochWorkspace::new();
     for _ in 0..3 {
         let z1 = obj.data_grad(&w1);
-        w1 = dense_inner_epoch(&ds, Loss::Logistic, &w1, &z1, eta, reg.lam1, reg.lam2, m, &mut r1);
+        w1 = dense_inner_epoch(&ds, Loss::Logistic, &w1, &z1, eta, reg, m, &mut r1);
         let z2 = obj.data_grad(&w2);
         let u = dense_inner_epoch_ws(
-            &ds, Loss::Logistic, &w2, &z2, eta, reg.lam1, reg.lam2, m, &mut r2, &mut ws,
+            &ds, Loss::Logistic, &w2, &z2, eta, reg, m, &mut r2, &mut ws,
         );
         assert_eq!(u, w1.as_slice(), "dense workspace reuse diverged");
         w2.copy_from_slice(u);
@@ -109,11 +107,11 @@ fn workspace_reuse_is_bit_identical_scope_correction() {
         let mut r1 = Rng::new(seed);
         let mut r2 = Rng::new(seed);
         let a = scope_inner_epoch(
-            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c, 150, &mut r1,
+            &ds, Loss::Logistic, &w, &z, eta, reg, c, 150, &mut r1,
             &mut Default::default(),
         );
         let b = scope_inner_epoch_ws(
-            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, c, 150, &mut r2,
+            &ds, Loss::Logistic, &w, &z, eta, reg, c, 150, &mut r2,
             &mut Default::default(), &mut ws,
         );
         assert_eq!(a.as_slice(), b, "scope-correction workspace path diverged");
@@ -134,7 +132,7 @@ fn steady_state_performs_no_allocations() {
 
     let z = obj.data_grad(&w);
     let u = lazy_inner_epoch_ws(
-        &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, ds.n(), &mut rng, &mut stats, &mut ws,
+        &ds, Loss::Logistic, &w, &z, eta, reg, ds.n(), &mut rng, &mut stats, &mut ws,
     );
     w.copy_from_slice(u);
     let warm = ws.allocations();
@@ -143,8 +141,7 @@ fn steady_state_performs_no_allocations() {
     for _ in 0..5 {
         let z = obj.data_grad(&w);
         let u = lazy_inner_epoch_ws(
-            &ds, Loss::Logistic, &w, &z, eta, reg.lam1, reg.lam2, ds.n(), &mut rng, &mut stats,
-            &mut ws,
+            &ds, Loss::Logistic, &w, &z, eta, reg, ds.n(), &mut rng, &mut stats, &mut ws,
         );
         w.copy_from_slice(u);
     }
