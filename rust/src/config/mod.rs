@@ -212,6 +212,12 @@ pub struct PscopeConfig {
     /// produce bit-identical trajectories and byte-meter totals for the
     /// same seed/config/partition.
     pub transport: TransportKind,
+    /// Dataset source spec (`dataset` key): a synth preset name, a LibSVM
+    /// path, or a `pscope ingest` shard directory — resolved by
+    /// [`DataSource::resolve`](crate::data::source::DataSource::resolve).
+    /// `None` leaves the choice to the CLI (`--dataset` wins over the
+    /// config key when both are given).
+    pub dataset: Option<String>,
 }
 
 impl Default for PscopeConfig {
@@ -234,6 +240,7 @@ impl Default for PscopeConfig {
             grad_threads: 1,
             partition: "uniform".into(),
             transport: TransportKind::InProc,
+            dataset: None,
         }
     }
 }
@@ -342,6 +349,7 @@ impl PscopeConfig {
                     self.partition = name.to_string();
                 }
                 "transport" => self.transport = TransportKind::parse(v.as_str_or()?)?,
+                "dataset" => self.dataset = Some(v.as_str_or()?.to_string()),
                 other => {
                     return Err(Error::Config(format!("unknown config key {other:?}")));
                 }
@@ -464,6 +472,15 @@ mod tests {
         assert!(c.apply_toml("partition = \"diagonal\"\n").is_err());
         // the failed apply must not clobber the previous value
         assert_eq!(c.partition, "engineered");
+    }
+
+    #[test]
+    fn dataset_key_names_a_source_spec() {
+        let mut c = PscopeConfig::default();
+        assert_eq!(c.dataset, None);
+        c.apply_toml("dataset = \"shards/rcv1_like\"\n").unwrap();
+        assert_eq!(c.dataset.as_deref(), Some("shards/rcv1_like"));
+        assert!(c.apply_toml("dataset = 7\n").is_err(), "non-string dataset accepted");
     }
 
     #[test]

@@ -5,24 +5,32 @@
 //! ## Job distribution
 //!
 //! Shards never travel over the wire. The master ships every worker a
-//! [`RunSpec`] — dataset name + generation seed, partition strategy +
-//! seed, and the *resolved* run scalars (`m_inner`, `eta`, the exact
-//! f64 bits of the regularization) — inside the unmetered `Setup` control
-//! frame; the worker deterministically regenerates the dataset, replays
-//! the partition split, and selects its own shard. Because generation and
-//! splitting are seed-exact, worker `k`'s shard is bit-identical to the
-//! `ds.select(&part.assignment[k])` an in-process worker would get, which
-//! is what makes the TCP trajectory equal to the in-process one.
+//! [`RunSpec`] — the resolved [`DataSource`], partition strategy + seed,
+//! a **per-worker shard digest table**, and the *resolved* run scalars
+//! (`m_inner`, `eta`, the exact f64 bits of the regularization) — inside
+//! the unmetered `Setup` control frame. How a worker obtains its shard
+//! depends on the source:
 //!
-//! A dataset loaded from `data/<name>.libsvm` must be readable on every
-//! node (same working directory on one box, or a shared filesystem);
-//! synthetic presets need nothing. The spec carries the master's
-//! `(n, d, nnz)` fingerprint and every worker validates its
-//! reconstruction against it, so a node that resolves the name
-//! differently (missing file → same-named preset) fails loudly instead
-//! of training on divergent data. The spec also carries the master's
-//! [`Partition::fingerprint`] digest; each worker replays the split and
-//! validates the digest before training, which pins the whole
+//! * `Synth` / `LibsvmFile` — the worker deterministically regenerates
+//!   the dataset, replays the partition split, and selects its own
+//!   shard. Because generation and splitting are seed-exact, worker
+//!   `k`'s shard is bit-identical to the `ds.select(&part.assignment[k])`
+//!   an in-process worker would get.
+//! * `ShardDir` — the worker opens **only its own shard file** from the
+//!   `pscope ingest` output (validated against the directory manifest by
+//!   the chunked reader) and never re-parses text or re-synthesizes the
+//!   full dataset; out-of-core on the worker side.
+//!
+//! Either way the shard's payload digest
+//! ([`shard_digest`](crate::data::shard::shard_digest)) must equal the
+//! spec's digest-table entry for `k`, so a node holding stale ingest
+//! output, a divergent file, or a mismatched build fails loudly before
+//! any training step. Files (LibSVM or shard dirs) must be readable on
+//! every node; synthetic presets need nothing.
+//!
+//! The spec also carries the master's `(n, d, nnz)` dataset fingerprint
+//! and its [`Partition::fingerprint`]; regenerating workers replay the
+//! split and validate the digest before training, which pins the whole
 //! deterministic-regeneration path — including the `engineered`
 //! strategy's full sketch → assign → refine search — end to end.
 //!
@@ -52,7 +60,9 @@ use std::time::{Duration, Instant};
 use crate::config::{PscopeConfig, WorkerBackend};
 use crate::coordinator::worker::{run_worker, Worker};
 use crate::coordinator::{resolve_run, run_master, TrainOutput};
-use crate::data::{self, Dataset};
+use crate::data::shard;
+use crate::data::source::DataSource;
+use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::loss::{Objective, ProxReg, SmoothLoss};
 use crate::net::frame::{self, FrameRead};
@@ -66,8 +76,12 @@ use crate::rng::Rng;
 /// garbage decoding. v2 added `part_fingerprint`; v3 replaced the
 /// `(model, Reg)` pair with the composite objective — loss kind +
 /// regularizer kind, parameters as exact f64 bits — and made regression
-/// datasets stratify partition sketches by `sign(y − ȳ)`.
-pub(crate) const SPEC_VERSION: u64 = 3;
+/// datasets stratify partition sketches by `sign(y − ȳ)`; v4 replaced
+/// the bare `(dataset, data_seed)` pair with the resolved
+/// [`DataSource`] triple and added the per-worker shard digest table,
+/// so `ShardDir` workers validate their shard file against the master's
+/// manifest instead of re-parsing text or re-synthesizing.
+pub(crate) const SPEC_VERSION: u64 = 4;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -77,13 +91,22 @@ pub(crate) const SPEC_VERSION: u64 = 3;
 /// wires run the identical algorithm.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunSpec {
-    /// Dataset preset name (or `data/<name>.libsvm` stem).
-    pub dataset: String,
-    /// Dataset generation seed.
-    pub data_seed: u64,
-    /// Partition strategy name (see [`Partitioner::parse`]).
+    /// Where the data comes from — the *resolved* source, so a worker is
+    /// told exactly which kind the master used instead of re-running
+    /// name resolution against its own filesystem state.
+    pub source: DataSource,
+    /// Per-worker shard payload digests
+    /// ([`shard_digest`](crate::data::shard::shard_digest)), indexed by
+    /// worker id; length is exactly `p`. A `ShardDir` worker validates
+    /// its shard file against entry `k`; a regenerating worker validates
+    /// the shard it selected. Either way a divergent shard fails loudly
+    /// before training.
+    pub shard_digests: Vec<u64>,
+    /// Partition strategy name (see [`Partitioner::parse`]). For a
+    /// `ShardDir` source this echoes the ingest manifest (workers load,
+    /// not replay).
     pub partition: String,
-    /// Partition split seed.
+    /// Partition split seed (from the manifest for `ShardDir`).
     pub part_seed: u64,
     /// [`Partition::fingerprint`] of the master's split. Workers replay
     /// the split from `(partition, part_seed)` and validate the digest,
@@ -124,15 +147,16 @@ pub struct RunSpec {
 
 impl RunSpec {
     /// Build the spec for `(ds, part, cfg)`, resolving the auto parameters
-    /// exactly like the in-process coordinator does. `dataset`/`data_seed`
-    /// and `partition`/`part_seed` must be the inputs `ds` and `part` were
-    /// actually built from — workers regenerate both from these names.
+    /// exactly like the in-process coordinator does. `source` and
+    /// `partition`/`part_seed` must be the inputs `ds` and `part` were
+    /// actually built from — workers reobtain both from them. The shard
+    /// digest table is computed here, row-for-row from `part`, so every
+    /// worker can prove its shard equals the master's view of it.
     pub fn derive(
         ds: &Dataset,
         part: &Partition,
         cfg: &PscopeConfig,
-        dataset: &str,
-        data_seed: u64,
+        source: &DataSource,
         partition: &str,
         part_seed: u64,
         artifact_dir: Option<&str>,
@@ -143,8 +167,12 @@ impl RunSpec {
         let (m_inner, eta, grad_threads) =
             resolve_run(ds, part, cfg, artifact_dir.map(std::path::Path::new))?;
         Ok(RunSpec {
-            dataset: dataset.to_string(),
-            data_seed,
+            source: source.clone(),
+            shard_digests: part
+                .assignment
+                .iter()
+                .map(|rows| shard::digest_rows(ds, rows))
+                .collect(),
             partition: partition.to_string(),
             part_seed,
             part_fingerprint: part.fingerprint(),
@@ -162,14 +190,16 @@ impl RunSpec {
     }
 
     /// Binary encoding for the `Setup` frame payload (little-endian;
-    /// floats as raw bits, strings as `u16` length + UTF-8 bytes).
+    /// floats as raw bits, strings as `u16` length + UTF-8 bytes; the
+    /// shard digest table as a `u32` count + `u64` entries).
     pub fn encode(&self) -> Vec<u8> {
         let (loss_tag, loss_param) = self.loss.wire_encode();
         let (reg_tag, reg_a, reg_b, reg_group) = self.reg.wire_encode();
-        let mut b = Vec::with_capacity(144 + self.dataset.len() + self.partition.len());
+        let mut b = Vec::with_capacity(
+            160 + 8 * self.shard_digests.len() + self.source.wire_str().len() + self.partition.len(),
+        );
         for v in [
             SPEC_VERSION,
-            self.data_seed,
             self.part_seed,
             self.part_fingerprint,
             self.fingerprint.0,
@@ -194,7 +224,13 @@ impl RunSpec {
             WorkerBackend::RustDense => 1,
             WorkerBackend::Xla => 2,
         });
-        push_str(&mut b, &self.dataset);
+        b.push(self.source.wire_tag());
+        b.extend_from_slice(&self.source.wire_seed().to_le_bytes());
+        b.extend_from_slice(&(self.shard_digests.len() as u32).to_le_bytes());
+        for &dg in &self.shard_digests {
+            b.extend_from_slice(&dg.to_le_bytes());
+        }
+        push_str(&mut b, self.source.wire_str());
         push_str(&mut b, &self.partition);
         push_str(&mut b, self.artifact_dir.as_deref().unwrap_or(""));
         b
@@ -212,7 +248,6 @@ impl RunSpec {
                 "job spec version {version} != {SPEC_VERSION} (mismatched pscope binaries?)"
             )));
         }
-        let data_seed = c.u64()?;
         let part_seed = c.u64()?;
         let part_fingerprint = c.u64()?;
         let fingerprint = (c.u64()?, c.u64()?, c.u64()?);
@@ -233,13 +268,26 @@ impl RunSpec {
             2 => WorkerBackend::Xla,
             t => return Err(Error::Protocol(format!("bad backend tag {t}"))),
         };
-        let dataset = c.str()?;
+        let source_tag = c.u8()?;
+        let source_seed = c.u64()?;
+        let n_digests = c.u32()? as usize;
+        if n_digests != p {
+            return Err(Error::Protocol(format!(
+                "shard digest table has {n_digests} entries for p = {p}"
+            )));
+        }
+        let mut shard_digests = Vec::with_capacity(n_digests);
+        for _ in 0..n_digests {
+            shard_digests.push(c.u64()?);
+        }
+        let source_str = c.str()?;
+        let source = DataSource::from_wire(source_tag, source_seed, &source_str)?;
         let partition = c.str()?;
         let artifact_dir = c.str()?;
         c.done()?;
         Ok(RunSpec {
-            dataset,
-            data_seed,
+            source,
+            shard_digests,
             partition,
             part_seed,
             part_fingerprint,
@@ -288,6 +336,10 @@ impl Cursor<'_> {
             .map_err(|_| Error::Protocol("spec field overflows usize".into()))
     }
 
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
@@ -310,8 +362,11 @@ impl Cursor<'_> {
     }
 }
 
-/// Reconstruct worker `k`'s state from a spec: regenerate the dataset,
-/// replay the partition, select the shard, fork the RNG stream.
+/// Reconstruct worker `k`'s state from a spec. For a `ShardDir` source,
+/// load **only shard `k`'s file** (manifest- and digest-validated); for
+/// `Synth`/`LibsvmFile`, regenerate the dataset, replay the partition,
+/// and select the shard. Both paths end with the shard's payload digest
+/// equal to the spec table's entry `k`, or a loud error before training.
 pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
     if k >= spec.p {
         return Err(Error::Protocol(format!(
@@ -319,33 +374,88 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
             spec.p
         )));
     }
-    let ds = data::load_or_synth(&spec.dataset, spec.data_seed)?;
-    let local = (ds.n() as u64, ds.d() as u64, ds.nnz() as u64);
-    if local != spec.fingerprint {
-        return Err(Error::Config(format!(
-            "dataset {:?} resolved differently on this node: local (n, d, nnz) = {local:?} \
-             vs master's {:?} — is a data/{}.libsvm file present on one side only?",
-            spec.dataset, spec.fingerprint, spec.dataset
-        )));
-    }
-    let part = Partitioner::parse(&spec.partition)?.split(&ds, spec.p, spec.part_seed);
-    let local_fp = part.fingerprint();
-    if local_fp != spec.part_fingerprint {
-        return Err(Error::Config(format!(
-            "partition {:?} (seed {}) regenerated differently on this node: fingerprint \
-             {local_fp:#018x} vs master's {:#018x} — mismatched pscope builds?",
-            spec.partition, spec.part_seed, spec.part_fingerprint
-        )));
-    }
-    let rows = &part.assignment[k];
-    if rows.is_empty() {
+    let expect_digest = *spec.shard_digests.get(k).ok_or_else(|| {
+        Error::Protocol(format!(
+            "spec digest table has {} entries, worker {k} needs one",
+            spec.shard_digests.len()
+        ))
+    })?;
+    let shard_ds = match &spec.source {
+        DataSource::ShardDir { dir } => {
+            let dir = std::path::Path::new(dir);
+            let manifest = shard::Manifest::read(dir)?;
+            let facts = (manifest.n, manifest.d, manifest.nnz);
+            if facts != spec.fingerprint {
+                return Err(Error::Config(format!(
+                    "shard dir {} resolved differently on this node: (n, d, nnz) = {facts:?} \
+                     vs master's {:?} — stale ingest output?",
+                    dir.display(),
+                    spec.fingerprint
+                )));
+            }
+            if manifest.p as usize != spec.p
+                || manifest.part_fingerprint != spec.part_fingerprint
+            {
+                return Err(Error::Config(format!(
+                    "shard dir {} was ingested for partition {:#018x} over p = {}, but the \
+                     spec says {:#018x} over p = {}",
+                    dir.display(),
+                    manifest.part_fingerprint,
+                    manifest.p,
+                    spec.part_fingerprint,
+                    spec.p
+                )));
+            }
+            if manifest.shards[k].digest != expect_digest {
+                return Err(Error::Protocol(format!(
+                    "shard {k} digest {:#018x} != master's {expect_digest:#018x} — the \
+                     directory does not hold the shards the master derived",
+                    manifest.shards[k].digest
+                )));
+            }
+            // the chunked load re-hashes the payload and fails loudly if
+            // the file bytes diverge from the just-validated manifest entry;
+            // rows_read accounting proves only this shard was materialized
+            let (shard_ds, _row_ids, _stats) = shard::load_worker_shard(dir, k, &manifest)?;
+            shard_ds
+        }
+        _ => {
+            let ds = spec.source.load()?;
+            let local = (ds.n() as u64, ds.d() as u64, ds.nnz() as u64);
+            if local != spec.fingerprint {
+                return Err(Error::Config(format!(
+                    "dataset {} resolved differently on this node: local (n, d, nnz) = \
+                     {local:?} vs master's {:?} — is the file present on one side only?",
+                    spec.source, spec.fingerprint
+                )));
+            }
+            let part = Partitioner::parse(&spec.partition)?.split(&ds, spec.p, spec.part_seed);
+            let local_fp = part.fingerprint();
+            if local_fp != spec.part_fingerprint {
+                return Err(Error::Config(format!(
+                    "partition {:?} (seed {}) regenerated differently on this node: fingerprint \
+                     {local_fp:#018x} vs master's {:#018x} — mismatched pscope builds?",
+                    spec.partition, spec.part_seed, spec.part_fingerprint
+                )));
+            }
+            let rows = &part.assignment[k];
+            let digest = shard::digest_rows(&ds, rows);
+            if digest != expect_digest {
+                return Err(Error::Protocol(format!(
+                    "worker {k}: regenerated shard digest {digest:#018x} != master's \
+                     {expect_digest:#018x}"
+                )));
+            }
+            ds.select(rows)
+        }
+    };
+    if shard_ds.n() == 0 {
         return Err(Error::Config(format!("worker {k} got an empty shard")));
     }
-    let shard = ds.select(rows);
     let rng = Rng::new(spec.seed).fork(k as u64 + 1);
     Ok(Worker::new(
         k,
-        shard,
+        shard_ds,
         spec.loss,
         spec.reg,
         spec.backend,
@@ -419,6 +529,17 @@ pub fn serve_worker(addr: &str, timeout: Duration) -> Result<()> {
         "worker {k}: partition {} fingerprint {:#018x} verified",
         spec.partition, spec.part_fingerprint
     );
+    // shard provenance: the digest build_worker just validated against
+    // the spec table, plus the row accounting that shows this process
+    // materialized its own shard only — CI greps these against the
+    // master's digest-table print
+    println!(
+        "worker {k}: shard digest {:#018x} verified ({} of {} rows, source {})",
+        spec.shard_digests[k],
+        wk.shard.n(),
+        spec.fingerprint.0,
+        spec.source,
+    );
     // the objective traveled as exact bits and was tag-validated on
     // decode; print the bits so operators/CI can cross-check both sides
     let (_, loss_param) = spec.loss.wire_encode();
@@ -488,12 +609,19 @@ impl MasterEndpoint {
             cfg,
             spec.artifact_dir.as_deref().map(std::path::Path::new),
         )?;
-        if spec.p != p || spec.m_inner != m_inner || spec.eta.to_bits() != eta.to_bits() {
+        if spec.p != p
+            || spec.shard_digests.len() != p
+            || spec.m_inner != m_inner
+            || spec.eta.to_bits() != eta.to_bits()
+        {
             return Err(Error::Config(format!(
-                "job spec disagrees with this run: spec (p={}, m={}, eta={:e}) vs resolved \
-                 (p={p}, m={m_inner}, eta={eta:e}) — build the spec with RunSpec::derive on \
-                 the same (ds, part, cfg)",
-                spec.p, spec.m_inner, spec.eta
+                "job spec disagrees with this run: spec (p={}, digests={}, m={}, eta={:e}) vs \
+                 resolved (p={p}, m={m_inner}, eta={eta:e}) — build the spec with \
+                 RunSpec::derive on the same (ds, part, cfg)",
+                spec.p,
+                spec.shard_digests.len(),
+                spec.m_inner,
+                spec.eta
             )));
         }
         let loss = cfg.objective_loss();
@@ -621,8 +749,8 @@ mod tests {
 
     fn spec_fixture() -> RunSpec {
         RunSpec {
-            dataset: "tiny".into(),
-            data_seed: 7,
+            source: DataSource::Synth { name: "tiny".into(), seed: 7 },
+            shard_digests: vec![0x11, 0x22, 0x33, 0x44],
             partition: "uniform".into(),
             part_seed: 3,
             part_fingerprint: 0xDEAD_BEEF_0123_4567,
@@ -649,6 +777,13 @@ mod tests {
         let mut with_dir = spec;
         with_dir.artifact_dir = Some("artifacts".into());
         assert_eq!(RunSpec::decode(&with_dir.encode()).unwrap(), with_dir);
+        // every source kind survives the wire
+        let mut file_spec = spec_fixture();
+        file_spec.source = DataSource::LibsvmFile { path: "data/real.libsvm".into() };
+        assert_eq!(RunSpec::decode(&file_spec.encode()).unwrap(), file_spec);
+        let mut dir_spec = spec_fixture();
+        dir_spec.source = DataSource::ShardDir { dir: "shards/real".into() };
+        assert_eq!(RunSpec::decode(&dir_spec.encode()).unwrap(), dir_spec);
     }
 
     #[test]
@@ -684,13 +819,27 @@ mod tests {
         assert!(RunSpec::decode(&trailing).is_err(), "trailing bytes accepted");
         // corrupt objective tags must be rejected, like a bad fingerprint
         let good = spec.encode();
-        let tag_base = 16 * 8; // 16 u64 fields precede the loss tag
+        let tag_base = 15 * 8; // 15 u64 fields precede the loss tag
         let mut bad_loss = good.clone();
         bad_loss[tag_base] = 0x7F;
         assert!(RunSpec::decode(&bad_loss).is_err(), "bad loss tag accepted");
         let mut bad_reg = good.clone();
         bad_reg[tag_base + 1] = 0x7F;
         assert!(RunSpec::decode(&bad_reg).is_err(), "bad reg tag accepted");
+        let mut bad_source = good.clone();
+        bad_source[tag_base + 3] = 0x7F; // source tag follows the backend byte
+        assert!(RunSpec::decode(&bad_source).is_err(), "bad source tag accepted");
+        // a digest table whose length disagrees with p is a protocol error
+        let mut short_table = spec_fixture();
+        short_table.shard_digests.pop();
+        assert!(
+            RunSpec::decode(&short_table.encode()).is_err(),
+            "digest table shorter than p accepted"
+        );
+    }
+
+    fn synth_src(name: &str, seed: u64) -> DataSource {
+        DataSource::Synth { name: name.into(), seed }
     }
 
     #[test]
@@ -698,14 +847,20 @@ mod tests {
         let ds = synth::tiny(9).generate();
         let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
         let part = Partitioner::Uniform.split(&ds, 2, 1);
-        let spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 9, "uniform", 1, None).unwrap();
+        let src = synth_src("tiny", 9);
+        let spec = RunSpec::derive(&ds, &part, &cfg, &src, "uniform", 1, None).unwrap();
         let obj = Objective::new(&ds, cfg.model.loss(), cfg.reg);
         let (m, eta) = cfg.resolve(ds.n(), obj.smoothness());
         assert_eq!(spec.m_inner, m);
         assert_eq!(spec.eta.to_bits(), eta.to_bits());
         assert_eq!(spec.p, 2);
+        // the digest table is per-worker and row-exact
+        assert_eq!(spec.shard_digests.len(), 2);
+        for k in 0..2 {
+            assert_eq!(spec.shard_digests[k], shard::digest_rows(&ds, &part.assignment[k]));
+        }
         // unknown partition names fail fast, before any socket exists
-        assert!(RunSpec::derive(&ds, &part, &cfg, "tiny", 9, "mystery", 1, None).is_err());
+        assert!(RunSpec::derive(&ds, &part, &cfg, &src, "mystery", 1, None).is_err());
     }
 
     #[test]
@@ -713,7 +868,8 @@ mod tests {
         let ds = synth::tiny(11).generate();
         let cfg = PscopeConfig { p: 3, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
         let part = Partitioner::Uniform.split(&ds, 3, 5);
-        let spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 11, "uniform", 5, None).unwrap();
+        let spec =
+            RunSpec::derive(&ds, &part, &cfg, &synth_src("tiny", 11), "uniform", 5, None).unwrap();
         for k in 0..3 {
             let wk = build_worker(&spec, k).unwrap();
             let expect = ds.select(&part.assignment[k]);
@@ -731,7 +887,7 @@ mod tests {
         for name in ["uniform", "engineered"] {
             let part = Partitioner::parse(name).unwrap().split(&ds, 2, 4);
             let mut spec =
-                RunSpec::derive(&ds, &part, &cfg, "tiny", 13, name, 4, None).unwrap();
+                RunSpec::derive(&ds, &part, &cfg, &synth_src("tiny", 13), name, 4, None).unwrap();
             assert_eq!(spec.part_fingerprint, part.fingerprint());
             // the regenerated split matches an honest spec...
             build_worker(&spec, 0).unwrap();
@@ -750,11 +906,62 @@ mod tests {
         let ds = synth::tiny(12).generate();
         let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
         let part = Partitioner::Uniform.split(&ds, 2, 1);
-        let mut spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 12, "uniform", 1, None).unwrap();
+        let mut spec =
+            RunSpec::derive(&ds, &part, &cfg, &synth_src("tiny", 12), "uniform", 1, None).unwrap();
         // a master whose copy differs by a single stored nonzero must be
         // detected before any training happens on mismatched shards
         spec.fingerprint.2 ^= 1;
         let err = build_worker(&spec, 0).unwrap_err();
         assert!(format!("{err}").contains("resolved differently"), "{err}");
+    }
+
+    #[test]
+    fn build_worker_rejects_divergent_shard_digest() {
+        let ds = synth::tiny(14).generate();
+        let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        let part = Partitioner::Uniform.split(&ds, 2, 6);
+        let mut spec =
+            RunSpec::derive(&ds, &part, &cfg, &synth_src("tiny", 14), "uniform", 6, None).unwrap();
+        build_worker(&spec, 1).unwrap();
+        // a flipped digest-table entry is caught even when dataset and
+        // partition fingerprints agree — the per-shard contract is finer
+        spec.shard_digests[1] ^= 1;
+        let err = build_worker(&spec, 1).unwrap_err();
+        assert!(format!("{err}").contains("digest"), "{err}");
+    }
+
+    #[test]
+    fn build_worker_loads_only_its_shard_from_a_shard_dir() {
+        use crate::data::libsvm;
+        let dir = std::env::temp_dir()
+            .join(format!("pscope_remote_sharddir_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = synth::tiny(15).generate();
+        let input = dir.join("in.libsvm");
+        let mut buf = Vec::new();
+        libsvm::write(&ds, &mut buf).unwrap();
+        std::fs::write(&input, buf).unwrap();
+        let out = dir.join("shards");
+        shard::ingest(&input, &out, "uniform", 2, 8, "tiny", ds.d()).unwrap();
+        let (full, part, _manifest) = shard::load_dir(&out).unwrap();
+        let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+        let src = DataSource::ShardDir { dir: out.to_string_lossy().into_owned() };
+        let spec = RunSpec::derive(&full, &part, &cfg, &src, "uniform", 8, None).unwrap();
+        for k in 0..2 {
+            let wk = build_worker(&spec, k).unwrap();
+            let expect = full.select(&part.assignment[k]);
+            assert_eq!(wk.shard.y, expect.y, "worker {k} labels");
+            assert_eq!(wk.shard.x.indices, expect.x.indices, "worker {k} indices");
+            for (a, b) in wk.shard.x.values.iter().zip(&expect.x.values) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {k} values");
+            }
+        }
+        // a spec whose table disagrees with the directory is rejected
+        let mut bad = spec.clone();
+        bad.shard_digests[0] ^= 1;
+        let err = build_worker(&bad, 0).unwrap_err();
+        assert!(format!("{err}").contains("digest"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -22,6 +22,14 @@
 //! step), so backend choice changes *performance*, not the trajectory
 //! (up to f32/f64 precision on the XLA path — bounded in integration
 //! tests).
+//!
+//! How the shard gets here is the job of the layers above: in-process
+//! workers receive `ds.select(rows)` directly, while TCP workers build it
+//! from the job spec's [`DataSource`](crate::data::source::DataSource) —
+//! either regenerated + digest-checked, or (for a shard directory) read
+//! from this worker's own `shard_k.pscope` file so only `n_k` rows are
+//! ever materialized on this node (see `coordinator::remote::build_worker`
+//! and `data::shard`).
 
 use std::path::PathBuf;
 

@@ -2,11 +2,17 @@
 //!
 //! The paper's datasets are distributed in this format; when the real files
 //! are available they drop in via [`read_file`] and every experiment runs
-//! unchanged (the bench harness looks for `data/<name>.libsvm` before
-//! falling back to the synthetic generator).
+//! unchanged (dataset resolution — [`crate::data::source::DataSource`] —
+//! looks for `data/<name>.libsvm` before falling back to the synthetic
+//! generator, and `pscope ingest` converts a file to the binary shard
+//! store once instead of re-parsing text on every node).
 //!
-//! Format: one instance per line, `label idx:val idx:val ...` with 1-based
-//! feature indices (0-based also accepted); `#` starts a comment.
+//! Format: one instance per line, `label idx:val idx:val ...` with
+//! **1-based, strictly increasing** feature indices; `#` starts a comment
+//! and blank lines are skipped. A zero, duplicate, or out-of-order index
+//! is an [`Error::Parse`] carrying the line number — silent re-sorting
+//! would mask corrupt files and break the one-pass streaming converter,
+//! which must commit each row to disk before seeing the next.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -15,69 +21,108 @@ use super::Dataset;
 use crate::error::{Error, Result};
 use crate::linalg::CsrMatrix;
 
+/// One parsed instance: label + `(0-based index, value)` pairs in the
+/// file's (strictly increasing) order.
+pub type ParsedRow = (f64, Vec<(u32, f64)>);
+
+/// Parse a single LibSVM line (`lineno` is 1-based, for error messages).
+/// Returns `None` for blank lines and pure comments. Indices are
+/// validated as 1-based and strictly increasing, then shifted to 0-based.
+pub fn parse_line(line: &str, lineno: usize) -> Result<Option<ParsedRow>> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label: f64 = parts
+        .next()
+        .unwrap()
+        .parse()
+        .map_err(|e| Error::Parse(format!("line {lineno}: bad label: {e}")))?;
+    let mut row: Vec<(u32, f64)> = Vec::new();
+    let mut last: u32 = 0; // indices are 1-based, so 0 = "none seen yet"
+    for tok in parts {
+        let (i, v) = tok
+            .split_once(':')
+            .ok_or_else(|| Error::Parse(format!("line {lineno}: bad pair {tok:?}")))?;
+        let idx: i64 = i
+            .parse()
+            .map_err(|e| Error::Parse(format!("line {lineno}: bad index: {e}")))?;
+        let val: f64 = v
+            .parse()
+            .map_err(|e| Error::Parse(format!("line {lineno}: bad value: {e}")))?;
+        if idx < 1 {
+            return Err(Error::Parse(format!(
+                "line {lineno}: index {idx} (LibSVM indices are 1-based)"
+            )));
+        }
+        let idx = u32::try_from(idx)
+            .map_err(|_| Error::Parse(format!("line {lineno}: index {idx} overflows u32")))?;
+        if idx <= last {
+            return Err(Error::Parse(format!(
+                "line {lineno}: index {idx} after {last} (indices must be strictly increasing)"
+            )));
+        }
+        last = idx;
+        row.push((idx - 1, val));
+    }
+    Ok(Some((label, row)))
+}
+
+/// Streaming LibSVM parser: yields one validated [`ParsedRow`] at a time
+/// without materializing the file — the front half of the one-pass
+/// `libsvm → shard store` converter ([`crate::data::shard::ingest`]).
+pub struct RowStream<R: BufRead> {
+    reader: R,
+    line: String,
+    lineno: usize,
+}
+
+impl<R: BufRead> RowStream<R> {
+    /// Wrap a buffered reader.
+    pub fn new(reader: R) -> Self {
+        RowStream { reader, line: String::new(), lineno: 0 }
+    }
+
+    /// Next instance, or `Ok(None)` at end of input.
+    #[allow(clippy::should_implement_trait)] // Iterator can't yield Result<Option<_>> cleanly
+    pub fn next(&mut self) -> Result<Option<ParsedRow>> {
+        loop {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                return Ok(None);
+            }
+            self.lineno += 1;
+            if let Some(row) = parse_line(&self.line, self.lineno)? {
+                return Ok(Some(row));
+            }
+        }
+    }
+}
+
+/// `d_hint` resolution shared by [`read`], [`read_file`], and the shard
+/// converter: a positive hint is a *lower bound* on the feature count
+/// (indices beyond it still expand `d`); zero means infer from the data.
+pub fn resolve_d(d_hint: usize, max_col: Option<usize>) -> usize {
+    let from_data = max_col.map(|m| m + 1).unwrap_or(if d_hint > 0 { 0 } else { 1 });
+    d_hint.max(from_data)
+}
+
 /// Parse LibSVM text from a reader. `d_hint` pre-sets the feature count
-/// (0 = infer from the max index seen).
+/// (see [`resolve_d`]; `read_file` uses the identical rule).
 pub fn read<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset> {
+    let mut stream = RowStream::new(reader);
     let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
     let mut y = Vec::new();
-    let mut max_col = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label: f64 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .map_err(|e| Error::Data(format!("line {}: bad label: {e}", lineno + 1)))?;
-        let mut row: Vec<(u32, f64)> = Vec::new();
-        for tok in parts {
-            let (i, v) = tok
-                .split_once(':')
-                .ok_or_else(|| Error::Data(format!("line {}: bad pair {tok:?}", lineno + 1)))?;
-            let idx: i64 = i
-                .parse()
-                .map_err(|e| Error::Data(format!("line {}: bad index: {e}", lineno + 1)))?;
-            let val: f64 = v
-                .parse()
-                .map_err(|e| Error::Data(format!("line {}: bad value: {e}", lineno + 1)))?;
-            if idx < 0 {
-                return Err(Error::Data(format!("line {}: negative index", lineno + 1)));
-            }
-            // LibSVM is 1-based; tolerate 0-based by shifting only when a 0
-            // index never appears (resolved after the parse).
-            row.push((idx as u32, val));
-        }
-        row.sort_unstable_by_key(|&(j, _)| j);
-        for w in row.windows(2) {
-            if w[0].0 == w[1].0 {
-                return Err(Error::Data(format!(
-                    "line {}: duplicate index {}",
-                    lineno + 1,
-                    w[0].0
-                )));
-            }
-        }
+    let mut max_col: Option<usize> = None;
+    while let Some((label, row)) = stream.next()? {
         if let Some(&(j, _)) = row.last() {
-            max_col = max_col.max(j as usize);
+            max_col = Some(max_col.unwrap_or(0).max(j as usize));
         }
         rows.push(row);
         y.push(label);
     }
-    let has_zero = rows.iter().flatten().any(|&(j, _)| j == 0);
-    if !has_zero {
-        // 1-based file: shift down
-        for row in rows.iter_mut() {
-            for e in row.iter_mut() {
-                e.0 -= 1;
-            }
-        }
-        max_col = max_col.saturating_sub(1);
-    }
-    let d = if d_hint > 0 { d_hint.max(max_col + 1) } else { max_col + 1 };
+    let d = resolve_d(d_hint, max_col);
     Ok(Dataset {
         name: name.to_string(),
         x: CsrMatrix::from_rows(d, &rows),
@@ -85,7 +130,9 @@ pub fn read<R: BufRead>(reader: R, name: &str, d_hint: usize) -> Result<Dataset>
     })
 }
 
-/// Read a LibSVM file from disk.
+/// Read a LibSVM file from disk (`d_hint` as in [`read`] — both entry
+/// points share [`resolve_d`], so a hint behaves identically through
+/// either).
 pub fn read_file<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset> {
     let name = path
         .as_ref()
@@ -96,7 +143,9 @@ pub fn read_file<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset> {
     read(BufReader::new(f), &name, d_hint)
 }
 
-/// Write a dataset in LibSVM format (1-based indices).
+/// Write a dataset in LibSVM format (1-based indices). `{}` formatting of
+/// f64 is shortest-roundtrip in Rust, so finite values (and the canonical
+/// NaN/inf spellings) survive a write → read cycle bit-for-bit.
 pub fn write<W: Write>(ds: &Dataset, mut w: W) -> Result<()> {
     for i in 0..ds.n() {
         let row = ds.x.row(i);
@@ -126,11 +175,12 @@ mod tests {
     }
 
     #[test]
-    fn parse_zero_based() {
-        let text = "1 0:0.5 2:1.5\n";
-        let ds = read(Cursor::new(text), "t", 0).unwrap();
-        assert_eq!(ds.d(), 3);
-        assert_eq!(ds.x.row(0).idx, &[0, 2]);
+    fn zero_index_rejected_with_line_number() {
+        let text = "1 1:1.0\n1 0:0.5 2:1.5\n";
+        let err = read(Cursor::new(text), "t", 0).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "{err:?}");
+        assert!(format!("{err}").contains("line 2"), "{err}");
+        assert!(format!("{err}").contains("1-based"), "{err}");
     }
 
     #[test]
@@ -141,30 +191,54 @@ mod tests {
     }
 
     #[test]
-    fn unsorted_indices_accepted() {
-        let text = "1 3:3.0 1:1.0\n";
-        let ds = read(Cursor::new(text), "t", 0).unwrap();
-        assert_eq!(ds.x.row(0).idx, &[0, 2]);
-        assert_eq!(ds.x.row(0).val, &[1.0, 3.0]);
+    fn unsorted_indices_rejected_with_line_number() {
+        let text = "1 1:1.0\n\n1 3:3.0 1:1.0\n";
+        let err = read(Cursor::new(text), "t", 0).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "{err:?}");
+        // line numbers count raw input lines (the blank line too)
+        assert!(format!("{err}").contains("line 3"), "{err}");
+        assert!(format!("{err}").contains("strictly increasing"), "{err}");
     }
 
     #[test]
     fn duplicate_index_rejected() {
-        let text = "1 1:1.0 1:2.0\n";
-        assert!(read(Cursor::new(text), "t", 0).is_err());
+        let err = read(Cursor::new("1 1:1.0 1:2.0\n"), "t", 0).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "{err:?}");
     }
 
     #[test]
     fn bad_tokens_rejected() {
-        assert!(read(Cursor::new("x 1:1.0\n"), "t", 0).is_err());
-        assert!(read(Cursor::new("1 1-1.0\n"), "t", 0).is_err());
-        assert!(read(Cursor::new("1 a:1.0\n"), "t", 0).is_err());
+        for text in ["x 1:1.0\n", "1 1-1.0\n", "1 a:1.0\n", "1 1:zzz\n", "1 -3:1.0\n"] {
+            let err = read(Cursor::new(text), "t", 0).unwrap_err();
+            assert!(matches!(err, Error::Parse(_)), "{text:?}: {err:?}");
+            assert!(format!("{err}").contains("line 1"), "{text:?}: {err}");
+        }
     }
 
     #[test]
     fn d_hint_expands() {
         let ds = read(Cursor::new("1 1:1.0\n"), "t", 10).unwrap();
         assert_eq!(ds.d(), 10);
+        // a hint is a lower bound, never a truncation
+        let ds = read(Cursor::new("1 12:1.0\n"), "t", 10).unwrap();
+        assert_eq!(ds.d(), 12);
+        // and read/read_file share resolve_d exactly
+        assert_eq!(resolve_d(10, Some(4)), 10);
+        assert_eq!(resolve_d(10, Some(11)), 12);
+        assert_eq!(resolve_d(0, Some(4)), 5);
+        assert_eq!(resolve_d(0, None), 1);
+        assert_eq!(resolve_d(7, None), 7);
+    }
+
+    #[test]
+    fn row_stream_matches_read() {
+        let text = "# c\n1 1:0.5 3:1.5\n\n-1 2:2.0\n";
+        let mut s = RowStream::new(Cursor::new(text));
+        let (y0, r0) = s.next().unwrap().unwrap();
+        assert_eq!((y0, r0), (1.0, vec![(0, 0.5), (2, 1.5)]));
+        let (y1, r1) = s.next().unwrap().unwrap();
+        assert_eq!((y1, r1), (-1.0, vec![(1, 2.0)]));
+        assert!(s.next().unwrap().is_none());
     }
 
     #[test]
@@ -177,7 +251,21 @@ mod tests {
         assert_eq!(ds.y, ds2.y);
         assert_eq!(ds.x.indices, ds2.x.indices);
         for (a, b) in ds.x.values.iter().zip(&ds2.x.values) {
-            assert!((a - b).abs() < 1e-12);
+            assert_eq!(a.to_bits(), b.to_bits(), "values must roundtrip bit-for-bit");
         }
+    }
+
+    #[test]
+    fn empty_rows_roundtrip() {
+        let text = "1\n-1 2:2.0\n1\n";
+        let ds = read(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.x.row(0).nnz(), 0);
+        assert_eq!(ds.x.row(2).nnz(), 0);
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = read(Cursor::new(buf), "t", ds.d()).unwrap();
+        assert_eq!(ds.x.indptr, ds2.x.indptr);
+        assert_eq!(ds.y, ds2.y);
     }
 }

@@ -1,6 +1,9 @@
-//! Dataset substrate: containers, synthetic generators, LibSVM I/O, stats.
+//! Dataset substrate: containers, synthetic generators, LibSVM I/O, the
+//! binary shard store, source resolution, and stats.
 
 pub mod libsvm;
+pub mod shard;
+pub mod source;
 pub mod stats;
 pub mod synth;
 
@@ -67,21 +70,12 @@ impl Dataset {
     }
 }
 
-/// Resolve a dataset name the way every front-end (CLI, TCP workers)
-/// does: a real `data/<name>.libsvm` file wins when present, otherwise
-/// the synthetic preset of that name is generated from `seed`.
-///
-/// Both paths are deterministic, which is what lets a remote worker
-/// reconstruct the exact dataset its master partitioned (the file must
-/// then be readable on every node; presets need nothing).
+/// Resolve-and-load in one call — the historical entry point, now a thin
+/// wrapper over [`source::DataSource::resolve`] + `load`. A shard
+/// directory or real `data/<name>.libsvm` file wins when present,
+/// otherwise the synthetic preset of that name is generated from `seed`.
 pub fn load_or_synth(name: &str, seed: u64) -> crate::error::Result<Dataset> {
-    let path = format!("data/{name}.libsvm");
-    if std::path::Path::new(&path).exists() {
-        return libsvm::read_file(&path, 0);
-    }
-    synth::preset(name, seed)
-        .map(|s| s.generate())
-        .ok_or_else(|| crate::error::Error::Config(format!("unknown dataset {name:?}")))
+    source::DataSource::resolve(name, seed).load()
 }
 
 #[cfg(test)]

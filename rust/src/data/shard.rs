@@ -1,0 +1,1110 @@
+//! Binary shard store: the out-of-core data layer behind `pscope ingest`.
+//!
+//! A **shard file** holds one worker's rows in a checksummed, versioned
+//! container, so a TCP worker materializes *only its own shard* instead of
+//! re-parsing LibSVM text or re-synthesizing the full dataset. A **shard
+//! directory** is `p` shard files plus a [`Manifest`] recording the
+//! partition that produced them (strategy, seed, fingerprint) and a
+//! per-shard digest table the job spec
+//! ([`crate::coordinator::remote::RunSpec`]) cross-checks before any
+//! training step.
+//!
+//! ## Shard file layout (version 1, all integers little-endian)
+//!
+//! | offset | bytes | field |
+//! |-------:|------:|-------|
+//! | 0      | 8     | magic `b"PSCOPESH"` |
+//! | 8      | 8     | format version (`= 1`) |
+//! | 16     | 8     | worker index `k` |
+//! | 24     | 8     | worker count `p` |
+//! | 32     | 8     | rows in this shard |
+//! | 40     | 8     | feature count `d` |
+//! | 48     | 8     | stored non-zeros in this shard |
+//! | 56     | 8     | partition fingerprint ([`Partition::fingerprint`]) |
+//! | 64     | 8     | payload digest (FNV-1a over the records, SplitMix64-finalized) |
+//! | 72     | —     | records |
+//!
+//! Each record is `[row_id u64][y f64-bits][row_nnz u32][indices u32 × nnz]
+//! [values f64-bits × nnz]`. `row_id` is the row's index in the *original*
+//! dataset: keeping it lets the master reconstruct the full dataset in
+//! original row order (f64 summation order matters for bit-identical
+//! objectives) and lets [`load_dir`] rebuild the exact [`Partition`].
+//! Values are stored as raw bits, so NaN payloads and signed zeros survive
+//! a round trip untouched; explicit `0.0` entries are never written
+//! (mirroring [`CsrMatrix::from_rows`](crate::linalg::CsrMatrix::from_rows),
+//! which drops them) so a shard file is byte-determined by the logical
+//! matrix, not by how the source text spelled it.
+//!
+//! The digest covers payload bytes only and is reproducible from memory by
+//! [`shard_digest`] — that one function being shared by the file writer
+//! and the in-memory path is what lets the spec's digest table validate
+//! both a file-loaded shard and a regenerated one.
+//!
+//! [`ingest`] is the `libsvm → shard dir` converter: a streaming parse
+//! pass that spills rows to a single temporary shard while accumulating
+//! label and column-mass statistics, a partition pass that splits from
+//! those statistics (re-streaming the spill for engineered sketches —
+//! never materializing the CSR), and a scatter pass that routes the spill
+//! into the per-worker shard files.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use super::libsvm::{resolve_d, RowStream};
+use super::stats::{label_threshold, row_sketches_streamed, sketch_plan_from_col_mass};
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::CsrMatrix;
+use crate::partition::engine::{engineer_from_sketches, EngineOpts};
+use crate::partition::{Partition, Partitioner};
+
+/// Shard file magic.
+pub const SHARD_MAGIC: &[u8; 8] = b"PSCOPESH";
+/// Manifest file magic.
+pub const MANIFEST_MAGIC: &[u8; 8] = b"PSCOPESM";
+/// Shard/manifest format version. Bump on any layout change.
+pub const SHARD_VERSION: u64 = 1;
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "manifest.pscope";
+/// Rows per chunk the streaming readers default to — bounds a reader's
+/// peak row residency regardless of shard size.
+pub const DEFAULT_CHUNK_ROWS: usize = 1024;
+
+/// Path of worker `k`'s shard file inside `dir`.
+pub fn shard_path(dir: &Path, k: usize) -> PathBuf {
+    dir.join(format!("shard_{k:04}.pscope"))
+}
+
+// ---------------------------------------------------------------------------
+// digest
+
+/// Incremental FNV-1a over bytes, SplitMix64-finalized — the same digest
+/// family as [`Partition::fingerprint`], applied to shard payload bytes.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64 { h: 0xcbf2_9ce4_8422_2325 }
+    }
+}
+
+impl Fnv64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+
+    /// Absorb bytes.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h = (self.h ^ b as u64).wrapping_mul(Self::PRIME);
+        }
+    }
+
+    /// Finalized digest (does not consume; the hasher can keep absorbing).
+    pub fn finish(&self) -> u64 {
+        let mut s = self.h;
+        crate::rng::splitmix64(&mut s)
+    }
+}
+
+/// Serialize one record into `buf` (cleared first) — the byte layout the
+/// digest is defined over, shared by the writer and [`shard_digest`].
+fn encode_record(buf: &mut Vec<u8>, row_id: u64, y: f64, idx: &[u32], val: &[f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    buf.clear();
+    buf.extend_from_slice(&row_id.to_le_bytes());
+    buf.extend_from_slice(&y.to_bits().to_le_bytes());
+    buf.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    for &j in idx {
+        buf.extend_from_slice(&j.to_le_bytes());
+    }
+    for &v in val {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Payload digest of an in-memory shard: `shard` row `r` is original row
+/// `row_ids[r]`. Byte-for-byte the digest a shard file written from the
+/// same rows carries in its header — this is the bridge that lets the job
+/// spec's digest table validate a worker shard whether it was loaded from
+/// disk or regenerated from `(dataset, partition, seed)`.
+pub fn shard_digest(shard: &Dataset, row_ids: &[usize]) -> u64 {
+    assert_eq!(shard.n(), row_ids.len(), "shard rows != row_id count");
+    let mut hash = Fnv64::default();
+    let mut buf = Vec::new();
+    for r in 0..shard.n() {
+        let row = shard.x.row(r);
+        encode_record(&mut buf, row_ids[r] as u64, shard.y[r], row.idx, row.val);
+        hash.update(&buf);
+    }
+    hash.finish()
+}
+
+/// [`shard_digest`] computed straight from the full dataset and a row
+/// list — same bytes, no materialized shard. This is what
+/// [`RunSpec::derive`](crate::coordinator::remote::RunSpec::derive) uses
+/// to fill the spec's digest table without `p` extra dataset copies.
+pub fn digest_rows(ds: &Dataset, rows: &[usize]) -> u64 {
+    let mut hash = Fnv64::default();
+    let mut buf = Vec::new();
+    for &i in rows {
+        let row = ds.x.row(i);
+        encode_record(&mut buf, i as u64, ds.y[i], row.idx, row.val);
+        hash.update(&buf);
+    }
+    hash.finish()
+}
+
+// ---------------------------------------------------------------------------
+// header
+
+/// Fixed-size shard file header (72 bytes on disk including magic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    /// Worker index this shard belongs to.
+    pub worker: u64,
+    /// Worker count of the partition that produced it.
+    pub p: u64,
+    /// Rows stored.
+    pub rows: u64,
+    /// Feature count of the full dataset.
+    pub d: u64,
+    /// Stored non-zeros.
+    pub nnz: u64,
+    /// [`Partition::fingerprint`] of the producing partition.
+    pub part_fingerprint: u64,
+    /// Payload digest (see [`shard_digest`]).
+    pub digest: u64,
+}
+
+/// Bytes of the on-disk header including magic and version.
+pub const HEADER_LEN: usize = 72;
+
+impl ShardHeader {
+    fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[..8].copy_from_slice(SHARD_MAGIC);
+        for (slot, v) in [
+            SHARD_VERSION,
+            self.worker,
+            self.p,
+            self.rows,
+            self.d,
+            self.nnz,
+            self.part_fingerprint,
+            self.digest,
+        ]
+        .iter()
+        .enumerate()
+        {
+            out[8 + slot * 8..16 + slot * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(bytes: &[u8; HEADER_LEN], path: &Path) -> Result<ShardHeader> {
+        if &bytes[..8] != SHARD_MAGIC {
+            return Err(Error::Protocol(format!(
+                "{}: not a pscope shard file (bad magic)",
+                path.display()
+            )));
+        }
+        let u = |slot: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[8 + slot * 8..16 + slot * 8]);
+            u64::from_le_bytes(b)
+        };
+        if u(0) != SHARD_VERSION {
+            return Err(Error::Protocol(format!(
+                "{}: shard format version {} (this build reads {})",
+                path.display(),
+                u(0),
+                SHARD_VERSION
+            )));
+        }
+        Ok(ShardHeader {
+            worker: u(1),
+            p: u(2),
+            rows: u(3),
+            d: u(4),
+            nnz: u(5),
+            part_fingerprint: u(6),
+            digest: u(7),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+
+/// Streaming shard file writer: rows go straight to disk (hashed as they
+/// pass); [`ShardWriter::finalize`] seeks back and patches the header with
+/// the totals and digest.
+pub struct ShardWriter {
+    file: BufWriter<File>,
+    path: PathBuf,
+    header: ShardHeader,
+    hash: Fnv64,
+    buf: Vec<u8>,
+}
+
+impl ShardWriter {
+    /// Create `path`, writing a placeholder header. `d` may be unknown
+    /// during a streaming parse — [`ShardWriter::finalize`] patches it.
+    pub fn create(path: &Path, worker: u64, p: u64, part_fingerprint: u64) -> Result<ShardWriter> {
+        let mut file = BufWriter::new(File::create(path)?);
+        let header = ShardHeader {
+            worker,
+            p,
+            rows: 0,
+            d: 0,
+            nnz: 0,
+            part_fingerprint,
+            digest: 0,
+        };
+        file.write_all(&header.encode())?;
+        Ok(ShardWriter {
+            file,
+            path: path.to_path_buf(),
+            header,
+            hash: Fnv64::default(),
+            buf: Vec::new(),
+        })
+    }
+
+    /// Append one record (`idx` strictly increasing, no explicit zeros —
+    /// the caller filters, mirroring the in-memory CSR constructor).
+    pub fn push(&mut self, row_id: u64, y: f64, idx: &[u32], val: &[f64]) -> Result<()> {
+        encode_record(&mut self.buf, row_id, y, idx, val);
+        self.hash.update(&self.buf);
+        self.file.write_all(&self.buf)?;
+        self.header.rows += 1;
+        self.header.nnz += idx.len() as u64;
+        Ok(())
+    }
+
+    /// Flush, patch the header (totals, digest, and the now-known `d`),
+    /// and return it.
+    pub fn finalize(self, d: u64) -> Result<ShardHeader> {
+        let mut header = self.header;
+        header.d = d;
+        header.digest = self.hash.finish();
+        let mut file = self.file.into_inner().map_err(|e| {
+            Error::Protocol(format!("{}: flush failed: {}", self.path.display(), e.error()))
+        })?;
+        file.seek(SeekFrom::Start(0))?;
+        file.write_all(&header.encode())?;
+        file.sync_all()?;
+        Ok(header)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reader
+
+/// One decoded batch of shard rows (CSR-shaped, plus original row ids).
+/// Reused across [`ShardReader::next_chunk`] calls so steady-state reads
+/// allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct ShardChunk {
+    /// Original dataset row index per chunk row.
+    pub row_ids: Vec<u64>,
+    /// Labels.
+    pub y: Vec<f64>,
+    /// Row pointers (length `rows + 1`).
+    pub indptr: Vec<usize>,
+    /// Column indices.
+    pub indices: Vec<u32>,
+    /// Values.
+    pub values: Vec<f64>,
+}
+
+impl ShardChunk {
+    /// Rows currently held.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Borrow chunk row `r` as `(indices, values)`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    fn clear(&mut self) {
+        self.row_ids.clear();
+        self.y.clear();
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+    }
+}
+
+/// What a chunked load actually touched — the accounting that proves a
+/// worker materialized only its own shard (asserted in tier-1 tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardLoadStats {
+    /// Rows decoded (equals the shard's row count, never the dataset's).
+    pub rows_read: usize,
+    /// Non-zeros decoded.
+    pub nnz_read: usize,
+    /// Chunks the load took.
+    pub chunks: usize,
+    /// Largest single-chunk row count — the peak row residency of the
+    /// streaming pass (≤ the requested chunk size).
+    pub peak_chunk_rows: usize,
+}
+
+/// Chunked shard file reader. Hashes payload bytes as they stream past
+/// and verifies the header digest when the last row is decoded, so a
+/// truncated or bit-flipped file fails loudly ([`Error::Protocol`])
+/// before any training step consumes it.
+pub struct ShardReader {
+    file: BufReader<File>,
+    path: PathBuf,
+    header: ShardHeader,
+    rows_read: u64,
+    nnz_read: u64,
+    hash: Fnv64,
+    verified: bool,
+}
+
+impl ShardReader {
+    /// Open and validate magic + version.
+    pub fn open(path: &Path) -> Result<ShardReader> {
+        let mut file = BufReader::new(File::open(path)?);
+        let mut bytes = [0u8; HEADER_LEN];
+        file.read_exact(&mut bytes).map_err(|e| truncated(path, e))?;
+        let header = ShardHeader::decode(&bytes, path)?;
+        Ok(ShardReader {
+            file,
+            path: path.to_path_buf(),
+            header,
+            rows_read: 0,
+            nnz_read: 0,
+            hash: Fnv64::default(),
+            verified: false,
+        })
+    }
+
+    /// The file's header.
+    #[inline]
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    /// Rows decoded so far.
+    #[inline]
+    pub fn rows_read(&self) -> u64 {
+        self.rows_read
+    }
+
+    /// Decode up to `max_rows` records into `chunk` (cleared first) and
+    /// return how many were read; `0` means the shard is exhausted (and
+    /// was already digest-verified). The verification happens on the call
+    /// that decodes the final row, so corrupt data is rejected before the
+    /// caller ever consumes it.
+    pub fn next_chunk(&mut self, max_rows: usize, chunk: &mut ShardChunk) -> Result<usize> {
+        chunk.clear();
+        let remaining = (self.header.rows - self.rows_read) as usize;
+        let take = remaining.min(max_rows.max(1));
+        let mut fixed = [0u8; 20];
+        for _ in 0..take {
+            self.file.read_exact(&mut fixed).map_err(|e| truncated(&self.path, e))?;
+            self.hash.update(&fixed);
+            let row_id = u64::from_le_bytes(fixed[0..8].try_into().unwrap());
+            let ybits = u64::from_le_bytes(fixed[8..16].try_into().unwrap());
+            let nnz = u32::from_le_bytes(fixed[16..20].try_into().unwrap()) as usize;
+            let mut quad = [0u8; 4];
+            for _ in 0..nnz {
+                self.file.read_exact(&mut quad).map_err(|e| truncated(&self.path, e))?;
+                self.hash.update(&quad);
+                chunk.indices.push(u32::from_le_bytes(quad));
+            }
+            let mut oct = [0u8; 8];
+            for _ in 0..nnz {
+                self.file.read_exact(&mut oct).map_err(|e| truncated(&self.path, e))?;
+                self.hash.update(&oct);
+                chunk.values.push(f64::from_bits(u64::from_le_bytes(oct)));
+            }
+            chunk.row_ids.push(row_id);
+            chunk.y.push(f64::from_bits(ybits));
+            chunk.indptr.push(chunk.indices.len());
+            self.rows_read += 1;
+            self.nnz_read += nnz as u64;
+        }
+        if !self.verified && self.rows_read == self.header.rows {
+            self.verify_trailer()?;
+            self.verified = true;
+        }
+        Ok(take)
+    }
+
+    fn verify_trailer(&mut self) -> Result<()> {
+        let digest = self.hash.finish();
+        if digest != self.header.digest {
+            return Err(Error::Protocol(format!(
+                "{}: payload digest {:#018x} != header {:#018x} (corrupt shard)",
+                self.path.display(),
+                digest,
+                self.header.digest
+            )));
+        }
+        if self.nnz_read != self.header.nnz {
+            return Err(Error::Protocol(format!(
+                "{}: payload nnz {} != header {}",
+                self.path.display(),
+                self.nnz_read,
+                self.header.nnz
+            )));
+        }
+        let mut probe = [0u8; 1];
+        if self.file.read(&mut probe)? != 0 {
+            return Err(Error::Protocol(format!(
+                "{}: trailing bytes after the last record",
+                self.path.display()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn truncated(path: &Path, e: std::io::Error) -> Error {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        Error::Protocol(format!("{}: truncated shard file", path.display()))
+    } else {
+        Error::Io(e)
+    }
+}
+
+/// Load one shard file into a worker-local [`Dataset`] (and its original
+/// row ids) through the chunked reader — peak row residency is one chunk,
+/// and the returned [`ShardLoadStats`] proves it: `rows_read` equals the
+/// shard's rows, not the dataset's.
+pub fn load_shard(path: &Path) -> Result<(Dataset, Vec<usize>, ShardHeader, ShardLoadStats)> {
+    let mut reader = ShardReader::open(path)?;
+    let header = *reader.header();
+    let mut row_ids = Vec::with_capacity(header.rows as usize);
+    let mut y = Vec::with_capacity(header.rows as usize);
+    let mut indptr = Vec::with_capacity(header.rows as usize + 1);
+    indptr.push(0usize);
+    let mut indices = Vec::with_capacity(header.nnz as usize);
+    let mut values = Vec::with_capacity(header.nnz as usize);
+    let mut stats = ShardLoadStats::default();
+    let mut chunk = ShardChunk::default();
+    loop {
+        let got = reader.next_chunk(DEFAULT_CHUNK_ROWS, &mut chunk)?;
+        if got == 0 {
+            break;
+        }
+        stats.chunks += 1;
+        stats.peak_chunk_rows = stats.peak_chunk_rows.max(got);
+        for r in 0..chunk.rows() {
+            row_ids.push(chunk.row_ids[r] as usize);
+            y.push(chunk.y[r]);
+            let (idx, val) = chunk.row(r);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
+        }
+    }
+    stats.rows_read = reader.rows_read as usize;
+    stats.nnz_read = reader.nnz_read as usize;
+    let x = CsrMatrix {
+        nrows: header.rows as usize,
+        ncols: header.d as usize,
+        indptr,
+        indices,
+        values,
+    };
+    let ds = Dataset { name: String::new(), x, y };
+    Ok((ds, row_ids, header, stats))
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+
+/// Per-shard entry in the [`Manifest`] digest table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Rows in shard `k`.
+    pub rows: u64,
+    /// Non-zeros in shard `k`.
+    pub nnz: u64,
+    /// Payload digest of shard `k` (see [`shard_digest`]).
+    pub digest: u64,
+}
+
+/// Shard directory manifest: the dataset- and partition-level facts every
+/// consumer (master, worker, `pscope info`) validates shard files
+/// against. Written once by [`ingest`]; checksummed so a corrupted
+/// manifest is as loud as a corrupted shard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Total instances across shards (counting each original row once).
+    pub n: u64,
+    /// Feature count.
+    pub d: u64,
+    /// Total stored non-zeros.
+    pub nnz: u64,
+    /// Worker count (= number of shard files).
+    pub p: u64,
+    /// Seed the partition was built with.
+    pub part_seed: u64,
+    /// [`Partition::fingerprint`] of the producing partition.
+    pub part_fingerprint: u64,
+    /// Per-shard row/nnz/digest table, indexed by worker.
+    pub shards: Vec<ShardEntry>,
+    /// Partition strategy name (canonical [`Partitioner::parse`] spelling).
+    pub partition: String,
+    /// Dataset name (for traces and prints; numerics never depend on it).
+    pub dataset: String,
+}
+
+impl Manifest {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MANIFEST_MAGIC);
+        for v in [
+            SHARD_VERSION,
+            self.n,
+            self.d,
+            self.nnz,
+            self.p,
+            self.part_seed,
+            self.part_fingerprint,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for s in &self.shards {
+            out.extend_from_slice(&s.rows.to_le_bytes());
+            out.extend_from_slice(&s.nnz.to_le_bytes());
+            out.extend_from_slice(&s.digest.to_le_bytes());
+        }
+        for s in [&self.partition, &self.dataset] {
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        let mut hash = Fnv64::default();
+        hash.update(&out);
+        out.extend_from_slice(&hash.finish().to_le_bytes());
+        out
+    }
+
+    fn decode(bytes: &[u8], path: &Path) -> Result<Manifest> {
+        let bad = |m: &str| Error::Protocol(format!("{}: {m}", path.display()));
+        if bytes.len() < 8 + 7 * 8 + 8 || &bytes[..8] != MANIFEST_MAGIC {
+            return Err(bad("not a pscope shard manifest"));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let mut hash = Fnv64::default();
+        hash.update(body);
+        if hash.finish() != u64::from_le_bytes(tail.try_into().unwrap()) {
+            return Err(bad("manifest checksum mismatch (corrupt manifest)"));
+        }
+        let mut pos = 8;
+        let mut u = || -> Result<u64> {
+            let end = pos + 8;
+            if end > body.len() {
+                return Err(bad("manifest too short"));
+            }
+            let v = u64::from_le_bytes(body[pos..end].try_into().unwrap());
+            pos = end;
+            Ok(v)
+        };
+        if u()? != SHARD_VERSION {
+            return Err(bad("unsupported manifest version"));
+        }
+        let (n, d, nnz, p) = (u()?, u()?, u()?, u()?);
+        let (part_seed, part_fingerprint) = (u()?, u()?);
+        let mut shards = Vec::with_capacity(p as usize);
+        for _ in 0..p {
+            shards.push(ShardEntry { rows: u()?, nnz: u()?, digest: u()? });
+        }
+        let mut string = || -> Result<String> {
+            if pos + 4 > body.len() {
+                return Err(bad("manifest too short"));
+            }
+            let len = u32::from_le_bytes(body[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 4;
+            if pos + len > body.len() {
+                return Err(bad("manifest too short"));
+            }
+            let s = std::str::from_utf8(&body[pos..pos + len])
+                .map_err(|_| bad("manifest string not UTF-8"))?
+                .to_string();
+            pos += len;
+            Ok(s)
+        };
+        let partition = string()?;
+        let dataset = string()?;
+        if pos != body.len() {
+            return Err(bad("trailing bytes in manifest"));
+        }
+        Ok(Manifest {
+            n,
+            d,
+            nnz,
+            p,
+            part_seed,
+            part_fingerprint,
+            shards,
+            partition,
+            dataset,
+        })
+    }
+
+    /// Write `dir/manifest.pscope`.
+    pub fn write(&self, dir: &Path) -> Result<()> {
+        Ok(std::fs::write(dir.join(MANIFEST_FILE), self.encode())?)
+    }
+
+    /// Read and checksum-verify `dir/manifest.pscope`.
+    pub fn read(dir: &Path) -> Result<Manifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let bytes = std::fs::read(&path)?;
+        Manifest::decode(&bytes, &path)
+    }
+}
+
+/// Does `dir` look like a shard directory (has a manifest)?
+pub fn is_shard_dir(dir: &Path) -> bool {
+    dir.join(MANIFEST_FILE).is_file()
+}
+
+/// Validate a shard file's header against the manifest it belongs to.
+pub fn check_header(header: &ShardHeader, manifest: &Manifest, k: usize, path: &Path) -> Result<()> {
+    let entry = manifest.shards.get(k).ok_or_else(|| {
+        Error::Protocol(format!("manifest has no shard {k} (p = {})", manifest.p))
+    })?;
+    let expect = ShardHeader {
+        worker: k as u64,
+        p: manifest.p,
+        rows: entry.rows,
+        d: manifest.d,
+        nnz: entry.nnz,
+        part_fingerprint: manifest.part_fingerprint,
+        digest: entry.digest,
+    };
+    if *header != expect {
+        return Err(Error::Protocol(format!(
+            "{}: shard header {header:?} does not match manifest entry {expect:?}",
+            path.display()
+        )));
+    }
+    Ok(())
+}
+
+/// Load shard `k` of a shard directory, validated against the manifest.
+pub fn load_worker_shard(
+    dir: &Path,
+    k: usize,
+    manifest: &Manifest,
+) -> Result<(Dataset, Vec<usize>, ShardLoadStats)> {
+    let path = shard_path(dir, k);
+    let (mut ds, row_ids, header, stats) = load_shard(&path)?;
+    check_header(&header, manifest, k, &path)?;
+    ds.name = manifest.dataset.clone();
+    Ok((ds, row_ids, stats))
+}
+
+/// Master-side load: reconstruct the **full dataset in original row
+/// order** plus the exact [`Partition`] from every shard in `dir`. The
+/// f64 summation order of objectives follows row order, so scattering by
+/// stored `row_id` is what pins a ShardDir run bit-identical to the
+/// in-memory run that produced the shards.
+pub fn load_dir(dir: &Path) -> Result<(Dataset, Partition, Manifest)> {
+    let manifest = Manifest::read(dir)?;
+    let n = manifest.n as usize;
+    let mut y = vec![0.0f64; n];
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    let mut seen = vec![false; n];
+    let mut assignment = Vec::with_capacity(manifest.p as usize);
+    for k in 0..manifest.p as usize {
+        let (shard, row_ids, _) = load_worker_shard(dir, k, &manifest)?;
+        for (r, &i) in row_ids.iter().enumerate() {
+            if i >= n {
+                return Err(Error::Protocol(format!(
+                    "shard {k}: row_id {i} out of range (n = {n})"
+                )));
+            }
+            if !seen[i] {
+                seen[i] = true;
+                y[i] = shard.y[r];
+                let row = shard.x.row(r);
+                rows[i] = row.idx.iter().copied().zip(row.val.iter().copied()).collect();
+            }
+            // under replication a row appears in several shards; the first
+            // copy wins and later ones are digest-identical by construction
+        }
+        assignment.push(row_ids);
+    }
+    if !seen.iter().all(|&s| s) {
+        return Err(Error::Protocol(
+            "shard directory does not cover every dataset row".into(),
+        ));
+    }
+    let tag = Partitioner::parse(&manifest.partition)?.tag().to_string();
+    let part = Partition { assignment, tag };
+    if part.fingerprint() != manifest.part_fingerprint {
+        return Err(Error::Protocol(format!(
+            "reconstructed partition fingerprint {:#018x} != manifest {:#018x}",
+            part.fingerprint(),
+            manifest.part_fingerprint
+        )));
+    }
+    let ds = Dataset {
+        name: manifest.dataset.clone(),
+        x: CsrMatrix::from_rows(manifest.d as usize, &rows),
+        y,
+    };
+    Ok((ds, part, manifest))
+}
+
+// ---------------------------------------------------------------------------
+// ingest
+
+/// What [`ingest`] did — printed by the `pscope ingest` subcommand.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    /// The manifest as written to the output directory.
+    pub manifest: Manifest,
+}
+
+/// Convert a LibSVM file into a shard directory: stream-parse once
+/// (spilling rows to a temporary shard, accumulating labels and
+/// per-column squared mass), partition from the accumulated statistics —
+/// label-only strategies split via [`Partitioner::split_labels`];
+/// `engineered` re-streams the spill through
+/// [`row_sketches_streamed`] and runs [`engineer_from_sketches`] — then
+/// scatter the spill into `p` shard files and write the manifest.
+///
+/// The full CSR is never materialized; peak residency is one reader
+/// chunk plus the `O(n)` label/assignment vectors and `O(d)` column
+/// masses. Produces shards byte-identical to
+/// `ds.select(&partition.assignment[k])` written by [`shard_digest`]'s
+/// record layout, because every strategy hands out ascending assignment
+/// lists and the scatter pass streams rows in original order.
+pub fn ingest(
+    input: &Path,
+    out_dir: &Path,
+    partition: &str,
+    p: usize,
+    seed: u64,
+    dataset_name: &str,
+    d_hint: usize,
+) -> Result<IngestReport> {
+    let strategy = Partitioner::parse(partition)?;
+    if p == 0 {
+        return Err(Error::Config("ingest: p must be positive".into()));
+    }
+    std::fs::create_dir_all(out_dir)?;
+    let spill_path = out_dir.join("ingest.spill");
+
+    // -- pass A: stream-parse, spill, accumulate statistics --------------
+    let mut stream = RowStream::new(BufReader::new(File::open(input)?));
+    let mut spill = ShardWriter::create(&spill_path, 0, 1, 0)?;
+    let mut y: Vec<f64> = Vec::new();
+    let mut col_mass: Vec<f64> = Vec::new();
+    let mut max_col: Option<usize> = None;
+    let mut idx_buf: Vec<u32> = Vec::new();
+    let mut val_buf: Vec<f64> = Vec::new();
+    while let Some((label, row)) = stream.next()? {
+        idx_buf.clear();
+        val_buf.clear();
+        for &(j, v) in &row {
+            // mirror CsrMatrix::from_rows: explicit zeros are not stored,
+            // so the shard bytes depend on the logical matrix only
+            if v != 0.0 {
+                idx_buf.push(j);
+                val_buf.push(v);
+                if j as usize >= col_mass.len() {
+                    col_mass.resize(j as usize + 1, 0.0);
+                }
+                col_mass[j as usize] += v * v;
+            }
+        }
+        // d counts explicit-zero columns too — the same rule libsvm::read
+        // applies, so ingesting and in-memory reading agree on the shape
+        if let Some(&(j, _)) = row.last() {
+            max_col = Some(max_col.unwrap_or(0).max(j as usize));
+        }
+        spill.push(y.len() as u64, label, &idx_buf, &val_buf)?;
+        y.push(label);
+    }
+    let d = resolve_d(d_hint, max_col);
+    col_mass.resize(d, 0.0);
+    let spill_header = spill.finalize(d as u64)?;
+    let n = y.len();
+
+    // -- pass B: partition from the accumulated statistics ----------------
+    let part = if strategy == Partitioner::Engineered {
+        let opts = EngineOpts::default();
+        let plan = sketch_plan_from_col_mass(&col_mass, opts.sketch_top, opts.sketch_tail);
+        let threshold = label_threshold(&y);
+        let mut reader = ShardReader::open(&spill_path)?;
+        let sketches = row_sketches_streamed(&mut reader, &plan, threshold)?;
+        engineer_from_sketches(&sketches, plan.n_buckets, p, seed, &opts).0
+    } else {
+        strategy.split_labels(&y, p, seed)
+    };
+    let part_fingerprint = part.fingerprint();
+
+    // -- pass C: scatter the spill into per-worker shards ------------------
+    let mut writers = Vec::with_capacity(p);
+    for k in 0..p {
+        writers.push(ShardWriter::create(
+            &shard_path(out_dir, k),
+            k as u64,
+            p as u64,
+            part_fingerprint,
+        )?);
+    }
+    let mut cursor = vec![0usize; p];
+    let mut reader = ShardReader::open(&spill_path)?;
+    let mut chunk = ShardChunk::default();
+    while reader.next_chunk(DEFAULT_CHUNK_ROWS, &mut chunk)? > 0 {
+        for r in 0..chunk.rows() {
+            let i = chunk.row_ids[r] as usize;
+            let (idx, val) = chunk.row(r);
+            for k in 0..p {
+                // assignment lists are ascending, so each worker's cursor
+                // only ever waits on the current row
+                if part.assignment[k].get(cursor[k]) == Some(&i) {
+                    writers[k].push(i as u64, chunk.y[r], idx, val)?;
+                    cursor[k] += 1;
+                }
+            }
+        }
+    }
+    for (k, c) in cursor.iter().enumerate() {
+        if *c != part.assignment[k].len() {
+            return Err(Error::Protocol(format!(
+                "ingest: shard {k} wrote {c} of {} assigned rows",
+                part.assignment[k].len()
+            )));
+        }
+    }
+    let mut shards = Vec::with_capacity(p);
+    for w in writers {
+        let h = w.finalize(d as u64)?;
+        shards.push(ShardEntry { rows: h.rows, nnz: h.nnz, digest: h.digest });
+    }
+    std::fs::remove_file(&spill_path)?;
+
+    let manifest = Manifest {
+        n: n as u64,
+        d: d as u64,
+        nnz: spill_header.nnz,
+        p: p as u64,
+        part_seed: seed,
+        part_fingerprint,
+        shards,
+        partition: partition.to_string(),
+        dataset: dataset_name.to_string(),
+    };
+    manifest.write(out_dir)?;
+    Ok(IngestReport { manifest })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{libsvm, synth};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pscope_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_libsvm(ds: &Dataset, path: &Path) {
+        let mut buf = Vec::new();
+        libsvm::write(ds, &mut buf).unwrap();
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_bits() {
+        let dir = tmp_dir("shard_rt");
+        let ds = synth::tiny(3).generate();
+        let rows: Vec<usize> = (0..ds.n()).step_by(3).collect();
+        let shard = ds.select(&rows);
+        let path = shard_path(&dir, 0);
+        let mut w = ShardWriter::create(&path, 0, 1, 77).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            let row = shard.x.row(r);
+            w.push(i as u64, shard.y[r], row.idx, row.val).unwrap();
+        }
+        let header = w.finalize(ds.d() as u64).unwrap();
+        assert_eq!(header.rows as usize, rows.len());
+        assert_eq!(header.digest, shard_digest(&shard, &rows));
+        assert_eq!(header.digest, digest_rows(&ds, &rows));
+
+        let (loaded, row_ids, h2, stats) = load_shard(&path).unwrap();
+        assert_eq!(h2, header);
+        assert_eq!(row_ids, rows);
+        assert_eq!(stats.rows_read, rows.len());
+        assert!(stats.peak_chunk_rows <= DEFAULT_CHUNK_ROWS);
+        assert_eq!(loaded.x.indptr, shard.x.indptr);
+        assert_eq!(loaded.x.indices, shard.x.indices);
+        for (a, b) in loaded.x.values.iter().zip(&shard.x.values) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in loaded.y.iter().zip(&shard.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_shard_is_a_loud_protocol_error() {
+        let dir = tmp_dir("shard_trunc");
+        let ds = synth::tiny(4).generate();
+        let rows: Vec<usize> = (0..ds.n()).collect();
+        let shard = ds.select(&rows);
+        let path = shard_path(&dir, 0);
+        let mut w = ShardWriter::create(&path, 0, 1, 0).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            let row = shard.x.row(r);
+            w.push(i as u64, shard.y[r], row.idx, row.val).unwrap();
+        }
+        w.finalize(ds.d() as u64).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let err = load_shard(&path).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err:?}");
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_a_loud_protocol_error() {
+        let dir = tmp_dir("shard_flip");
+        let ds = synth::tiny(5).generate();
+        let rows: Vec<usize> = (0..ds.n()).collect();
+        let shard = ds.select(&rows);
+        let path = shard_path(&dir, 0);
+        let mut w = ShardWriter::create(&path, 0, 1, 0).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            let row = shard.x.row(r);
+            w.push(i as u64, shard.y[r], row.idx, row.val).unwrap();
+        }
+        w.finalize(ds.d() as u64).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, bytes).unwrap();
+        let err = load_shard(&path).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err:?}");
+        assert!(format!("{err}").contains("digest"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_checksum() {
+        let dir = tmp_dir("manifest_rt");
+        let m = Manifest {
+            n: 10,
+            d: 7,
+            nnz: 31,
+            p: 2,
+            part_seed: 42,
+            part_fingerprint: 0xdead_beef,
+            shards: vec![
+                ShardEntry { rows: 6, nnz: 17, digest: 1 },
+                ShardEntry { rows: 4, nnz: 14, digest: 2 },
+            ],
+            partition: "uniform".into(),
+            dataset: "tiny".into(),
+        };
+        m.write(&dir).unwrap();
+        assert!(is_shard_dir(&dir));
+        assert_eq!(Manifest::read(&dir).unwrap(), m);
+        // flip one byte -> checksum failure
+        let path = dir.join(MANIFEST_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 1;
+        std::fs::write(&path, bytes).unwrap();
+        let err = Manifest::read(&dir).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ingest_matches_in_memory_select_bit_for_bit() {
+        // every strategy, including the sketch-streaming engineered path:
+        // shard digests (and therefore bytes) must equal the digests of
+        // ds.select(&assignment[k]) from the fully in-memory pipeline
+        let dir0 = tmp_dir("ingest_eq");
+        let ds = synth::tiny_skew(7).generate();
+        let input = dir0.join("in.libsvm");
+        write_libsvm(&ds, &input);
+        for strat in ["uniform", "skew75", "separated", "replicated", "engineered"] {
+            let out = dir0.join(format!("out_{strat}"));
+            let rep = ingest(&input, &out, strat, 4, 11, "tiny_skew", ds.d()).unwrap();
+            let part = Partitioner::parse(strat).unwrap().split(&ds, 4, 11);
+            assert_eq!(rep.manifest.part_fingerprint, part.fingerprint(), "{strat}");
+            assert_eq!(rep.manifest.n as usize, ds.n(), "{strat}");
+            assert_eq!(rep.manifest.d as usize, ds.d(), "{strat}");
+            assert_eq!(rep.manifest.nnz as usize, ds.nnz(), "{strat}");
+            for k in 0..4 {
+                let expect = shard_digest(&ds.select(&part.assignment[k]), &part.assignment[k]);
+                assert_eq!(rep.manifest.shards[k].digest, expect, "{strat} shard {k}");
+            }
+            // and the directory reconstructs the full dataset + partition
+            let (full, rpart, _) = load_dir(&out).unwrap();
+            assert_eq!(rpart.assignment, part.assignment, "{strat}");
+            assert_eq!(full.x.indices, ds.x.indices, "{strat}");
+            for (a, b) in full.x.values.iter().zip(&ds.x.values) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{strat}");
+            }
+            for (a, b) in full.y.iter().zip(&ds.y) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{strat}");
+            }
+        }
+        std::fs::remove_dir_all(&dir0).unwrap();
+    }
+
+    #[test]
+    fn ingest_cleans_up_spill() {
+        let dir = tmp_dir("ingest_spill");
+        let ds = synth::tiny(2).generate();
+        let input = dir.join("in.libsvm");
+        write_libsvm(&ds, &input);
+        let out = dir.join("out");
+        ingest(&input, &out, "uniform", 2, 1, "tiny", 0).unwrap();
+        assert!(!out.join("ingest.spill").exists());
+        assert!(out.join(MANIFEST_FILE).exists());
+        assert!(shard_path(&out, 0).exists() && shard_path(&out, 1).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_worker_shard_validates_against_manifest() {
+        let dir = tmp_dir("worker_valid");
+        let ds = synth::tiny(6).generate();
+        let input = dir.join("in.libsvm");
+        write_libsvm(&ds, &input);
+        let out = dir.join("out");
+        ingest(&input, &out, "uniform", 3, 5, "tiny", 0).unwrap();
+        let manifest = Manifest::read(&out).unwrap();
+        let (shard, row_ids, stats) = load_worker_shard(&out, 1, &manifest).unwrap();
+        assert_eq!(shard.n(), manifest.shards[1].rows as usize);
+        assert_eq!(stats.rows_read, shard.n());
+        assert!(stats.rows_read < ds.n(), "worker must not touch other shards");
+        assert!(row_ids.windows(2).all(|w| w[0] < w[1]));
+        // a manifest claiming different facts is rejected
+        let mut bad = manifest.clone();
+        bad.shards[1].digest ^= 1;
+        let err = load_worker_shard(&out, 1, &bad).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

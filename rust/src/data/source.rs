@@ -1,0 +1,192 @@
+//! Dataset source resolution — the seam between "what the user named"
+//! and "where the bytes come from".
+//!
+//! Every front-end (CLI `train`/`info`, the TOML config, TCP masters and
+//! workers) names its data with one string; [`DataSource::resolve`] turns
+//! that string into one of three concrete sources:
+//!
+//! 1. **Shard directory** — the path is a directory containing a
+//!    [`Manifest`](crate::data::shard::Manifest) (`pscope ingest` output).
+//!    Workers materialize only their own shard file, validated against
+//!    the job spec's digest table.
+//! 2. **LibSVM file** — the path names a `.libsvm` file (or an existing
+//!    file of any name), or `data/<name>.libsvm` exists.
+//! 3. **Synthetic preset** — anything else: the name is generated from
+//!    the seed ([`crate::data::synth::preset`]).
+//!
+//! The resolved variant travels in the job spec
+//! ([`crate::coordinator::remote::RunSpec`], SPEC_VERSION 4), so a remote
+//! worker never re-runs resolution against its own filesystem state — it
+//! is told exactly which kind of source the master used.
+
+use std::path::Path;
+
+use super::{shard, synth, Dataset};
+use crate::error::{Error, Result};
+
+/// Where a dataset's bytes come from. String payloads (not `PathBuf`) so
+/// the variant round-trips through the wire codec losslessly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DataSource {
+    /// Synthetic preset `name`, generated deterministically from `seed`.
+    Synth {
+        /// Preset name ([`crate::data::synth::preset`]).
+        name: String,
+        /// Generation seed.
+        seed: u64,
+    },
+    /// A LibSVM text file, parsed on every node that loads it.
+    LibsvmFile {
+        /// File path (must be readable on every node).
+        path: String,
+    },
+    /// A `pscope ingest` shard directory: binary shards + manifest.
+    ShardDir {
+        /// Directory path (must be readable on every node).
+        dir: String,
+    },
+}
+
+impl DataSource {
+    /// Resolve a user-facing dataset spec. Precedence: shard directory >
+    /// explicit/implicit LibSVM file > synthetic preset (the historical
+    /// `load_or_synth` rule, extended downward).
+    pub fn resolve(spec: &str, seed: u64) -> DataSource {
+        let p = Path::new(spec);
+        if shard::is_shard_dir(p) {
+            return DataSource::ShardDir { dir: spec.to_string() };
+        }
+        if spec.ends_with(".libsvm") || p.is_file() {
+            return DataSource::LibsvmFile { path: spec.to_string() };
+        }
+        let data_path = format!("data/{spec}.libsvm");
+        if Path::new(&data_path).exists() {
+            return DataSource::LibsvmFile { path: data_path };
+        }
+        DataSource::Synth { name: spec.to_string(), seed }
+    }
+
+    /// Materialize the full dataset (master-side; workers with a shard
+    /// directory use [`shard::load_worker_shard`] and never call this).
+    pub fn load(&self) -> Result<Dataset> {
+        match self {
+            DataSource::Synth { name, seed } => synth::preset(name, *seed)
+                .map(|s| s.generate())
+                .ok_or_else(|| Error::Config(format!("unknown dataset {name:?}"))),
+            DataSource::LibsvmFile { path } => super::libsvm::read_file(path, 0),
+            DataSource::ShardDir { dir } => Ok(shard::load_dir(Path::new(dir))?.0),
+        }
+    }
+
+    /// Wire tag byte (part of SPEC_VERSION 4).
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            DataSource::Synth { .. } => 0,
+            DataSource::LibsvmFile { .. } => 1,
+            DataSource::ShardDir { .. } => 2,
+        }
+    }
+
+    /// Wire seed field (0 for non-synthetic sources).
+    pub fn wire_seed(&self) -> u64 {
+        match self {
+            DataSource::Synth { seed, .. } => *seed,
+            _ => 0,
+        }
+    }
+
+    /// Wire string payload (name, path, or dir).
+    pub fn wire_str(&self) -> &str {
+        match self {
+            DataSource::Synth { name, .. } => name,
+            DataSource::LibsvmFile { path } => path,
+            DataSource::ShardDir { dir } => dir,
+        }
+    }
+
+    /// Rebuild from the wire triple; rejects unknown tags loudly.
+    pub fn from_wire(tag: u8, seed: u64, s: &str) -> Result<DataSource> {
+        match tag {
+            0 => Ok(DataSource::Synth { name: s.to_string(), seed }),
+            1 => Ok(DataSource::LibsvmFile { path: s.to_string() }),
+            2 => Ok(DataSource::ShardDir { dir: s.to_string() }),
+            other => Err(Error::Protocol(format!("unknown data source tag {other}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for DataSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataSource::Synth { name, seed } => write!(f, "synth:{name} (seed {seed})"),
+            DataSource::LibsvmFile { path } => write!(f, "libsvm:{path}"),
+            DataSource::ShardDir { dir } => write!(f, "shards:{dir}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_prefers_shard_dir_then_file_then_synth() {
+        let dir = std::env::temp_dir().join(format!("pscope_src_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // bare name with no file behind it -> synth
+        let s = DataSource::resolve("tiny", 7);
+        assert_eq!(s, DataSource::Synth { name: "tiny".into(), seed: 7 });
+        assert_eq!(s.load().unwrap().n(), crate::data::synth::tiny(7).generate().n());
+
+        // .libsvm suffix -> file, even before checking existence
+        let f = dir.join("x.libsvm").to_string_lossy().into_owned();
+        assert_eq!(DataSource::resolve(&f, 0), DataSource::LibsvmFile { path: f });
+
+        // a directory with a manifest -> shard dir
+        let m = crate::data::shard::Manifest {
+            n: 0,
+            d: 0,
+            nnz: 0,
+            p: 0,
+            part_seed: 0,
+            part_fingerprint: 0,
+            shards: vec![],
+            partition: "uniform".into(),
+            dataset: "x".into(),
+        };
+        m.write(&dir).unwrap();
+        let spec = dir.to_string_lossy().into_owned();
+        assert_eq!(DataSource::resolve(&spec, 0), DataSource::ShardDir { dir: spec });
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_synth_is_config_error() {
+        let err = DataSource::Synth { name: "mystery".into(), seed: 1 }.load().unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+    }
+
+    #[test]
+    fn wire_triple_roundtrips() {
+        for src in [
+            DataSource::Synth { name: "tiny".into(), seed: 42 },
+            DataSource::LibsvmFile { path: "data/real.libsvm".into() },
+            DataSource::ShardDir { dir: "shards/out".into() },
+        ] {
+            let back =
+                DataSource::from_wire(src.wire_tag(), src.wire_seed(), src.wire_str()).unwrap();
+            assert_eq!(back, src);
+        }
+        assert!(DataSource::from_wire(9, 0, "x").is_err());
+    }
+
+    #[test]
+    fn display_names_the_kind() {
+        let s = DataSource::Synth { name: "tiny".into(), seed: 3 };
+        assert_eq!(format!("{s}"), "synth:tiny (seed 3)");
+        assert!(format!("{}", DataSource::ShardDir { dir: "d".into() }).starts_with("shards:"));
+    }
+}

@@ -102,6 +102,16 @@ pub fn sketch_plan(ds: &Dataset, top: usize, tail: usize) -> SketchPlan {
             col_mass[row.idx[k] as usize] += v * v;
         }
     }
+    sketch_plan_from_col_mass(&col_mass, top, tail)
+}
+
+/// [`sketch_plan`] from a precomputed per-feature squared-mass vector —
+/// the entry point for streaming ingestion, which accumulates `col_mass`
+/// during its single parse pass instead of re-reading a materialized CSR.
+/// Accumulating in the same row-major entry order makes the masses (and
+/// therefore the plan) bit-identical to the in-memory path's.
+pub fn sketch_plan_from_col_mass(col_mass: &[f64], top: usize, tail: usize) -> SketchPlan {
+    let d = col_mass.len();
     let top = top.min(d);
     let mut order: Vec<usize> = (0..d).collect();
     // heaviest first; ties broken by feature index so the plan is a pure
@@ -131,7 +141,7 @@ pub struct RowSketch {
     /// the centered label `y − ȳ`, so a Lasso/Huber dataset whose targets
     /// are all positive still splits into meaningful above/below-mean
     /// strata instead of one degenerate class. Part of the engineered
-    /// split's wire contract (SPEC_VERSION 3).
+    /// split's wire contract (SPEC_VERSION 4).
     pub positive: bool,
     /// Squared row norm (total curvature mass, loss-constant aside).
     pub nrm2_sq: f64,
@@ -140,40 +150,71 @@ pub struct RowSketch {
     pub mass: Vec<(u32, f64)>,
 }
 
-/// Stream all row sketches in one CSR pass.
-pub fn row_sketches(ds: &Dataset, plan: &SketchPlan) -> Vec<RowSketch> {
-    // binary ±1 labels keep the 0 threshold bit-for-bit; real-valued
-    // (regression) labels stratify around their mean — deterministic: one
-    // fixed-order sum over the label vector
-    let binary = ds.y.iter().all(|&v| v == 1.0 || v == -1.0);
-    let threshold = if binary || ds.n() == 0 {
+/// Stratification threshold over a label vector: binary ±1 labels keep
+/// the 0 threshold bit-for-bit; real-valued (regression) labels stratify
+/// around their mean — deterministic: one fixed-order sum over `y`.
+pub fn label_threshold(y: &[f64]) -> f64 {
+    let binary = y.iter().all(|&v| v == 1.0 || v == -1.0);
+    if binary || y.is_empty() {
         0.0
     } else {
-        ds.y.iter().sum::<f64>() / ds.n() as f64
-    };
+        y.iter().sum::<f64>() / y.len() as f64
+    }
+}
+
+/// Sketch a single row from its raw `(index, value)` entries — the shared
+/// kernel of [`row_sketches`] (in-memory CSR pass) and
+/// [`row_sketches_streamed`] (chunked shard reader), which is what makes
+/// the two paths bit-identical: same entry order, same accumulation.
+pub fn sketch_row(plan: &SketchPlan, threshold: f64, y: f64, idx: &[u32], val: &[f64]) -> RowSketch {
+    let mut mass: Vec<(u32, f64)> = Vec::with_capacity(idx.len().min(plan.n_buckets));
+    let mut nrm2 = 0.0;
+    for k in 0..idx.len() {
+        let v = val[k];
+        let m = v * v;
+        nrm2 += m;
+        let b = plan.bucket_of[idx[k] as usize];
+        match mass.iter_mut().find(|(eb, _)| *eb == b) {
+            Some((_, em)) => *em += m,
+            None => mass.push((b, m)),
+        }
+    }
+    mass.sort_unstable_by_key(|&(b, _)| b);
+    RowSketch { positive: y > threshold, nrm2_sq: nrm2, mass }
+}
+
+/// Stream all row sketches in one CSR pass.
+pub fn row_sketches(ds: &Dataset, plan: &SketchPlan) -> Vec<RowSketch> {
+    let threshold = label_threshold(&ds.y);
     let mut out = Vec::with_capacity(ds.n());
     for i in 0..ds.n() {
         let row = ds.x.row(i);
-        let mut mass: Vec<(u32, f64)> = Vec::with_capacity(row.idx.len().min(plan.n_buckets));
-        let mut nrm2 = 0.0;
-        for k in 0..row.idx.len() {
-            let v = row.val[k];
-            let m = v * v;
-            nrm2 += m;
-            let b = plan.bucket_of[row.idx[k] as usize];
-            match mass.iter_mut().find(|(eb, _)| *eb == b) {
-                Some((_, em)) => *em += m,
-                None => mass.push((b, m)),
-            }
-        }
-        mass.sort_unstable_by_key(|&(b, _)| b);
-        out.push(RowSketch {
-            positive: ds.y[i] > threshold,
-            nrm2_sq: nrm2,
-            mass,
-        });
+        out.push(sketch_row(plan, threshold, ds.y[i], row.idx, row.val));
     }
     out
+}
+
+/// Sketch every row of a shard file through the chunked reader — at no
+/// point is the full CSR resident; peak row residency is the reader's
+/// chunk size. This is how the partition engine sees the data during
+/// ingestion ([`crate::data::shard::ingest`]): the converter spills the
+/// parsed rows to one binary shard, then streams this function over it.
+/// Bit-identical to [`row_sketches`] on the materialized dataset because
+/// both route every row through [`sketch_row`] in the same order.
+pub fn row_sketches_streamed(
+    reader: &mut crate::data::shard::ShardReader,
+    plan: &SketchPlan,
+    threshold: f64,
+) -> crate::error::Result<Vec<RowSketch>> {
+    let mut out = Vec::with_capacity(reader.header().rows as usize);
+    let mut chunk = crate::data::shard::ShardChunk::default();
+    while reader.next_chunk(crate::data::shard::DEFAULT_CHUNK_ROWS, &mut chunk)? > 0 {
+        for r in 0..chunk.rows() {
+            let (idx, val) = chunk.row(r);
+            out.push(sketch_row(plan, threshold, chunk.y[r], idx, val));
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -11,6 +11,9 @@ pub enum Error {
     Manifest(String),
     /// Dataset parsing / generation problems.
     Data(String),
+    /// Malformed input text (LibSVM lines, numeric tokens); the message
+    /// always carries the 1-based line number of the offending input.
+    Parse(String),
     /// Configuration file / CLI problems.
     Config(String),
     /// Coordinator protocol violation (unexpected message, dead worker).
@@ -25,6 +28,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Manifest(m) => write!(f, "manifest: {m}"),
             Error::Data(m) => write!(f, "data: {m}"),
+            Error::Parse(m) => write!(f, "parse: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -65,6 +69,7 @@ mod tests {
     fn display_prefixes_by_layer() {
         assert_eq!(format!("{}", Error::Runtime("x".into())), "runtime: x");
         assert_eq!(format!("{}", Error::Manifest("y".into())), "manifest: y");
+        assert_eq!(format!("{}", Error::Parse("line 3: x".into())), "parse: line 3: x");
         assert_eq!(format!("{}", Error::Protocol("z".into())), "protocol: z");
     }
 

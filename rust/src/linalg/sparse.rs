@@ -201,9 +201,13 @@ impl CsrMatrix {
 
     /// Select a subset of rows into a new matrix (shard extraction).
     pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        // exact-nnz preallocation: shard extraction runs once per worker
+        // per run on the largest buffers the data layer builds, so the
+        // incremental doubling this replaces was pure allocator churn
+        let nnz: usize = rows.iter().map(|&i| self.indptr[i + 1] - self.indptr[i]).sum();
         let mut indptr = Vec::with_capacity(rows.len() + 1);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
         indptr.push(0);
         for &i in rows {
             let r = self.row(i);
@@ -401,6 +405,23 @@ mod tests {
         let s = m.select_rows(&[1]);
         assert_eq!(s.nrows, 1);
         assert_eq!(s.matvec(&[1.0, 1.0, 1.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn select_rows_preallocates_exact_nnz() {
+        // the workspace-style allocation assertion: with exact-nnz
+        // preallocation every buffer's capacity equals its length (a
+        // grow-as-you-go build leaves doubling slack behind)
+        let rows: Vec<Vec<(u32, f64)>> = (0..64)
+            .map(|i| (0..(i % 7)).map(|k| (k as u32 * 3, (i + k) as f64 + 0.5)).collect())
+            .collect();
+        let m = CsrMatrix::from_rows(32, &rows);
+        let picks: Vec<usize> = (0..64).filter(|i| i % 3 == 0).collect();
+        let s = m.select_rows(&picks);
+        assert_eq!(s.values.capacity(), s.values.len(), "values over-allocated");
+        assert_eq!(s.indices.capacity(), s.indices.len(), "indices over-allocated");
+        assert_eq!(s.indptr.capacity(), s.indptr.len(), "indptr over-allocated");
+        assert!(s.nnz() > 0);
     }
 
     #[test]

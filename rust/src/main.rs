@@ -16,6 +16,11 @@
 //!                       (search for a low-γ partition and emit a JSON
 //!                        goodness report under bench_out/)
 //! pscope gen-data       --dataset rcv1_like --out data/rcv1_like.libsvm
+//! pscope ingest         --input data/rcv1_like.libsvm --partition engineered
+//!                       --p 8 --out shards/rcv1_like
+//!                       (stream LibSVM text into a binary shard directory,
+//!                        partitioned + digest-fingerprinted once; train
+//!                        from it with --dataset shards/rcv1_like)
 //! pscope artifacts      (inspect artifacts/manifest.json + PJRT smoke run)
 //! ```
 
@@ -26,7 +31,8 @@ use pscope::cli::{flag, switch, Args, Command, FlagSpec};
 use pscope::config::{Model, PscopeConfig, RegKind, TransportKind, WorkerBackend};
 use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec};
 use pscope::coordinator::{train_with, TrainOutput};
-use pscope::data::{libsvm, load_or_synth, stats, synth, Dataset};
+use pscope::data::source::DataSource;
+use pscope::data::{libsvm, load_or_synth, shard, stats, synth, Dataset};
 use pscope::error::{Error, Result};
 use pscope::loss::{Objective, ProxReg, SmoothLoss};
 use pscope::net::NetModel;
@@ -38,8 +44,12 @@ use pscope::runtime::XlaRuntime;
 /// `train` and `master`, which must agree so the TCP job spec describes
 /// exactly the run the master executes).
 struct Job {
-    name: String,
+    /// Where the data came from (travels verbatim in the TCP job spec).
+    source: DataSource,
     seed: u64,
+    /// Seed the partition was split with (for a shard dir: the manifest's
+    /// ingest-time seed, which may differ from the run seed).
+    part_seed: u64,
     ds: Dataset,
     cfg: PscopeConfig,
     part: Partition,
@@ -54,7 +64,7 @@ struct Job {
 /// Flags shared by `train` and `master`.
 fn train_flags() -> Vec<FlagSpec> {
     vec![
-        flag("dataset", "preset or data/<name>.libsvm", Some("tiny")),
+        flag("dataset", "preset, data/<name>.libsvm, or `pscope ingest` shard dir", Some("tiny")),
         flag("model", "logistic | lasso", Some("logistic")),
         flag(
             "loss",
@@ -84,13 +94,39 @@ fn train_flags() -> Vec<FlagSpec> {
 }
 
 fn build_job(args: &Args) -> Result<Job> {
-    let name = args.get("dataset").unwrap_or("tiny").to_string();
+    let cfg_text = match args.get("config") {
+        Some(path) => Some(std::fs::read_to_string(path)?),
+        None => None,
+    };
+    let dataset_spec = match args.get("dataset") {
+        // an explicit --dataset flag wins over the config file's key
+        Some(s) => s.to_string(),
+        None => {
+            let mut probe = PscopeConfig::default();
+            if let Some(t) = &cfg_text {
+                probe.apply_toml(t)?;
+            }
+            probe.dataset.unwrap_or_else(|| "tiny".into())
+        }
+    };
     let seed: u64 = args.get_parse("seed", 42u64)?;
-    let ds = load_or_synth(&name, seed)?;
+    let source = DataSource::resolve(&dataset_spec, seed);
+    // A shard directory was partitioned at ingest time: the manifest fixes
+    // the dataset, p, partition strategy, and split seed. Load it first so
+    // those facts can veto conflicting flags below.
+    let preloaded = if let DataSource::ShardDir { dir } = &source {
+        Some(shard::load_dir(std::path::Path::new(dir))?)
+    } else {
+        None
+    };
+    let name = match &preloaded {
+        Some((_, _, manifest)) => manifest.dataset.clone(),
+        None => dataset_spec.clone(),
+    };
     let model = Model::parse(args.get("model").unwrap_or("logistic"))?;
     let mut cfg = PscopeConfig::for_dataset(&name, model);
-    if let Some(path) = args.get("config") {
-        cfg.apply_toml(&std::fs::read_to_string(path)?)?;
+    if let Some(t) = &cfg_text {
+        cfg.apply_toml(t)?;
     }
     cfg.p = args.get_parse("p", cfg.p)?;
     cfg.outer_iters = args.get_parse("epochs", cfg.outer_iters)?;
@@ -110,18 +146,54 @@ fn build_job(args: &Args) -> Result<Job> {
     // e.g. reg = "l1" with a nonzero lam1)
     let loss = cfg.objective_loss();
     let prox = cfg.prox_reg()?;
-    let partition_name = args
-        .get("partition")
-        .unwrap_or(cfg.partition.as_str())
-        .to_string();
-    let partitioner = Partitioner::parse(&partition_name)?;
-    println!("dataset {name}: n={} d={} nnz={}", ds.n(), ds.d(), ds.nnz());
-    println!("objective: loss {} + reg {}", loss.name(), prox.name());
-    let part = partitioner.split(&ds, cfg.p, seed);
-    // the digest a TCP worker must reproduce (its log prints the same line)
+    let (ds, part, partition_name, part_seed) = match preloaded {
+        Some((ds, part, manifest)) => {
+            // `Args` holds only explicitly-passed flags, so `get` here
+            // distinguishes "user asked for p=4" from the help-text default
+            if args.get("p").is_some() && cfg.p != manifest.p as usize {
+                return Err(Error::Config(format!(
+                    "--p {} conflicts with shard dir {dataset_spec} (ingested with p = {}); \
+                     re-run `pscope ingest` to re-shard",
+                    cfg.p, manifest.p
+                )));
+            }
+            if let Some(pn) = args.get("partition") {
+                if pn != manifest.partition {
+                    return Err(Error::Config(format!(
+                        "--partition {pn} conflicts with shard dir {dataset_spec} \
+                         (ingested with {}); re-run `pscope ingest` to re-shard",
+                        manifest.partition
+                    )));
+                }
+            }
+            cfg.p = manifest.p as usize;
+            println!(
+                "dataset {name} (shard dir {dataset_spec}): n={} d={} nnz={}",
+                ds.n(),
+                ds.d(),
+                ds.nnz()
+            );
+            println!("objective: loss {} + reg {}", loss.name(), prox.name());
+            let partition_name = manifest.partition.clone();
+            (ds, part, partition_name, manifest.part_seed)
+        }
+        None => {
+            let ds = source.load()?;
+            let partition_name = args
+                .get("partition")
+                .unwrap_or(cfg.partition.as_str())
+                .to_string();
+            let partitioner = Partitioner::parse(&partition_name)?;
+            println!("dataset {name}: n={} d={} nnz={}", ds.n(), ds.d(), ds.nnz());
+            println!("objective: loss {} + reg {}", loss.name(), prox.name());
+            let part = partitioner.split(&ds, cfg.p, seed);
+            (ds, part, partition_name, seed)
+        }
+    };
+    // the fingerprint a TCP worker must reproduce (its log prints the same)
     println!(
         "partition {partition_name}: p={} fingerprint {:#018x}",
-        cfg.p,
+        part.p(),
         part.fingerprint()
     );
     let artifact_dir = if cfg.backend == WorkerBackend::Xla {
@@ -129,7 +201,15 @@ fn build_job(args: &Args) -> Result<Job> {
     } else {
         None
     };
-    Ok(Job { name, seed, ds, cfg, part, partition_name, artifact_dir, loss, prox })
+    Ok(Job { source, seed, part_seed, ds, cfg, part, partition_name, artifact_dir, loss, prox })
+}
+
+/// Print the per-shard digest table a spec carries — the exact values each
+/// TCP worker must reproduce (or match against its shard file's manifest).
+fn print_digest_table(spec: &RunSpec) {
+    for (k, dg) in spec.shard_digests.iter().enumerate() {
+        println!("shard {k}: digest {dg:#018x}");
+    }
 }
 
 /// Reference-optimum computation for `--gap` (off unless requested).
@@ -217,12 +297,12 @@ fn run_train(raw: &[String]) -> Result<()> {
                 &job.ds,
                 &job.part,
                 &job.cfg,
-                &job.name,
-                job.seed,
+                &job.source,
                 &job.partition_name,
-                job.seed,
+                job.part_seed,
                 job.artifact_dir.as_deref(),
             )?;
+            print_digest_table(&spec);
             println!(
                 "self-hosting a loopback TCP cluster: master + {} worker processes",
                 job.part.p()
@@ -259,12 +339,12 @@ fn run_master_cmd(raw: &[String]) -> Result<()> {
         &job.ds,
         &job.part,
         &job.cfg,
-        &job.name,
-        job.seed,
+        &job.source,
         &job.partition_name,
-        job.seed,
+        job.part_seed,
         job.artifact_dir.as_deref(),
     )?;
+    print_digest_table(&spec);
     // compute the (potentially minutes-long) --gap reference BEFORE
     // binding: once the port is open, workers connect and start their
     // handshake timeout clocks — they must not starve behind FISTA
@@ -536,6 +616,66 @@ fn run_gen_data(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_ingest() -> Command {
+    Command {
+        name: "ingest",
+        about: "stream a LibSVM file into a binary shard directory \
+                (one shard per worker + digest-fingerprinted manifest)",
+        flags: vec![
+            flag("input", "LibSVM input path", None),
+            flag("out", "output shard directory", None),
+            flag(
+                "partition",
+                "uniform | skew75 | separated | replicated | engineered",
+                Some("uniform"),
+            ),
+            flag("p", "workers", Some("8")),
+            flag("seed", "partition seed", Some("42")),
+            flag("name", "dataset name recorded in the manifest (default: input file stem)", None),
+            flag("d-hint", "lower bound on the feature count (0 = infer from data)", Some("0")),
+        ],
+    }
+}
+
+fn run_ingest(raw: &[String]) -> Result<()> {
+    let args = cmd_ingest().parse(raw)?;
+    let input = args
+        .get("input")
+        .ok_or_else(|| Error::Config("ingest needs --input <file.libsvm>".into()))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| Error::Config("ingest needs --out <shard dir>".into()))?;
+    let partition = args.get("partition").unwrap_or("uniform");
+    let p: usize = args.get_parse("p", 8usize)?;
+    let seed: u64 = args.get_parse("seed", 42u64)?;
+    let d_hint: usize = args.get_parse("d-hint", 0usize)?;
+    let default_name = std::path::Path::new(input)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    let name = args.get("name").unwrap_or(&default_name);
+    let report = shard::ingest(
+        std::path::Path::new(input),
+        std::path::Path::new(out),
+        partition,
+        p,
+        seed,
+        name,
+        d_hint,
+    )?;
+    let m = &report.manifest;
+    println!("ingested {input} -> {out}: n={} d={} nnz={}", m.n, m.d, m.nnz);
+    println!(
+        "partition {partition}: p={} seed={} fingerprint {:#018x}",
+        m.p, m.part_seed, m.part_fingerprint
+    );
+    for (k, s) in m.shards.iter().enumerate() {
+        println!("shard {k}: rows={} nnz={} digest {:#018x}", s.rows, s.nnz, s.digest);
+    }
+    println!("train from it: pscope train --dataset {out}");
+    Ok(())
+}
+
 fn cmd_artifacts() -> Command {
     Command {
         name: "artifacts",
@@ -586,6 +726,7 @@ subcommands:
   partition-eval   measure partition goodness γ(π; ε) of the §7.4 set
   partition        engineer a low-γ partition + JSON goodness report
   gen-data         write a synthetic dataset as LibSVM text
+  ingest           shard a LibSVM file into a binary, digest-checked store
   artifacts        inspect + smoke-run the AOT artifacts
 
 `pscope <subcommand> --help` lists flags.
@@ -606,6 +747,7 @@ fn main() -> ExitCode {
         "partition-eval" => run_partition_eval(rest),
         "partition" => run_partition_study(rest),
         "gen-data" => run_gen_data(rest),
+        "ingest" => run_ingest(rest),
         "artifacts" => run_artifacts(rest),
         "--help" | "-h" | "help" => {
             print!("{TOPLEVEL}");

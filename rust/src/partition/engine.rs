@@ -153,11 +153,29 @@ pub fn engineer_with(
     seed: u64,
     opts: &EngineOpts,
 ) -> (Partition, EngineReport) {
-    assert!(p > 0, "engineer: p must be positive");
-    let n = ds.n();
     let plan = sketch_plan(ds, opts.sketch_top, opts.sketch_tail);
     let sketches = row_sketches(ds, &plan);
-    let (masses, state_buckets) = class_conditional_masses(&sketches, plan.n_buckets);
+    engineer_from_sketches(&sketches, plan.n_buckets, p, seed, opts)
+}
+
+/// The sketch-free back half of [`engineer_with`]: assign + refine from
+/// already-built row sketches. This is the entry point the one-pass shard
+/// converter uses — it streams the sketches from the chunked shard reader
+/// ([`crate::data::stats::row_sketches_streamed`]) instead of
+/// materializing the CSR, and because the in-memory path routes through
+/// this exact function the resulting partition is bit-identical either
+/// way (`n_buckets` must be the [`SketchPlan`](crate::data::stats::SketchPlan)'s
+/// bucket count the sketches were built with).
+pub fn engineer_from_sketches(
+    sketches: &[crate::data::stats::RowSketch],
+    n_buckets: usize,
+    p: usize,
+    seed: u64,
+    opts: &EngineOpts,
+) -> (Partition, EngineReport) {
+    assert!(p > 0, "engineer: p must be positive");
+    let n = sketches.len();
+    let (masses, state_buckets) = class_conditional_masses(sketches, n_buckets);
 
     // -- assign: stratified order, snake-dealt ---------------------------
     let mut order: Vec<usize> = (0..n).collect();

@@ -135,15 +135,32 @@ pub enum Partitioner {
 impl Partitioner {
     /// Build the partition of `ds` over `p` workers.
     pub fn split(self, ds: &Dataset, p: usize, seed: u64) -> Partition {
-        assert!(p > 0);
-        let n = ds.n();
         if self == Partitioner::Engineered {
+            assert!(p > 0);
             return engine::engineer(ds, p, seed);
         }
+        self.split_labels(&ds.y, p, seed)
+    }
+
+    /// Build the partition from the label vector alone — every strategy
+    /// except `Engineered` reads nothing but `y` (and `n = y.len()`), so
+    /// the one-pass shard converter ([`crate::data::shard::ingest`]) can
+    /// split a dataset it never fully materializes. Bit-identical to
+    /// [`Partitioner::split`] on the dataset the labels came from.
+    ///
+    /// Panics on `Engineered` (it needs row sketches; see
+    /// [`engine::engineer_from_sketches`]).
+    pub fn split_labels(self, y: &[f64], p: usize, seed: u64) -> Partition {
+        assert!(p > 0);
+        assert!(
+            self != Partitioner::Engineered,
+            "engineered splits need sketches, not labels (engine::engineer_from_sketches)"
+        );
+        let n = y.len();
         let mut rng = Rng::new(seed ^ 0x5eed_0001);
         let mut assignment = vec![Vec::new(); p];
         match self {
-            Partitioner::Engineered => unreachable!("handled above"),
+            Partitioner::Engineered => unreachable!("rejected above"),
             Partitioner::Uniform => {
                 for i in 0..n {
                     assignment[rng.below(p)].push(i);
@@ -159,7 +176,7 @@ impl Partitioner {
                 let first_half = (p + 1) / 2;
                 let second_half = p - first_half;
                 for i in 0..n {
-                    let positive = ds.y[i] > 0.0;
+                    let positive = y[i] > 0.0;
                     // positives go to the first half with prob `frac`,
                     // negatives with prob `1 - frac`
                     let to_first = if positive { rng.bool(frac) } else { rng.bool(1.0 - frac) };
@@ -367,6 +384,32 @@ mod tests {
         let part = strat.split(&ds, 4, 2);
         assert!(part.is_disjoint_cover(ds.n()));
         assert_eq!(part.tag, "engineered");
+    }
+
+    #[test]
+    fn split_labels_matches_split() {
+        // the streaming converter splits from labels alone; the result
+        // must be the exact partition the in-memory path builds
+        let ds = synth::tiny(8).generate();
+        for strat in Partitioner::all() {
+            let a = strat.split(&ds, 5, 3);
+            let b = strat.split_labels(&ds.y, 5, 3);
+            assert_eq!(a.assignment, b.assignment, "{}", strat.tag());
+        }
+    }
+
+    #[test]
+    fn assignments_are_ascending() {
+        // the shard store writes each shard's rows in original row order;
+        // every strategy must hand out ascending lists for a shard file to
+        // be byte-equal to `ds.select(&assignment[k])`
+        let ds = synth::tiny(9).generate();
+        for strat in Partitioner::all_with_engineered() {
+            let part = strat.split(&ds, 6, 4);
+            for (k, a) in part.assignment.iter().enumerate() {
+                assert!(a.windows(2).all(|w| w[0] < w[1]), "{} shard {k}", strat.tag());
+            }
+        }
     }
 
     #[test]

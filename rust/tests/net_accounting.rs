@@ -11,6 +11,7 @@ use pscope::config::{Model, PscopeConfig};
 use pscope::coordinator::protocol::{vec_bytes, MSG_HEADER_BYTES};
 use pscope::coordinator::remote::{serve_worker, MasterEndpoint, RunSpec};
 use pscope::coordinator::train_with;
+use pscope::data::source::DataSource;
 use pscope::data::synth;
 use pscope::loss::Reg;
 use pscope::net::{frame, NetModel};
@@ -87,8 +88,8 @@ fn tcp_train(
     data_seed: u64,
     part_seed: u64,
 ) -> pscope::coordinator::TrainOutput {
-    let spec =
-        RunSpec::derive(ds, part, cfg, "tiny", data_seed, "uniform", part_seed, None).unwrap();
+    let src = DataSource::Synth { name: "tiny".into(), seed: data_seed };
+    let spec = RunSpec::derive(ds, part, cfg, &src, "uniform", part_seed, None).unwrap();
     let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
     let addr = ep.local_addr().unwrap().to_string();
     let workers: Vec<_> = (0..part.p())
@@ -182,8 +183,8 @@ fn killed_tcp_worker_is_protocol_error_within_timeout_not_hang() {
         ..PscopeConfig::for_dataset("tiny", Model::Logistic)
     };
     let part = Partitioner::Uniform.split(&ds, p, part_seed);
-    let spec =
-        RunSpec::derive(&ds, &part, &cfg, "tiny", data_seed, "uniform", part_seed, None).unwrap();
+    let src = DataSource::Synth { name: "tiny".into(), seed: data_seed };
+    let spec = RunSpec::derive(&ds, &part, &cfg, &src, "uniform", part_seed, None).unwrap();
     let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
     let addr = ep.local_addr().unwrap().to_string();
 

@@ -15,7 +15,7 @@
 //!   materializations — proof the fallback actually took the dense path).
 //!
 //! One TCP-loopback run ships a non-default objective (Huber δ as exact
-//! f64 bits + group regularizer) through RunSpec v3 and must reproduce
+//! f64 bits + group regularizer) through the RunSpec and must reproduce
 //! the in-process trajectory bit for bit — the wire validation of the
 //! composite layer, end to end.
 
@@ -24,6 +24,7 @@ use std::time::Duration;
 use pscope::config::{Model, PscopeConfig, RegKind, WorkerBackend};
 use pscope::coordinator::remote::{serve_worker, MasterEndpoint, RunSpec};
 use pscope::coordinator::train_with;
+use pscope::data::source::DataSource;
 use pscope::data::{synth, Dataset};
 use pscope::loss::{Objective, ProxReg, Reg, SmoothLoss};
 use pscope::net::NetModel;
@@ -180,7 +181,7 @@ fn sparse_backend_fallback_is_bit_identical_to_dense_backend() {
 }
 
 #[test]
-fn runspec_v3_ships_objective_bits_end_to_end_over_tcp() {
+fn runspec_ships_objective_bits_end_to_end_over_tcp() {
     // a non-default composite objective — Huber with an inexact-in-binary
     // delta, group-lasso regularizer, sparse backend falling back to the
     // dense engine — through the real wire: the TCP cluster must
@@ -199,8 +200,8 @@ fn runspec_v3_ships_objective_bits_end_to_end_over_tcp() {
     let part = Partitioner::Uniform.split(&ds, p, part_seed);
     let inproc = train_with(&ds, &part, &cfg, None, NetModel::ten_gbe()).unwrap();
 
-    let spec =
-        RunSpec::derive(&ds, &part, &cfg, "tiny", data_seed, "uniform", part_seed, None).unwrap();
+    let src = DataSource::Synth { name: "tiny".into(), seed: data_seed };
+    let spec = RunSpec::derive(&ds, &part, &cfg, &src, "uniform", part_seed, None).unwrap();
     assert_eq!(spec.loss, SmoothLoss::Huber { delta: 0.3 });
     assert_eq!(spec.reg, ProxReg::GroupLasso { lam: 1e-3, group: 5 });
     let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
@@ -260,7 +261,8 @@ fn mismatched_spec_objective_is_rejected_before_training() {
         ..PscopeConfig::for_dataset("tiny", Model::Logistic)
     };
     let part = Partitioner::Uniform.split(&ds, 1, 1);
-    let mut spec = RunSpec::derive(&ds, &part, &cfg, "tiny", 31, "uniform", 1, None).unwrap();
+    let src = DataSource::Synth { name: "tiny".into(), seed: 31 };
+    let mut spec = RunSpec::derive(&ds, &part, &cfg, &src, "uniform", 1, None).unwrap();
     spec.reg = ProxReg::ElasticNet {
         lam1: f64::from_bits(1e-3f64.to_bits() ^ 1),
         lam2: 1e-3,

@@ -17,6 +17,7 @@
 
 use pscope::config::{Model, PscopeConfig};
 use pscope::coordinator::remote::{build_worker, RunSpec};
+use pscope::data::source::DataSource;
 use pscope::data::synth;
 use pscope::partition::engine::{self, EngineOpts};
 use pscope::partition::goodness::{analyze, GoodnessOpts};
@@ -57,8 +58,8 @@ fn engineered_bit_identical_across_runs_and_through_run_spec() {
     // the remote-worker path: spec → regenerate dataset → replay search →
     // fingerprint-validated shard, equal to the master-side select
     let cfg = PscopeConfig { p: 4, ..PscopeConfig::for_dataset("tiny_skew", Model::Logistic) };
-    let spec =
-        RunSpec::derive(&ds, &a, &cfg, "tiny_skew", SEED, "engineered", SEED, None).unwrap();
+    let src = DataSource::Synth { name: "tiny_skew".into(), seed: SEED };
+    let spec = RunSpec::derive(&ds, &a, &cfg, &src, "engineered", SEED, None).unwrap();
     assert_eq!(spec.part_fingerprint, a.fingerprint());
     for k in 0..4 {
         let wk = build_worker(&spec, k).unwrap();

@@ -1,0 +1,265 @@
+//! Tier-1 guarantees for the out-of-core data layer (`data::shard` +
+//! `data::source`, DESIGN.md §10):
+//!
+//! 1. LibSVM text round-trips **bit-for-bit** through `write` → `read`
+//!    (property-tested: NaN payloads, empty rows, trailing empty columns
+//!    under `d_hint`) — the precondition for `pscope ingest` reproducing
+//!    an in-memory run from a text file;
+//! 2. a full `ingest → load_dir → TCP train` run from a shard directory
+//!    is **bit-identical** to the in-memory InProc run on the same text:
+//!    final iterate, per-epoch objectives, meter totals, epochs,
+//!    materializations;
+//! 3. each worker materializes *only its own shard*, proven by the
+//!    chunked reader's row accounting — never the full dataset;
+//! 4. corrupt shard files (truncation, a single flipped payload byte)
+//!    are loud `Error::Protocol` failures at worker build time, before
+//!    any training step consumes a poisoned row.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use pscope::config::{Model, PscopeConfig};
+use pscope::coordinator::remote::{build_worker, serve_worker, MasterEndpoint, RunSpec};
+use pscope::coordinator::train_with;
+use pscope::data::source::DataSource;
+use pscope::data::{libsvm, shard, synth, Dataset};
+use pscope::error::Error;
+use pscope::linalg::CsrMatrix;
+use pscope::loss::Reg;
+use pscope::net::NetModel;
+use pscope::partition::Partitioner;
+use pscope::testkit::prop;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pscope_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_libsvm(ds: &Dataset, path: &std::path::Path) {
+    let f = std::fs::File::create(path).unwrap();
+    libsvm::write(ds, std::io::BufWriter::new(f)).unwrap();
+}
+
+fn assert_datasets_bit_equal(a: &Dataset, b: &Dataset, what: &str) {
+    assert_eq!(a.n(), b.n(), "{what}: n");
+    assert_eq!(a.x.ncols, b.x.ncols, "{what}: d");
+    assert_eq!(a.x.indptr, b.x.indptr, "{what}: indptr");
+    assert_eq!(a.x.indices, b.x.indices, "{what}: indices");
+    for i in 0..a.n() {
+        assert_eq!(a.y[i].to_bits(), b.y[i].to_bits(), "{what}: label {i}");
+    }
+    for (j, (u, v)) in a.x.values.iter().zip(&b.x.values).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}: value {j}");
+    }
+}
+
+// ---- 1. LibSVM text round-trip (property) -------------------------------
+
+#[test]
+fn libsvm_write_read_roundtrips_bit_for_bit() {
+    prop::check("libsvm write→read roundtrips bit-for-bit", 60, |rng, shrink| {
+        let cap = if shrink > 0 { 4 } else { 30 };
+        let n = 1 + rng.below(cap);
+        let d = 1 + rng.below(cap + 10);
+        let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut row: Vec<(u32, f64)> = Vec::new();
+            // ~20% empty rows (a legal LibSVM line: label only)
+            if !rng.bool(0.2) {
+                let nnz = 1 + rng.below(d);
+                let mut cols = rng.sample_distinct(d, nnz);
+                cols.sort_unstable();
+                for j in cols {
+                    // NaN payloads and wide magnitudes must survive the
+                    // text trip (Display is shortest-roundtrip in Rust)
+                    let v = if rng.bool(0.05) {
+                        f64::NAN
+                    } else {
+                        let m = rng.normal() * 10f64.powi(rng.below(9) as i32 - 4);
+                        if m == 0.0 { 1.0 } else { m }
+                    };
+                    row.push((j as u32, v));
+                }
+            }
+            rows.push(row);
+            // labels: mostly ±1, sometimes arbitrary reals (regression)
+            y.push(if rng.bool(0.8) {
+                if rng.bool(0.5) { 1.0 } else { -1.0 }
+            } else {
+                rng.normal()
+            });
+        }
+        let ds = Dataset { name: "prop".into(), x: CsrMatrix::from_rows(d, &rows), y };
+        let mut buf = Vec::new();
+        libsvm::write(&ds, &mut buf).unwrap();
+        // d_hint = d: trailing all-zero columns are invisible in the text
+        let back = libsvm::read(std::io::BufReader::new(&buf[..]), "prop", d).unwrap();
+        let ok = back.x.ncols == ds.x.ncols
+            && back.x.indptr == ds.x.indptr
+            && back.x.indices == ds.x.indices
+            && back.y.len() == ds.y.len()
+            && ds.y.iter().zip(&back.y).all(|(a, b)| a.to_bits() == b.to_bits())
+            && ds.x.values.iter().zip(&back.x.values).all(|(a, b)| a.to_bits() == b.to_bits());
+        prop::that(ok, format!("n={n} d={d} nnz={}", ds.nnz()))
+    });
+}
+
+// ---- 2 + 3. shard-dir run pinned bit-identical; per-shard residency -----
+
+#[test]
+fn sharddir_tcp_run_is_bit_identical_to_in_memory_inproc_run() {
+    let dir = tmpdir("pin");
+    let input = dir.join("tiny_skew.libsvm");
+    write_libsvm(&synth::tiny_skew(33).generate(), &input);
+
+    let (p, part_seed, epochs) = (3usize, 9u64, 4usize);
+    let shards = dir.join("shards");
+    let report =
+        shard::ingest(&input, &shards, "skew75", p, part_seed, "tiny_skew", 0).unwrap();
+    let manifest = report.manifest;
+
+    // in-memory reference: parse the same text, split the same way
+    let ds_mem = libsvm::read_file(&input, 0).unwrap();
+    assert_eq!(manifest.n as usize, ds_mem.n());
+    let part_mem = Partitioner::LabelSkew75.split(&ds_mem, p, part_seed);
+    let cfg = PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny_skew", Model::Logistic)
+    };
+    let inproc = train_with(&ds_mem, &part_mem, &cfg, None, NetModel::ten_gbe()).unwrap();
+
+    // master side of a shard-dir run: dataset + partition reconstructed
+    // from the binary store, in original row order
+    let (ds_sh, part_sh, manifest2) = shard::load_dir(&shards).unwrap();
+    assert_eq!(manifest2.part_fingerprint, manifest.part_fingerprint);
+    assert_eq!(
+        part_sh.assignment, part_mem.assignment,
+        "ingest-time split differs from the in-memory split"
+    );
+    assert_datasets_bit_equal(&ds_sh, &ds_mem, "load_dir vs libsvm::read_file");
+
+    // the spec's digest table must equal the shard files' digests: what
+    // the master derives from memory is what the files carry
+    let src = DataSource::ShardDir { dir: shards.to_string_lossy().into_owned() };
+    let spec = RunSpec::derive(
+        &ds_sh,
+        &part_sh,
+        &cfg,
+        &src,
+        &manifest.partition,
+        manifest.part_seed,
+        None,
+    )
+    .unwrap();
+    let file_digests: Vec<u64> = manifest.shards.iter().map(|s| s.digest).collect();
+    assert_eq!(spec.shard_digests, file_digests, "derive vs ingest digest table");
+
+    // every worker materializes its own shard only — row accounting from
+    // the chunked reader, summing back to n across the cluster
+    let mut rows_total = 0usize;
+    for k in 0..p {
+        let (_, _, stats) = shard::load_worker_shard(&shards, k, &manifest).unwrap();
+        assert_eq!(stats.rows_read as u64, manifest.shards[k].rows, "worker {k} rows");
+        assert!(
+            (stats.rows_read as u64) < manifest.n,
+            "worker {k} materialized the full dataset ({} rows)",
+            stats.rows_read
+        );
+        assert!(stats.peak_chunk_rows <= shard::DEFAULT_CHUNK_ROWS);
+        rows_total += stats.rows_read;
+    }
+    assert_eq!(rows_total as u64, manifest.n, "shards must cover the dataset");
+
+    // the real thing: a loopback TCP cluster trained from the shard dir
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..p)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || serve_worker(&addr, Duration::from_secs(30)))
+        })
+        .collect();
+    let tcp = ep
+        .train(&ds_sh, &part_sh, &cfg, NetModel::ten_gbe(), &spec, Duration::from_secs(30))
+        .unwrap();
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(inproc.w.len(), tcp.w.len());
+    for j in 0..inproc.w.len() {
+        assert_eq!(
+            inproc.w[j].to_bits(),
+            tcp.w[j].to_bits(),
+            "coord {j}: inproc {} vs shard-dir tcp {}",
+            inproc.w[j],
+            tcp.w[j]
+        );
+    }
+    assert_eq!(inproc.epochs_run, tcp.epochs_run);
+    assert_eq!(inproc.materializations, tcp.materializations);
+    assert_eq!(inproc.comm, tcp.comm, "byte-meter totals differ");
+    assert_eq!(inproc.trace.points.len(), tcp.trace.points.len());
+    for (a, b) in inproc.trace.points.iter().zip(&tcp.trace.points) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "epoch {}", a.epoch);
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- 4. corruption fails loudly before training -------------------------
+
+#[test]
+fn corrupt_shards_are_protocol_errors_before_training() {
+    let dir = tmpdir("corrupt");
+    let input = dir.join("tiny.libsvm");
+    write_libsvm(&synth::tiny(15).generate(), &input);
+    let shards = dir.join("shards");
+    shard::ingest(&input, &shards, "uniform", 2, 3, "tiny", 0).unwrap();
+
+    let (ds, part, manifest) = shard::load_dir(&shards).unwrap();
+    let cfg = PscopeConfig { p: 2, ..PscopeConfig::for_dataset("tiny", Model::Logistic) };
+    let src = DataSource::ShardDir { dir: shards.to_string_lossy().into_owned() };
+    let spec = RunSpec::derive(
+        &ds,
+        &part,
+        &cfg,
+        &src,
+        &manifest.partition,
+        manifest.part_seed,
+        None,
+    )
+    .unwrap();
+
+    let path = shard::shard_path(&shards, 1);
+    let pristine = std::fs::read(&path).unwrap();
+
+    // pristine bytes build fine — the baseline for the corruptions below
+    build_worker(&spec, 1).unwrap();
+
+    // truncation: the tail of the payload vanishes
+    std::fs::write(&path, &pristine[..pristine.len() - 7]).unwrap();
+    let err = build_worker(&spec, 1).unwrap_err();
+    assert!(matches!(err, Error::Protocol(_)), "truncation surfaced as {err:?}");
+
+    // a single flipped payload byte: caught by the FNV digest
+    let mut flipped = pristine.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x04;
+    std::fs::write(&path, &flipped).unwrap();
+    let err = build_worker(&spec, 1).unwrap_err();
+    assert!(matches!(err, Error::Protocol(_)), "bit flip surfaced as {err:?}");
+    assert!(format!("{err}").contains("digest"), "bit flip error names the digest: {err}");
+
+    // restore → loads cleanly again (the checks are about bytes, not state)
+    std::fs::write(&path, &pristine).unwrap();
+    build_worker(&spec, 1).unwrap();
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
