@@ -163,6 +163,40 @@ impl TransportKind {
     }
 }
 
+/// Failure-handling mode of the coordinator (see `DESIGN.md` §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RunMode {
+    /// Fail fast (default): any worker loss aborts the run with
+    /// `Error::Protocol`. All bit-parity guarantees live here.
+    #[default]
+    Strict,
+    /// Elastic: heartbeats, checkpoints, and γ-aware degraded epochs over
+    /// the surviving shards (TCP transport only — in-process workers are
+    /// threads and cannot be lost independently of the master).
+    Elastic,
+}
+
+impl RunMode {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<RunMode> {
+        match s {
+            "strict" | "fail-fast" => Ok(RunMode::Strict),
+            "elastic" => Ok(RunMode::Elastic),
+            _ => Err(Error::Config(format!(
+                "unknown mode {s:?} (expected \"strict\" or \"elastic\")"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RunMode::Strict => "strict",
+            RunMode::Elastic => "elastic",
+        }
+    }
+}
+
 /// Full pSCOPE run configuration (Algorithm 1 parameters + engineering).
 #[derive(Clone, Debug)]
 pub struct PscopeConfig {
@@ -218,6 +252,24 @@ pub struct PscopeConfig {
     /// `None` leaves the choice to the CLI (`--dataset` wins over the
     /// config key when both are given).
     pub dataset: Option<String>,
+    /// Failure-handling mode: `Strict` fail-fast (default, all parity
+    /// guarantees) or `Elastic` (heartbeats + checkpoints + degraded
+    /// epochs; requires the TCP transport).
+    pub mode: RunMode,
+    /// Elastic heartbeat interval in milliseconds (shipped to workers in
+    /// the job spec; ignored in strict mode).
+    pub heartbeat_ms: u64,
+    /// Elastic: a silent worker is marked SUSPECT after this many ms.
+    pub suspect_after_ms: u64,
+    /// Elastic: a silent (or non-delivering) worker is marked OFFLINE and
+    /// dropped from the fold after this many ms.
+    pub offline_after_ms: u64,
+    /// Elastic: write an iterate checkpoint every this many epochs
+    /// (0 disables; ignored without `checkpoint_dir`).
+    pub checkpoint_every: usize,
+    /// Elastic: directory for iterate checkpoints (`ckpt_NNNNNN.pscope`);
+    /// `None` disables checkpointing.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl Default for PscopeConfig {
@@ -241,6 +293,12 @@ impl Default for PscopeConfig {
             partition: "uniform".into(),
             transport: TransportKind::InProc,
             dataset: None,
+            mode: RunMode::Strict,
+            heartbeat_ms: 250,
+            suspect_after_ms: 1000,
+            offline_after_ms: 10_000,
+            checkpoint_every: 1,
+            checkpoint_dir: None,
         }
     }
 }
@@ -350,6 +408,12 @@ impl PscopeConfig {
                 }
                 "transport" => self.transport = TransportKind::parse(v.as_str_or()?)?,
                 "dataset" => self.dataset = Some(v.as_str_or()?.to_string()),
+                "mode" => self.mode = RunMode::parse(v.as_str_or()?)?,
+                "heartbeat_ms" => self.heartbeat_ms = v.as_usize_or()? as u64,
+                "suspect_after_ms" => self.suspect_after_ms = v.as_usize_or()? as u64,
+                "offline_after_ms" => self.offline_after_ms = v.as_usize_or()? as u64,
+                "checkpoint_every" => self.checkpoint_every = v.as_usize_or()?,
+                "checkpoint_dir" => self.checkpoint_dir = Some(v.as_str_or()?.to_string()),
                 other => {
                     return Err(Error::Config(format!("unknown config key {other:?}")));
                 }
@@ -481,6 +545,35 @@ mod tests {
         c.apply_toml("dataset = \"shards/rcv1_like\"\n").unwrap();
         assert_eq!(c.dataset.as_deref(), Some("shards/rcv1_like"));
         assert!(c.apply_toml("dataset = 7\n").is_err(), "non-string dataset accepted");
+    }
+
+    #[test]
+    fn mode_and_elastic_keys_parse() {
+        assert_eq!(RunMode::parse("strict").unwrap(), RunMode::Strict);
+        assert_eq!(RunMode::parse("fail-fast").unwrap(), RunMode::Strict);
+        assert_eq!(RunMode::parse("elastic").unwrap(), RunMode::Elastic);
+        let err = RunMode::parse("yolo").unwrap_err();
+        assert!(format!("{err}").contains("unknown mode"), "{err}");
+        for mode in [RunMode::Strict, RunMode::Elastic] {
+            assert_eq!(RunMode::parse(mode.name()).unwrap(), mode);
+        }
+        let mut c = PscopeConfig::default();
+        assert_eq!(c.mode, RunMode::Strict);
+        assert_eq!(c.heartbeat_ms, 250);
+        assert_eq!(c.checkpoint_every, 1);
+        assert_eq!(c.checkpoint_dir, None);
+        c.apply_toml(
+            "mode = \"elastic\"\nheartbeat_ms = 100\nsuspect_after_ms = 400\n\
+             offline_after_ms = 2000\ncheckpoint_every = 3\ncheckpoint_dir = \"ckpts\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.mode, RunMode::Elastic);
+        assert_eq!(c.heartbeat_ms, 100);
+        assert_eq!(c.suspect_after_ms, 400);
+        assert_eq!(c.offline_after_ms, 2000);
+        assert_eq!(c.checkpoint_every, 3);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("ckpts"));
+        assert!(c.apply_toml("mode = \"hopeful\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Binary, versioned iterate checkpoints for elastic-mode runs.
+//!
+//! Same storage discipline as the shard store (`data::shard`): a magic
+//! tag, a fixed-size versioned header, a little-endian payload of exact
+//! f64 bit patterns, and an FNV-1a/SplitMix64 digest over the payload so
+//! truncation or bit-rot is a loud [`Error::Protocol`] instead of a
+//! silently wrong trajectory.
+//!
+//! ## File layout (`ckpt_<epoch>.pscope`)
+//!
+//! | bytes | field |
+//! |-------|-------|
+//! | 0..8  | magic `PSCOPECK` |
+//! | 8..16 | format version (u64 LE, currently 1) |
+//! | 16..24 | epoch the iterate was written after (u64 LE) |
+//! | 24..32 | `d` — payload length in f64 words (u64 LE) |
+//! | 32..40 | `p` — worker count of the writing run (u64 LE) |
+//! | 40..48 | run seed (u64 LE) |
+//! | 48..56 | partition fingerprint (u64 LE) |
+//! | 56..64 | payload digest: FNV-1a over payload bytes, SplitMix64-final |
+//! | 64..   | payload: `d` f64 bit patterns (u64 LE each) |
+//!
+//! The header pins *which run* the iterate belongs to: a resume validates
+//! `d`, `p`, seed, and partition fingerprint against the live job before
+//! accepting the payload, so a checkpoint from a different dataset,
+//! worker count, or partition cannot be folded in by accident. Writes go
+//! to a `.tmp` sibling and are renamed into place, so a crash mid-write
+//! never leaves a plausible-looking partial file under the final name.
+//!
+//! Changing this layout requires a format-version bump here (reader and
+//! writer) — the file never crosses the wire, so `remote::SPEC_VERSION`
+//! is not involved.
+
+use std::fs::{self, File};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::data::shard::Fnv64;
+use crate::error::{Error, Result};
+
+/// Magic tag opening every checkpoint file.
+pub const CKPT_MAGIC: &[u8; 8] = b"PSCOPECK";
+/// Checkpoint format version (header field 1).
+pub const CKPT_VERSION: u64 = 1;
+/// Fixed header size in bytes; the payload starts here.
+pub const CKPT_HEADER_BYTES: usize = 64;
+
+/// One master iterate, pinned to the run that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Outer epoch the iterate was written *after*: a resume continues
+    /// at epoch `epoch`, so `epoch == outer_iters` means the run ended.
+    pub epoch: usize,
+    /// Worker count of the writing run.
+    pub p: usize,
+    /// Seed of the writing run.
+    pub seed: u64,
+    /// `Partition::fingerprint()` of the writing run's partition.
+    pub part_fingerprint: u64,
+    /// The iterate itself, exact bits.
+    pub w: Vec<f64>,
+}
+
+/// File name for the checkpoint written after `epoch`.
+pub fn checkpoint_path(dir: &Path, epoch: usize) -> PathBuf {
+    dir.join(format!("ckpt_{epoch:06}.pscope"))
+}
+
+/// Highest-epoch checkpoint file under `dir`, if any. Non-checkpoint
+/// files are ignored; a missing directory is `Ok(None)`.
+pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in entries {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        let epoch = match name
+            .strip_prefix("ckpt_")
+            .and_then(|s| s.strip_suffix(".pscope"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            Some(e) => e,
+            None => continue,
+        };
+        if best.as_ref().is_none_or(|(b, _)| epoch > *b) {
+            best = Some((epoch, path));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+impl Checkpoint {
+    /// Serialize into `dir` (created if missing) as
+    /// `ckpt_<epoch>.pscope`, atomically: the bytes land in a `.tmp`
+    /// sibling, are fsynced, and renamed into place. Returns the final
+    /// path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        fs::create_dir_all(dir)?;
+        let mut payload = Vec::with_capacity(self.w.len() * 8);
+        for &x in &self.w {
+            payload.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        let mut hasher = Fnv64::default();
+        hasher.update(&payload);
+
+        let mut bytes = Vec::with_capacity(CKPT_HEADER_BYTES + payload.len());
+        bytes.extend_from_slice(CKPT_MAGIC);
+        bytes.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(self.epoch as u64).to_le_bytes());
+        bytes.extend_from_slice(&(self.w.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(self.p as u64).to_le_bytes());
+        bytes.extend_from_slice(&self.seed.to_le_bytes());
+        bytes.extend_from_slice(&self.part_fingerprint.to_le_bytes());
+        bytes.extend_from_slice(&hasher.finish().to_le_bytes());
+        bytes.extend_from_slice(&payload);
+
+        let path = checkpoint_path(dir, self.epoch);
+        let tmp = path.with_extension("pscope.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// Read and validate a checkpoint file. Bad magic, unknown version,
+    /// truncation, trailing bytes, and digest mismatches are all loud
+    /// [`Error::Protocol`] failures naming the file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = File::open(path)?;
+        let mut header = [0u8; CKPT_HEADER_BYTES];
+        let mut got = 0usize;
+        while got < CKPT_HEADER_BYTES {
+            match f.read(&mut header[got..])? {
+                0 => {
+                    return Err(Error::Protocol(format!(
+                        "truncated checkpoint header in {}: {got} of {CKPT_HEADER_BYTES} bytes",
+                        path.display()
+                    )));
+                }
+                n => got += n,
+            }
+        }
+        if &header[0..8] != CKPT_MAGIC {
+            return Err(Error::Protocol(format!(
+                "{} is not a checkpoint file (bad magic)",
+                path.display()
+            )));
+        }
+        let u64_at = |off: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&header[off..off + 8]);
+            u64::from_le_bytes(b)
+        };
+        let version = u64_at(8);
+        if version != CKPT_VERSION {
+            return Err(Error::Protocol(format!(
+                "unsupported checkpoint version {version} in {} (expected {CKPT_VERSION})",
+                path.display()
+            )));
+        }
+        let epoch = u64_at(16) as usize;
+        let d = u64_at(24) as usize;
+        let p = u64_at(32) as usize;
+        let seed = u64_at(40);
+        let part_fingerprint = u64_at(48);
+        let want_digest = u64_at(56);
+
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        if payload.len() < d * 8 {
+            return Err(Error::Protocol(format!(
+                "truncated checkpoint payload in {}: {} of {} bytes",
+                path.display(),
+                payload.len(),
+                d * 8
+            )));
+        }
+        if payload.len() > d * 8 {
+            return Err(Error::Protocol(format!(
+                "checkpoint {} has {} trailing bytes after the payload",
+                path.display(),
+                payload.len() - d * 8
+            )));
+        }
+        let mut hasher = Fnv64::default();
+        hasher.update(&payload);
+        let got_digest = hasher.finish();
+        if got_digest != want_digest {
+            return Err(Error::Protocol(format!(
+                "checkpoint payload digest {got_digest:#018x} != header digest \
+                 {want_digest:#018x} in {} (corrupt file)",
+                path.display()
+            )));
+        }
+        let mut w = Vec::with_capacity(d);
+        for i in 0..d {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&payload[i * 8..i * 8 + 8]);
+            w.push(f64::from_bits(u64::from_le_bytes(b)));
+        }
+        Ok(Checkpoint { epoch, p, seed, part_fingerprint, w })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pscope_ck_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fixture() -> Checkpoint {
+        Checkpoint {
+            epoch: 12,
+            p: 4,
+            seed: 42,
+            part_fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            // exact-bit hostile payload: signed zero, subnormal, inf, NaN
+            w: vec![0.0, -0.0, f64::MIN_POSITIVE / 8.0, f64::INFINITY, f64::NAN, -1.25e300],
+        }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let dir = tmpdir("roundtrip");
+        let ck = fixture();
+        let path = ck.save(&dir).unwrap();
+        assert_eq!(path, checkpoint_path(&dir, 12));
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.epoch, ck.epoch);
+        assert_eq!(back.p, ck.p);
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.part_fingerprint, ck.part_fingerprint);
+        assert_eq!(bits(&back.w), bits(&ck.w));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_picks_highest_epoch() {
+        let dir = tmpdir("latest");
+        assert!(latest(&dir.join("missing")).unwrap().is_none());
+        assert!(latest(&dir).unwrap().is_none());
+        for epoch in [3, 11, 7] {
+            Checkpoint { epoch, ..fixture() }.save(&dir).unwrap();
+        }
+        fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        assert_eq!(latest(&dir).unwrap(), Some(checkpoint_path(&dir, 11)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_loud() {
+        let dir = tmpdir("corrupt");
+        let path = fixture().save(&dir).unwrap();
+        let good = fs::read(&path).unwrap();
+
+        // header truncation
+        fs::write(&path, &good[..CKPT_HEADER_BYTES / 2]).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(e.contains("truncated checkpoint header"), "got: {e}");
+
+        // payload truncation
+        fs::write(&path, &good[..good.len() - 3]).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(e.contains("truncated checkpoint payload"), "got: {e}");
+
+        // trailing garbage
+        let mut long = good.clone();
+        long.push(0x55);
+        fs::write(&path, &long).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(e.contains("trailing bytes"), "got: {e}");
+
+        // single flipped payload byte: digest mismatch naming both digests
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        fs::write(&path, &flipped).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(e.contains("digest") && e.contains("0x"), "got: {e}");
+
+        // bad magic
+        let mut magic = good.clone();
+        magic[0] ^= 0xFF;
+        fs::write(&path, &magic).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "got: {e}");
+
+        // future version
+        let mut ver = good;
+        ver[8] = 99;
+        // version change invalidates nothing else; digest is payload-only
+        fs::write(&path, &ver).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(e.contains("unsupported checkpoint version 99"), "got: {e}");
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,546 @@
+//! Elastic-mode master: worker liveness state machine, degraded epochs,
+//! and γ-aware damage reporting.
+//!
+//! The paper's thesis is that the partition goodness γ(π; ε) governs the
+//! convergence rate — so losing a worker is not just a liveness event, it
+//! is a *quantifiable change to the partition*. When a worker goes
+//! OFFLINE, this loop rebuilds the surviving sub-partition, rescores it
+//! with the same Lemma-5 proxy the partition engine optimizes
+//! ([`ProxySketch`]), and prints the new γ̂ next to the original: every
+//! degradation event says exactly how much convergence-rate headroom the
+//! cluster lost.
+//!
+//! ## State machine (per worker)
+//!
+//! ```text
+//!            frame or beacon            silent > suspect_after
+//!          ┌───────────────────┐      ┌──────────────────────┐
+//!          ▼                   │      │                      ▼
+//!       ONLINE ────────────────┴──────┘                   SUSPECT
+//!          │                                                 │
+//!          │  WorkerDown / connection lost / send failed /   │
+//!          │  no delivery within offline_after               │
+//!          └──────────────────────┬──────────────────────────┘
+//!                                 ▼
+//!                             OFFLINE  (terminal for the run)
+//! ```
+//!
+//! OFFLINE is terminal *within a run*: the shard's rows are simply absent
+//! from every later fold (the degraded partition). Rejoin happens at run
+//! granularity — a replacement worker process regenerates its shard
+//! deterministically from the `(dataset, p, seed)` triple in the job spec
+//! and the master resumes from the latest [`Checkpoint`]. The rejoin
+//! contract is *restart ≡ restart*: every fresh worker rebuilds its shard
+//! and RNG from the job spec alone, so any two clusters resumed from the
+//! same checkpoint produce bit-identical trajectories (pinned in
+//! `tests/elastic_cluster.rs`). A resumed run is **not** bit-identical to
+//! the never-interrupted run — worker RNG streams restart at their
+//! process-start position — which is why the contract is defined against
+//! the checkpoint, not the original trajectory.
+//!
+//! Strict mode ([`crate::coordinator::run_master`]) is untouched by all
+//! of this: no heartbeats are sent, the first loss aborts, and the
+//! bit-parity tests pin that behavior.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::config::PscopeConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::protocol::{self, ToMaster};
+use crate::coordinator::{check_worker_in_range, duplicate_sender, MasterRun};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::{scale, zero};
+use crate::loss::Objective;
+use crate::metrics::{Timer, Trace, TracePoint};
+use crate::net::transport::MasterTransport;
+use crate::net::NetModel;
+use crate::partition::engine::{EngineOpts, ProxySketch};
+use crate::partition::Partition;
+
+/// Poll interval of the elastic reduce loops: the cadence at which the
+/// liveness clock runs between frames.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Per-worker liveness state (see the module-level diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Delivering frames or beacons on time.
+    Online,
+    /// Silent past `suspect_after` — still folded if it delivers, and
+    /// restored to ONLINE by its next frame or beacon.
+    Suspect,
+    /// Lost for the rest of the run: its shard leaves the fold.
+    Offline,
+}
+
+/// Elastic-mode policy knobs, resolved from [`PscopeConfig`].
+#[derive(Clone, Debug)]
+pub struct ElasticOpts {
+    /// Silence threshold for the SUSPECT transition.
+    pub suspect_after: Duration,
+    /// Per-epoch delivery deadline: a worker that has not delivered its
+    /// frame this long after the round started (and is not merely slow
+    /// to beacon) is declared OFFLINE. Must exceed the slowest expected
+    /// epoch, heartbeat stalls included.
+    pub offline_after: Duration,
+    /// Checkpoint cadence in epochs (0 disables writes).
+    pub checkpoint_every: usize,
+    /// Checkpoint directory; `None` disables writes.
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl ElasticOpts {
+    /// Resolve the knobs from a config.
+    pub fn from_config(cfg: &PscopeConfig) -> ElasticOpts {
+        ElasticOpts {
+            suspect_after: Duration::from_millis(cfg.suspect_after_ms.max(1)),
+            offline_after: Duration::from_millis(cfg.offline_after_ms.max(1)),
+            checkpoint_every: cfg.checkpoint_every,
+            checkpoint_dir: cfg.checkpoint_dir.clone().map(PathBuf::from),
+        }
+    }
+}
+
+/// One degradation event: a worker went OFFLINE and the fold shrank.
+#[derive(Clone, Debug)]
+pub struct DegradeEvent {
+    /// Which worker was lost.
+    pub worker: usize,
+    /// Outer epoch during which it was lost.
+    pub epoch: usize,
+    /// Human-readable cause (death sentinel, send failure, deadline).
+    pub reason: String,
+    /// Workers still in the fold after this event.
+    pub survivors: usize,
+    /// Lemma-5 γ proxy of the original p-way partition.
+    pub gamma_original: f64,
+    /// Lemma-5 γ proxy of the surviving sub-partition.
+    pub gamma_surviving: f64,
+}
+
+/// A [`MasterRun`] plus the degradation log.
+#[derive(Debug)]
+pub struct ElasticRun {
+    /// The usual master-run outcome.
+    pub run: MasterRun,
+    /// Every OFFLINE transition, in order.
+    pub degraded: Vec<DegradeEvent>,
+}
+
+/// Liveness bookkeeping for one elastic run.
+struct Cluster<'a> {
+    state: Vec<WorkerState>,
+    last_seen: Vec<Instant>,
+    degraded: Vec<DegradeEvent>,
+    part: &'a Partition,
+    sketch: ProxySketch,
+    gamma_original: f64,
+    peers: Vec<Option<SocketAddr>>,
+}
+
+impl Cluster<'_> {
+    fn n_alive(&self) -> usize {
+        self.state.iter().filter(|s| **s != WorkerState::Offline).count()
+    }
+
+    fn is_alive(&self, k: usize) -> bool {
+        self.state[k] != WorkerState::Offline
+    }
+
+    /// Record evidence of life: refresh the clock, clear SUSPECT.
+    fn saw(&mut self, k: usize, epoch: usize) {
+        self.last_seen[k] = Instant::now();
+        if self.state[k] == WorkerState::Suspect {
+            self.state[k] = WorkerState::Online;
+            println!("elastic: worker {k} ONLINE again at epoch {epoch}");
+        }
+    }
+
+    /// Terminal transition: drop worker `k` from the fold, rescore the
+    /// surviving sub-partition with the Lemma-5 proxy, and report the
+    /// convergence-rate damage.
+    fn offline(&mut self, k: usize, epoch: usize, reason: &str) {
+        if self.state[k] == WorkerState::Offline {
+            return;
+        }
+        self.state[k] = WorkerState::Offline;
+        let survivors: Vec<usize> =
+            (0..self.state.len()).filter(|&i| self.is_alive(i)).collect();
+        let sub = Partition {
+            assignment: survivors.iter().map(|&i| self.part.assignment[i].clone()).collect(),
+            tag: format!("{}-survivors", self.part.tag),
+        };
+        let gamma_surviving =
+            if sub.p() == 0 { f64::INFINITY } else { self.sketch.gamma(&sub) };
+        let at = self.peers[k].map(|a| format!(" at {a}")).unwrap_or_default();
+        println!(
+            "elastic: worker {k}{at} OFFLINE at epoch {epoch} ({reason}); {}/{} shards survive",
+            survivors.len(),
+            self.state.len()
+        );
+        let penalty = (gamma_surviving - self.gamma_original) / self.gamma_original * 100.0;
+        println!(
+            "elastic: surviving-partition gamma proxy {gamma_surviving:.4e} vs original \
+             {:.4e} ({penalty:+.1}% convergence-rate penalty, Lemma 5)",
+            self.gamma_original
+        );
+        self.degraded.push(DegradeEvent {
+            worker: k,
+            epoch,
+            reason: reason.to_string(),
+            survivors: survivors.len(),
+            gamma_original: self.gamma_original,
+            gamma_surviving,
+        });
+    }
+
+    /// Liveness clock, run on every poll timeout: SUSPECT the silent,
+    /// OFFLINE anyone past the per-epoch delivery deadline.
+    fn tick(
+        &mut self,
+        epoch: usize,
+        round_start: Instant,
+        opts: &ElasticOpts,
+        delivered: &dyn Fn(usize) -> bool,
+    ) {
+        let now = Instant::now();
+        for k in 0..self.state.len() {
+            if !self.is_alive(k) || delivered(k) {
+                continue;
+            }
+            let silent = now.duration_since(self.last_seen[k]);
+            if silent >= opts.offline_after {
+                self.offline(
+                    k,
+                    epoch,
+                    &format!("no frame or beacon for {:.1}s", silent.as_secs_f64()),
+                );
+            } else if now.duration_since(round_start) >= opts.offline_after {
+                // beaconing but never delivering (e.g. wedged compute):
+                // the epoch cannot wait forever on a live-but-stuck peer
+                self.offline(k, epoch, "no delivery within the epoch deadline");
+            } else if self.state[k] == WorkerState::Online && silent >= opts.suspect_after {
+                self.state[k] = WorkerState::Suspect;
+                println!(
+                    "elastic: worker {k} SUSPECT at epoch {epoch} (silent for {:.1}s)",
+                    silent.as_secs_f64()
+                );
+            }
+        }
+    }
+}
+
+/// The elastic master loop: same reduce algebra as
+/// [`crate::coordinator::run_master`] (per-worker buffering, ascending
+/// fold order), but resilient — offline workers leave the fold instead of
+/// aborting the run. With every worker alive the trajectory, trace, and
+/// byte totals are bit-identical to strict mode (heartbeats are
+/// unmetered), which `tests/elastic_cluster.rs` pins.
+///
+/// `resume` continues a previous run from its checkpoint: the iterate is
+/// restored and epochs `ckpt.epoch..outer_iters` run. The checkpoint must
+/// match the live run's `d`, `p`, seed, and partition fingerprint.
+#[allow(clippy::too_many_arguments)]
+pub fn run_master_elastic<T: MasterTransport>(
+    transport: &mut T,
+    obj: &Objective<'_>,
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    opts: &ElasticOpts,
+    net: NetModel,
+    resume: Option<&Checkpoint>,
+) -> Result<ElasticRun> {
+    let p = transport.p();
+    let d = ds.d();
+    let mut w = vec![0.0; d];
+    let mut start_epoch = 0usize;
+    if let Some(ck) = resume {
+        if ck.w.len() != d {
+            return Err(Error::Config(format!(
+                "checkpoint dimension {} != dataset dimension {d}",
+                ck.w.len()
+            )));
+        }
+        if ck.p != p {
+            return Err(Error::Config(format!(
+                "checkpoint was written by a p={} run, this run has p={p}",
+                ck.p
+            )));
+        }
+        if ck.seed != cfg.seed {
+            return Err(Error::Config(format!(
+                "checkpoint seed {} != run seed {}",
+                ck.seed, cfg.seed
+            )));
+        }
+        if ck.part_fingerprint != part.fingerprint() {
+            return Err(Error::Config(format!(
+                "checkpoint partition fingerprint {:#018x} != live partition {:#018x}",
+                ck.part_fingerprint,
+                part.fingerprint()
+            )));
+        }
+        w.copy_from_slice(&ck.w);
+        start_epoch = ck.epoch;
+        println!("elastic: resuming from checkpoint at epoch {start_epoch}");
+    }
+
+    // γ instrument: sketch the dataset once; original partition scored
+    // now, every surviving sub-partition scored at event time.
+    let sketch = ProxySketch::new(ds, &EngineOpts::for_loss(cfg.objective_loss()));
+    let gamma_original = sketch.gamma(part);
+
+    let mut cl = Cluster {
+        state: vec![WorkerState::Online; p],
+        last_seen: vec![Instant::now(); p],
+        degraded: Vec::new(),
+        part,
+        sketch,
+        gamma_original,
+        peers: (0..p).map(|k| transport.peer_addr(k)).collect(),
+    };
+
+    let mut trace = Trace::new("pscope", &ds.name);
+    let mut materializations = 0u64;
+    let mut epochs_run = start_epoch;
+    trace.push(TracePoint {
+        epoch: start_epoch,
+        wall_s: 0.0,
+        sim_wall_s: 0.0,
+        net_s: 0.0,
+        net_io_s: 0.0,
+        objective: obj.value(&w),
+        comm_bytes: 0,
+        comm_msgs: 0,
+    });
+
+    let mut wall_s = 0.0f64;
+    let mut sim_wall_s = 0.0f64;
+    let mut z = vec![0.0; d];
+    let mut u_mean = vec![0.0; d];
+    for t_epoch in start_epoch..cfg.outer_iters {
+        let timer = Timer::start();
+        if cl.n_alive() == 0 {
+            return Err(Error::Protocol(format!(
+                "elastic: all {p} workers offline before epoch {t_epoch}"
+            )));
+        }
+        for k in 0..p {
+            if !cl.is_alive(k) {
+                continue;
+            }
+            if let Err(e) =
+                transport.send(k, protocol::ToWorker::Broadcast { epoch: t_epoch, w: w.clone() })
+            {
+                cl.offline(k, t_epoch, &format!("broadcast failed: {e}"));
+            }
+        }
+
+        // ---- reduce shard gradients (degradable) ----
+        let mut zsums: Vec<Option<(Vec<f64>, usize)>> = vec![None; p];
+        let round = Instant::now();
+        loop {
+            if (0..p).all(|k| !cl.is_alive(k) || zsums[k].is_some()) {
+                break;
+            }
+            match transport.recv_timeout(POLL)? {
+                None => cl.tick(t_epoch, round, opts, &|k| zsums[k].is_some()),
+                Some(ToMaster::Heartbeat { worker, .. }) => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    if cl.is_alive(worker) {
+                        cl.saw(worker, t_epoch);
+                    }
+                }
+                Some(ToMaster::WorkerDown { worker }) => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    cl.offline(worker, t_epoch, "died (connection lost or panic)");
+                }
+                Some(ToMaster::ShardGrad { worker, epoch, zsum, count }) => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    if !cl.is_alive(worker) {
+                        continue; // stale frame from a worker we gave up on
+                    }
+                    if epoch != t_epoch {
+                        return Err(Error::Protocol(format!(
+                            "elastic: worker {worker} sent ShardGrad({epoch}) during \
+                             epoch {t_epoch}"
+                        )));
+                    }
+                    if zsums[worker].is_some() {
+                        return Err(duplicate_sender(worker, t_epoch));
+                    }
+                    cl.saw(worker, t_epoch);
+                    zsums[worker] = Some((zsum, count));
+                }
+                Some(other) => {
+                    let worker = match &other {
+                        ToMaster::LocalIterate { worker, .. } => *worker,
+                        _ => unreachable!("all other variants matched above"),
+                    };
+                    if !cl.is_alive(worker) {
+                        continue; // stale iterate from a worker we gave up on
+                    }
+                    return Err(Error::Protocol(format!(
+                        "elastic: expected ShardGrad({t_epoch}), got {other:?}"
+                    )));
+                }
+            }
+        }
+        // Fold every delivered gradient, in ascending worker order — a
+        // worker that delivered and then died still contributed real
+        // data, so its frame stays in the fold for this round.
+        zero(&mut z);
+        let mut total_count = 0usize;
+        let mut delivered_grads = 0usize;
+        for slot in zsums.iter().flatten() {
+            crate::linalg::axpy(1.0, &slot.0, &mut z);
+            total_count += slot.1;
+            delivered_grads += 1;
+        }
+        if delivered_grads == 0 {
+            return Err(Error::Protocol(format!(
+                "elastic: epoch {t_epoch} collected no shard gradients \
+                 (all {p} workers lost)"
+            )));
+        }
+        scale(&mut z, 1.0 / total_count as f64);
+        for k in 0..p {
+            if !cl.is_alive(k) || zsums[k].is_none() {
+                continue;
+            }
+            if let Err(e) =
+                transport.send(k, protocol::ToWorker::FullGrad { epoch: t_epoch, z: z.clone() })
+            {
+                cl.offline(k, t_epoch, &format!("full-grad send failed: {e}"));
+            }
+        }
+
+        // ---- collect local iterates (degradable) ----
+        let mut us: Vec<Option<Vec<f64>>> = vec![None; p];
+        let mut max_worker_s = 0.0f64;
+        let round = Instant::now();
+        loop {
+            if (0..p).all(|k| !cl.is_alive(k) || zsums[k].is_none() || us[k].is_some()) {
+                break;
+            }
+            match transport.recv_timeout(POLL)? {
+                None => cl.tick(t_epoch, round, opts, &|k| {
+                    zsums[k].is_none() || us[k].is_some()
+                }),
+                Some(ToMaster::Heartbeat { worker, .. }) => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    if cl.is_alive(worker) {
+                        cl.saw(worker, t_epoch);
+                    }
+                }
+                Some(ToMaster::WorkerDown { worker }) => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    cl.offline(worker, t_epoch, "died (connection lost or panic)");
+                }
+                Some(ToMaster::LocalIterate {
+                    worker,
+                    epoch,
+                    u,
+                    compute_s,
+                    materializations: mat,
+                }) => {
+                    check_worker_in_range(worker, p, t_epoch)?;
+                    if !cl.is_alive(worker) {
+                        continue;
+                    }
+                    if epoch != t_epoch {
+                        return Err(Error::Protocol(format!(
+                            "elastic: worker {worker} sent LocalIterate({epoch}) during \
+                             epoch {t_epoch}"
+                        )));
+                    }
+                    if us[worker].is_some() {
+                        return Err(duplicate_sender(worker, t_epoch));
+                    }
+                    cl.saw(worker, t_epoch);
+                    us[worker] = Some(u);
+                    materializations += mat;
+                    max_worker_s = max_worker_s.max(compute_s);
+                }
+                Some(other) => {
+                    let worker = match &other {
+                        ToMaster::ShardGrad { worker, .. } => *worker,
+                        _ => unreachable!("all other variants matched above"),
+                    };
+                    if !cl.is_alive(worker) {
+                        continue;
+                    }
+                    return Err(Error::Protocol(format!(
+                        "elastic: expected LocalIterate({t_epoch}), got {other:?}"
+                    )));
+                }
+            }
+        }
+        let t_master = Timer::start();
+        zero(&mut u_mean);
+        let mut delivered = 0usize;
+        for u in us.iter().flatten() {
+            crate::linalg::axpy(1.0, u, &mut u_mean);
+            delivered += 1;
+        }
+        if delivered == 0 {
+            return Err(Error::Protocol(format!(
+                "elastic: epoch {t_epoch} collected no local iterates \
+                 (all {p} workers lost)"
+            )));
+        }
+        // degraded epochs average over the survivors that delivered; with
+        // everyone alive this is exactly strict mode's 1/p
+        scale(&mut u_mean, 1.0 / delivered as f64);
+        w.copy_from_slice(&u_mean);
+        let epoch_wall = timer.elapsed_s();
+        wall_s += epoch_wall;
+        sim_wall_s += max_worker_s + t_master.elapsed_s();
+        epochs_run = t_epoch + 1;
+
+        // checkpoint (off the clock)
+        if let Some(dir) = &opts.checkpoint_dir {
+            if opts.checkpoint_every > 0
+                && ((t_epoch + 1 - start_epoch) % opts.checkpoint_every == 0
+                    || t_epoch + 1 == cfg.outer_iters)
+            {
+                let ck = Checkpoint {
+                    epoch: t_epoch + 1,
+                    p,
+                    seed: cfg.seed,
+                    part_fingerprint: part.fingerprint(),
+                    w: w.clone(),
+                };
+                let path = ck.save(dir)?;
+                println!("elastic: checkpoint epoch {} -> {}", t_epoch + 1, path.display());
+            }
+        }
+
+        // telemetry (off the clock) — same cadence as strict mode
+        if t_epoch % cfg.record_every == 0 || t_epoch + 1 == cfg.outer_iters {
+            let (bytes, msgs) = transport.comm();
+            let objective = obj.value(&w);
+            trace.push(TracePoint {
+                epoch: t_epoch + 1,
+                wall_s,
+                sim_wall_s,
+                net_s: net.wire_time(bytes, msgs),
+                net_io_s: transport.io_seconds(),
+                objective,
+                comm_bytes: bytes,
+                comm_msgs: msgs,
+            });
+            if cfg.target_objective.is_finite() && objective - cfg.target_objective <= cfg.tol {
+                break;
+            }
+        }
+    }
+    Ok(ElasticRun {
+        run: MasterRun { w, trace, materializations, epochs_run },
+        degraded: cl.degraded,
+    })
+}

@@ -48,7 +48,17 @@
 //!   as `Err`, never as a propagated panic;
 //! * degenerate configurations (zero workers, empty shards) are rejected
 //!   before any thread spawns.
+//!
+//! Fail-fast is the **strict** mode — the default, and the contract every
+//! bit-parity test pins. The **elastic** mode ([`elastic`]) trades the
+//! abort for a per-worker liveness state machine (ONLINE/SUSPECT/OFFLINE
+//! driven by heartbeat beacons), degraded epochs that fold only surviving
+//! shards while reporting the Lemma-5 γ damage to the partition, and
+//! periodic iterate checkpoints ([`checkpoint`]) that let a restarted
+//! cluster resume bit-identically. DESIGN.md §11 specifies the model.
 
+pub mod checkpoint;
+pub mod elastic;
 pub mod protocol;
 pub mod remote;
 pub mod worker;
@@ -83,6 +93,9 @@ pub struct TrainOutput {
     pub materializations: u64,
     /// Epochs actually executed.
     pub epochs_run: usize,
+    /// Degradation events (elastic mode only; always empty in strict
+    /// mode, where the first worker loss aborts the run instead).
+    pub degraded: Vec<elastic::DegradeEvent>,
 }
 
 /// Train with the default artifact directory resolution (only touched when
@@ -262,10 +275,7 @@ pub fn run_master<T: MasterTransport>(
                     seen += 1;
                 }
                 ToMaster::WorkerDown { worker } => {
-                    return Err(Error::Protocol(format!(
-                        "worker {worker} died during epoch {t_epoch} \
-                         (panic, backend failure, or lost connection)"
-                    )))
+                    return Err(worker_died(transport, worker, t_epoch))
                 }
                 other => {
                     return Err(Error::Protocol(format!(
@@ -303,10 +313,7 @@ pub fn run_master<T: MasterTransport>(
                     seen += 1;
                 }
                 ToMaster::WorkerDown { worker } => {
-                    return Err(Error::Protocol(format!(
-                        "worker {worker} died during epoch {t_epoch} \
-                         (panic, backend failure, or lost connection)"
-                    )))
+                    return Err(worker_died(transport, worker, t_epoch))
                 }
                 other => {
                     return Err(Error::Protocol(format!(
@@ -352,10 +359,24 @@ pub fn run_master<T: MasterTransport>(
     Ok(MasterRun { w, trace, materializations, epochs_run })
 }
 
+/// Peer-failure error naming the worker id and — when the transport has
+/// one (TCP) — its socket address. In-process workers have no address,
+/// so the in-process message stays byte-identical to the pre-elastic one.
+pub(crate) fn worker_died<T: MasterTransport>(transport: &T, worker: usize, epoch: usize) -> Error {
+    let at = transport
+        .peer_addr(worker)
+        .map(|a| format!(" at {a}"))
+        .unwrap_or_default();
+    Error::Protocol(format!(
+        "worker {worker}{at} died during epoch {epoch} \
+         (panic, backend failure, or lost connection)"
+    ))
+}
+
 /// Reject an out-of-range sender id before it is used as a reduce-buffer
 /// index. Impossible over the in-process wire; a corrupt/malicious TCP
 /// peer could otherwise panic the index.
-fn check_worker_in_range(worker: usize, p: usize, epoch: usize) -> Result<()> {
+pub(crate) fn check_worker_in_range(worker: usize, p: usize, epoch: usize) -> Result<()> {
     if worker >= p {
         return Err(Error::Protocol(format!(
             "epoch {epoch}: message from out-of-range worker {worker} (p={p})"
@@ -366,7 +387,7 @@ fn check_worker_in_range(worker: usize, p: usize, epoch: usize) -> Result<()> {
 
 /// A second message from the same worker inside one reduce would skew the
 /// deterministic fold (also only reachable from a corrupt TCP peer).
-fn duplicate_sender(worker: usize, epoch: usize) -> Error {
+pub(crate) fn duplicate_sender(worker: usize, epoch: usize) -> Error {
     Error::Protocol(format!("epoch {epoch}: duplicate message from worker {worker}"))
 }
 
@@ -460,6 +481,7 @@ pub fn train_with(
         comm,
         materializations: r.materializations,
         epochs_run: r.epochs_run,
+        degraded: Vec::new(),
     })
 }
 

@@ -96,6 +96,19 @@ pub enum ToMaster {
         /// Which worker died.
         worker: usize,
     },
+    /// Elastic-mode liveness beacon, sent by a background thread on the
+    /// TCP worker transport at the interval the job spec requests. Like
+    /// [`ToMaster::WorkerDown`] it is never metered — it carries
+    /// liveness, not algorithm state — and strict-mode runs never send
+    /// it, so the bit-exact byte accounting of the parity tests is
+    /// unchanged by its existence.
+    Heartbeat {
+        /// Sender.
+        worker: usize,
+        /// Last outer epoch the sender *completed* (0 before the first),
+        /// so the master can log how far behind a slow peer is.
+        epoch: usize,
+    },
 }
 
 impl ToMaster {
@@ -105,6 +118,7 @@ impl ToMaster {
             ToMaster::ShardGrad { zsum, .. } => vec_bytes(zsum.len()) + 8,
             ToMaster::LocalIterate { u, .. } => vec_bytes(u.len()) + 16,
             ToMaster::WorkerDown { .. } => MSG_HEADER_BYTES,
+            ToMaster::Heartbeat { .. } => MSG_HEADER_BYTES,
         }
     }
 }

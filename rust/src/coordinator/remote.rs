@@ -57,7 +57,9 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use crate::config::{PscopeConfig, WorkerBackend};
+use crate::config::{PscopeConfig, RunMode, WorkerBackend};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::elastic::{self, ElasticOpts};
 use crate::coordinator::worker::{run_worker, Worker};
 use crate::coordinator::{resolve_run, run_master, TrainOutput};
 use crate::data::shard;
@@ -66,10 +68,10 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::loss::{Objective, ProxReg, SmoothLoss};
 use crate::net::frame::{self, FrameRead};
-use crate::net::transport::{MasterTransport, TcpMaster, TcpWorker};
+use crate::net::transport::{FaultPlan, MasterTransport, TcpMaster, TcpWorker};
 use crate::net::{ByteMeter, NetModel};
 use crate::partition::{Partition, Partitioner};
-use crate::rng::Rng;
+use crate::rng::{splitmix64, Rng};
 
 /// Spec version stamped into every `Setup` payload; bumped on layout
 /// changes so mismatched binaries fail with a clear error instead of
@@ -80,8 +82,10 @@ use crate::rng::Rng;
 /// the bare `(dataset, data_seed)` pair with the resolved
 /// [`DataSource`] triple and added the per-worker shard digest table,
 /// so `ShardDir` workers validate their shard file against the master's
-/// manifest instead of re-parsing text or re-synthesizing.
-pub(crate) const SPEC_VERSION: u64 = 4;
+/// manifest instead of re-parsing text or re-synthesizing; v5 added the
+/// run mode (strict/elastic) and heartbeat interval to the spec tail and
+/// introduced the `Heartbeat` wire frame (tag 7) for elastic liveness.
+pub(crate) const SPEC_VERSION: u64 = 5;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -143,6 +147,13 @@ pub struct RunSpec {
     /// Artifact directory for the Xla backend (must exist on the worker's
     /// filesystem), if any.
     pub artifact_dir: Option<String>,
+    /// Failure-handling mode. In `Elastic` mode workers start a heartbeat
+    /// thread after the handshake; in `Strict` mode no beacon is ever sent
+    /// (the bit-exact byte-accounting contract of the parity tests).
+    pub mode: RunMode,
+    /// Heartbeat interval in milliseconds (elastic mode only; clamped to
+    /// ≥ 10 on the worker side).
+    pub heartbeat_ms: u64,
 }
 
 impl RunSpec {
@@ -186,6 +197,8 @@ impl RunSpec {
             m_inner,
             grad_threads,
             artifact_dir: artifact_dir.map(str::to_string),
+            mode: cfg.mode,
+            heartbeat_ms: cfg.heartbeat_ms,
         })
     }
 
@@ -233,6 +246,13 @@ impl RunSpec {
         push_str(&mut b, self.source.wire_str());
         push_str(&mut b, &self.partition);
         push_str(&mut b, self.artifact_dir.as_deref().unwrap_or(""));
+        // v5 tail: run mode + heartbeat interval (appended last so the
+        // fixed offsets of the earlier fields are unchanged)
+        b.push(match self.mode {
+            RunMode::Strict => 0,
+            RunMode::Elastic => 1,
+        });
+        b.extend_from_slice(&self.heartbeat_ms.to_le_bytes());
         b
     }
 
@@ -284,6 +304,12 @@ impl RunSpec {
         let source = DataSource::from_wire(source_tag, source_seed, &source_str)?;
         let partition = c.str()?;
         let artifact_dir = c.str()?;
+        let mode = match c.u8()? {
+            0 => RunMode::Strict,
+            1 => RunMode::Elastic,
+            t => return Err(Error::Protocol(format!("bad run mode tag {t}"))),
+        };
+        let heartbeat_ms = c.u64()?;
         c.done()?;
         Ok(RunSpec {
             source,
@@ -301,6 +327,8 @@ impl RunSpec {
             m_inner,
             grad_threads,
             artifact_dir: if artifact_dir.is_empty() { None } else { Some(artifact_dir) },
+            mode,
+            heartbeat_ms,
         })
     }
 }
@@ -465,20 +493,58 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
     .with_grad_threads(spec.grad_threads.max(1)))
 }
 
+/// Connect with exponential backoff: 10 ms doubling to a 2 s cap, plus a
+/// deterministic jitter (up to a quarter of the current backoff, derived
+/// from the address bytes via `splitmix64`) so a fleet of workers started
+/// by the same script does not retry in lockstep. Every sleep is clamped
+/// to the total deadline; exhaustion reports the address, the deadline,
+/// and how many attempts were made.
 fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    const BACKOFF_START_MS: u64 = 10;
+    const BACKOFF_CAP_MS: u64 = 2000;
     let deadline = Instant::now() + timeout;
+    let mut jitter_state =
+        addr.bytes().fold(0x9E37_79B9_7F4A_7C15u64, |h, b| splitmix64(&mut (h ^ b as u64)));
+    let mut backoff_ms = BACKOFF_START_MS;
+    let mut attempts = 0u32;
     loop {
+        attempts += 1;
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     return Err(Error::Protocol(format!(
-                        "cannot connect to master at {addr} within {timeout:?}: {e}"
+                        "cannot connect to master at {addr} within {timeout:?} \
+                         ({attempts} attempts, backoff reached {backoff_ms}ms): {e}"
                     )));
                 }
-                std::thread::sleep(Duration::from_millis(100));
+                let jitter = splitmix64(&mut jitter_state) % (backoff_ms / 4 + 1);
+                let sleep = Duration::from_millis(backoff_ms + jitter).min(deadline - now);
+                std::thread::sleep(sleep);
+                backoff_ms = (backoff_ms * 2).min(BACKOFF_CAP_MS);
             }
         }
+    }
+}
+
+/// Knobs for [`serve_worker_with`]: connection/handshake deadlines and the
+/// test-only fault-injection plan.
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Bound on the initial connect (retried with exponential backoff).
+    pub connect_timeout: Duration,
+    /// Bound on the Setup handshake after the socket is up.
+    pub timeout: Duration,
+    /// Deterministic fault injection (drop/delay/kill); defaults to none.
+    pub fault: FaultPlan,
+}
+
+impl WorkerOpts {
+    /// Same deadline for connect and handshake, no faults — the behavior
+    /// of the plain [`serve_worker`] entry point.
+    pub fn new(timeout: Duration) -> WorkerOpts {
+        WorkerOpts { connect_timeout: timeout, timeout, fault: FaultPlan::none() }
     }
 }
 
@@ -491,7 +557,14 @@ fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
 /// `Stop`). On error the master is notified best-effort (`WorkerDown`)
 /// before the error propagates — the process-level drop guard.
 pub fn serve_worker(addr: &str, timeout: Duration) -> Result<()> {
-    let mut stream = connect_with_retry(addr, timeout)?;
+    serve_worker_with(addr, &WorkerOpts::new(timeout))
+}
+
+/// [`serve_worker`] with explicit knobs: a separate connect deadline and a
+/// fault-injection plan (both surfaced as `pscope worker` CLI flags).
+pub fn serve_worker_with(addr: &str, opts: &WorkerOpts) -> Result<()> {
+    let timeout = opts.timeout;
+    let mut stream = connect_with_retry(addr, opts.connect_timeout)?;
     let _ = stream.set_nodelay(true);
     // Short poll timeout + hard deadline: the handshake stays bounded
     // even against a master that dribbles half a frame and stalls.
@@ -554,7 +627,12 @@ pub fn serve_worker(addr: &str, timeout: Duration) -> Result<()> {
     // Data plane: block on the master's pace (objective evaluation between
     // epochs can take arbitrarily long; EOF covers master death).
     stream.set_read_timeout(None)?;
-    let mut transport = TcpWorker::new(stream, k);
+    let mut transport = TcpWorker::new(stream, k).with_fault(opts.fault.clone());
+    if spec.mode == RunMode::Elastic {
+        let interval = Duration::from_millis(spec.heartbeat_ms.max(10));
+        transport.start_heartbeat(interval)?;
+        println!("worker {k}: elastic mode, heartbeat every {interval:?}");
+    }
     let result = run_worker(&mut transport, &mut wk, spec.eta, spec.m_inner);
     if result.is_err() {
         transport.send_down();
@@ -597,54 +675,11 @@ impl MasterEndpoint {
         spec: &RunSpec,
         timeout: Duration,
     ) -> Result<TrainOutput> {
-        let p = part.p();
-        // Same caller-thread validations as the in-process entry point —
-        // and a consistency check: the spec the workers will obey must
-        // resolve to exactly what this (ds, part, cfg) resolves to, or
-        // the cluster would run a different algorithm than the master
-        // believes it launched.
-        let (m_inner, eta, _grad_threads) = resolve_run(
-            ds,
-            part,
-            cfg,
-            spec.artifact_dir.as_deref().map(std::path::Path::new),
-        )?;
-        if spec.p != p
-            || spec.shard_digests.len() != p
-            || spec.m_inner != m_inner
-            || spec.eta.to_bits() != eta.to_bits()
-        {
-            return Err(Error::Config(format!(
-                "job spec disagrees with this run: spec (p={}, digests={}, m={}, eta={:e}) vs \
-                 resolved (p={p}, m={m_inner}, eta={eta:e}) — build the spec with \
-                 RunSpec::derive on the same (ds, part, cfg)",
-                spec.p,
-                spec.shard_digests.len(),
-                spec.m_inner,
-                spec.eta
-            )));
-        }
-        let loss = cfg.objective_loss();
-        let prox = cfg.prox_reg()?;
-        // bitwise objective check — the workers will obey the spec's exact
-        // loss/regularizer bits, so those must be the master's too
-        if spec.loss.wire_encode() != loss.wire_encode()
-            || spec.reg.wire_encode() != prox.wire_encode()
-        {
-            return Err(Error::Config(format!(
-                "job spec objective ({}/{}) disagrees with this run ({}/{}) — build the \
-                 spec with RunSpec::derive on the same (ds, part, cfg)",
-                spec.loss.name(),
-                spec.reg.name(),
-                loss.name(),
-                prox.name()
-            )));
-        }
+        let obj = preflight(ds, part, cfg, spec)?;
         let d = ds.d();
-        let obj = Objective::new(ds, loss, prox);
         let meter = ByteMeter::new();
         let mut transport =
-            TcpMaster::accept(&self.listener, p, meter.clone(), &spec.encode(), timeout)?;
+            TcpMaster::accept(&self.listener, part.p(), meter.clone(), &spec.encode(), timeout)?;
         let master_result = run_master(&mut transport, &obj, d, cfg, net, &ds.name);
         transport.shutdown();
         let r = master_result?;
@@ -655,8 +690,107 @@ impl MasterEndpoint {
             comm,
             materializations: r.materializations,
             epochs_run: r.epochs_run,
+            degraded: Vec::new(),
         })
     }
+
+    /// [`MasterEndpoint::train`] in elastic mode: the same accept/spec
+    /// handshake, but epochs are driven by
+    /// [`elastic::run_master_elastic`] — lost workers degrade the run
+    /// (with a γ-damage report) instead of aborting it, checkpoints are
+    /// written per `opts`, and `resume` restarts mid-trajectory from a
+    /// checkpoint written by an earlier (possibly killed) run.
+    ///
+    /// `spec.mode` must be [`RunMode::Elastic`] so the workers actually
+    /// send heartbeats; this is validated here.
+    pub fn train_elastic(
+        &self,
+        ds: &Dataset,
+        part: &Partition,
+        cfg: &PscopeConfig,
+        net: NetModel,
+        spec: &RunSpec,
+        timeout: Duration,
+        opts: &ElasticOpts,
+        resume: Option<&Checkpoint>,
+    ) -> Result<TrainOutput> {
+        if spec.mode != RunMode::Elastic {
+            return Err(Error::Config(
+                "train_elastic needs a spec derived from an elastic config \
+                 (cfg.mode = elastic), or the workers will never heartbeat"
+                    .into(),
+            ));
+        }
+        let obj = preflight(ds, part, cfg, spec)?;
+        let meter = ByteMeter::new();
+        let mut transport =
+            TcpMaster::accept(&self.listener, part.p(), meter.clone(), &spec.encode(), timeout)?;
+        let master_result =
+            elastic::run_master_elastic(&mut transport, &obj, ds, part, cfg, opts, net, resume);
+        transport.shutdown();
+        let r = master_result?;
+        let comm = meter.snapshot();
+        Ok(TrainOutput {
+            w: r.run.w,
+            trace: r.run.trace,
+            comm,
+            materializations: r.run.materializations,
+            epochs_run: r.run.epochs_run,
+            degraded: r.degraded,
+        })
+    }
+}
+
+/// Caller-thread validations shared by the strict and elastic master
+/// entry points: the spec the workers will obey must resolve to exactly
+/// what this `(ds, part, cfg)` resolves to, or the cluster would run a
+/// different algorithm than the master believes it launched. Returns the
+/// master-side objective on success.
+fn preflight<'a>(
+    ds: &'a Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    spec: &RunSpec,
+) -> Result<Objective<'a>> {
+    let p = part.p();
+    let (m_inner, eta, _grad_threads) = resolve_run(
+        ds,
+        part,
+        cfg,
+        spec.artifact_dir.as_deref().map(std::path::Path::new),
+    )?;
+    if spec.p != p
+        || spec.shard_digests.len() != p
+        || spec.m_inner != m_inner
+        || spec.eta.to_bits() != eta.to_bits()
+    {
+        return Err(Error::Config(format!(
+            "job spec disagrees with this run: spec (p={}, digests={}, m={}, eta={:e}) vs \
+             resolved (p={p}, m={m_inner}, eta={eta:e}) — build the spec with \
+             RunSpec::derive on the same (ds, part, cfg)",
+            spec.p,
+            spec.shard_digests.len(),
+            spec.m_inner,
+            spec.eta
+        )));
+    }
+    let loss = cfg.objective_loss();
+    let prox = cfg.prox_reg()?;
+    // bitwise objective check — the workers will obey the spec's exact
+    // loss/regularizer bits, so those must be the master's too
+    if spec.loss.wire_encode() != loss.wire_encode()
+        || spec.reg.wire_encode() != prox.wire_encode()
+    {
+        return Err(Error::Config(format!(
+            "job spec objective ({}/{}) disagrees with this run ({}/{}) — build the \
+             spec with RunSpec::derive on the same (ds, part, cfg)",
+            spec.loss.name(),
+            spec.reg.name(),
+            loss.name(),
+            prox.name()
+        )));
+    }
+    Ok(Objective::new(ds, loss, prox))
 }
 
 /// One-command loopback cluster: bind an ephemeral port, spawn `part.p()`
@@ -673,27 +807,71 @@ pub fn self_host_train(
     spec: &RunSpec,
     timeout: Duration,
 ) -> Result<TrainOutput> {
-    let ep = MasterEndpoint::bind("127.0.0.1:0")?;
-    let addr = ep.local_addr()?.to_string();
-    let exe = std::env::current_exe()?;
-    let mut children = Vec::with_capacity(part.p());
-    for _ in 0..part.p() {
-        children.push(
-            Command::new(&exe)
-                .arg("worker")
-                .arg("--connect")
-                .arg(&addr)
-                .arg("--timeout")
-                .arg(timeout.as_secs().max(1).to_string())
-                .stdout(Stdio::null())
-                .spawn()?,
-        );
-    }
+    let (ep, children) = spawn_loopback_cluster(part.p(), timeout, None)?;
     let result = ep.train(ds, part, cfg, net, spec, timeout);
     let reaped = reap_children(children, timeout);
     let out = result?;
     reaped?;
     Ok(out)
+}
+
+/// Elastic flavor of [`self_host_train`]: the loopback cluster is driven
+/// by [`MasterEndpoint::train_elastic`], and `fault` (a
+/// [`FaultPlan::parse`] spec like `kill@2`) is injected into exactly one
+/// child so a single command can demonstrate a mid-run worker loss.
+///
+/// A faulted child exits nonzero by design, so child-reap errors are
+/// tolerated here when a fault was requested — the master's result is
+/// the verdict.
+#[allow(clippy::too_many_arguments)]
+pub fn self_host_train_elastic(
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    net: NetModel,
+    spec: &RunSpec,
+    timeout: Duration,
+    opts: &ElasticOpts,
+    resume: Option<&Checkpoint>,
+    fault: Option<&str>,
+) -> Result<TrainOutput> {
+    let (ep, children) = spawn_loopback_cluster(part.p(), timeout, fault)?;
+    let result = ep.train_elastic(ds, part, cfg, net, spec, timeout, opts, resume);
+    let reaped = reap_children(children, timeout);
+    let out = result?;
+    if fault.is_none() {
+        reaped?;
+    }
+    Ok(out)
+}
+
+/// Bind an ephemeral loopback port and spawn `p` `pscope worker` children
+/// against it (re-invoking the current executable). `fault` is passed as
+/// `--fault` to the first child only.
+fn spawn_loopback_cluster(
+    p: usize,
+    timeout: Duration,
+    fault: Option<&str>,
+) -> Result<(MasterEndpoint, Vec<Child>)> {
+    let ep = MasterEndpoint::bind("127.0.0.1:0")?;
+    let addr = ep.local_addr()?.to_string();
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(p);
+    for i in 0..p {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--timeout")
+            .arg(timeout.as_secs().max(1).to_string());
+        if i == 0 {
+            if let Some(f) = fault {
+                cmd.arg("--fault").arg(f);
+            }
+        }
+        children.push(cmd.stdout(Stdio::null()).spawn()?);
+    }
+    Ok((ep, children))
 }
 
 /// Wait for every child within `deadline`; kill stragglers. The first
@@ -765,6 +943,8 @@ mod tests {
             m_inner: 5000,
             grad_threads: 2,
             artifact_dir: None,
+            mode: RunMode::Strict,
+            heartbeat_ms: 250,
         }
     }
 
@@ -777,6 +957,11 @@ mod tests {
         let mut with_dir = spec;
         with_dir.artifact_dir = Some("artifacts".into());
         assert_eq!(RunSpec::decode(&with_dir.encode()).unwrap(), with_dir);
+        // the v5 tail (mode + heartbeat interval) travels too
+        let mut elastic_spec = spec_fixture();
+        elastic_spec.mode = RunMode::Elastic;
+        elastic_spec.heartbeat_ms = 125;
+        assert_eq!(RunSpec::decode(&elastic_spec.encode()).unwrap(), elastic_spec);
         // every source kind survives the wire
         let mut file_spec = spec_fixture();
         file_spec.source = DataSource::LibsvmFile { path: "data/real.libsvm".into() };
@@ -829,6 +1014,11 @@ mod tests {
         let mut bad_source = good.clone();
         bad_source[tag_base + 3] = 0x7F; // source tag follows the backend byte
         assert!(RunSpec::decode(&bad_source).is_err(), "bad source tag accepted");
+        // the run-mode tag sits 9 bytes from the end (u8 mode + u64 heartbeat)
+        let mut bad_mode = good.clone();
+        let mode_off = bad_mode.len() - 9;
+        bad_mode[mode_off] = 0x7F;
+        assert!(RunSpec::decode(&bad_mode).is_err(), "bad mode tag accepted");
         // a digest table whose length disagrees with p is a protocol error
         let mut short_table = spec_fixture();
         short_table.shard_digests.pop();

@@ -28,9 +28,12 @@ use std::process::ExitCode;
 use std::time::Duration;
 
 use pscope::cli::{flag, switch, Args, Command, FlagSpec};
-use pscope::config::{Model, PscopeConfig, RegKind, TransportKind, WorkerBackend};
-use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec};
+use pscope::config::{Model, PscopeConfig, RegKind, RunMode, TransportKind, WorkerBackend};
+use pscope::coordinator::checkpoint::{self, Checkpoint};
+use pscope::coordinator::elastic::ElasticOpts;
+use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec, WorkerOpts};
 use pscope::coordinator::{train_with, TrainOutput};
+use pscope::net::transport::FaultPlan;
 use pscope::data::source::DataSource;
 use pscope::data::{libsvm, load_or_synth, shard, stats, synth, Dataset};
 use pscope::error::{Error, Result};
@@ -90,6 +93,13 @@ fn train_flags() -> Vec<FlagSpec> {
         flag("config", "TOML config file overriding defaults", None),
         flag("trace-out", "write per-epoch CSV here", None),
         switch("gap", "also compute a reference optimum and report gaps"),
+        flag("mode", "strict (fail fast) | elastic (survive worker loss; tcp)", Some("strict")),
+        flag("checkpoint-dir", "elastic: directory for iterate checkpoints", None),
+        flag("checkpoint-every", "elastic: epochs between checkpoints (0 = off)", Some("1")),
+        flag("heartbeat-ms", "elastic: worker heartbeat interval", Some("250")),
+        flag("suspect-after-ms", "elastic: silent worker becomes SUSPECT after", Some("1000")),
+        flag("offline-after-ms", "elastic: silent worker becomes OFFLINE after", Some("10000")),
+        switch("resume", "elastic: resume from the latest checkpoint in --checkpoint-dir"),
     ]
 }
 
@@ -141,6 +151,16 @@ fn build_job(args: &Args) -> Result<Job> {
     }
     if let Some(r) = args.get("reg") {
         cfg.reg_kind = Some(RegKind::parse(r)?);
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = RunMode::parse(m)?;
+    }
+    cfg.heartbeat_ms = args.get_parse("heartbeat-ms", cfg.heartbeat_ms)?;
+    cfg.suspect_after_ms = args.get_parse("suspect-after-ms", cfg.suspect_after_ms)?;
+    cfg.offline_after_ms = args.get_parse("offline-after-ms", cfg.offline_after_ms)?;
+    cfg.checkpoint_every = args.get_parse("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.to_string());
     }
     // resolve + validate the composite objective up front (fail fast on
     // e.g. reg = "l1" with a nonzero lam1)
@@ -212,6 +232,22 @@ fn print_digest_table(spec: &RunSpec) {
     }
 }
 
+/// Resolve `--resume`: load the newest checkpoint from the configured
+/// checkpoint directory, or error loudly if there is nothing to resume.
+fn load_resume(args: &Args, cfg: &PscopeConfig) -> Result<Option<Checkpoint>> {
+    if !args.has("resume") {
+        return Ok(None);
+    }
+    let dir = cfg.checkpoint_dir.as_deref().ok_or_else(|| {
+        Error::Config("--resume needs --checkpoint-dir (where do checkpoints live?)".into())
+    })?;
+    let path = checkpoint::latest(std::path::Path::new(dir))?
+        .ok_or_else(|| Error::Config(format!("--resume: no ckpt_*.pscope files in {dir}")))?;
+    let ck = Checkpoint::load(&path)?;
+    println!("resume: loaded {} (epoch {})", path.display(), ck.epoch);
+    Ok(Some(ck))
+}
+
 /// Reference-optimum computation for `--gap` (off unless requested).
 fn maybe_reference(args: &Args, job: &Job) -> f64 {
     if args.has("gap") {
@@ -252,6 +288,13 @@ fn report(out: &TrainOutput, p_star: f64, args: &Args) -> Result<()> {
             last.net_s, last.net_io_s
         );
     }
+    for ev in &out.degraded {
+        println!(
+            "degraded: worker {} OFFLINE at epoch {} ({}); {} shard(s) survived, \
+             gamma proxy {:.4e} -> {:.4e}",
+            ev.worker, ev.epoch, ev.reason, ev.survivors, ev.gamma_original, ev.gamma_surviving
+        );
+    }
     println!(
         "done: {} epochs, {} bytes / {} msgs, {} lazy materializations",
         out.epochs_run, out.comm.0, out.comm.1, out.materializations
@@ -272,6 +315,12 @@ fn cmd_train() -> Command {
         Some("inproc"),
     ));
     flags.push(flag("accept-timeout", "tcp: seconds to wait for workers/teardown", Some("60")));
+    flags.push(flag(
+        "fault",
+        "tcp: inject a fault into one self-hosted worker \
+         (none | kill@<epoch> | drop@<epoch> | delay@<epoch>:<ms>)",
+        None,
+    ));
     Command { name: "train", about: "run pSCOPE (Algorithm 1) on a dataset", flags }
 }
 
@@ -284,13 +333,22 @@ fn run_train(raw: &[String]) -> Result<()> {
     }
     let p_star = maybe_reference(&args, &job);
     let out = match job.cfg.transport {
-        TransportKind::InProc => train_with(
-            &job.ds,
-            &job.part,
-            &job.cfg,
-            job.artifact_dir.clone().map(std::path::PathBuf::from),
-            NetModel::ten_gbe(),
-        )?,
+        TransportKind::InProc => {
+            if job.cfg.mode == RunMode::Elastic {
+                return Err(Error::Config(
+                    "elastic mode requires --transport tcp (in-process workers are threads \
+                     and cannot be lost independently of the master)"
+                        .into(),
+                ));
+            }
+            train_with(
+                &job.ds,
+                &job.part,
+                &job.cfg,
+                job.artifact_dir.clone().map(std::path::PathBuf::from),
+                NetModel::ten_gbe(),
+            )?
+        }
         TransportKind::Tcp => {
             let timeout = Duration::from_secs(args.get_parse("accept-timeout", 60u64)?.max(1));
             let spec = RunSpec::derive(
@@ -307,14 +365,36 @@ fn run_train(raw: &[String]) -> Result<()> {
                 "self-hosting a loopback TCP cluster: master + {} worker processes",
                 job.part.p()
             );
-            remote::self_host_train(
-                &job.ds,
-                &job.part,
-                &job.cfg,
-                NetModel::ten_gbe(),
-                &spec,
-                timeout,
-            )?
+            if job.cfg.mode == RunMode::Elastic {
+                let resume = load_resume(&args, &job.cfg)?;
+                remote::self_host_train_elastic(
+                    &job.ds,
+                    &job.part,
+                    &job.cfg,
+                    NetModel::ten_gbe(),
+                    &spec,
+                    timeout,
+                    &ElasticOpts::from_config(&job.cfg),
+                    resume.as_ref(),
+                    args.get("fault"),
+                )?
+            } else {
+                if args.get("fault").is_some() {
+                    return Err(Error::Config(
+                        "--fault on `pscope train` needs --mode elastic (a strict run \
+                         aborts on the first lost worker by design)"
+                            .into(),
+                    ));
+                }
+                remote::self_host_train(
+                    &job.ds,
+                    &job.part,
+                    &job.cfg,
+                    NetModel::ten_gbe(),
+                    &spec,
+                    timeout,
+                )?
+            }
         }
     };
     report(&out, p_star, &args)
@@ -356,7 +436,21 @@ fn run_master_cmd(raw: &[String]) -> Result<()> {
         job.part.p(),
         ep.local_addr()?
     );
-    let out = ep.train(&job.ds, &job.part, &job.cfg, NetModel::ten_gbe(), &spec, timeout)?;
+    let out = if job.cfg.mode == RunMode::Elastic {
+        let resume = load_resume(&args, &job.cfg)?;
+        ep.train_elastic(
+            &job.ds,
+            &job.part,
+            &job.cfg,
+            NetModel::ten_gbe(),
+            &spec,
+            timeout,
+            &ElasticOpts::from_config(&job.cfg),
+            resume.as_ref(),
+        )?
+    } else {
+        ep.train(&job.ds, &job.part, &job.cfg, NetModel::ten_gbe(), &spec, timeout)?
+    };
     report(&out, p_star, &args)
 }
 
@@ -366,7 +460,19 @@ fn cmd_worker() -> Command {
         about: "join a pSCOPE master over TCP (the job spec arrives over the wire)",
         flags: vec![
             flag("connect", "master address", Some("127.0.0.1:7070")),
-            flag("timeout", "seconds for connect + handshake", Some("30")),
+            flag("timeout", "seconds for the Setup handshake", Some("30")),
+            flag(
+                "connect-timeout",
+                "seconds to keep retrying the connect with backoff (default: --timeout)",
+                None,
+            ),
+            flag(
+                "fault",
+                "inject a deterministic fault \
+                 (none | kill@<epoch> | drop@<epoch> | delay@<epoch>:<ms>)",
+                Some("none"),
+            ),
+            flag("fault-seed", "seed for fault-delay jitter", Some("0")),
         ],
     }
 }
@@ -375,8 +481,14 @@ fn run_worker_cmd(raw: &[String]) -> Result<()> {
     let args = cmd_worker().parse(raw)?;
     let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
     let timeout = Duration::from_secs(args.get_parse("timeout", 30u64)?.max(1));
+    let connect_timeout = match args.get("connect-timeout") {
+        Some(_) => Duration::from_secs(args.get_parse("connect-timeout", 30u64)?.max(1)),
+        None => timeout,
+    };
+    let fault =
+        FaultPlan::parse(args.get("fault").unwrap_or("none"), args.get_parse("fault-seed", 0u64)?)?;
     println!("worker: connecting to {addr}");
-    remote::serve_worker(addr, timeout)?;
+    remote::serve_worker_with(addr, &WorkerOpts { connect_timeout, timeout, fault })?;
     println!("worker: clean shutdown");
     Ok(())
 }

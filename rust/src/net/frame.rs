@@ -29,6 +29,7 @@
 //! | 4   | `ShardGrad`    | `u64` count, then `len·8` bytes of `f64`       |
 //! | 5   | `LocalIterate` | `f64` compute_s, `u64` materializations, `f64`s|
 //! | 6   | `WorkerDown`   | empty                                          |
+//! | 7   | `Heartbeat`    | empty (elastic liveness beacon, unmetered)     |
 //! | 100 | `Setup`        | opaque job spec (control plane, unmetered)     |
 //! | 101 | `Ready`        | empty (control plane, unmetered)               |
 //!
@@ -72,6 +73,10 @@ pub const TAG_SHARD_GRAD: u32 = 4;
 pub const TAG_LOCAL_ITERATE: u32 = 5;
 /// Tag for [`ToMaster::WorkerDown`].
 pub const TAG_WORKER_DOWN: u32 = 6;
+/// Tag for [`ToMaster::Heartbeat`]. Elastic-mode liveness beacon; like
+/// `WorkerDown` it is never metered (it carries liveness, not algorithm
+/// state), so strict-mode byte accounting is untouched by its existence.
+pub const TAG_HEARTBEAT: u32 = 7;
 /// Control-plane tag: master → worker job spec (see
 /// [`crate::coordinator::remote::RunSpec`]). Unmetered — setup traffic is
 /// not part of the per-epoch accounting.
@@ -267,6 +272,11 @@ pub fn encode_to_master(msg: &ToMaster) -> Vec<u8> {
             push_header(&mut b, TAG_WORKER_DOWN, 0, *worker as u64);
             b
         }
+        ToMaster::Heartbeat { worker, epoch } => {
+            let mut b = Vec::with_capacity(FRAME_HEADER_BYTES);
+            push_header(&mut b, TAG_HEARTBEAT, *epoch as u64, *worker as u64);
+            b
+        }
     };
     let buf = seal(buf);
     debug_assert_eq!(buf.len() as u64, msg.wire_bytes());
@@ -385,6 +395,7 @@ pub fn decode_to_master(frame: &[u8]) -> Result<ToMaster> {
             })
         }
         TAG_WORKER_DOWN => Ok(ToMaster::WorkerDown { worker }),
+        TAG_HEARTBEAT => Ok(ToMaster::Heartbeat { worker, epoch }),
         other => Err(Error::Protocol(format!(
             "unexpected worker→master tag {other}"
         ))),
@@ -415,10 +426,24 @@ mod tests {
                 materializations: 12,
             },
             ToMaster::WorkerDown { worker: 5 },
+            ToMaster::Heartbeat { worker: 3, epoch: 8 },
         ];
         for m in &msgs {
             assert_eq!(encode_to_master(m).len() as u64, m.wire_bytes(), "{m:?}");
         }
+    }
+
+    #[test]
+    fn heartbeat_roundtrip() {
+        let m = ToMaster::Heartbeat { worker: 3, epoch: 8 };
+        match decode_to_master(&encode_to_master(&m)).unwrap() {
+            ToMaster::Heartbeat { worker, epoch } => {
+                assert_eq!((worker, epoch), (3, 8));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // a heartbeat is a header-only frame, like Stop/WorkerDown
+        assert_eq!(encode_to_master(&m).len(), FRAME_HEADER_BYTES);
     }
 
     #[test]

@@ -26,10 +26,10 @@
 //! threads within a bounded interval (read timeouts + socket shutdown) —
 //! never an unbounded join.
 
-use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -53,6 +53,20 @@ pub trait MasterTransport {
     /// death surfaces as [`ToMaster::WorkerDown`] (or `Err` once every
     /// worker is gone) — never an indefinite block.
     fn recv(&mut self) -> Result<ToMaster>;
+
+    /// [`recv`](MasterTransport::recv) with a bound: `Ok(None)` when
+    /// `timeout` elapses with no message. The elastic master loop polls
+    /// through this so it can run its liveness clock (SUSPECT/OFFLINE
+    /// transitions) between frames; the strict loop never calls it.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToMaster>>;
+
+    /// Remote socket address of worker `worker`'s connection, when the
+    /// transport has one (TCP). Used to name the failing peer in
+    /// master-side `Error::Protocol` messages; `None` for in-process
+    /// workers, which have no address.
+    fn peer_addr(&self, _worker: usize) -> Option<SocketAddr> {
+        None
+    }
 
     /// Byte-meter snapshot `(bytes, messages)`.
     fn comm(&self) -> (u64, u64);
@@ -154,6 +168,19 @@ impl MasterTransport for InProcMaster {
         r.map_err(|_| Error::Protocol("all workers disconnected mid-reduce".into()))
     }
 
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToMaster>> {
+        let t = Instant::now();
+        let r = self.from_workers.recv_timeout(timeout);
+        self.io_s += t.elapsed().as_secs_f64();
+        match r {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Protocol("all workers disconnected mid-reduce".into()))
+            }
+        }
+    }
+
     fn comm(&self) -> (u64, u64) {
         self.meter.snapshot()
     }
@@ -202,6 +229,10 @@ const READER_POLL: Duration = Duration::from_millis(200);
 /// loop needs no transport-specific failure handling.
 pub struct TcpMaster {
     streams: Vec<TcpStream>,
+    /// Remote address per worker, captured at accept time — survives
+    /// shutdown (which clears `streams`) so failure reports can always
+    /// name the peer.
+    peers: Vec<SocketAddr>,
     from_workers: Receiver<ToMaster>,
     readers: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -229,14 +260,19 @@ impl TcpMaster {
         listener.set_nonblocking(true)?;
         let deadline = Instant::now() + timeout;
         let mut streams: Vec<TcpStream> = Vec::with_capacity(p);
+        let mut peers: Vec<SocketAddr> = Vec::with_capacity(p);
         while streams.len() < p {
             match listener.accept() {
-                Ok((mut s, _peer)) => {
+                Ok((mut s, peer)) => {
                     s.set_nonblocking(false)?;
                     let _ = s.set_nodelay(true);
                     let k = streams.len() as u64;
-                    frame::write_frame(&mut s, &frame::encode_control(frame::TAG_SETUP, k, spec))?;
+                    frame::write_frame(&mut s, &frame::encode_control(frame::TAG_SETUP, k, spec))
+                        .map_err(|e| {
+                            Error::Protocol(format!("worker {k} at {peer}: Setup send failed: {e}"))
+                        })?;
                     streams.push(s);
+                    peers.push(peer);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
@@ -263,6 +299,7 @@ impl TcpMaster {
         // and stalls (read_frame_deadline), so accept + handshake is
         // always bounded.
         for (k, s) in streams.iter_mut().enumerate() {
+            let peer = peers[k];
             s.set_read_timeout(Some(READER_POLL))?;
             let ready_deadline = Instant::now() + timeout;
             let got = loop {
@@ -270,7 +307,7 @@ impl TcpMaster {
                     FrameRead::TimedOut => {
                         if Instant::now() >= ready_deadline {
                             return Err(Error::Protocol(format!(
-                                "worker {k}: no Ready within {timeout:?}"
+                                "worker {k} at {peer}: no Ready within {timeout:?}"
                             )));
                         }
                     }
@@ -282,13 +319,14 @@ impl TcpMaster {
                     let (tag, _epoch, worker, _payload) = frame::parts(&f)?;
                     if tag != frame::TAG_READY || worker != k as u64 {
                         return Err(Error::Protocol(format!(
-                            "worker {k}: bad handshake (tag {tag}, claimed id {worker})"
+                            "worker {k} at {peer}: bad handshake (tag {tag}, claimed id {worker})"
                         )));
                     }
                 }
                 FrameRead::Eof => {
                     return Err(Error::Protocol(format!(
-                        "worker {k} hung up during handshake (likely failed to build its shard)"
+                        "worker {k} at {peer} hung up during handshake (likely failed to \
+                         build its shard)"
                     )))
                 }
                 FrameRead::TimedOut => unreachable!("boundary timeouts retried above"),
@@ -313,6 +351,7 @@ impl TcpMaster {
         drop(tx);
         Ok(TcpMaster {
             streams,
+            peers,
             from_workers,
             readers,
             stop,
@@ -352,6 +391,14 @@ fn reader_loop(
                     let _ = tx.send(ToMaster::WorkerDown { worker: w });
                     return;
                 }
+                // Liveness beacons (elastic mode) are forwarded unmetered
+                // — they carry no algorithm state — and the reader keeps
+                // going: a beacon is the opposite of a terminal event.
+                Ok(hb @ ToMaster::Heartbeat { .. }) => {
+                    if tx.send(hb).is_err() {
+                        return;
+                    }
+                }
                 Ok(msg) => {
                     // Meter first, then forward: by the time the master
                     // has received a message, its bytes are on the books
@@ -387,7 +434,10 @@ impl MasterTransport for TcpMaster {
         let r = frame::write_frame(&mut self.streams[worker], &buf);
         self.io_s += t.elapsed().as_secs_f64();
         r.map_err(|_| {
-            Error::Protocol(format!("worker {worker} died (connection lost mid-send)"))
+            Error::Protocol(format!(
+                "worker {worker} at {} died (connection lost mid-send)",
+                self.peers[worker]
+            ))
         })
     }
 
@@ -396,6 +446,23 @@ impl MasterTransport for TcpMaster {
         let r = self.from_workers.recv();
         self.io_s += t.elapsed().as_secs_f64();
         r.map_err(|_| Error::Protocol("all workers disconnected mid-reduce".into()))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<ToMaster>> {
+        let t = Instant::now();
+        let r = self.from_workers.recv_timeout(timeout);
+        self.io_s += t.elapsed().as_secs_f64();
+        match r {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Protocol("all workers disconnected mid-reduce".into()))
+            }
+        }
+    }
+
+    fn peer_addr(&self, worker: usize) -> Option<SocketAddr> {
+        self.peers.get(worker).copied()
     }
 
     fn comm(&self) -> (u64, u64) {
@@ -443,16 +510,174 @@ impl Drop for TcpMaster {
     }
 }
 
+// ---- fault injection ----------------------------------------------------
+
+/// What a [`FaultPlan`] does, and when.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// No fault (the production value).
+    None,
+    /// Sever the connection (both directions) instead of sending the
+    /// epoch-`epoch` shard gradient, then fail the worker loop — a
+    /// deterministic stand-in for process death mid-epoch.
+    Kill {
+        /// Outer epoch whose `ShardGrad` send triggers the fault.
+        epoch: usize,
+    },
+    /// Stall for `ms` (+ deterministic jitter) *while holding the write
+    /// lock* before sending the epoch-`epoch` shard gradient — heartbeats
+    /// stall too, which is exactly what drives the master's SUSPECT
+    /// transition for a slow-but-alive peer.
+    Delay {
+        /// Outer epoch whose `ShardGrad` send triggers the fault.
+        epoch: usize,
+        /// Base stall in milliseconds (jitter adds up to 25% more).
+        ms: u64,
+    },
+    /// Silently swallow the epoch-`epoch` shard gradient frame: the
+    /// master sees a live, heartbeating worker that never delivers, and
+    /// must OFFLINE it on the epoch deadline rather than on liveness.
+    Drop {
+        /// Outer epoch whose `ShardGrad` send is swallowed.
+        epoch: usize,
+    },
+}
+
+/// Deterministic fault-injection hook for the TCP worker transport, used
+/// by the elastic-cluster tests and the CI chaos job. Faults trigger on
+/// the `ShardGrad` send of the target epoch (once per run, since epochs
+/// don't repeat); the jitter of [`FaultKind::Delay`] is a pure function
+/// of `seed`, so a chaos run replays byte-for-byte.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The fault to inject.
+    pub kind: FaultKind,
+    /// Seed for the deterministic delay jitter.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { kind: FaultKind::None, seed: 0 }
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan (production).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a CLI fault spec: `none`, `kill@<epoch>`, `drop@<epoch>`,
+    /// or `delay@<epoch>:<ms>`.
+    pub fn parse(s: &str, seed: u64) -> Result<FaultPlan> {
+        let bad = || {
+            Error::Config(format!(
+                "bad fault spec '{s}' (expected none | kill@<epoch> | drop@<epoch> | \
+                 delay@<epoch>:<ms>)"
+            ))
+        };
+        if s == "none" {
+            return Ok(FaultPlan { kind: FaultKind::None, seed });
+        }
+        let (what, rest) = s.split_once('@').ok_or_else(bad)?;
+        let kind = match what {
+            "kill" => FaultKind::Kill { epoch: rest.parse().map_err(|_| bad())? },
+            "drop" => FaultKind::Drop { epoch: rest.parse().map_err(|_| bad())? },
+            "delay" => {
+                let (e, ms) = rest.split_once(':').ok_or_else(bad)?;
+                FaultKind::Delay {
+                    epoch: e.parse().map_err(|_| bad())?,
+                    ms: ms.parse().map_err(|_| bad())?,
+                }
+            }
+            _ => return Err(bad()),
+        };
+        Ok(FaultPlan { kind, seed })
+    }
+
+    /// The stall for a `Delay` fault: `ms` plus up to 25% deterministic
+    /// jitter derived from the seed via SplitMix64.
+    pub fn delay_with_jitter(&self, ms: u64) -> Duration {
+        let mut s = self.seed ^ 0x9E37_79B9_7F4A_7C15;
+        Duration::from_millis(ms + crate::rng::splitmix64(&mut s) % (ms / 4 + 1))
+    }
+}
+
+// ---- TCP worker ---------------------------------------------------------
+
 /// Worker endpoint over a TCP connection to the master.
+///
+/// In elastic mode ([`TcpWorker::start_heartbeat`]) a background thread
+/// writes [`ToMaster::Heartbeat`] frames at a fixed interval; data-plane
+/// sends and beacons then serialize on a shared write handle so frames
+/// never interleave on the stream. Reads stay on the original handle —
+/// TCP is full-duplex, so the beater never blocks `recv`.
 pub struct TcpWorker {
     stream: TcpStream,
     worker: usize,
+    fault: FaultPlan,
+    /// `Some` once heartbeats run: every write goes through this lock.
+    shared_writer: Option<Arc<Mutex<TcpStream>>>,
+    /// Last *completed* epoch, published to the beater thread.
+    hb_epoch: Arc<AtomicU64>,
+    hb_stop: Arc<AtomicBool>,
+    hb_thread: Option<JoinHandle<()>>,
 }
 
 impl TcpWorker {
     /// Wrap an already-handshaken stream for worker `worker`.
     pub fn new(stream: TcpStream, worker: usize) -> Self {
-        TcpWorker { stream, worker }
+        TcpWorker {
+            stream,
+            worker,
+            fault: FaultPlan::none(),
+            shared_writer: None,
+            hb_epoch: Arc::new(AtomicU64::new(0)),
+            hb_stop: Arc::new(AtomicBool::new(false)),
+            hb_thread: None,
+        }
+    }
+
+    /// Attach a fault-injection plan (tests / chaos CI).
+    pub fn with_fault(mut self, fault: FaultPlan) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Start the elastic-mode liveness beater: a background thread that
+    /// writes one [`ToMaster::Heartbeat`] every `interval`. Idempotent
+    /// per transport (second call is an error). The thread stops (and is
+    /// joined) on drop, or as soon as a write fails — a vanished master
+    /// needs no beacons.
+    pub fn start_heartbeat(&mut self, interval: Duration) -> Result<()> {
+        if self.hb_thread.is_some() {
+            return Err(Error::Config("heartbeat already started".into()));
+        }
+        let ws = Arc::new(Mutex::new(self.stream.try_clone()?));
+        self.shared_writer = Some(ws.clone());
+        let stop = self.hb_stop.clone();
+        let epoch = self.hb_epoch.clone();
+        let worker = self.worker;
+        self.hb_thread = Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let msg = ToMaster::Heartbeat {
+                    worker,
+                    epoch: epoch.load(Ordering::Relaxed) as usize,
+                };
+                let buf = frame::encode_to_master(&msg);
+                let Ok(mut w) = ws.lock() else { return };
+                if frame::write_frame(&mut *w, &buf).is_err() {
+                    // Master gone; the data plane will notice on its own.
+                    return;
+                }
+            }
+        }));
+        Ok(())
     }
 
     /// Best-effort `WorkerDown` notification before dying — the TCP
@@ -460,7 +685,42 @@ impl TcpWorker {
     /// the master is already gone there is nobody left to deadlock.
     pub fn send_down(&mut self) {
         let msg = ToMaster::WorkerDown { worker: self.worker };
-        let _ = frame::write_frame(&mut self.stream, &frame::encode_to_master(&msg));
+        let buf = frame::encode_to_master(&msg);
+        match &self.shared_writer {
+            Some(ws) => {
+                if let Ok(mut w) = ws.lock() {
+                    let _ = frame::write_frame(&mut *w, &buf);
+                }
+            }
+            None => {
+                let _ = frame::write_frame(&mut self.stream, &buf);
+            }
+        }
+    }
+
+    /// Write one encoded data frame, through the shared write lock when
+    /// the beater is running.
+    fn write_msg(&mut self, msg: &ToMaster) -> Result<()> {
+        let buf = frame::encode_to_master(msg);
+        let r = match &self.shared_writer {
+            Some(ws) => {
+                let mut w = ws
+                    .lock()
+                    .map_err(|_| Error::Protocol("worker write lock poisoned".into()))?;
+                frame::write_frame(&mut *w, &buf)
+            }
+            None => frame::write_frame(&mut self.stream, &buf),
+        };
+        r.map_err(|_| Error::Protocol("master gone".into()))
+    }
+}
+
+impl Drop for TcpWorker {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.hb_thread.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -478,8 +738,40 @@ impl WorkerTransport for TcpWorker {
     }
 
     fn send(&mut self, msg: ToMaster) -> Result<()> {
-        frame::write_frame(&mut self.stream, &frame::encode_to_master(&msg))
-            .map_err(|_| Error::Protocol("master gone".into()))
+        // Fault injection triggers on the ShardGrad of the target epoch.
+        if let ToMaster::ShardGrad { epoch, .. } = &msg {
+            match self.fault.kind {
+                FaultKind::Kill { epoch: e } if *epoch == e => {
+                    self.hb_stop.store(true, Ordering::Relaxed);
+                    let _ = self.stream.shutdown(Shutdown::Both);
+                    return Err(Error::Protocol(format!(
+                        "fault injection: worker {} killed at epoch {e}",
+                        self.worker
+                    )));
+                }
+                FaultKind::Drop { epoch: e } if *epoch == e => return Ok(()),
+                FaultKind::Delay { epoch: e, ms } if *epoch == e => {
+                    let stall = self.fault.delay_with_jitter(ms);
+                    match &self.shared_writer {
+                        // Sleep *inside* the write lock so heartbeats
+                        // stall with us — the point of the fault.
+                        Some(ws) => {
+                            let _w = ws.lock().map_err(|_| {
+                                Error::Protocol("worker write lock poisoned".into())
+                            })?;
+                            std::thread::sleep(stall);
+                        }
+                        None => std::thread::sleep(stall),
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let ToMaster::LocalIterate { epoch, .. } = &msg {
+            // Publish progress for the beater: this epoch is complete.
+            self.hb_epoch.store(*epoch as u64 + 1, Ordering::Relaxed);
+        }
+        self.write_msg(&msg)
     }
 }
 
@@ -618,6 +910,120 @@ mod tests {
         assert!(start.elapsed() < Duration::from_secs(10));
         // death is not wire traffic
         assert_eq!(m.comm(), (0, 0));
+        m.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_parses_and_rejects() {
+        assert_eq!(FaultPlan::parse("none", 7).unwrap().kind, FaultKind::None);
+        assert_eq!(
+            FaultPlan::parse("kill@3", 7).unwrap().kind,
+            FaultKind::Kill { epoch: 3 }
+        );
+        assert_eq!(
+            FaultPlan::parse("drop@0", 7).unwrap().kind,
+            FaultKind::Drop { epoch: 0 }
+        );
+        assert_eq!(
+            FaultPlan::parse("delay@2:500", 9).unwrap().kind,
+            FaultKind::Delay { epoch: 2, ms: 500 }
+        );
+        for bad in ["", "kill", "kill@", "kill@x", "delay@2", "delay@2:", "pause@1"] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted '{bad}'");
+        }
+        // jitter is deterministic in the seed and bounded by 25%
+        let p = FaultPlan::parse("delay@1:400", 1234).unwrap();
+        let d1 = p.delay_with_jitter(400);
+        let d2 = p.delay_with_jitter(400);
+        assert_eq!(d1, d2);
+        assert!(d1 >= Duration::from_millis(400) && d1 <= Duration::from_millis(500));
+    }
+
+    #[test]
+    fn heartbeats_flow_unmetered_and_recv_timeout_polls() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let meter = ByteMeter::new();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let f = match frame::read_frame(&mut s).unwrap() {
+                FrameRead::Frame(f) => f,
+                other => panic!("{other:?}"),
+            };
+            let (_, _, k, _) = frame::parts(&f).unwrap();
+            frame::write_frame(&mut s, &frame::encode_control(frame::TAG_READY, k, &[])).unwrap();
+            let mut t = TcpWorker::new(s, k as usize);
+            t.start_heartbeat(Duration::from_millis(10)).unwrap();
+            assert!(t.start_heartbeat(Duration::from_millis(10)).is_err());
+            // a data frame through the shared writer still works
+            t.send(ToMaster::ShardGrad { worker: 0, epoch: 0, zsum: vec![2.0], count: 1 })
+                .unwrap();
+            // run until the master stops us; drop joins the beater
+            assert!(matches!(t.recv().unwrap(), ToWorker::Stop));
+        });
+        let mut m =
+            TcpMaster::accept(&listener, 1, meter.clone(), &[], Duration::from_secs(10)).unwrap();
+        assert!(m.peer_addr(0).is_some());
+        assert!(m.peer_addr(1).is_none());
+        // collect until we have the data frame and at least one beacon
+        let (mut beats, mut grads) = (0, 0);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (beats == 0 || grads == 0) && Instant::now() < deadline {
+            match m.recv_timeout(Duration::from_millis(50)).unwrap() {
+                Some(ToMaster::Heartbeat { worker: 0, .. }) => beats += 1,
+                Some(ToMaster::ShardGrad { worker: 0, .. }) => grads += 1,
+                Some(other) => panic!("{other:?}"),
+                None => {}
+            }
+        }
+        assert!(beats > 0, "no heartbeat within 10s");
+        assert_eq!(grads, 1);
+        // only the ShardGrad was metered: beacons are liveness, not traffic
+        let grad_bytes =
+            ToMaster::ShardGrad { worker: 0, epoch: 0, zsum: vec![2.0], count: 1 }.wire_bytes();
+        assert_eq!(m.comm(), (grad_bytes, 1));
+        m.shutdown();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn drop_fault_swallows_the_frame_and_kill_severs() {
+        let mut p = FaultPlan::none();
+        p.kind = FaultKind::Drop { epoch: 1 };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let meter = ByteMeter::new();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let f = match frame::read_frame(&mut s).unwrap() {
+                FrameRead::Frame(f) => f,
+                other => panic!("{other:?}"),
+            };
+            let (_, _, k, _) = frame::parts(&f).unwrap();
+            frame::write_frame(&mut s, &frame::encode_control(frame::TAG_READY, k, &[])).unwrap();
+            let mut t = TcpWorker::new(s, k as usize).with_fault(p);
+            // epoch 1 is swallowed (Ok), epoch 0 goes through
+            t.send(ToMaster::ShardGrad { worker: 0, epoch: 1, zsum: vec![9.0; 8], count: 1 })
+                .unwrap();
+            t.send(ToMaster::ShardGrad { worker: 0, epoch: 0, zsum: vec![1.0], count: 1 })
+                .unwrap();
+            // kill fault: sever + Err
+            t.fault = FaultPlan { kind: FaultKind::Kill { epoch: 2 }, seed: 0 };
+            let e = t
+                .send(ToMaster::ShardGrad { worker: 0, epoch: 2, zsum: vec![], count: 0 })
+                .unwrap_err();
+            assert!(e.to_string().contains("fault injection"), "{e}");
+        });
+        let mut m =
+            TcpMaster::accept(&listener, 1, meter, &[], Duration::from_secs(10)).unwrap();
+        // the only data frame that arrives is epoch 0; then the sever
+        // surfaces as the WorkerDown sentinel
+        match m.recv().unwrap() {
+            ToMaster::ShardGrad { epoch: 0, zsum, .. } => assert_eq!(zsum, vec![1.0]),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(m.recv().unwrap(), ToMaster::WorkerDown { worker: 0 }));
+        client.join().unwrap();
         m.shutdown();
     }
 }

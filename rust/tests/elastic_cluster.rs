@@ -1,0 +1,322 @@
+//! Elastic-cluster contracts (DESIGN.md §11), over real loopback TCP:
+//!
+//! * elastic mode with every worker alive is bit-identical to strict mode
+//!   (and therefore to the in-process wire) — iterates, objectives, and
+//!   byte totals, which also pins that heartbeats are unmetered;
+//! * losing a worker mid-run degrades the run instead of aborting it, and
+//!   the degradation event carries the Lemma-5 γ proxy of the surviving
+//!   sub-partition;
+//! * resume-from-checkpoint is deterministic: two fresh clusters resumed
+//!   from the same checkpoint produce bit-identical trajectories;
+//! * strict mode on the same fault fails fast with `Error::Protocol`
+//!   naming the peer's socket address;
+//! * the worker connect retry uses bounded exponential backoff and
+//!   reports its attempts on exhaustion.
+
+use std::time::{Duration, Instant};
+
+use pscope::config::{Model, PscopeConfig, RunMode};
+use pscope::coordinator::checkpoint::{self, Checkpoint};
+use pscope::coordinator::elastic::ElasticOpts;
+use pscope::coordinator::remote::{serve_worker, MasterEndpoint, RunSpec, WorkerOpts};
+use pscope::coordinator::{train_with, TrainOutput};
+use pscope::data::source::DataSource;
+use pscope::data::synth;
+use pscope::error::Result;
+use pscope::loss::Reg;
+use pscope::net::transport::FaultPlan;
+use pscope::net::NetModel;
+use pscope::partition::Partitioner;
+
+fn base_cfg(p: usize, epochs: usize) -> PscopeConfig {
+    PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 1e-3, lam2: 1e-3 },
+        seed: 5,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    }
+}
+
+fn elastic_cfg(p: usize, epochs: usize) -> PscopeConfig {
+    PscopeConfig {
+        mode: RunMode::Elastic,
+        heartbeat_ms: 25,
+        ..base_cfg(p, epochs)
+    }
+}
+
+/// Spin up a loopback cluster — master endpoint + one genuine worker
+/// client thread per entry of `faults` — and train in elastic mode.
+/// Returns the master's outcome plus every worker thread's result (a
+/// killed worker is *supposed* to come back `Err`).
+fn elastic_train(
+    ds: &pscope::data::Dataset,
+    part: &pscope::partition::Partition,
+    cfg: &PscopeConfig,
+    data_seed: u64,
+    part_seed: u64,
+    faults: &[&str],
+    resume: Option<&Checkpoint>,
+) -> (Result<TrainOutput>, Vec<Result<()>>) {
+    assert_eq!(faults.len(), part.p());
+    let src = DataSource::Synth { name: "tiny".into(), seed: data_seed };
+    let spec = RunSpec::derive(ds, part, cfg, &src, "uniform", part_seed, None).unwrap();
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+    let handles: Vec<_> = faults
+        .iter()
+        .map(|f| {
+            let addr = addr.clone();
+            let opts = WorkerOpts {
+                connect_timeout: Duration::from_secs(30),
+                timeout: Duration::from_secs(30),
+                fault: FaultPlan::parse(f, 0).unwrap(),
+            };
+            std::thread::spawn(move || pscope::coordinator::remote::serve_worker_with(&addr, &opts))
+        })
+        .collect();
+    let out = ep.train_elastic(
+        ds,
+        part,
+        cfg,
+        NetModel::ten_gbe(),
+        &spec,
+        Duration::from_secs(30),
+        &ElasticOpts::from_config(cfg),
+        resume,
+    );
+    let joined = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (out, joined)
+}
+
+#[test]
+fn elastic_without_faults_is_bit_identical_to_strict() {
+    // With every worker alive, the elastic loop must be indistinguishable
+    // from strict mode: same fold order, same 1/p average, and unmetered
+    // heartbeats — so iterates, objectives, AND byte totals all match the
+    // in-process strict run exactly (which tests/net_accounting.rs pins
+    // equal to strict TCP).
+    let (data_seed, part_seed, p, epochs) = (31u64, 1u64, 3usize, 4usize);
+    let ds = synth::tiny(data_seed).generate();
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let strict = train_with(&ds, &part, &base_cfg(p, epochs), None, NetModel::ten_gbe()).unwrap();
+
+    let cfg = elastic_cfg(p, epochs);
+    let (out, workers) = elastic_train(&ds, &part, &cfg, data_seed, part_seed,
+        &["none", "none", "none"], None);
+    let out = out.unwrap();
+    for r in workers {
+        r.unwrap();
+    }
+
+    assert!(out.degraded.is_empty(), "degradation events in a healthy run");
+    assert_eq!(out.epochs_run, strict.epochs_run);
+    for j in 0..strict.w.len() {
+        assert_eq!(
+            strict.w[j].to_bits(),
+            out.w[j].to_bits(),
+            "coord {j}: strict {} vs elastic {}",
+            strict.w[j],
+            out.w[j]
+        );
+    }
+    // byte-meter identity: if a single heartbeat were metered these totals
+    // would disagree (the beacons definitely flowed — 25 ms interval)
+    assert_eq!(strict.comm, out.comm, "heartbeats leaked into the byte meter");
+    assert_eq!(strict.trace.points.len(), out.trace.points.len());
+    for (a, b) in strict.trace.points.iter().zip(&out.trace.points) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "epoch {}", a.epoch);
+        assert_eq!((a.comm_bytes, a.comm_msgs), (b.comm_bytes, b.comm_msgs), "epoch {}", a.epoch);
+    }
+}
+
+#[test]
+fn worker_loss_degrades_run_and_reports_gamma() {
+    // p = 4, one worker killed at epoch 2: the run must complete all
+    // epochs on the 3 survivors, log exactly one degradation event with a
+    // finite γ proxy for the surviving sub-partition, and keep writing
+    // checkpoints to the end.
+    let (data_seed, part_seed, p, epochs) = (32u64, 1u64, 4usize, 6usize);
+    let ds = synth::tiny(data_seed).generate();
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let dir = std::env::temp_dir().join(format!("pscope_elastic_kill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = elastic_cfg(p, epochs);
+    cfg.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.checkpoint_every = 1;
+
+    let (out, workers) = elastic_train(&ds, &part, &cfg, data_seed, part_seed,
+        &["kill@2", "none", "none", "none"], None);
+    let out = out.expect("elastic master must survive one lost worker");
+
+    assert_eq!(out.epochs_run, epochs, "degraded run stopped early");
+    assert_eq!(out.degraded.len(), 1, "expected exactly one degradation event");
+    let ev = &out.degraded[0];
+    assert_eq!(ev.survivors, p - 1);
+    assert!(ev.epoch >= 2, "fault fires at epoch 2, event at {}", ev.epoch);
+    assert!(
+        ev.gamma_surviving.is_finite() && ev.gamma_surviving > 0.0,
+        "gamma proxy of the survivors: {}",
+        ev.gamma_surviving
+    );
+    assert!(
+        ev.gamma_original.is_finite() && ev.gamma_original > 0.0,
+        "gamma proxy of the original partition: {}",
+        ev.gamma_original
+    );
+    // exactly one worker died, and it names the injected fault
+    let errs: Vec<String> = workers
+        .into_iter()
+        .filter_map(|r| r.err().map(|e| format!("{e}")))
+        .collect();
+    assert_eq!(errs.len(), 1, "exactly one worker should fail: {errs:?}");
+    assert!(errs[0].contains("fault injection"), "{}", errs[0]);
+    // checkpoints ran to the end despite the degradation
+    let last = checkpoint::latest(&dir).unwrap().expect("no checkpoint written");
+    let ck = Checkpoint::load(&last).unwrap();
+    assert_eq!(ck.epoch, epochs);
+    assert_eq!(ck.p, p);
+    assert_eq!(ck.part_fingerprint, part.fingerprint());
+    assert_eq!(ck.w.len(), ds.d());
+    for j in 0..ds.d() {
+        assert_eq!(ck.w[j].to_bits(), out.w[j].to_bits(), "checkpoint coord {j}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_from_checkpoint_is_deterministic() {
+    // The rejoin contract (restart ≡ restart): a run that lost a worker
+    // leaves a checkpoint; two *fresh, full* clusters resumed from that
+    // checkpoint must produce bit-identical trajectories, because every
+    // worker rebuilds shard + RNG deterministically from the job spec.
+    let (data_seed, part_seed, p) = (33u64, 1u64, 2usize);
+    let ds = synth::tiny(data_seed).generate();
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let dir = std::env::temp_dir().join(format!("pscope_elastic_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // first run: 4 epochs, loses worker at epoch 2, checkpoints throughout
+    let mut cfg = elastic_cfg(p, 4);
+    cfg.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.checkpoint_every = 1;
+    let (first, _workers) =
+        elastic_train(&ds, &part, &cfg, data_seed, part_seed, &["kill@2", "none"], None);
+    let first = first.unwrap();
+    assert_eq!(first.degraded.len(), 1);
+    let ck = Checkpoint::load(&checkpoint::latest(&dir).unwrap().unwrap()).unwrap();
+    assert_eq!(ck.epoch, 4);
+
+    // resume twice with full worker sets, no further checkpoint writes
+    let mut cfg2 = elastic_cfg(p, 8);
+    cfg2.checkpoint_every = 0;
+    let mut resumed = Vec::new();
+    for _ in 0..2 {
+        let (out, workers) =
+            elastic_train(&ds, &part, &cfg2, data_seed, part_seed, &["none", "none"], Some(&ck));
+        let out = out.unwrap();
+        for r in workers {
+            r.unwrap();
+        }
+        assert!(out.degraded.is_empty());
+        assert_eq!(out.epochs_run, 8);
+        assert_eq!(out.trace.points.first().unwrap().epoch, 4, "trace must start at the resume");
+        resumed.push(out);
+    }
+    let (a, b) = (&resumed[0], &resumed[1]);
+    for j in 0..a.w.len() {
+        assert_eq!(a.w[j].to_bits(), b.w[j].to_bits(), "resumed runs diverge at coord {j}");
+    }
+    assert_eq!(a.comm, b.comm);
+    for (x, y) in a.trace.points.iter().zip(&b.trace.points) {
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "epoch {}", x.epoch);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_rejects_a_mismatched_checkpoint() {
+    // A checkpoint from a different partition must be refused before any
+    // epoch runs — silently training from a foreign iterate would corrupt
+    // the trajectory invisibly.
+    let (data_seed, part_seed, p) = (35u64, 1u64, 2usize);
+    let ds = synth::tiny(data_seed).generate();
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let ck = Checkpoint {
+        epoch: 1,
+        p,
+        seed: 5,
+        part_fingerprint: part.fingerprint() ^ 1,
+        w: vec![0.0; ds.d()],
+    };
+    let cfg = elastic_cfg(p, 3);
+    let (out, workers) =
+        elastic_train(&ds, &part, &cfg, data_seed, part_seed, &["none", "none"], Some(&ck));
+    let err = out.expect_err("mismatched checkpoint accepted");
+    assert!(format!("{err}").contains("fingerprint"), "{err}");
+    // the cluster tears down cleanly: workers drain on Stop, not errors
+    for r in workers {
+        r.unwrap();
+    }
+}
+
+#[test]
+fn strict_mode_fails_fast_and_names_the_peer() {
+    // The same kill fault under strict mode: the master must abort with
+    // Error::Protocol quickly, and the message must carry the worker's
+    // socket address (the elastic PR's observability satellite).
+    let (data_seed, part_seed, p) = (34u64, 1u64, 2usize);
+    let ds = synth::tiny(data_seed).generate();
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let cfg = base_cfg(p, 10);
+    assert_eq!(cfg.mode, RunMode::Strict);
+    let src = DataSource::Synth { name: "tiny".into(), seed: data_seed };
+    let spec = RunSpec::derive(&ds, &part, &cfg, &src, "uniform", part_seed, None).unwrap();
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+    let handles: Vec<_> = ["kill@1", "none"]
+        .iter()
+        .map(|f| {
+            let addr = addr.clone();
+            let opts = WorkerOpts {
+                connect_timeout: Duration::from_secs(30),
+                timeout: Duration::from_secs(30),
+                fault: FaultPlan::parse(f, 0).unwrap(),
+            };
+            std::thread::spawn(move || pscope::coordinator::remote::serve_worker_with(&addr, &opts))
+        })
+        .collect();
+    let start = Instant::now();
+    let err = ep
+        .train(&ds, &part, &cfg, NetModel::zero(), &spec, Duration::from_secs(30))
+        .expect_err("strict mode must abort on a killed worker");
+    assert!(start.elapsed() < Duration::from_secs(30), "abort took {:?}", start.elapsed());
+    let msg = format!("{err}");
+    assert!(msg.contains("died"), "unexpected message: {msg}");
+    assert!(msg.contains("127.0.0.1"), "peer address missing from: {msg}");
+    // one worker reports the injected fault; the survivor drains cleanly
+    let results: Vec<Result<()>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let n_err = results.iter().filter(|r| r.is_err()).count();
+    assert_eq!(n_err, 1, "{results:?}");
+}
+
+#[test]
+fn connect_retry_reports_attempts_and_deadline() {
+    // Grab an ephemeral port, then close the listener: connecting there
+    // must retry with backoff until the deadline and then report how hard
+    // it tried.
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let start = Instant::now();
+    let err = serve_worker(&dead_addr, Duration::from_millis(400))
+        .expect_err("connected to a closed port?");
+    let elapsed = start.elapsed();
+    assert!(elapsed >= Duration::from_millis(350), "gave up too early: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(10), "retried past the deadline: {elapsed:?}");
+    let msg = format!("{err}");
+    assert!(msg.contains("cannot connect"), "{msg}");
+    assert!(msg.contains("attempts"), "exhaustion must report retry attempts: {msg}");
+}
