@@ -231,6 +231,68 @@ fn main() {
         t_epoch.median,
     );
 
+    // ---- warm vs cold start along a λ path (the serve-pool payoff) ----
+    // Solve at λ_hi, then solve λ_lo twice under the same half-gap
+    // early-stop protocol `pscope serve` uses: cold from zeros, warm from
+    // the λ_hi iterate (train_with_opts ships the exact bits, like the
+    // JobSetup frame). The epoch counts land in BENCH_*.json so the
+    // λ-path speedup regresses visibly.
+    {
+        use pscope::coordinator::train_with_opts;
+        use pscope::optim::fista::reference_optimum;
+        let zero_w = vec![0.0; ds.d()];
+        let mk = |lam1: f64| {
+            let r = Reg { lam1, lam2: 1e-5 };
+            let mut cfg = PscopeConfig {
+                p: 8,
+                outer_iters: 40,
+                reg: r,
+                seed: 42,
+                record_every: 1,
+                ..PscopeConfig::for_dataset("rcv1_like", Model::Logistic)
+            };
+            let obj = Objective::new(&ds, pscope::loss::Loss::Logistic, r);
+            let opt = reference_optimum(&obj, if quick { 5_000 } else { 50_000 });
+            cfg.target_objective = opt.objective;
+            cfg.tol = 0.5 * (obj.value(&zero_w) - opt.objective);
+            cfg
+        };
+        let cfg_hi = mk(1e-3);
+        let cfg_lo = mk(1e-4);
+        let w_hi = train_with(&ds, &part, &cfg_hi, None, NetModel::zero()).unwrap().w;
+        let cold = train_with(&ds, &part, &cfg_lo, None, NetModel::zero()).unwrap();
+        let warm =
+            train_with_opts(&ds, &part, &cfg_lo, None, NetModel::zero(), Some(&w_hi)).unwrap();
+        let t_cold = time_fn(s(1), s(3), || {
+            std::hint::black_box(train_with(&ds, &part, &cfg_lo, None, NetModel::zero()).unwrap());
+        });
+        let t_warm = time_fn(s(1), s(3), || {
+            std::hint::black_box(
+                train_with_opts(&ds, &part, &cfg_lo, None, NetModel::zero(), Some(&w_hi)).unwrap(),
+            );
+        });
+        table.row_timed(
+            &[
+                "λ-path cold start (λ=1e-4, half-gap stop)".into(),
+                human_time(t_cold.median),
+                format!("{} epochs from zeros", cold.epochs_run),
+            ],
+            t_cold.median,
+        );
+        table.row_timed(
+            &[
+                "λ-path warm start (w0 from λ=1e-3)".into(),
+                human_time(t_warm.median),
+                format!(
+                    "{} epochs, {:.1}x vs cold",
+                    warm.epochs_run,
+                    t_cold.median / t_warm.median
+                ),
+            ],
+            t_warm.median,
+        );
+    }
+
     // ---- PJRT artifact execution ----
     if std::path::Path::new("artifacts/manifest.json").exists() && !quick {
         let dsd = synth::cov_like(42).with_n(1500).generate();

@@ -1,6 +1,7 @@
 //! Experiment configuration: model/regularization/coordination parameters,
 //! per-dataset defaults (Table 1), and a TOML-subset file format.
 
+pub mod sweep;
 pub mod toml_lite;
 
 use crate::error::{Error, Result};

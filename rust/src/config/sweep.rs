@@ -1,0 +1,611 @@
+//! Sweep manifests for `pscope serve` — a validated TOML section
+//! describing a *queue* of training jobs over one dataset.
+//!
+//! A manifest has one `[sweep]` section (the dataset, partition, and
+//! defaults every job inherits) and one `[job.<name>]` section per job:
+//!
+//! ```toml
+//! [sweep]
+//! name = "lam_path"
+//! dataset = "shards/rcv1_like"   # preset, libsvm path, or shard dir
+//! stop_at_half_gap = true        # FISTA reference + half-gap target
+//!
+//! [job.path]
+//! lam1_grid = "1e-3,1e-4,1e-5"   # expands to path_0, path_1, path_2
+//! warm_chain = true              # path_i warm-starts from path_{i-1}
+//!
+//! [job.cold]
+//! lam1 = 1e-5
+//! priority = -1                  # runs after the default-priority jobs
+//! ```
+//!
+//! Parsing is strict: unknown keys, duplicate keys, duplicate job names
+//! (including post-grid-expansion collisions), and warm-start references
+//! to jobs that are not scheduled earlier are all hard errors. The λ
+//! *values* are deliberately **not** validated here — a negative λ parses
+//! fine and fails at job-validation time ([`PscopeConfig::prox_reg`]),
+//! which is exactly the per-job failure-isolation path the scheduler
+//! must survive.
+//!
+//! Scheduling order (the order of [`SweepManifest::jobs`]): higher
+//! `priority` first, manifest order within equal priorities — FIFO with
+//! priorities. Grid expansion happens before the sort, so a chain job's
+//! links can in principle be reordered by `priority`; the warm-start
+//! validation catches a chain whose source would run later.
+
+use std::collections::HashSet;
+
+use crate::config::toml_lite::{self, Value};
+use crate::config::{Model, PscopeConfig, RegKind};
+use crate::error::{Error, Result};
+use crate::loss::SmoothLoss;
+
+/// A parsed, validated sweep: dataset facts + job-level defaults +
+/// the job queue in schedule order.
+#[derive(Clone, Debug)]
+pub struct SweepManifest {
+    /// Sweep name — names the `bench_out/BENCH_serve_<name>.json` and
+    /// summary artifacts.
+    pub name: String,
+    /// Dataset spec, resolved exactly like `pscope train --dataset`
+    /// (preset name, `data/<name>.libsvm`, or an ingest shard dir).
+    pub dataset: String,
+    /// Data + partition + run seed (one knob, like `pscope train --seed`).
+    pub seed: u64,
+    /// Worker count; `None` = config default, and for a shard-dir dataset
+    /// the manifest's ingest-time `p` always wins (an explicit conflicting
+    /// value is an error at serve time).
+    pub p: Option<usize>,
+    /// Partition strategy; same shard-dir veto as `p`.
+    pub partition: Option<String>,
+    /// Model preset the per-job configs start from.
+    pub model: Model,
+    /// Sweep-wide override: outer iterations T.
+    pub outer_iters: Option<usize>,
+    /// Sweep-wide override: inner steps M.
+    pub m_inner: Option<usize>,
+    /// Sweep-wide override: learning rate η.
+    pub eta: Option<f64>,
+    /// Sweep-wide override: trace recording stride.
+    pub record_every: Option<usize>,
+    /// Sweep-wide override: gradient-pass threads.
+    pub grad_threads: Option<usize>,
+    /// When set, the scheduler computes a FISTA reference optimum per
+    /// distinct objective and gives every job the half-gap early-stop
+    /// target — the protocol that makes warm-vs-cold epoch counts
+    /// comparable.
+    pub stop_at_half_gap: bool,
+    /// FISTA iteration cap for the reference solves.
+    pub reference_iters: usize,
+    /// The job queue, already in schedule order.
+    pub jobs: Vec<SweepJob>,
+}
+
+/// One job of a sweep: overrides layered onto the sweep defaults.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    /// Unique job name (grid entries get `_<i>` suffixes).
+    pub name: String,
+    /// Smooth-loss override (`loss = "huber:0.5"` etc.).
+    pub loss: Option<SmoothLoss>,
+    /// Regularizer-kind override (`reg = "group:8"` etc.).
+    pub reg_kind: Option<RegKind>,
+    /// λ₁ override (unvalidated here; see module docs).
+    pub lam1: Option<f64>,
+    /// λ₂ override (unvalidated here).
+    pub lam2: Option<f64>,
+    /// Per-job outer iterations.
+    pub outer_iters: Option<usize>,
+    /// Per-job inner steps.
+    pub m_inner: Option<usize>,
+    /// Per-job learning rate.
+    pub eta: Option<f64>,
+    /// Higher runs earlier; ties keep manifest order.
+    pub priority: i64,
+    /// Name of an earlier-scheduled job whose final iterate seeds this
+    /// job's `w0` (exact bits, shipped in the `JobSetup` frame).
+    pub warm_start: Option<String>,
+}
+
+impl SweepJob {
+    fn new(name: &str) -> SweepJob {
+        SweepJob {
+            name: name.to_string(),
+            loss: None,
+            reg_kind: None,
+            lam1: None,
+            lam2: None,
+            outer_iters: None,
+            m_inner: None,
+            eta: None,
+            priority: 0,
+            warm_start: None,
+        }
+    }
+}
+
+/// A job section mid-parse: the grid/chain keys expand after all keys of
+/// the section are seen.
+struct RawJob {
+    job: SweepJob,
+    lam1_grid: Option<Vec<f64>>,
+    warm_chain: bool,
+}
+
+fn as_u64(v: &Value, key: &str) -> Result<u64> {
+    let f = v.as_f64_or()?;
+    if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
+        Ok(f as u64)
+    } else {
+        Err(Error::Config(format!("sweep manifest: {key} must be a non-negative integer, got {f}")))
+    }
+}
+
+fn as_i64(v: &Value, key: &str) -> Result<i64> {
+    let f = v.as_f64_or()?;
+    if f.fract() == 0.0 && (i64::MIN as f64..=i64::MAX as f64).contains(&f) {
+        Ok(f as i64)
+    } else {
+        Err(Error::Config(format!("sweep manifest: {key} must be an integer, got {f}")))
+    }
+}
+
+fn as_bool(v: &Value, key: &str) -> Result<bool> {
+    match v {
+        Value::Bool(b) => Ok(*b),
+        other => {
+            Err(Error::Config(format!("sweep manifest: {key} must be a boolean, got {other:?}")))
+        }
+    }
+}
+
+/// Parse a comma-separated λ grid (`"1e-3, 1e-4"`). One entry is a legal
+/// grid (it expands to a single `<name>_0` job); an empty entry is not.
+fn parse_grid(s: &str, key: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            return Err(Error::Config(format!("sweep manifest: {key} has an empty grid entry")));
+        }
+        out.push(
+            t.parse::<f64>()
+                .map_err(|e| Error::Config(format!("sweep manifest: {key} entry {t:?}: {e}")))?,
+        );
+    }
+    Ok(out)
+}
+
+impl SweepManifest {
+    /// Parse and fully validate a sweep manifest. See the module docs for
+    /// the accepted grammar and what is (and is not) validated here.
+    pub fn parse(text: &str) -> Result<SweepManifest> {
+        let pairs = toml_lite::parse(text).map_err(Error::Config)?;
+        let mut m = SweepManifest {
+            name: String::new(),
+            dataset: "tiny".into(),
+            seed: 42,
+            p: None,
+            partition: None,
+            model: Model::Logistic,
+            outer_iters: None,
+            m_inner: None,
+            eta: None,
+            record_every: None,
+            grad_threads: None,
+            stop_at_half_gap: false,
+            reference_iters: 50_000,
+            jobs: Vec::new(),
+        };
+        let mut raws: Vec<RawJob> = Vec::new();
+        let mut seen_keys: HashSet<String> = HashSet::new();
+        for (key, v) in &pairs {
+            if !seen_keys.insert(key.clone()) {
+                return Err(Error::Config(format!("sweep manifest: duplicate key {key}")));
+            }
+            if let Some(k) = key.strip_prefix("sweep.") {
+                match k {
+                    "name" => m.name = v.as_str_or()?.to_string(),
+                    "dataset" => m.dataset = v.as_str_or()?.to_string(),
+                    "seed" => m.seed = as_u64(v, key)?,
+                    "p" => m.p = Some(v.as_usize_or()?),
+                    "partition" => m.partition = Some(v.as_str_or()?.to_string()),
+                    "model" => m.model = Model::parse(v.as_str_or()?)?,
+                    "outer_iters" => m.outer_iters = Some(v.as_usize_or()?),
+                    "m_inner" => m.m_inner = Some(v.as_usize_or()?),
+                    "eta" => m.eta = Some(v.as_f64_or()?),
+                    "record_every" => m.record_every = Some(v.as_usize_or()?),
+                    "grad_threads" => m.grad_threads = Some(v.as_usize_or()?),
+                    "stop_at_half_gap" => m.stop_at_half_gap = as_bool(v, key)?,
+                    "reference_iters" => m.reference_iters = v.as_usize_or()?,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "sweep manifest: unknown key sweep.{other}"
+                        )));
+                    }
+                }
+                continue;
+            }
+            if let Some(rest) = key.strip_prefix("job.") {
+                let (job_name, field) = rest.rsplit_once('.').ok_or_else(|| {
+                    Error::Config(format!(
+                        "sweep manifest: bare key {key} (jobs are [job.<name>] sections)"
+                    ))
+                })?;
+                if job_name.is_empty() || job_name.contains('.') {
+                    return Err(Error::Config(format!(
+                        "sweep manifest: bad job name {job_name:?} (must be non-empty, no dots)"
+                    )));
+                }
+                // keys of one section arrive contiguously, so a key for a
+                // non-last job means its section reopened — a duplicate
+                let raw = match raws.last_mut() {
+                    Some(r) if r.job.name == job_name => raws.last_mut().unwrap(),
+                    _ => {
+                        if raws.iter().any(|r| r.job.name == job_name) {
+                            return Err(Error::Config(format!(
+                                "sweep manifest: duplicate job name {job_name:?}"
+                            )));
+                        }
+                        raws.push(RawJob {
+                            job: SweepJob::new(job_name),
+                            lam1_grid: None,
+                            warm_chain: false,
+                        });
+                        raws.last_mut().unwrap()
+                    }
+                };
+                match field {
+                    "loss" => raw.job.loss = Some(SmoothLoss::parse(v.as_str_or()?)?),
+                    "reg" => raw.job.reg_kind = Some(RegKind::parse(v.as_str_or()?)?),
+                    "lam1" => raw.job.lam1 = Some(v.as_f64_or()?),
+                    "lam2" => raw.job.lam2 = Some(v.as_f64_or()?),
+                    "lam1_grid" => raw.lam1_grid = Some(parse_grid(v.as_str_or()?, key)?),
+                    "outer_iters" => raw.job.outer_iters = Some(v.as_usize_or()?),
+                    "m_inner" => raw.job.m_inner = Some(v.as_usize_or()?),
+                    "eta" => raw.job.eta = Some(v.as_f64_or()?),
+                    "priority" => raw.job.priority = as_i64(v, key)?,
+                    "warm_start" => raw.job.warm_start = Some(v.as_str_or()?.to_string()),
+                    "warm_chain" => raw.warm_chain = as_bool(v, key)?,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "sweep manifest: unknown key job.{job_name}.{other}"
+                        )));
+                    }
+                }
+                continue;
+            }
+            return Err(Error::Config(format!(
+                "sweep manifest: unknown key {key} (only [sweep] and [job.<name>] sections)"
+            )));
+        }
+        if m.name.is_empty() {
+            return Err(Error::Config("sweep manifest: missing sweep.name".into()));
+        }
+        // grid / chain expansion
+        for raw in raws {
+            match raw.lam1_grid {
+                None => {
+                    if raw.warm_chain {
+                        return Err(Error::Config(format!(
+                            "sweep manifest: job.{}.warm_chain needs a lam1_grid",
+                            raw.job.name
+                        )));
+                    }
+                    m.jobs.push(raw.job);
+                }
+                Some(grid) => {
+                    if raw.job.lam1.is_some() {
+                        return Err(Error::Config(format!(
+                            "sweep manifest: job.{} sets both lam1 and lam1_grid",
+                            raw.job.name
+                        )));
+                    }
+                    let base = raw.job.name.clone();
+                    for (i, &lam) in grid.iter().enumerate() {
+                        let mut j = raw.job.clone();
+                        j.name = format!("{base}_{i}");
+                        j.lam1 = Some(lam);
+                        if raw.warm_chain && i > 0 {
+                            j.warm_start = Some(format!("{base}_{}", i - 1));
+                        }
+                        m.jobs.push(j);
+                    }
+                }
+            }
+        }
+        if m.jobs.is_empty() {
+            return Err(Error::Config(
+                "sweep manifest: no jobs (every [job.<name>] section needs at least one key)"
+                    .into(),
+            ));
+        }
+        // post-expansion name collisions (job "a_0" vs grid job "a")
+        let mut names = HashSet::new();
+        for j in &m.jobs {
+            if !names.insert(j.name.clone()) {
+                return Err(Error::Config(format!(
+                    "sweep manifest: duplicate job name {:?} (after grid expansion)",
+                    j.name
+                )));
+            }
+        }
+        // schedule order: higher priority first, stable within ties
+        m.jobs.sort_by(|a, b| b.priority.cmp(&a.priority));
+        // warm starts must reference an earlier-scheduled job
+        let mut done: HashSet<&str> = HashSet::new();
+        for j in &m.jobs {
+            if let Some(w) = &j.warm_start {
+                if !done.contains(w.as_str()) {
+                    return Err(Error::Config(format!(
+                        "sweep manifest: job {:?} warm-starts from {w:?}, which is not \
+                         scheduled earlier (missing job, or priorities reordered it)",
+                        j.name
+                    )));
+                }
+            }
+            done.insert(&j.name);
+        }
+        Ok(m)
+    }
+}
+
+/// The exact [`PscopeConfig`] job `job` of sweep `m` trains with, given
+/// the resolved dataset name and worker count. Exposed (rather than kept
+/// inside the scheduler) so tests can rebuild a job's config and pin a
+/// served run bit-identical to the equivalent `pscope train` run.
+pub fn job_config(m: &SweepManifest, job: &SweepJob, dataset_name: &str, p: usize) -> PscopeConfig {
+    let mut cfg = PscopeConfig::for_dataset(dataset_name, m.model);
+    cfg.p = p;
+    cfg.seed = m.seed;
+    if let Some(pn) = &m.partition {
+        cfg.partition = pn.clone();
+    }
+    if let Some(v) = m.outer_iters {
+        cfg.outer_iters = v;
+    }
+    if let Some(v) = m.m_inner {
+        cfg.m_inner = v;
+    }
+    if let Some(v) = m.eta {
+        cfg.eta = v;
+    }
+    if let Some(v) = m.record_every {
+        cfg.record_every = v.max(1);
+    }
+    if let Some(v) = m.grad_threads {
+        cfg.grad_threads = v;
+    }
+    if let Some(l) = job.loss {
+        cfg.loss = Some(l);
+    }
+    if let Some(r) = job.reg_kind {
+        cfg.reg_kind = Some(r);
+    }
+    if let Some(v) = job.lam1 {
+        cfg.reg.lam1 = v;
+    }
+    if let Some(v) = job.lam2 {
+        cfg.reg.lam2 = v;
+    }
+    if let Some(v) = job.outer_iters {
+        cfg.outer_iters = v;
+    }
+    if let Some(v) = job.m_inner {
+        cfg.m_inner = v;
+    }
+    if let Some(v) = job.eta {
+        cfg.eta = v;
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"
+[sweep]
+name = "demo"
+dataset = "tiny"
+p = 2
+outer_iters = 4
+
+[job.cold]
+lam1 = 1e-4
+"#;
+
+    #[test]
+    fn minimal_manifest_parses() {
+        let m = SweepManifest::parse(BASE).unwrap();
+        assert_eq!(m.name, "demo");
+        assert_eq!(m.p, Some(2));
+        assert_eq!(m.jobs.len(), 1);
+        assert_eq!(m.jobs[0].name, "cold");
+        assert_eq!(m.jobs[0].lam1, Some(1e-4));
+        let cfg = job_config(&m, &m.jobs[0], "tiny", 2);
+        assert_eq!(cfg.p, 2);
+        assert_eq!(cfg.outer_iters, 4);
+        assert_eq!(cfg.reg.lam1, 1e-4);
+    }
+
+    #[test]
+    fn one_entry_grid_is_a_single_job() {
+        let text = r#"
+[sweep]
+name = "g1"
+[job.path]
+lam1_grid = "1e-3"
+"#;
+        let m = SweepManifest::parse(text).unwrap();
+        assert_eq!(m.jobs.len(), 1);
+        assert_eq!(m.jobs[0].name, "path_0");
+        assert_eq!(m.jobs[0].lam1, Some(1e-3));
+        assert!(m.jobs[0].warm_start.is_none());
+    }
+
+    #[test]
+    fn grid_with_warm_chain_links_jobs() {
+        let text = r#"
+[sweep]
+name = "g3"
+[job.path]
+lam1_grid = "1e-3, 1e-4, 1e-5"
+warm_chain = true
+"#;
+        let m = SweepManifest::parse(text).unwrap();
+        let names: Vec<&str> = m.jobs.iter().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, ["path_0", "path_1", "path_2"]);
+        assert!(m.jobs[0].warm_start.is_none());
+        assert_eq!(m.jobs[1].warm_start.as_deref(), Some("path_0"));
+        assert_eq!(m.jobs[2].warm_start.as_deref(), Some("path_1"));
+        assert_eq!(m.jobs[2].lam1, Some(1e-5));
+    }
+
+    #[test]
+    fn duplicate_job_names_rejected() {
+        let text = r#"
+[sweep]
+name = "dup"
+[job.a]
+lam1 = 1e-3
+[job.b]
+lam1 = 1e-4
+[job.a]
+lam1 = 1e-5
+"#;
+        let e = SweepManifest::parse(text).unwrap_err().to_string();
+        assert!(e.contains("duplicate job name"), "got: {e}");
+    }
+
+    #[test]
+    fn post_expansion_collision_rejected() {
+        let text = r#"
+[sweep]
+name = "collide"
+[job.a_0]
+lam1 = 1e-3
+[job.a]
+lam1_grid = "1e-4"
+"#;
+        let e = SweepManifest::parse(text).unwrap_err().to_string();
+        assert!(e.contains("after grid expansion"), "got: {e}");
+    }
+
+    #[test]
+    fn unknown_keys_fail_fast() {
+        for text in [
+            "[sweep]\nname = \"x\"\nbogus = 1\n[job.a]\nlam1 = 1e-3\n",
+            "[sweep]\nname = \"x\"\n[job.a]\nlambda = 1e-3\n",
+            "toplevel = 1\n[sweep]\nname = \"x\"\n[job.a]\nlam1 = 1e-3\n",
+            "[other]\nk = 1\n[sweep]\nname = \"x\"\n[job.a]\nlam1 = 1e-3\n",
+        ] {
+            let e = SweepManifest::parse(text).unwrap_err().to_string();
+            assert!(e.contains("unknown key"), "text {text:?} gave: {e}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let text = "[sweep]\nname = \"x\"\nname = \"y\"\n[job.a]\nlam1 = 1e-3\n";
+        let e = SweepManifest::parse(text).unwrap_err().to_string();
+        assert!(e.contains("duplicate key"), "got: {e}");
+    }
+
+    #[test]
+    fn priorities_schedule_higher_first_stable() {
+        let text = r#"
+[sweep]
+name = "prio"
+[job.low]
+lam1 = 1e-3
+priority = -5
+[job.first]
+lam1 = 1e-3
+[job.urgent]
+lam1 = 1e-3
+priority = 10
+[job.second]
+lam1 = 1e-3
+"#;
+        let m = SweepManifest::parse(text).unwrap();
+        let names: Vec<&str> = m.jobs.iter().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, ["urgent", "first", "second", "low"]);
+    }
+
+    #[test]
+    fn warm_start_must_be_scheduled_earlier() {
+        // forward reference in manifest order
+        let fwd = r#"
+[sweep]
+name = "fwd"
+[job.a]
+warm_start = "b"
+lam1 = 1e-3
+[job.b]
+lam1 = 1e-3
+"#;
+        let e = SweepManifest::parse(fwd).unwrap_err().to_string();
+        assert!(e.contains("not"), "got: {e}");
+        // a priority that reorders a chain breaks it
+        let reordered = r#"
+[sweep]
+name = "re"
+[job.src]
+lam1 = 1e-3
+priority = -1
+[job.warm]
+lam1 = 1e-4
+warm_start = "src"
+"#;
+        assert!(SweepManifest::parse(reordered).is_err());
+        // unknown source
+        let missing = r#"
+[sweep]
+name = "miss"
+[job.warm]
+lam1 = 1e-4
+warm_start = "nope"
+"#;
+        assert!(SweepManifest::parse(missing).is_err());
+    }
+
+    #[test]
+    fn negative_lambda_parses_and_defers_validation() {
+        // the scheduler's per-job isolation depends on bad λs surviving
+        // parse and failing only at PscopeConfig::prox_reg time
+        let text = r#"
+[sweep]
+name = "bad"
+[job.poison]
+lam1 = -1e-3
+"#;
+        let m = SweepManifest::parse(text).unwrap();
+        let cfg = job_config(&m, &m.jobs[0], "tiny", 2);
+        assert!(cfg.prox_reg().is_err());
+    }
+
+    #[test]
+    fn warm_chain_without_grid_rejected() {
+        let text = r#"
+[sweep]
+name = "nochain"
+[job.a]
+lam1 = 1e-3
+warm_chain = true
+"#;
+        assert!(SweepManifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn lam1_with_grid_rejected() {
+        let text = r#"
+[sweep]
+name = "both"
+[job.a]
+lam1 = 1e-3
+lam1_grid = "1e-3,1e-4"
+"#;
+        assert!(SweepManifest::parse(text).is_err());
+    }
+}

@@ -68,6 +68,11 @@ pub fn checkpoint_path(dir: &Path, epoch: usize) -> PathBuf {
 
 /// Highest-epoch checkpoint file under `dir`, if any. Non-checkpoint
 /// files are ignored; a missing directory is `Ok(None)`.
+///
+/// Orphaned `*.tmp` siblings — left behind by a writer that crashed
+/// between [`Checkpoint::save`]'s tmp-write and its rename — are
+/// explicitly skipped, whatever their embedded epoch: only a completed
+/// rename makes a checkpoint real.
 pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
     let entries = match fs::read_dir(dir) {
         Ok(e) => e,
@@ -81,6 +86,11 @@ pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
             Some(n) => n,
             None => continue,
         };
+        if name.ends_with(".tmp") {
+            // an interrupted save — possibly truncated mid-write; never a
+            // resume candidate
+            continue;
+        }
         let epoch = match name
             .strip_prefix("ckpt_")
             .and_then(|s| s.strip_suffix(".pscope"))
@@ -263,6 +273,26 @@ mod tests {
         }
         fs::write(dir.join("notes.txt"), b"ignored").unwrap();
         assert_eq!(latest(&dir).unwrap(), Some(checkpoint_path(&dir, 11)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_skips_orphaned_tmp_files() {
+        let dir = tmpdir("orphan_tmp");
+        for epoch in [3, 7] {
+            Checkpoint { epoch, ..fixture() }.save(&dir).unwrap();
+        }
+        // a writer that crashed between tmp-write and rename, at a HIGHER
+        // epoch than any completed checkpoint: truncated garbage under the
+        // exact name save() uses for its staging file
+        let orphan = checkpoint_path(&dir, 99).with_extension("pscope.tmp");
+        fs::write(&orphan, &b"PSCKPT\x01\x00truncated-mid-write"[..]).unwrap();
+        let got = latest(&dir).unwrap();
+        assert_eq!(got, Some(checkpoint_path(&dir, 7)), "orphan tmp must not win");
+        // and the survivor actually loads
+        let back = Checkpoint::load(&got.unwrap()).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(bits(&back.w), bits(&fixture().w));
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -61,6 +61,7 @@ pub mod checkpoint;
 pub mod elastic;
 pub mod protocol;
 pub mod remote;
+pub mod serve;
 pub mod worker;
 
 use std::path::{Path, PathBuf};
@@ -233,22 +234,61 @@ pub fn run_master<T: MasterTransport>(
     net: NetModel,
     dataset_name: &str,
 ) -> Result<MasterRun> {
+    run_master_from(transport, obj, d, cfg, net, dataset_name, None)
+}
+
+/// [`run_master`] with an optional warm-start iterate `w0` (the `pscope
+/// serve` warm-start path): the run begins at `w0` instead of the origin,
+/// and the first broadcast ships its exact bits. `w0.len()` must equal
+/// `d`. When a finite `cfg.target_objective` is set and `w0` already
+/// satisfies it, the run stops at epoch 0 — a warm start that lands below
+/// the threshold costs zero epochs, which is what makes warm-vs-cold
+/// epoch counts a meaningful speedup metric.
+#[allow(clippy::too_many_arguments)]
+pub fn run_master_from<T: MasterTransport>(
+    transport: &mut T,
+    obj: &Objective<'_>,
+    d: usize,
+    cfg: &PscopeConfig,
+    net: NetModel,
+    dataset_name: &str,
+    w0: Option<&[f64]>,
+) -> Result<MasterRun> {
     let p = transport.p();
     let mut trace = Trace::new("pscope", dataset_name);
-    let mut w = vec![0.0; d];
+    let mut w = match w0 {
+        Some(v) => {
+            if v.len() != d {
+                return Err(Error::Config(format!(
+                    "warm-start iterate has dimension {} but the problem has d = {d}",
+                    v.len()
+                )));
+            }
+            v.to_vec()
+        }
+        None => vec![0.0; d],
+    };
     let mut materializations = 0u64;
     let mut epochs_run = 0usize;
     // record the starting point
+    let obj0 = obj.value(&w);
     trace.push(TracePoint {
         epoch: 0,
         wall_s: 0.0,
         sim_wall_s: 0.0,
         net_s: 0.0,
         net_io_s: 0.0,
-        objective: obj.value(&w),
+        objective: obj0,
         comm_bytes: 0,
         comm_msgs: 0,
     });
+    // Epoch-0 early stop: an iterate that already meets the target (a warm
+    // start seeded from a converged neighbor) runs zero epochs. A cold
+    // start can never trigger this wherever a finite target is set — its
+    // initial gap is the whole gap.
+    if cfg.target_objective.is_finite() && obj0 - cfg.target_objective <= cfg.tol {
+        return Ok(MasterRun { w, trace, materializations, epochs_run });
+    }
 
     let mut wall_s = 0.0f64;
     let mut sim_wall_s = 0.0f64;
@@ -400,6 +440,21 @@ pub fn train_with(
     artifact_dir: Option<PathBuf>,
     net: NetModel,
 ) -> Result<TrainOutput> {
+    train_with_opts(ds, part, cfg, artifact_dir, net, None)
+}
+
+/// [`train_with`] plus an optional warm-start iterate `w0` (see
+/// [`run_master_from`]). Used by the serve-mode tests and the
+/// warm-vs-cold bench row, where the in-process cluster plays the role
+/// of one sweep job seeded from another's final iterate.
+pub fn train_with_opts(
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &PscopeConfig,
+    artifact_dir: Option<PathBuf>,
+    net: NetModel,
+    w0: Option<&[f64]>,
+) -> Result<TrainOutput> {
     let p = part.p();
     let (m_inner, eta, grad_threads) = resolve_run(ds, part, cfg, artifact_dir.as_deref())?;
     let d = ds.d();
@@ -436,7 +491,7 @@ pub fn train_with(
         }
 
         // ---- master loop ----
-        let master_result = run_master(&mut master_t, &obj, d, cfg, net, &ds.name);
+        let master_result = run_master_from(&mut master_t, &obj, d, cfg, net, &ds.name, w0);
 
         // ---- deterministic shutdown ----
         // Stop every worker (clean shutdown at any receive point) and drop

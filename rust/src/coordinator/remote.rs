@@ -84,8 +84,11 @@ use crate::rng::{splitmix64, Rng};
 /// so `ShardDir` workers validate their shard file against the master's
 /// manifest instead of re-parsing text or re-synthesizing; v5 added the
 /// run mode (strict/elastic) and heartbeat interval to the spec tail and
-/// introduced the `Heartbeat` wire frame (tag 7) for elastic liveness.
-pub(crate) const SPEC_VERSION: u64 = 5;
+/// introduced the `Heartbeat` wire frame (tag 7) for elastic liveness;
+/// v6 introduced the serve-pool protocol — the `JobSetup`/`JobDone`
+/// control frames (tags 102/103) and the 16-byte pool banner used by
+/// `pscope serve` — with the `RunSpec` byte layout itself unchanged.
+pub(crate) const SPEC_VERSION: u64 = 6;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -396,6 +399,17 @@ impl Cursor<'_> {
 /// and select the shard. Both paths end with the shard's payload digest
 /// equal to the spec table's entry `k`, or a loud error before training.
 pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
+    let (shard_ds, _rows_read) = build_shard(spec, k)?;
+    worker_from_shard(spec, k, shard_ds)
+}
+
+/// The data half of [`build_worker`]: materialize and validate worker
+/// `k`'s shard. Returns the shard plus the number of rows this call
+/// actually read (`ShardDir`: the shard file's rows; regenerate: the
+/// shard's rows) — the unit `pscope serve`'s residency accounting counts,
+/// so a pool worker can prove it materialized each dataset exactly once
+/// across a sweep.
+pub fn build_shard(spec: &RunSpec, k: usize) -> Result<(Dataset, u64)> {
     if k >= spec.p {
         return Err(Error::Protocol(format!(
             "assigned worker id {k} out of range (p={})",
@@ -408,7 +422,7 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
             spec.shard_digests.len()
         ))
     })?;
-    let shard_ds = match &spec.source {
+    let (shard_ds, rows_read) = match &spec.source {
         DataSource::ShardDir { dir } => {
             let dir = std::path::Path::new(dir);
             let manifest = shard::Manifest::read(dir)?;
@@ -444,8 +458,8 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
             // the chunked load re-hashes the payload and fails loudly if
             // the file bytes diverge from the just-validated manifest entry;
             // rows_read accounting proves only this shard was materialized
-            let (shard_ds, _row_ids, _stats) = shard::load_worker_shard(dir, k, &manifest)?;
-            shard_ds
+            let (shard_ds, _row_ids, stats) = shard::load_worker_shard(dir, k, &manifest)?;
+            (shard_ds, stats.rows_read as u64)
         }
         _ => {
             let ds = spec.source.load()?;
@@ -474,12 +488,22 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
                      {expect_digest:#018x}"
                 )));
             }
-            ds.select(rows)
+            let shard_ds = ds.select(rows);
+            let rows_read = shard_ds.n() as u64;
+            (shard_ds, rows_read)
         }
     };
     if shard_ds.n() == 0 {
         return Err(Error::Config(format!("worker {k} got an empty shard")));
     }
+    Ok((shard_ds, rows_read))
+}
+
+/// The state half of [`build_worker`]: wrap an already-validated shard in
+/// a fresh [`Worker`]. The RNG is re-forked from `spec.seed` on every
+/// call, so a pool worker reusing a resident shard across jobs starts
+/// each job with exactly the state a cold process would have.
+pub fn worker_from_shard(spec: &RunSpec, k: usize, shard_ds: Dataset) -> Result<Worker> {
     let rng = Rng::new(spec.seed).fork(k as u64 + 1);
     Ok(Worker::new(
         k,
@@ -499,7 +523,7 @@ pub fn build_worker(spec: &RunSpec, k: usize) -> Result<Worker> {
 /// by the same script does not retry in lockstep. Every sleep is clamped
 /// to the total deadline; exhaustion reports the address, the deadline,
 /// and how many attempts were made.
-fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+pub(crate) fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
     const BACKOFF_START_MS: u64 = 10;
     const BACKOFF_CAP_MS: u64 = 2000;
     let deadline = Instant::now() + timeout;
@@ -659,6 +683,12 @@ impl MasterEndpoint {
         Ok(self.listener.local_addr()?)
     }
 
+    /// The raw listener — `pscope serve` accepts its persistent pool on
+    /// the same socket the one-shot training path uses.
+    pub(crate) fn listener(&self) -> &TcpListener {
+        &self.listener
+    }
+
     /// Run Algorithm 1 as the master over TCP: accept `part.p()` workers,
     /// ship them `spec`, drive [`run_master`], and tear the cluster down
     /// (`Stop` broadcast, bounded joins) whatever the outcome.
@@ -746,7 +776,7 @@ impl MasterEndpoint {
 /// what this `(ds, part, cfg)` resolves to, or the cluster would run a
 /// different algorithm than the master believes it launched. Returns the
 /// master-side objective on success.
-fn preflight<'a>(
+pub(crate) fn preflight<'a>(
     ds: &'a Dataset,
     part: &Partition,
     cfg: &PscopeConfig,

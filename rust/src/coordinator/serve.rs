@@ -1,0 +1,1155 @@
+//! `pscope serve` — a multi-job scheduler over a persistent worker pool.
+//!
+//! One long-lived master owns `p` TCP workers and drains a FIFO-with-
+//! priorities queue of jobs described by a sweep manifest
+//! ([`crate::config::sweep`]). Three properties make a served sweep
+//! cheaper than running `pscope train` once per job, without giving up a
+//! single bit of reproducibility:
+//!
+//! 1. **Pool reuse** — workers connect and handshake once (a 16-byte
+//!    banner: `SPEC_VERSION` + pool size), then serve jobs back to back
+//!    over the same connections. Per job the master builds a fresh
+//!    [`TcpMaster`](crate::net::transport) over `try_clone`s of the pool
+//!    streams, so every job gets its own byte meter and reader threads
+//!    while the sockets persist.
+//! 2. **Shard residency** — a worker keeps its materialized shard across
+//!    jobs and skips the reload (and its digest re-validation) when the
+//!    next job's residency key — source triple, `p`, partition name +
+//!    seed + fingerprint, dataset fingerprint, and this worker's digest
+//!    table entry — matches the resident one. [`PoolWorkerStats`] counts
+//!    actual materializations so tests and CI can prove "one load per
+//!    dataset per worker".
+//! 3. **Warm starts** — a job may name an earlier job's final iterate as
+//!    its `w0`; the exact bits travel in the `JobSetup` frame and the
+//!    master loop starts from them ([`run_master_from`]). Under the
+//!    manifest's `stop_at_half_gap` protocol (FISTA reference optimum per
+//!    distinct objective, computed up front; target = `p*`, tol = half
+//!    the cold-start gap) a warm start seeded by a converged neighbor
+//!    stops at epoch 0 — the λ-path speedup becomes a plain epoch count.
+//!
+//! ## Wire protocol (SPEC_VERSION 6)
+//!
+//! ```text
+//! worker ── connect ─────────────────> master   (accept order assigns ids)
+//! master ── Setup{k, banner} ────────> worker   (pool handshake, unmetered)
+//! worker ── Ready{k} ────────────────> master
+//! per job:
+//!   master ── JobSetup{idx, spec, w0?} ─> worker  (tag 102, unmetered)
+//!   worker ── Ready{k} ────────────────> master   (shard resident or loaded)
+//!   ... Algorithm 1 over a per-job TcpMaster (metered) ...
+//!   master ── Stop ────────────────────> worker   (metered, ends the job)
+//!   worker ── JobDone{stats} ──────────> master   (tag 103, unmetered)
+//! master ── Stop ────────────────────> worker   (unmetered, ends the pool)
+//! ```
+//!
+//! A job is **validated entirely before any wire traffic** (regularizer,
+//! spec derivation, warm-start source and dimension, pool liveness), so a
+//! failed job is invisible to the workers: the remaining jobs of the
+//! sweep produce bit-identical outputs whether or not a doomed job sat
+//! between them (`tests/serve_scheduler.rs`). Per-job failures mark the
+//! job failed and the queue continues; only a dead pool (all workers
+//! offline) aborts the sweep.
+//!
+//! Metering parity with the one-shot path is deliberate: `JobSetup`,
+//! `Ready`, `JobDone` and both `Stop`s outside a job are control plane
+//! (unmetered), while the per-job traffic plus the job-ending `Stop` is
+//! metered exactly like `MasterEndpoint::train` — so a single-job sweep
+//! reports the same `(bytes, msgs)` as `pscope train`.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::bench_util::{human_time, Table};
+use crate::config::sweep::{job_config, SweepJob, SweepManifest};
+use crate::config::PscopeConfig;
+use crate::coordinator::protocol::ToWorker;
+use crate::coordinator::remote::{
+    build_shard, connect_with_retry, preflight, worker_from_shard, MasterEndpoint, RunSpec,
+    WorkerOpts, SPEC_VERSION,
+};
+use crate::coordinator::worker::run_worker;
+use crate::coordinator::{run_master_from, TrainOutput};
+use crate::data::shard;
+use crate::data::source::DataSource;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::loss::Objective;
+use crate::net::frame::{self, FrameRead};
+use crate::net::transport::{accept_streams, from_streams, TcpWorker};
+use crate::net::{ByteMeter, NetModel};
+use crate::optim::fista::reference_optimum;
+use crate::partition::{Partition, Partitioner};
+
+/// Bound on the post-job `JobDone` exchange: the worker sends it the
+/// moment `run_worker` returns, so anything slower than this is a dead or
+/// wedged peer.
+const JOB_DONE_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// wire codecs
+// ---------------------------------------------------------------------------
+
+/// Pool handshake banner (the `Setup` payload of a serve pool): 16 bytes,
+/// `[SPEC_VERSION, p]` little-endian.
+pub fn encode_pool_banner(p: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16);
+    b.extend_from_slice(&SPEC_VERSION.to_le_bytes());
+    b.extend_from_slice(&(p as u64).to_le_bytes());
+    b
+}
+
+/// Decode + validate a pool banner; returns the pool size.
+pub fn decode_pool_banner(payload: &[u8]) -> Result<usize> {
+    if payload.len() != 16 {
+        return Err(Error::Protocol(format!(
+            "pool banner: expected 16 bytes, got {}",
+            payload.len()
+        )));
+    }
+    let ver = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    if ver != SPEC_VERSION {
+        return Err(Error::Protocol(format!(
+            "spec version mismatch: master speaks v{ver}, this binary speaks v{SPEC_VERSION}"
+        )));
+    }
+    let p = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+    usize::try_from(p).map_err(|_| Error::Protocol(format!("pool size {p} overflows usize")))
+}
+
+/// Encode a `JobSetup` payload (tag 102): job index, the full [`RunSpec`],
+/// and the optional warm-start iterate as exact f64 bits.
+///
+/// Layout: `u64 job_idx | u32 spec_len | spec bytes | u8 has_w0 |`
+/// (`| u64 len | len × u64 f64-bits` when `has_w0 == 1`).
+pub fn encode_job_setup(job_idx: u64, spec: &RunSpec, w0: Option<&[f64]>) -> Vec<u8> {
+    let spec_bytes = spec.encode();
+    let mut b =
+        Vec::with_capacity(13 + spec_bytes.len() + w0.map_or(0, |w| 8 + 8 * w.len()));
+    b.extend_from_slice(&job_idx.to_le_bytes());
+    b.extend_from_slice(&(spec_bytes.len() as u32).to_le_bytes());
+    b.extend_from_slice(&spec_bytes);
+    match w0 {
+        None => b.push(0),
+        Some(w) => {
+            b.push(1);
+            b.extend_from_slice(&(w.len() as u64).to_le_bytes());
+            for v in w {
+                b.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+    b
+}
+
+/// Decode a `JobSetup` payload. Truncation, a bad `has_w0` byte, and
+/// trailing garbage are all rejected — a half-shipped warm start must
+/// never silently train from a prefix.
+pub fn decode_job_setup(payload: &[u8]) -> Result<(u64, RunSpec, Option<Vec<f64>>)> {
+    let err = |what: &str| Error::Protocol(format!("JobSetup decode: {what}"));
+    if payload.len() < 13 {
+        return Err(err("truncated header"));
+    }
+    let job_idx = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let spec_len = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    let mut off = 12;
+    if payload.len() < off + spec_len + 1 {
+        return Err(err("truncated spec"));
+    }
+    let spec = RunSpec::decode(&payload[off..off + spec_len])?;
+    off += spec_len;
+    let has_w0 = payload[off];
+    off += 1;
+    let w0 = match has_w0 {
+        0 => None,
+        1 => {
+            if payload.len() < off + 8 {
+                return Err(err("truncated w0 length"));
+            }
+            let len = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap());
+            off += 8;
+            let len = usize::try_from(len).map_err(|_| err("w0 length overflows usize"))?;
+            let need = len.checked_mul(8).ok_or_else(|| err("w0 length overflows usize"))?;
+            if payload.len() < off + need {
+                return Err(err("truncated w0 payload"));
+            }
+            let mut w = Vec::with_capacity(len);
+            for i in 0..len {
+                let at = off + 8 * i;
+                w.push(f64::from_bits(u64::from_le_bytes(
+                    payload[at..at + 8].try_into().unwrap(),
+                )));
+            }
+            off += need;
+            Some(w)
+        }
+        other => return Err(err(&format!("bad has_w0 byte {other}"))),
+    };
+    if off != payload.len() {
+        return Err(err("trailing bytes"));
+    }
+    Ok((job_idx, spec, w0))
+}
+
+/// Cumulative per-worker pool accounting, reported after every job in the
+/// `JobDone` frame. `shard_loads` is the proof of shard residency: a
+/// sweep of jobs sharing one residency key materializes the shard exactly
+/// once per worker.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolWorkerStats {
+    /// Shards actually materialized (built/loaded + digest-validated).
+    pub shard_loads: u64,
+    /// Rows read from disk or regenerated across those loads.
+    pub rows_read: u64,
+    /// Jobs completed cleanly.
+    pub jobs_done: u64,
+}
+
+/// Encode a `JobDone` payload (tag 103): exactly 24 bytes.
+pub fn encode_job_done(stats: &PoolWorkerStats) -> Vec<u8> {
+    let mut b = Vec::with_capacity(24);
+    b.extend_from_slice(&stats.shard_loads.to_le_bytes());
+    b.extend_from_slice(&stats.rows_read.to_le_bytes());
+    b.extend_from_slice(&stats.jobs_done.to_le_bytes());
+    b
+}
+
+/// Decode a `JobDone` payload; length must be exactly 24.
+pub fn decode_job_done(payload: &[u8]) -> Result<PoolWorkerStats> {
+    if payload.len() != 24 {
+        return Err(Error::Protocol(format!(
+            "JobDone decode: expected 24 bytes, got {}",
+            payload.len()
+        )));
+    }
+    Ok(PoolWorkerStats {
+        shard_loads: u64::from_le_bytes(payload[0..8].try_into().unwrap()),
+        rows_read: u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+        jobs_done: u64::from_le_bytes(payload[16..24].try_into().unwrap()),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// master side: the scheduler
+// ---------------------------------------------------------------------------
+
+/// Scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Bounds the pool accept + every per-job `JobSetup`/`Ready` handshake
+    /// (workers may build a shard between the two).
+    pub accept_timeout: Duration,
+    /// Network model for the per-epoch trace.
+    pub net: NetModel,
+    /// Write `bench_out/` artifacts (the per-job table and the sweep
+    /// summary JSON). Off in tests.
+    pub emit_artifacts: bool,
+}
+
+impl ServeOpts {
+    /// Defaults: 10 GbE net model, artifacts on.
+    pub fn new(accept_timeout: Duration) -> ServeOpts {
+        ServeOpts { accept_timeout, net: NetModel::ten_gbe(), emit_artifacts: true }
+    }
+}
+
+/// Terminal state of one scheduled job.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    /// Trained to completion (early-stopped or epoch-capped).
+    Ok,
+    /// Failed with this error; the queue continued.
+    Failed(String),
+}
+
+/// One job's outcome in the sweep summary.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Job name (post-grid-expansion).
+    pub name: String,
+    /// Outcome.
+    pub status: JobStatus,
+    /// Training output (final iterate, trace, comm) for `Ok` jobs.
+    pub output: Option<TrainOutput>,
+    /// FISTA reference optimum used as the early-stop target, when the
+    /// manifest enabled `stop_at_half_gap` and the objective was valid.
+    pub p_star: Option<f64>,
+    /// Wall time of the whole job (validation + wire + training).
+    pub wall_s: f64,
+}
+
+/// Everything a finished sweep reports.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    /// Per-job results, in schedule order.
+    pub jobs: Vec<JobResult>,
+    /// Final cumulative pool stats per worker (from the last `JobDone`
+    /// each worker sent).
+    pub worker_stats: Vec<PoolWorkerStats>,
+}
+
+impl SweepOutcome {
+    /// Did every scheduled job finish cleanly?
+    pub fn all_ok(&self) -> bool {
+        self.jobs.iter().all(|j| matches!(j.status, JobStatus::Ok))
+    }
+}
+
+/// The persistent pool: handshaken streams plus liveness and accounting.
+struct Pool {
+    streams: Vec<TcpStream>,
+    peers: Vec<SocketAddr>,
+    online: Vec<bool>,
+    stats: Vec<PoolWorkerStats>,
+}
+
+impl Pool {
+    fn p(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn any_online(&self) -> bool {
+        self.online.iter().any(|&o| o)
+    }
+
+    fn first_offline(&self) -> Option<usize> {
+        self.online.iter().position(|&o| !o)
+    }
+
+    /// Wait for worker `k`'s `Ready` ack to a `JobSetup` (it may be
+    /// building its shard). A `WorkerDown`, EOF, or anything else ends the
+    /// job for this worker.
+    fn wait_ready(&mut self, k: usize, timeout: Duration) -> Result<()> {
+        let peer = self.peers[k];
+        let deadline = Instant::now() + timeout;
+        loop {
+            match frame::read_frame_deadline(&mut self.streams[k], Some(deadline))? {
+                FrameRead::Frame(f) => {
+                    let (tag, _epoch, worker, _payload) = frame::parts(&f)?;
+                    if tag == frame::TAG_READY && worker == k as u64 {
+                        return Ok(());
+                    }
+                    return Err(Error::Protocol(format!(
+                        "worker {k} at {peer}: expected Ready after JobSetup, got tag {tag}"
+                    )));
+                }
+                FrameRead::Eof => {
+                    return Err(Error::Protocol(format!(
+                        "worker {k} at {peer} hung up during JobSetup \
+                         (failed to build its shard?)"
+                    )))
+                }
+                FrameRead::TimedOut => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Protocol(format!(
+                            "worker {k} at {peer}: no Ready within {timeout:?}"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Collect one `JobDone` per online worker: first from the control
+    /// frames the per-job readers buffered (`ctrl`), then by reading the
+    /// pool streams directly, skipping strays (a `Ready` from an aborted
+    /// handshake, a late `WorkerDown`). A worker that yields neither a
+    /// `JobDone` nor a decodable excuse is marked offline.
+    fn collect_job_done(&mut self, ctrl: Vec<(usize, Vec<u8>)>) {
+        let p = self.p();
+        let mut got: Vec<Option<PoolWorkerStats>> = vec![None; p];
+        for (k, f) in ctrl {
+            if k < p && got[k].is_none() {
+                if let Ok((tag, _e, _w, payload)) = frame::parts(&f) {
+                    if tag == frame::TAG_JOB_DONE {
+                        if let Ok(s) = decode_job_done(payload) {
+                            got[k] = Some(s);
+                        }
+                    }
+                }
+            }
+        }
+        for k in 0..p {
+            if !self.online[k] {
+                continue;
+            }
+            if got[k].is_none() {
+                let deadline = Instant::now() + JOB_DONE_TIMEOUT;
+                loop {
+                    match frame::read_frame_deadline(&mut self.streams[k], Some(deadline)) {
+                        Ok(FrameRead::Frame(f)) => match frame::parts(&f) {
+                            Ok((tag, _e, _w, payload)) if tag == frame::TAG_JOB_DONE => {
+                                got[k] = decode_job_done(payload).ok();
+                                break;
+                            }
+                            Ok(_) => continue,
+                            Err(_) => break,
+                        },
+                        Ok(FrameRead::Eof) | Err(_) => break,
+                        Ok(FrameRead::TimedOut) => {
+                            if Instant::now() >= deadline {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            match got[k] {
+                Some(s) => self.stats[k] = s,
+                None => {
+                    self.online[k] = false;
+                    eprintln!(
+                        "serve: worker {k} at {} sent no JobDone — marked offline",
+                        self.peers[k]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Abort a job whose handshake failed partway: release every worker
+    /// that saw the `JobSetup` with an unmetered `Stop` (their
+    /// `run_worker` exits cleanly at the first receive point) and drain
+    /// the resulting `JobDone`s so the next job starts on a quiet wire.
+    fn release(&mut self) {
+        for k in 0..self.p() {
+            if self.online[k] {
+                let buf = frame::encode_to_worker(&ToWorker::Stop);
+                if frame::write_frame(&mut self.streams[k], &buf).is_err() {
+                    self.online[k] = false;
+                }
+            }
+        }
+        self.collect_job_done(Vec::new());
+    }
+
+    /// Terminate the pool: one final unmetered `Stop` per online worker.
+    fn stop(&mut self) {
+        for k in 0..self.p() {
+            if self.online[k] {
+                let buf = frame::encode_to_worker(&ToWorker::Stop);
+                let _ = frame::write_frame(&mut self.streams[k], &buf);
+            }
+        }
+    }
+}
+
+/// Immutable per-sweep context shared by every job.
+struct SweepCtx<'a> {
+    ds: &'a Dataset,
+    part: &'a Partition,
+    source: &'a DataSource,
+    partition_name: &'a str,
+    part_seed: u64,
+    net: NetModel,
+    handshake_timeout: Duration,
+}
+
+/// Run one job end to end. Every cheap failure (bad regularizer, spec
+/// derivation, missing/mis-sized warm start, offline worker) happens
+/// before the first byte hits the wire, so a failed job leaves the pool —
+/// and therefore every later job's bits — untouched.
+fn run_one_job(
+    ctx: &SweepCtx<'_>,
+    pool: &mut Pool,
+    idx: usize,
+    job: &SweepJob,
+    cfg: &PscopeConfig,
+    finals: &HashMap<String, Vec<f64>>,
+) -> Result<TrainOutput> {
+    let p = pool.p();
+    let d = ctx.ds.d();
+
+    // ---- validation: zero wire traffic on any failure ----
+    let spec = RunSpec::derive(
+        ctx.ds,
+        ctx.part,
+        cfg,
+        ctx.source,
+        ctx.partition_name,
+        ctx.part_seed,
+        None,
+    )?;
+    let obj = preflight(ctx.ds, ctx.part, cfg, &spec)?;
+    let w0: Option<&[f64]> = match &job.warm_start {
+        None => None,
+        Some(src) => {
+            let w = finals.get(src).ok_or_else(|| {
+                Error::Config(format!(
+                    "warm start from job {src:?}, which has not finished successfully"
+                ))
+            })?;
+            if w.len() != d {
+                return Err(Error::Config(format!(
+                    "warm-start iterate from {src:?} has dimension {} but the problem \
+                     has d = {d}",
+                    w.len()
+                )));
+            }
+            Some(w.as_slice())
+        }
+    };
+    if let Some(k) = pool.first_offline() {
+        return Err(Error::Protocol(format!(
+            "worker {k} at {} is offline and strict mode needs all {p} workers",
+            pool.peers[k]
+        )));
+    }
+
+    // ---- JobSetup / Ready handshake ----
+    let payload = encode_job_setup(idx as u64, &spec, w0);
+    let handshake: Result<()> = (|| {
+        for k in 0..p {
+            let f = frame::encode_control(frame::TAG_JOB_SETUP, k as u64, &payload);
+            frame::write_frame(&mut pool.streams[k], &f).map_err(|e| {
+                pool.online[k] = false;
+                Error::Protocol(format!(
+                    "worker {k} at {}: JobSetup send failed: {e}",
+                    pool.peers[k]
+                ))
+            })?;
+        }
+        for k in 0..p {
+            pool.wait_ready(k, ctx.handshake_timeout).inspect_err(|_| {
+                pool.online[k] = false;
+            })?;
+        }
+        Ok(())
+    })();
+    if let Err(e) = handshake {
+        pool.release();
+        return Err(e);
+    }
+
+    // ---- per-job master over clones of the pool streams ----
+    let meter = ByteMeter::new();
+    let build = (|| -> Result<_> {
+        let mut clones = Vec::with_capacity(p);
+        for s in &pool.streams {
+            clones.push(s.try_clone()?);
+        }
+        from_streams(clones, pool.peers.clone(), meter.clone())
+    })();
+    let mut tm = match build {
+        Ok(t) => t,
+        Err(e) => {
+            pool.release();
+            return Err(e);
+        }
+    };
+    let master_result = run_master_from(&mut tm, &obj, d, cfg, ctx.net, &ctx.ds.name, w0);
+    // end_job *always* runs (success or failure): metered Stop, readers
+    // joined, buffered control frames drained — the pool sockets survive.
+    let ctrl = tm.end_job();
+    pool.collect_job_done(ctrl);
+    let r = master_result?;
+    let comm = meter.snapshot();
+    Ok(TrainOutput {
+        w: r.w,
+        trace: r.trace,
+        comm,
+        materializations: r.materializations,
+        epochs_run: r.epochs_run,
+        degraded: Vec::new(),
+    })
+}
+
+/// Run a whole sweep over `ep`'s listener: resolve the dataset once,
+/// solve the FISTA references (before any worker is accepted, so the pool
+/// never starves behind them), accept the pool, and drain the job queue.
+///
+/// Per-job failures are recorded and the queue continues; the returned
+/// `Err` is reserved for sweep-fatal conditions (manifest/dataset
+/// resolution, pool accept, all workers offline).
+pub fn run_sweep(ep: &MasterEndpoint, m: &SweepManifest, opts: &ServeOpts) -> Result<SweepOutcome> {
+    // ---- dataset + partition, resolved exactly like `pscope train` ----
+    let source = DataSource::resolve(&m.dataset, m.seed);
+    let (ds, part, dataset_name, partition_name, part_seed) = match &source {
+        DataSource::ShardDir { dir } => {
+            let (ds, part, manifest) = shard::load_dir(Path::new(dir))?;
+            if let Some(mp) = m.p {
+                if mp != manifest.p as usize {
+                    return Err(Error::Config(format!(
+                        "sweep.p = {mp} conflicts with shard dir {dir} \
+                         (ingested with p = {})",
+                        manifest.p
+                    )));
+                }
+            }
+            if let Some(pn) = &m.partition {
+                if *pn != manifest.partition {
+                    return Err(Error::Config(format!(
+                        "sweep.partition = {pn:?} conflicts with shard dir {dir} \
+                         (ingested with {:?})",
+                        manifest.partition
+                    )));
+                }
+            }
+            let name = manifest.dataset.clone();
+            let pname = manifest.partition.clone();
+            let pseed = manifest.part_seed;
+            (ds, part, name, pname, pseed)
+        }
+        _ => {
+            let ds = source.load()?;
+            let base = PscopeConfig::for_dataset(&m.dataset, m.model);
+            let p = m.p.unwrap_or(base.p);
+            let pname = m.partition.clone().unwrap_or(base.partition);
+            let part = Partitioner::parse(&pname)?.split(&ds, p, m.seed);
+            (ds, part, m.dataset.clone(), pname, m.seed)
+        }
+    };
+    let p = part.p();
+    let d = ds.d();
+
+    // ---- per-job configs ----
+    let mut cfgs: Vec<PscopeConfig> = m
+        .jobs
+        .iter()
+        .map(|j| {
+            let mut c = job_config(m, j, &dataset_name, p);
+            c.partition = partition_name.clone();
+            c
+        })
+        .collect();
+
+    // ---- FISTA references, solved before the pool accept ----
+    let mut p_stars: Vec<Option<f64>> = vec![None; m.jobs.len()];
+    if m.stop_at_half_gap {
+        let zero_w = vec![0.0; d];
+        let mut cache: HashMap<((u8, u64), (u8, u64, u64, u64)), (f64, f64)> = HashMap::new();
+        for (i, cfg) in cfgs.iter_mut().enumerate() {
+            // an invalid objective skips its reference and fails at job
+            // validation instead — per-job isolation, not a sweep abort
+            let Ok(prox) = cfg.prox_reg() else { continue };
+            let loss = cfg.objective_loss();
+            let key = (loss.wire_encode(), prox.wire_encode());
+            let (p_star, tol) = *cache.entry(key).or_insert_with(|| {
+                let obj = Objective::new(&ds, loss, prox);
+                let opt = reference_optimum(&obj, m.reference_iters);
+                (opt.objective, 0.5 * (obj.value(&zero_w) - opt.objective))
+            });
+            cfg.target_objective = p_star;
+            cfg.tol = tol;
+            p_stars[i] = Some(p_star);
+        }
+        println!(
+            "serve: {} FISTA reference(s) solved for {} job(s) (half-gap protocol)",
+            cache.len(),
+            m.jobs.len()
+        );
+    }
+
+    // ---- pool accept ----
+    println!(
+        "serve: sweep {:?}: {} job(s) over {source} (p = {p}, partition {partition_name})",
+        m.name,
+        m.jobs.len()
+    );
+    let banner = encode_pool_banner(p);
+    let (streams, peers) = accept_streams(ep.listener(), p, &banner, opts.accept_timeout)?;
+    let mut pool = Pool {
+        streams,
+        peers,
+        online: vec![true; p],
+        stats: vec![PoolWorkerStats::default(); p],
+    };
+    let ctx = SweepCtx {
+        ds: &ds,
+        part: &part,
+        source: &source,
+        partition_name: &partition_name,
+        part_seed,
+        net: opts.net,
+        handshake_timeout: opts.accept_timeout,
+    };
+
+    // ---- the job queue ----
+    let mut results: Vec<JobResult> = Vec::with_capacity(m.jobs.len());
+    let mut finals: HashMap<String, Vec<f64>> = HashMap::new();
+    for (idx, job) in m.jobs.iter().enumerate() {
+        if !pool.any_online() {
+            pool.stop();
+            return Err(Error::Protocol(format!(
+                "serve: pool fatal — all {p} workers offline before job {:?} \
+                 ({idx} of {} jobs finished)",
+                job.name,
+                m.jobs.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let run = run_one_job(&ctx, &mut pool, idx, job, &cfgs[idx], &finals);
+        let wall_s = t0.elapsed().as_secs_f64();
+        match run {
+            Ok(out) => {
+                println!(
+                    "serve: job {} ok: {} epochs, {} bytes, {} msgs, wall {:.3}s",
+                    job.name, out.epochs_run, out.comm.0, out.comm.1, wall_s
+                );
+                finals.insert(job.name.clone(), out.w.clone());
+                results.push(JobResult {
+                    name: job.name.clone(),
+                    status: JobStatus::Ok,
+                    output: Some(out),
+                    p_star: p_stars[idx],
+                    wall_s,
+                });
+            }
+            Err(e) => {
+                println!("serve: job {} FAILED: {e}", job.name);
+                results.push(JobResult {
+                    name: job.name.clone(),
+                    status: JobStatus::Failed(e.to_string()),
+                    output: None,
+                    p_star: p_stars[idx],
+                    wall_s,
+                });
+            }
+        }
+    }
+    pool.stop();
+
+    for (k, s) in pool.stats.iter().enumerate() {
+        println!(
+            "serve: worker {k}: {} shard load(s), {} row(s) read, {} job(s) done{}",
+            s.shard_loads,
+            s.rows_read,
+            s.jobs_done,
+            if pool.online[k] { "" } else { " [offline]" }
+        );
+    }
+
+    if opts.emit_artifacts {
+        emit_sweep_artifacts(m, &dataset_name, p, &results, &pool.stats);
+    }
+    Ok(SweepOutcome { jobs: results, worker_stats: pool.stats })
+}
+
+/// `bench_out/` artifacts: the per-job table (→ `BENCH_serve_<name>.json`
+/// via [`Table::emit`]) and the machine-readable sweep summary
+/// (`serve_<name>_summary.json`).
+fn emit_sweep_artifacts(
+    m: &SweepManifest,
+    dataset_name: &str,
+    p: usize,
+    results: &[JobResult],
+    stats: &[PoolWorkerStats],
+) {
+    let mut table = Table::new(
+        &format!("serve {}", m.name),
+        &["job", "status", "epochs", "bytes", "msgs", "objective", "warm start", "wall"],
+    );
+    for r in results {
+        let warm = m
+            .jobs
+            .iter()
+            .find(|j| j.name == r.name)
+            .and_then(|j| j.warm_start.clone())
+            .unwrap_or_else(|| "-".into());
+        match &r.output {
+            Some(out) => {
+                let objective = out
+                    .trace
+                    .points
+                    .last()
+                    .map(|pt| format!("{:.6e}", pt.objective))
+                    .unwrap_or_else(|| "-".into());
+                table.row_timed(
+                    &[
+                        r.name.clone(),
+                        "ok".into(),
+                        out.epochs_run.to_string(),
+                        out.comm.0.to_string(),
+                        out.comm.1.to_string(),
+                        objective,
+                        warm,
+                        human_time(r.wall_s),
+                    ],
+                    r.wall_s,
+                );
+            }
+            None => table.row(&[
+                r.name.clone(),
+                "FAILED".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                warm,
+                human_time(r.wall_s),
+            ]),
+        }
+    }
+    table.emit();
+
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("sweep".to_string(), Json::Str(m.name.clone()));
+    root.insert("dataset".to_string(), Json::Str(dataset_name.to_string()));
+    root.insert("p".to_string(), Json::Num(p as f64));
+    root.insert(
+        "jobs".to_string(),
+        Json::Arr(
+            results
+                .iter()
+                .map(|r| {
+                    let mut o = std::collections::BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(r.name.clone()));
+                    match &r.status {
+                        JobStatus::Ok => {
+                            o.insert("status".to_string(), Json::Str("ok".into()));
+                            o.insert("error".to_string(), Json::Null);
+                        }
+                        JobStatus::Failed(e) => {
+                            o.insert("status".to_string(), Json::Str("failed".into()));
+                            o.insert("error".to_string(), Json::Str(e.clone()));
+                        }
+                    }
+                    if let Some(out) = &r.output {
+                        o.insert("epochs".to_string(), Json::Num(out.epochs_run as f64));
+                        o.insert("bytes".to_string(), Json::Num(out.comm.0 as f64));
+                        o.insert("msgs".to_string(), Json::Num(out.comm.1 as f64));
+                        if let Some(pt) = out.trace.points.last() {
+                            o.insert("objective".to_string(), Json::Num(pt.objective));
+                        }
+                    }
+                    if let Some(ps) = r.p_star {
+                        o.insert("p_star".to_string(), Json::Num(ps));
+                    }
+                    let warm = m
+                        .jobs
+                        .iter()
+                        .find(|j| j.name == r.name)
+                        .and_then(|j| j.warm_start.clone());
+                    o.insert(
+                        "warm_start".to_string(),
+                        warm.map(Json::Str).unwrap_or(Json::Null),
+                    );
+                    o.insert("wall_s".to_string(), Json::Num(r.wall_s));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    root.insert(
+        "workers".to_string(),
+        Json::Arr(
+            stats
+                .iter()
+                .enumerate()
+                .map(|(k, s)| {
+                    let mut o = std::collections::BTreeMap::new();
+                    o.insert("worker".to_string(), Json::Num(k as f64));
+                    o.insert("shard_loads".to_string(), Json::Num(s.shard_loads as f64));
+                    o.insert("rows_read".to_string(), Json::Num(s.rows_read as f64));
+                    o.insert("jobs_done".to_string(), Json::Num(s.jobs_done as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let slug: String = m
+        .name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect();
+    let path = format!("bench_out/serve_{slug}_summary.json");
+    if let Err(e) = std::fs::create_dir_all("bench_out")
+        .and_then(|_| std::fs::write(&path, Json::Obj(root).dump() + "\n"))
+    {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("serve: sweep summary written to {path}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side: the pool client
+// ---------------------------------------------------------------------------
+
+/// Shard residency key: two consecutive jobs whose keys match may reuse
+/// the worker's materialized shard without reloading or re-validating it.
+/// Deliberately finer than strictly necessary — it includes this worker's
+/// own digest-table entry, so any divergence in the master's view of the
+/// shard forces a reload (which then re-validates the digest).
+#[derive(Clone, Debug, PartialEq)]
+struct ResidencyKey {
+    source_tag: u8,
+    source_seed: u64,
+    source_str: String,
+    p: usize,
+    part_seed: u64,
+    partition: String,
+    part_fingerprint: u64,
+    fingerprint: (u64, u64, u64),
+    shard_digest: u64,
+}
+
+fn residency_key(spec: &RunSpec, k: usize) -> ResidencyKey {
+    ResidencyKey {
+        source_tag: spec.source.wire_tag(),
+        source_seed: spec.source.wire_seed(),
+        source_str: spec.source.wire_str().to_string(),
+        p: spec.p,
+        part_seed: spec.part_seed,
+        partition: spec.partition.clone(),
+        part_fingerprint: spec.part_fingerprint,
+        fingerprint: spec.fingerprint,
+        shard_digest: spec.shard_digests[k],
+    }
+}
+
+/// The `pscope worker --pool` client: join a serve pool and run jobs until
+/// the master says stop (or disappears, which is the same thing).
+///
+/// Per job the worker decodes the `JobSetup`, materializes its shard
+/// *only if the residency key changed* (counting loads in
+/// [`PoolWorkerStats`]), rebuilds its RNG from the job seed exactly like a
+/// cold process would — resident-shard jobs are bit-identical to
+/// fresh-process jobs — acks `Ready`, runs the inner loop, and reports
+/// cumulative stats in a `JobDone` frame.
+pub fn serve_worker_pool(addr: &str, opts: &WorkerOpts) -> Result<()> {
+    let timeout = opts.timeout;
+    let mut stream = connect_with_retry(addr, opts.connect_timeout)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let setup_deadline = Instant::now() + timeout;
+    let setup = loop {
+        match frame::read_frame_deadline(&mut stream, Some(setup_deadline))? {
+            FrameRead::Frame(f) => break f,
+            FrameRead::Eof => {
+                return Err(Error::Protocol(
+                    "master closed the connection before the pool banner \
+                     (pool already full?)"
+                        .into(),
+                ))
+            }
+            FrameRead::TimedOut => {
+                if Instant::now() >= setup_deadline {
+                    return Err(Error::Protocol(format!(
+                        "no pool banner from master within {timeout:?}"
+                    )));
+                }
+            }
+        }
+    };
+    let (tag, _epoch, worker, payload) = frame::parts(&setup)?;
+    if tag != frame::TAG_SETUP {
+        return Err(Error::Protocol(format!("expected pool Setup, got tag {tag}")));
+    }
+    let k = usize::try_from(worker)
+        .map_err(|_| Error::Protocol("worker id overflows usize".into()))?;
+    let pool_p = decode_pool_banner(payload)?;
+    if k >= pool_p {
+        return Err(Error::Protocol(format!(
+            "pool assigned id {k} but announced only {pool_p} slots"
+        )));
+    }
+    frame::write_frame(&mut stream, &frame::encode_control(frame::TAG_READY, worker, &[]))?;
+    println!("worker {k}: joined serve pool ({pool_p} workers)");
+    // Jobs are master-paced from here: block between frames (EOF = master
+    // gone = clean shutdown, exactly like the one-shot data plane).
+    stream.set_read_timeout(None)?;
+
+    let mut stats = PoolWorkerStats::default();
+    let mut resident: Option<(ResidencyKey, Dataset)> = None;
+    loop {
+        let f = match frame::read_frame(&mut stream)? {
+            FrameRead::Frame(f) => f,
+            FrameRead::Eof => {
+                println!(
+                    "worker {k}: master disconnected ({} job(s) served)",
+                    stats.jobs_done
+                );
+                return Ok(());
+            }
+            FrameRead::TimedOut => continue,
+        };
+        let (tag, _epoch, _worker, payload) = frame::parts(&f)?;
+        match tag {
+            frame::TAG_STOP => {
+                println!("worker {k}: pool stopped by master ({} job(s) served)", stats.jobs_done);
+                return Ok(());
+            }
+            frame::TAG_JOB_SETUP => {}
+            other => {
+                return Err(Error::Protocol(format!(
+                    "pool worker {k}: expected JobSetup or Stop, got tag {other}"
+                )))
+            }
+        }
+        let result = run_pool_job(&mut stream, k, payload, &mut stats, &mut resident);
+        if let Err(e) = result {
+            // best-effort failure sentinel, then propagate — same contract
+            // as the one-shot worker
+            if let Ok(s2) = stream.try_clone() {
+                TcpWorker::new(s2, k).send_down();
+            }
+            return Err(e);
+        }
+    }
+}
+
+/// One job of the pool loop: decode, (maybe) materialize the shard, ack,
+/// train, report.
+fn run_pool_job(
+    stream: &mut TcpStream,
+    k: usize,
+    payload: &[u8],
+    stats: &mut PoolWorkerStats,
+    resident: &mut Option<(ResidencyKey, Dataset)>,
+) -> Result<()> {
+    let (job_idx, spec, w0) = decode_job_setup(payload)?;
+    if k >= spec.p {
+        return Err(Error::Protocol(format!(
+            "job {job_idx} spec has p = {} but this worker holds pool id {k}",
+            spec.p
+        )));
+    }
+    let key = residency_key(&spec, k);
+    let shard_ds = match resident {
+        Some((rk, ds)) if *rk == key => {
+            println!(
+                "worker {k}: job {job_idx}: shard resident ({} rows), skipping reload",
+                ds.n()
+            );
+            ds.clone()
+        }
+        _ => {
+            let (shard_ds, rows_read) = build_shard(&spec, k)?;
+            println!(
+                "worker {k}: partition {} fingerprint {:#018x} verified",
+                spec.partition, spec.part_fingerprint
+            );
+            println!(
+                "worker {k}: shard digest {:#018x} verified ({} of {} rows, source {})",
+                spec.shard_digests[k],
+                shard_ds.n(),
+                spec.fingerprint.0,
+                spec.source,
+            );
+            stats.shard_loads += 1;
+            stats.rows_read += rows_read;
+            *resident = Some((key, shard_ds.clone()));
+            shard_ds
+        }
+    };
+    if let Some(w) = &w0 {
+        if w.len() as u64 != spec.fingerprint.1 {
+            return Err(Error::Protocol(format!(
+                "job {job_idx}: warm-start iterate has {} coords but the spec says \
+                 d = {}",
+                w.len(),
+                spec.fingerprint.1
+            )));
+        }
+        println!("worker {k}: job {job_idx}: warm start received ({} coords)", w.len());
+    }
+    // Fresh per-job worker state: the RNG forks from the job seed exactly
+    // as a cold process would, so shard residency cannot perturb a
+    // trajectory.
+    let mut wk = worker_from_shard(&spec, k, shard_ds)?;
+    frame::write_frame(stream, &frame::encode_control(frame::TAG_READY, k as u64, &[]))?;
+    let mut transport = TcpWorker::new(stream.try_clone()?, k);
+    run_worker(&mut transport, &mut wk, spec.eta, spec.m_inner)?;
+    stats.jobs_done += 1;
+    frame::write_frame(
+        stream,
+        &frame::encode_control(frame::TAG_JOB_DONE, k as u64, &encode_job_done(stats)),
+    )?;
+    println!(
+        "worker {k}: job {job_idx} done ({} job(s) total, {} shard load(s))",
+        stats.jobs_done, stats.shard_loads
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Model;
+    use crate::data::synth;
+
+    fn demo_spec() -> RunSpec {
+        let ds = synth::tiny(7).generate();
+        let cfg = PscopeConfig::for_dataset("tiny", Model::Logistic);
+        let part = Partitioner::parse("uniform").unwrap().split(&ds, cfg.p, 7);
+        let source = DataSource::Synth { name: "tiny".into(), seed: 7 };
+        RunSpec::derive(&ds, &part, &cfg, &source, "uniform", 7, None).unwrap()
+    }
+
+    #[test]
+    fn pool_banner_roundtrips_and_rejects_mismatch() {
+        let b = encode_pool_banner(5);
+        assert_eq!(b.len(), 16);
+        assert_eq!(decode_pool_banner(&b).unwrap(), 5);
+        let mut wrong = b.clone();
+        wrong[0] ^= 1; // perturb the version
+        assert!(decode_pool_banner(&wrong).is_err());
+        assert!(decode_pool_banner(&b[..15]).is_err());
+    }
+
+    #[test]
+    fn job_setup_roundtrips_with_and_without_w0() {
+        let spec = demo_spec();
+        let w0 = vec![1.5, -0.0, f64::NAN, f64::INFINITY];
+        for w in [None, Some(w0.as_slice())] {
+            let b = encode_job_setup(3, &spec, w);
+            let (idx, back, back_w) = decode_job_setup(&b).unwrap();
+            assert_eq!(idx, 3);
+            assert_eq!(back, spec);
+            match (w, back_w) {
+                (None, None) => {}
+                (Some(a), Some(bv)) => {
+                    assert_eq!(a.len(), bv.len());
+                    for (x, y) in a.iter().zip(&bv) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "w0 must travel as exact bits");
+                    }
+                }
+                other => panic!("w0 presence mangled: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn job_setup_rejects_truncation_and_trailing_bytes() {
+        let spec = demo_spec();
+        let b = encode_job_setup(0, &spec, Some(&[1.0, 2.0]));
+        for cut in [0, 5, 12, b.len() - 1] {
+            assert!(decode_job_setup(&b[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut long = b.clone();
+        long.push(0);
+        assert!(decode_job_setup(&long).is_err(), "trailing byte must fail");
+        let mut bad_flag = b;
+        let flag_at = 12 + spec.encode().len();
+        bad_flag[flag_at] = 2;
+        assert!(decode_job_setup(&bad_flag).is_err(), "has_w0 = 2 must fail");
+    }
+
+    #[test]
+    fn job_done_roundtrips_and_rejects_bad_length() {
+        let s = PoolWorkerStats { shard_loads: 1, rows_read: 123_456, jobs_done: 9 };
+        let b = encode_job_done(&s);
+        assert_eq!(b.len(), 24);
+        assert_eq!(decode_job_done(&b).unwrap(), s);
+        assert!(decode_job_done(&b[..23]).is_err());
+        assert!(decode_job_done(&[0u8; 25]).is_err());
+    }
+
+    #[test]
+    fn residency_key_discriminates_on_every_axis() {
+        let spec = demo_spec();
+        let base = residency_key(&spec, 0);
+        assert_eq!(base, residency_key(&spec, 0));
+        // a different worker sees a different digest entry
+        assert_ne!(base, residency_key(&spec, 1));
+        let mut other = spec.clone();
+        other.part_seed ^= 1;
+        assert_ne!(base, residency_key(&other, 0));
+        let mut other = spec;
+        other.partition = "hash".into();
+        assert_ne!(base, residency_key(&other, 0));
+    }
+}

@@ -9,7 +9,13 @@
 //!                        over real TCP)
 //! pscope worker         --connect 127.0.0.1:7070
 //!                       (join a master; receives the full job spec over
-//!                        the wire, needs no other flags)
+//!                        the wire, needs no other flags; --pool joins a
+//!                        `pscope serve` scheduler instead and runs jobs
+//!                        back to back)
+//! pscope serve          --manifest sweep.toml --listen 127.0.0.1:7070
+//!                       (schedule a whole sweep — λ grids, loss×reg
+//!                        pairs, warm starts — over one persistent worker
+//!                        pool with shard reuse)
 //! pscope info           --dataset rcv1_like
 //! pscope partition-eval --dataset tiny --p 8
 //! pscope partition      --dataset tiny_skew --p 8
@@ -28,10 +34,12 @@ use std::process::ExitCode;
 use std::time::Duration;
 
 use pscope::cli::{flag, switch, Args, Command, FlagSpec};
+use pscope::config::sweep::SweepManifest;
 use pscope::config::{Model, PscopeConfig, RegKind, RunMode, TransportKind, WorkerBackend};
 use pscope::coordinator::checkpoint::{self, Checkpoint};
 use pscope::coordinator::elastic::ElasticOpts;
 use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec, WorkerOpts};
+use pscope::coordinator::serve::{self, ServeOpts};
 use pscope::coordinator::{train_with, TrainOutput};
 use pscope::net::transport::FaultPlan;
 use pscope::data::source::DataSource;
@@ -460,6 +468,7 @@ fn cmd_worker() -> Command {
         about: "join a pSCOPE master over TCP (the job spec arrives over the wire)",
         flags: vec![
             flag("connect", "master address", Some("127.0.0.1:7070")),
+            switch("pool", "join a `pscope serve` pool and run jobs until stopped"),
             flag("timeout", "seconds for the Setup handshake", Some("30")),
             flag(
                 "connect-timeout",
@@ -488,8 +497,69 @@ fn run_worker_cmd(raw: &[String]) -> Result<()> {
     let fault =
         FaultPlan::parse(args.get("fault").unwrap_or("none"), args.get_parse("fault-seed", 0u64)?)?;
     println!("worker: connecting to {addr}");
-    remote::serve_worker_with(addr, &WorkerOpts { connect_timeout, timeout, fault })?;
+    let opts = WorkerOpts { connect_timeout, timeout, fault };
+    if args.has("pool") {
+        serve::serve_worker_pool(addr, &opts)?;
+    } else {
+        remote::serve_worker_with(addr, &opts)?;
+    }
     println!("worker: clean shutdown");
+    Ok(())
+}
+
+fn cmd_serve() -> Command {
+    Command {
+        name: "serve",
+        about: "schedule a multi-job sweep over a persistent TCP worker pool",
+        flags: vec![
+            flag("manifest", "sweep manifest TOML (required)", None),
+            flag("listen", "address to bind (0 port = ephemeral)", Some("127.0.0.1:7070")),
+            flag(
+                "accept-timeout",
+                "seconds to wait for the pool and each per-job handshake",
+                Some("60"),
+            ),
+            switch("no-artifacts", "skip the bench_out/ table and sweep summary JSON"),
+        ],
+    }
+}
+
+fn run_serve(raw: &[String]) -> Result<()> {
+    let args = cmd_serve().parse(raw)?;
+    let path = args
+        .get("manifest")
+        .ok_or_else(|| Error::Config("serve needs --manifest <sweep.toml>".into()))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read sweep manifest {path}: {e}")))?;
+    let manifest = SweepManifest::parse(&text)?;
+    let timeout = Duration::from_secs(args.get_parse("accept-timeout", 60u64)?.max(1));
+    let ep = MasterEndpoint::bind(args.get("listen").unwrap_or("127.0.0.1:7070"))?;
+    println!(
+        "serve: listening on {} (`pscope worker --pool --connect {}`)",
+        ep.local_addr()?,
+        ep.local_addr()?
+    );
+    let mut opts = ServeOpts::new(timeout);
+    opts.emit_artifacts = !args.has("no-artifacts");
+    let outcome = serve::run_sweep(&ep, &manifest, &opts)?;
+    let failed = outcome
+        .jobs
+        .iter()
+        .filter(|j| matches!(j.status, serve::JobStatus::Failed(_)))
+        .count();
+    if failed > 0 {
+        println!(
+            "serve: sweep {:?} finished with {failed} failed job(s) of {}",
+            manifest.name,
+            outcome.jobs.len()
+        );
+    } else {
+        println!(
+            "serve: sweep {:?} finished: all {} job(s) ok",
+            manifest.name,
+            outcome.jobs.len()
+        );
+    }
     Ok(())
 }
 
@@ -833,7 +903,9 @@ pscope — proximal SCOPE for distributed sparse learning (NeurIPS'18 reproducti
 subcommands:
   train            run pSCOPE on a dataset (--transport tcp = loopback cluster)
   master           run the master over TCP; workers join with `pscope worker`
-  worker           join a TCP master (job spec arrives over the wire)
+  worker           join a TCP master (job spec arrives over the wire; --pool
+                   joins a `pscope serve` scheduler instead)
+  serve            schedule a multi-job sweep over a persistent worker pool
   info             dataset statistics
   partition-eval   measure partition goodness γ(π; ε) of the §7.4 set
   partition        engineer a low-γ partition + JSON goodness report
@@ -855,6 +927,7 @@ fn main() -> ExitCode {
         "train" => run_train(rest),
         "master" => run_master_cmd(rest),
         "worker" => run_worker_cmd(rest),
+        "serve" => run_serve(rest),
         "info" => run_info(rest),
         "partition-eval" => run_partition_eval(rest),
         "partition" => run_partition_study(rest),

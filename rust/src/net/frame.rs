@@ -32,6 +32,8 @@
 //! | 7   | `Heartbeat`    | empty (elastic liveness beacon, unmetered)     |
 //! | 100 | `Setup`        | opaque job spec (control plane, unmetered)     |
 //! | 101 | `Ready`        | empty (control plane, unmetered)               |
+//! | 102 | `JobSetup`     | job idx + RunSpec + optional warm-start `w0`   |
+//! | 103 | `JobDone`      | cumulative worker pool stats (serve mode)      |
 //!
 //! Floats travel as raw IEEE-754 bit patterns (`f64::to_le_bytes`), so
 //! NaN payloads, signed zeros, subnormals and ±inf all round-trip
@@ -83,6 +85,20 @@ pub const TAG_HEARTBEAT: u32 = 7;
 pub const TAG_SETUP: u32 = 100;
 /// Control-plane tag: worker → master handshake ack. Unmetered.
 pub const TAG_READY: u32 = 101;
+/// Control-plane tag: master → pool worker per-job assignment (`pscope
+/// serve`): job index + [`crate::coordinator::remote::RunSpec`] + optional
+/// exact-bits warm-start iterate. Unmetered, like `Setup` — per-job setup
+/// traffic is not part of the per-epoch accounting, so a job scheduled
+/// through the pool meters exactly like a standalone run.
+pub const TAG_JOB_SETUP: u32 = 102;
+/// Control-plane tag: pool worker → master end-of-job report (`pscope
+/// serve`): cumulative shard-load / row / job counters proving shard
+/// residency across jobs. Unmetered.
+pub const TAG_JOB_DONE: u32 = 103;
+/// Tags at or above this value are control-plane frames: unmetered, never
+/// decoded by the data-plane decoders, and buffered (not fatal) when they
+/// arrive at a master reader thread between jobs.
+pub const TAG_CONTROL_MIN: u32 = 100;
 
 /// Header size in bytes (`== MSG_HEADER_BYTES`).
 pub const FRAME_HEADER_BYTES: usize = MSG_HEADER_BYTES as usize;

@@ -237,8 +237,154 @@ pub struct TcpMaster {
     readers: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     meter: Arc<ByteMeter>,
+    /// Control-plane frames (tag ≥ [`frame::TAG_CONTROL_MIN`]) a reader
+    /// picked up mid-stream, as `(worker, raw frame)`. A pool worker's
+    /// `JobDone` lands here when it races the reader teardown at the end
+    /// of a served job; outside serve mode the buffer stays empty.
+    ctrl: Arc<Mutex<Vec<(usize, Vec<u8>)>>>,
     io_s: f64,
     down: bool,
+}
+
+/// Accept `p` worker connections on `listener`, send each a `Setup`
+/// control frame (`spec` payload, worker id = accept order, unmetered),
+/// and wait for every `Ready` ack. `timeout` bounds the whole accept phase
+/// and each handshake read (workers build their shards between `Setup` and
+/// `Ready`, concurrently across connections). Returns the handshaken
+/// streams and their peer addresses; the streams keep the `READER_POLL`
+/// read timeout set during the handshake.
+///
+/// Split out of [`TcpMaster::accept`] so `pscope serve` can own a
+/// long-lived pool of handshaken streams and build a fresh per-job
+/// [`TcpMaster`] over clones of them ([`from_streams`]).
+pub(crate) fn accept_streams(
+    listener: &TcpListener,
+    p: usize,
+    spec: &[u8],
+    timeout: Duration,
+) -> Result<(Vec<TcpStream>, Vec<SocketAddr>)> {
+    if p == 0 {
+        return Err(Error::Config("cannot accept zero workers".into()));
+    }
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + timeout;
+    let mut streams: Vec<TcpStream> = Vec::with_capacity(p);
+    let mut peers: Vec<SocketAddr> = Vec::with_capacity(p);
+    while streams.len() < p {
+        match listener.accept() {
+            Ok((mut s, peer)) => {
+                s.set_nonblocking(false)?;
+                let _ = s.set_nodelay(true);
+                let k = streams.len() as u64;
+                frame::write_frame(&mut s, &frame::encode_control(frame::TAG_SETUP, k, spec))
+                    .map_err(|e| {
+                        Error::Protocol(format!("worker {k} at {peer}: Setup send failed: {e}"))
+                    })?;
+                streams.push(s);
+                peers.push(peer);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    listener.set_nonblocking(false)?;
+                    return Err(Error::Protocol(format!(
+                        "timed out waiting for workers: {}/{p} connected within {timeout:?}",
+                        streams.len()
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                listener.set_nonblocking(false)?;
+                return Err(e.into());
+            }
+        }
+    }
+    listener.set_nonblocking(false)?;
+    // Handshake: one Ready per worker. Serial reads are fine — the
+    // expensive part (shard construction) runs in the worker processes
+    // concurrently; each read gets a full timeout budget, enforced as
+    // a hard deadline even against a peer that dribbles half a frame
+    // and stalls (read_frame_deadline), so accept + handshake is
+    // always bounded.
+    for (k, s) in streams.iter_mut().enumerate() {
+        let peer = peers[k];
+        s.set_read_timeout(Some(READER_POLL))?;
+        let ready_deadline = Instant::now() + timeout;
+        let got = loop {
+            match frame::read_frame_deadline(s, Some(ready_deadline))? {
+                FrameRead::TimedOut => {
+                    if Instant::now() >= ready_deadline {
+                        return Err(Error::Protocol(format!(
+                            "worker {k} at {peer}: no Ready within {timeout:?}"
+                        )));
+                    }
+                }
+                other => break other,
+            }
+        };
+        match got {
+            FrameRead::Frame(f) => {
+                let (tag, _epoch, worker, _payload) = frame::parts(&f)?;
+                if tag != frame::TAG_READY || worker != k as u64 {
+                    return Err(Error::Protocol(format!(
+                        "worker {k} at {peer}: bad handshake (tag {tag}, claimed id {worker})"
+                    )));
+                }
+            }
+            FrameRead::Eof => {
+                return Err(Error::Protocol(format!(
+                    "worker {k} at {peer} hung up during handshake (likely failed to \
+                     build its shard)"
+                )))
+            }
+            FrameRead::TimedOut => unreachable!("boundary timeouts retried above"),
+        }
+    }
+    Ok((streams, peers))
+}
+
+/// Build a [`TcpMaster`] over already-handshaken streams: spawn the reader
+/// threads and wire up the meter. The second half of
+/// [`TcpMaster::accept`]; `pscope serve` calls it once per job over
+/// `try_clone`s of its pool streams so each job gets a fresh meter and
+/// fresh readers while the underlying connections persist.
+pub(crate) fn from_streams(
+    streams: Vec<TcpStream>,
+    peers: Vec<SocketAddr>,
+    meter: Arc<ByteMeter>,
+) -> Result<TcpMaster> {
+    // Reader threads: forward decoded frames, meter them by wire size,
+    // map connection death to the WorkerDown sentinel.
+    let p = streams.len();
+    let stop = Arc::new(AtomicBool::new(false));
+    let ctrl = Arc::new(Mutex::new(Vec::new()));
+    let (tx, from_workers) = std::sync::mpsc::channel::<ToMaster>();
+    let mut readers = Vec::with_capacity(p);
+    for (k, s) in streams.iter().enumerate() {
+        let mut rs = s.try_clone()?;
+        rs.set_read_timeout(Some(READER_POLL))?;
+        readers.push(std::thread::spawn(reader_loop(
+            rs,
+            k,
+            tx.clone(),
+            stop.clone(),
+            meter.clone(),
+            ctrl.clone(),
+        )));
+    }
+    drop(tx);
+    Ok(TcpMaster {
+        streams,
+        peers,
+        from_workers,
+        readers,
+        stop,
+        meter,
+        ctrl,
+        io_s: 0.0,
+        down: false,
+    })
 }
 
 impl TcpMaster {
@@ -254,111 +400,41 @@ impl TcpMaster {
         spec: &[u8],
         timeout: Duration,
     ) -> Result<TcpMaster> {
-        if p == 0 {
-            return Err(Error::Config("cannot accept zero workers".into()));
-        }
-        listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + timeout;
-        let mut streams: Vec<TcpStream> = Vec::with_capacity(p);
-        let mut peers: Vec<SocketAddr> = Vec::with_capacity(p);
-        while streams.len() < p {
-            match listener.accept() {
-                Ok((mut s, peer)) => {
-                    s.set_nonblocking(false)?;
-                    let _ = s.set_nodelay(true);
-                    let k = streams.len() as u64;
-                    frame::write_frame(&mut s, &frame::encode_control(frame::TAG_SETUP, k, spec))
-                        .map_err(|e| {
-                            Error::Protocol(format!("worker {k} at {peer}: Setup send failed: {e}"))
-                        })?;
-                    streams.push(s);
-                    peers.push(peer);
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        listener.set_nonblocking(false)?;
-                        return Err(Error::Protocol(format!(
-                            "timed out waiting for workers: {}/{p} connected within {timeout:?}",
-                            streams.len()
-                        )));
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                Err(e) => {
-                    listener.set_nonblocking(false)?;
-                    return Err(e.into());
-                }
+        let (streams, peers) = accept_streams(listener, p, spec, timeout)?;
+        from_streams(streams, peers, meter)
+    }
+
+    /// End one served job without severing the connections: send every
+    /// worker a metered `Stop` (byte-for-byte the accounting of
+    /// [`MasterTransport::shutdown`]), join the reader threads, and return
+    /// any control-plane frames the readers buffered (a pool worker's
+    /// `JobDone` often races the teardown). The underlying sockets stay
+    /// open — this `TcpMaster` holds `try_clone`s of the pool's streams,
+    /// and dropping it afterwards is a no-op.
+    pub(crate) fn end_job(&mut self) -> Vec<(usize, Vec<u8>)> {
+        if !self.down {
+            self.down = true;
+            for s in &mut self.streams {
+                let msg = ToWorker::Stop;
+                let buf = frame::encode_to_worker(&msg);
+                self.meter.record(buf.len() as u64);
+                let _ = frame::write_frame(s, &buf);
             }
-        }
-        listener.set_nonblocking(false)?;
-        // Handshake: one Ready per worker. Serial reads are fine — the
-        // expensive part (shard construction) runs in the worker processes
-        // concurrently; each read gets a full timeout budget, enforced as
-        // a hard deadline even against a peer that dribbles half a frame
-        // and stalls (read_frame_deadline), so accept + handshake is
-        // always bounded.
-        for (k, s) in streams.iter_mut().enumerate() {
-            let peer = peers[k];
-            s.set_read_timeout(Some(READER_POLL))?;
-            let ready_deadline = Instant::now() + timeout;
-            let got = loop {
-                match frame::read_frame_deadline(s, Some(ready_deadline))? {
-                    FrameRead::TimedOut => {
-                        if Instant::now() >= ready_deadline {
-                            return Err(Error::Protocol(format!(
-                                "worker {k} at {peer}: no Ready within {timeout:?}"
-                            )));
-                        }
-                    }
-                    other => break other,
-                }
-            };
-            match got {
-                FrameRead::Frame(f) => {
-                    let (tag, _epoch, worker, _payload) = frame::parts(&f)?;
-                    if tag != frame::TAG_READY || worker != k as u64 {
-                        return Err(Error::Protocol(format!(
-                            "worker {k} at {peer}: bad handshake (tag {tag}, claimed id {worker})"
-                        )));
-                    }
-                }
-                FrameRead::Eof => {
-                    return Err(Error::Protocol(format!(
-                        "worker {k} at {peer} hung up during handshake (likely failed to \
-                         build its shard)"
-                    )))
-                }
-                FrameRead::TimedOut => unreachable!("boundary timeouts retried above"),
+            self.stop.store(true, Ordering::Relaxed);
+            // Bounded join: readers wake at least every READER_POLL at
+            // frame boundaries. No socket shutdown here — a reader stalled
+            // mid-frame holds the join only until the peer's frame
+            // completes or its connection dies, and pool peers are either
+            // healthy (finishing run_worker, about to send JobDone) or
+            // already dead (reader exited on EOF).
+            for h in self.readers.drain(..) {
+                let _ = h.join();
             }
+            self.streams.clear();
         }
-        // Reader threads: forward decoded frames, meter them by wire size,
-        // map connection death to the WorkerDown sentinel.
-        let stop = Arc::new(AtomicBool::new(false));
-        let (tx, from_workers) = std::sync::mpsc::channel::<ToMaster>();
-        let mut readers = Vec::with_capacity(p);
-        for (k, s) in streams.iter().enumerate() {
-            let mut rs = s.try_clone()?;
-            rs.set_read_timeout(Some(READER_POLL))?;
-            readers.push(std::thread::spawn(reader_loop(
-                rs,
-                k,
-                tx.clone(),
-                stop.clone(),
-                meter.clone(),
-            )));
-        }
-        drop(tx);
-        Ok(TcpMaster {
-            streams,
-            peers,
-            from_workers,
-            readers,
-            stop,
-            meter,
-            io_s: 0.0,
-            down: false,
-        })
+        let mut buf = self.ctrl.lock().map(|mut v| std::mem::take(&mut *v)).unwrap_or_default();
+        buf.sort_by_key(|(k, _)| *k);
+        buf
     }
 }
 
@@ -368,6 +444,7 @@ fn reader_loop(
     tx: Sender<ToMaster>,
     stop: Arc<AtomicBool>,
     meter: Arc<ByteMeter>,
+    ctrl: Arc<Mutex<Vec<(usize, Vec<u8>)>>>,
 ) -> impl FnOnce() {
     move || loop {
         if stop.load(Ordering::Relaxed) {
@@ -384,37 +461,50 @@ fn reader_loop(
                 }
                 return;
             }
-            Ok(FrameRead::Frame(f)) => match frame::decode_to_master(&f) {
-                // A worker's own failure sentinel travels unmetered, just
-                // like the in-process drop guard's.
-                Ok(ToMaster::WorkerDown { worker: w }) => {
-                    let _ = tx.send(ToMaster::WorkerDown { worker: w });
-                    return;
+            Ok(FrameRead::Frame(f)) => {
+                // Control-plane frames (serve mode's JobDone, chiefly) are
+                // buffered for the scheduler rather than fed to the
+                // data-plane decoder, where they would read as corruption.
+                if matches!(frame::parts(&f), Ok((tag, ..)) if tag >= frame::TAG_CONTROL_MIN) {
+                    if let Ok(mut c) = ctrl.lock() {
+                        c.push((worker, f));
+                    }
+                    continue;
                 }
-                // Liveness beacons (elastic mode) are forwarded unmetered
-                // — they carry no algorithm state — and the reader keeps
-                // going: a beacon is the opposite of a terminal event.
-                Ok(hb @ ToMaster::Heartbeat { .. }) => {
-                    if tx.send(hb).is_err() {
+                match frame::decode_to_master(&f) {
+                    // A worker's own failure sentinel travels unmetered,
+                    // just like the in-process drop guard's.
+                    Ok(ToMaster::WorkerDown { worker: w }) => {
+                        let _ = tx.send(ToMaster::WorkerDown { worker: w });
+                        return;
+                    }
+                    // Liveness beacons (elastic mode) are forwarded
+                    // unmetered — they carry no algorithm state — and the
+                    // reader keeps going: a beacon is the opposite of a
+                    // terminal event.
+                    Ok(hb @ ToMaster::Heartbeat { .. }) => {
+                        if tx.send(hb).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(msg) => {
+                        // Meter first, then forward: by the time the
+                        // master has received a message, its bytes are on
+                        // the books (matches the sender-side metering of
+                        // the sim).
+                        meter.record(f.len() as u64);
+                        if tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        if !stop.load(Ordering::Relaxed) {
+                            let _ = tx.send(ToMaster::WorkerDown { worker });
+                        }
                         return;
                     }
                 }
-                Ok(msg) => {
-                    // Meter first, then forward: by the time the master
-                    // has received a message, its bytes are on the books
-                    // (matches the sender-side metering of the sim).
-                    meter.record(f.len() as u64);
-                    if tx.send(msg).is_err() {
-                        return;
-                    }
-                }
-                Err(_) => {
-                    if !stop.load(Ordering::Relaxed) {
-                        let _ = tx.send(ToMaster::WorkerDown { worker });
-                    }
-                    return;
-                }
-            },
+            }
         }
     }
 }

@@ -4,8 +4,16 @@
 //! frame-length == `wire_bytes()` identity that makes the TCP byte meter
 //! equal the modeled accounting.
 
+use pscope::config::{Model, PscopeConfig};
 use pscope::coordinator::protocol::{ToMaster, ToWorker};
+use pscope::coordinator::remote::RunSpec;
+use pscope::coordinator::serve::{
+    decode_job_done, decode_job_setup, encode_job_done, encode_job_setup, PoolWorkerStats,
+};
+use pscope::data::source::DataSource;
+use pscope::data::synth;
 use pscope::net::frame::{self, FrameRead};
+use pscope::partition::Partitioner;
 use pscope::rng::Rng;
 use pscope::testkit::prop;
 
@@ -192,5 +200,88 @@ fn prop_framed_streams_roundtrip_and_reject_truncation() {
                 Err(_) => return prop::that(true, ""),
             }
         }
+    });
+}
+
+/// A real spec (derived, not hand-built) for the serve-pool codec props.
+fn demo_spec(seed: u64) -> RunSpec {
+    let ds = synth::tiny(seed).generate();
+    let cfg = PscopeConfig::for_dataset("tiny", Model::Logistic);
+    let part = Partitioner::parse("uniform").unwrap().split(&ds, cfg.p, seed);
+    let source = DataSource::Synth { name: "tiny".into(), seed };
+    RunSpec::derive(&ds, &part, &cfg, &source, "uniform", seed, None).unwrap()
+}
+
+#[test]
+fn prop_job_setup_roundtrip_exact_bits() {
+    let spec = demo_spec(7);
+    prop::check("JobSetup codec", 200, |rng, shrink| {
+        let job_idx = rng.next_u64();
+        let w0 = if rng.below(4) == 0 { None } else { Some(arb_vec(rng, shrink)) };
+        let buf = encode_job_setup(job_idx, &spec, w0.as_deref());
+        let (idx, back, back_w0) = match decode_job_setup(&buf) {
+            Ok(t) => t,
+            Err(e) => return prop::that(false, format!("decode failed: {e}")),
+        };
+        if idx != job_idx {
+            return prop::that(false, format!("job_idx {job_idx} decoded as {idx}"));
+        }
+        if back != spec {
+            return prop::that(false, "RunSpec mangled in transit".to_string());
+        }
+        match (&w0, &back_w0) {
+            (None, None) => prop::that(true, ""),
+            (Some(a), Some(b)) => prop::that(
+                bits(a) == bits(b),
+                format!("w0 bits mangled: {:x?} vs {:x?}", bits(a), bits(b)),
+            ),
+            _ => prop::that(
+                false,
+                format!("w0 presence mangled: sent {:?}, got {:?}", w0.is_some(), back_w0.is_some()),
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_job_setup_rejects_every_truncation() {
+    let spec = demo_spec(11);
+    prop::check("JobSetup truncation", 200, |rng, shrink| {
+        // always ship a warm start here so the tail is non-trivial
+        let w0 = arb_vec(rng, shrink);
+        let buf = encode_job_setup(rng.below(1 << 20) as u64, &spec, Some(&w0));
+        // any strict prefix must fail — no silent prefix-train
+        let cut = rng.below(buf.len());
+        if decode_job_setup(&buf[..cut]).is_ok() {
+            return prop::that(false, format!("prefix of {cut}/{} bytes decoded", buf.len()));
+        }
+        // and so must trailing garbage
+        let mut long = buf;
+        long.push(rng.below(256) as u8);
+        prop::that(decode_job_setup(&long).is_err(), "trailing byte accepted".to_string())
+    });
+}
+
+#[test]
+fn prop_job_done_roundtrip_and_length() {
+    prop::check("JobDone codec", 300, |rng, _shrink| {
+        let stats = PoolWorkerStats {
+            shard_loads: rng.next_u64(),
+            rows_read: rng.next_u64(),
+            jobs_done: rng.next_u64(),
+        };
+        let buf = encode_job_done(&stats);
+        if buf.len() != 24 {
+            return prop::that(false, format!("JobDone must be 24 bytes, got {}", buf.len()));
+        }
+        match decode_job_done(&buf) {
+            Ok(back) if back == stats => {}
+            other => return prop::that(false, format!("roundtrip mangled: {other:?}")),
+        }
+        let cut = rng.below(24);
+        prop::that(
+            decode_job_done(&buf[..cut]).is_err(),
+            format!("{cut}-byte prefix accepted"),
+        )
     });
 }

@@ -1,0 +1,220 @@
+//! End-to-end pins for the `pscope serve` scheduler (real TCP pool
+//! workers on loopback, the manifest-driven job queue on the master):
+//!
+//! 1. a single-job sweep is **bit-identical** to the equivalent one-shot
+//!    run — final `w` bits, per-epoch objective bits, and the byte meter
+//!    (the in-process cluster stands in for `pscope train`, whose TCP
+//!    parity is pinned by `tests/net_accounting.rs`);
+//! 2. a multi-job sweep over one dataset materializes each worker's
+//!    shard **exactly once** (pool stats prove the residency cache);
+//! 3. under the half-gap protocol a warm-started twin finishes in
+//!    strictly fewer epochs than its cold twin;
+//! 4. a mid-sweep failed job is isolated: the surviving jobs' outputs
+//!    are bit-identical to a sweep that never contained it.
+
+use std::thread;
+use std::time::Duration;
+
+use pscope::config::sweep::{job_config, SweepManifest};
+use pscope::coordinator::remote::{MasterEndpoint, WorkerOpts};
+use pscope::coordinator::serve::{
+    run_sweep, serve_worker_pool, JobStatus, ServeOpts, SweepOutcome,
+};
+use pscope::coordinator::{train_with, TrainOutput};
+use pscope::data::source::DataSource;
+use pscope::net::NetModel;
+use pscope::partition::Partitioner;
+
+fn opts() -> ServeOpts {
+    ServeOpts {
+        accept_timeout: Duration::from_secs(30),
+        net: NetModel::ten_gbe(),
+        emit_artifacts: false,
+    }
+}
+
+/// Bind an ephemeral master, spawn `p` pool workers against it, run the
+/// sweep, and reap the workers (asserting their clean shutdown).
+fn pool_sweep(manifest: &str, p: usize) -> SweepOutcome {
+    let m = SweepManifest::parse(manifest).expect("manifest parses");
+    let ep = MasterEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..p)
+        .map(|_| {
+            let a = addr.clone();
+            thread::spawn(move || serve_worker_pool(&a, &WorkerOpts::new(Duration::from_secs(30))))
+        })
+        .collect();
+    let out = run_sweep(&ep, &m, &opts());
+    for h in workers {
+        h.join().expect("worker thread must not panic").expect("worker exits cleanly");
+    }
+    out.expect("sweep completes")
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// `(epoch, objective bits)` pairs — the trajectory identity.
+fn trace_bits(out: &TrainOutput) -> Vec<(usize, u64)> {
+    out.trace.points.iter().map(|p| (p.epoch, p.objective.to_bits())).collect()
+}
+
+fn job_output<'a>(out: &'a SweepOutcome, name: &str) -> &'a TrainOutput {
+    let j = out.jobs.iter().find(|j| j.name == name).unwrap_or_else(|| panic!("job {name}?"));
+    assert!(matches!(j.status, JobStatus::Ok), "job {name} failed: {:?}", j.status);
+    j.output.as_ref().unwrap()
+}
+
+#[test]
+fn single_job_sweep_matches_one_shot_train_bit_for_bit() {
+    const MANIFEST: &str = r#"
+[sweep]
+name = "single"
+dataset = "tiny"
+p = 2
+outer_iters = 5
+
+[job.only]
+lam1 = 1e-3
+"#;
+    // the reference: the identical config through the in-process cluster
+    let m = SweepManifest::parse(MANIFEST).unwrap();
+    let ds = DataSource::resolve(&m.dataset, m.seed).load().unwrap();
+    let cfg = job_config(&m, &m.jobs[0], &m.dataset, 2);
+    let part = Partitioner::parse(&cfg.partition).unwrap().split(&ds, 2, m.seed);
+    let expected = train_with(&ds, &part, &cfg, None, NetModel::ten_gbe()).unwrap();
+
+    let out = pool_sweep(MANIFEST, 2);
+    assert!(out.all_ok());
+    let got = job_output(&out, "only");
+    assert_eq!(bits(&got.w), bits(&expected.w), "final iterate bits");
+    assert_eq!(trace_bits(got), trace_bits(&expected), "per-epoch objective bits");
+    assert_eq!(got.comm, expected.comm, "byte meter (bytes, msgs)");
+    assert_eq!(got.epochs_run, expected.epochs_run);
+}
+
+#[test]
+fn same_dataset_sweep_materializes_each_shard_once() {
+    const MANIFEST: &str = r#"
+[sweep]
+name = "grid"
+dataset = "tiny"
+p = 2
+outer_iters = 3
+
+[job.path]
+lam1_grid = "1e-2, 1e-3, 1e-4"
+"#;
+    let out = pool_sweep(MANIFEST, 2);
+    assert!(out.all_ok());
+    assert_eq!(out.jobs.len(), 3, "grid expands to three jobs");
+    let ds = DataSource::resolve("tiny", 42).load().unwrap();
+    let mut rows_total = 0;
+    for (k, s) in out.worker_stats.iter().enumerate() {
+        assert_eq!(s.shard_loads, 1, "worker {k} must materialize its shard exactly once");
+        assert_eq!(s.jobs_done, 3, "worker {k} must serve every job");
+        rows_total += s.rows_read;
+    }
+    assert_eq!(rows_total as usize, ds.n(), "one full pass over the rows, ever");
+}
+
+#[test]
+fn warm_start_beats_cold_twin_under_half_gap() {
+    const MANIFEST: &str = r#"
+[sweep]
+name = "warm"
+dataset = "tiny"
+p = 2
+outer_iters = 30
+stop_at_half_gap = true
+reference_iters = 20000
+
+[job.cold_src]
+lam1 = 1e-3
+
+[job.warm_twin]
+lam1 = 1e-3
+warm_start = "cold_src"
+
+[job.cold_twin]
+lam1 = 1e-3
+"#;
+    let out = pool_sweep(MANIFEST, 2);
+    assert!(out.all_ok());
+    let cold_src = job_output(&out, "cold_src");
+    let warm = job_output(&out, "warm_twin");
+    let cold = job_output(&out, "cold_twin");
+    // the twins share every config bit, so the cold ones are identical
+    assert_eq!(bits(&cold.w), bits(&cold_src.w));
+    assert!(cold.epochs_run >= 1, "a cold start always runs at least one epoch");
+    // the warm twin starts at its source's (already half-gap-converged)
+    // iterate and must therefore stop strictly earlier
+    assert!(
+        warm.epochs_run < cold.epochs_run,
+        "warm twin ran {} epochs, cold twin {}",
+        warm.epochs_run,
+        cold.epochs_run
+    );
+    // and its final iterate is exactly the warm start it was given
+    assert_eq!(bits(&warm.w), bits(&cold_src.w), "epoch-0 stop returns w0's exact bits");
+}
+
+#[test]
+fn failed_job_is_isolated_from_the_rest_of_the_sweep() {
+    const WITH_POISON: &str = r#"
+[sweep]
+name = "poisoned"
+dataset = "tiny"
+p = 2
+outer_iters = 4
+
+[job.first]
+lam1 = 1e-3
+
+[job.poison]
+lam1 = -1.0
+
+[job.second]
+lam1 = 1e-4
+"#;
+    const WITHOUT: &str = r#"
+[sweep]
+name = "clean"
+dataset = "tiny"
+p = 2
+outer_iters = 4
+
+[job.first]
+lam1 = 1e-3
+
+[job.second]
+lam1 = 1e-4
+"#;
+    let poisoned = pool_sweep(WITH_POISON, 2);
+    let clean = pool_sweep(WITHOUT, 2);
+
+    let bad = poisoned.jobs.iter().find(|j| j.name == "poison").unwrap();
+    match &bad.status {
+        JobStatus::Failed(e) => {
+            assert!(bad.output.is_none());
+            assert!(!e.is_empty());
+        }
+        JobStatus::Ok => panic!("a negative λ must fail the job"),
+    }
+    // the failure never touched the wire, so the surviving jobs are
+    // bit-identical to a sweep that never scheduled it
+    for name in ["first", "second"] {
+        let a = job_output(&poisoned, name);
+        let b = job_output(&clean, name);
+        assert_eq!(bits(&a.w), bits(&b.w), "{name}: final iterate bits");
+        assert_eq!(trace_bits(a), trace_bits(b), "{name}: trajectory");
+        assert_eq!(a.comm, b.comm, "{name}: byte meter");
+    }
+    // the pool kept serving: both workers saw the two real jobs only
+    for s in &poisoned.worker_stats {
+        assert_eq!(s.jobs_done, 2);
+        assert_eq!(s.shard_loads, 1);
+    }
+}
