@@ -293,6 +293,68 @@ fn main() {
         );
     }
 
+    // ---- sparse wire codec (SPEC_VERSION 7): arm cost + bytes/epoch ----
+    // Encode/decode ns for both arms of the v7 vector part, then the
+    // meter's payoff: total wire bytes per epoch, dense vs `--wire auto`,
+    // along a λ ramp (heavier l1 ⇒ sparser iterates ⇒ smaller frames).
+    {
+        use pscope::config::WireMode;
+        use pscope::coordinator::protocol::ToWorker;
+        use pscope::net::frame;
+
+        let dcodec = if quick { 2_000 } else { 50_000 };
+        let mut rngw = Rng::new(11);
+        let mut sparse_w = vec![0.0f64; dcodec];
+        for _ in 0..dcodec / 100 {
+            let i = rngw.below(dcodec);
+            sparse_w[i] = rngw.normal();
+        }
+        let dense_w: Vec<f64> = (0..dcodec).map(|_| rngw.normal()).collect();
+        for (name, v, mode) in [
+            ("dense arm", &dense_w, WireMode::Dense),
+            ("sparse arm (~1% nnz)", &sparse_w, WireMode::Auto),
+        ] {
+            let msg = ToWorker::Broadcast { epoch: 1, w: v.clone() };
+            let t_enc = time_fn(s(3), s(11), || {
+                std::hint::black_box(frame::encode_to_worker_mode(&msg, mode));
+            });
+            let buf = frame::encode_to_worker_mode(&msg, mode);
+            let t_dec = time_fn(s(3), s(11), || {
+                std::hint::black_box(frame::decode_to_worker(&buf).unwrap());
+            });
+            table.row_timed(
+                &[
+                    format!("wire encode {name} (d={dcodec})"),
+                    human_time(t_enc.median),
+                    format!("decode {}, {} B/frame", human_time(t_dec.median), buf.len()),
+                ],
+                t_enc.median,
+            );
+        }
+
+        for lam1 in [1e-4f64, 1e-3, 1e-2] {
+            let mkw = |wire: WireMode| PscopeConfig {
+                p: 8,
+                outer_iters: 3,
+                reg: Reg { lam1, lam2: 1e-5 },
+                seed: 42,
+                record_every: 100,
+                wire,
+                ..PscopeConfig::for_dataset("rcv1_like", Model::Logistic)
+            };
+            let dense_run =
+                train_with(&ds, &part, &mkw(WireMode::Dense), None, NetModel::zero()).unwrap();
+            let auto_run =
+                train_with(&ds, &part, &mkw(WireMode::Auto), None, NetModel::zero()).unwrap();
+            let (db, ab) = (dense_run.comm.0, auto_run.comm.0);
+            table.row(&[
+                format!("wire bytes/epoch λ1={lam1:.0e} (p=8)"),
+                format!("{} B auto", ab / 3),
+                format!("{} B dense — auto is {:.1}%", db / 3, 100.0 * ab as f64 / db as f64),
+            ]);
+        }
+    }
+
     // ---- PJRT artifact execution ----
     if std::path::Path::new("artifacts/manifest.json").exists() && !quick {
         let dsd = synth::cov_like(42).with_n(1500).generate();

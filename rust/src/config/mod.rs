@@ -164,6 +164,44 @@ impl TransportKind {
     }
 }
 
+/// How vector-bearing data frames are encoded on the wire (see
+/// `crate::net::frame` and `DESIGN.md` §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// Always the legacy dense layout (`len · 8` bytes of raw f64 bits
+    /// per vector). Default — pins every historical byte-accounting
+    /// number unchanged.
+    #[default]
+    Dense,
+    /// Each vector payload self-selects dense or sparse
+    /// (`tag | d | nnz | nnz × (idx, val-bits)`) at encode time,
+    /// whichever is smaller. Values still travel as exact f64 bits, so
+    /// trajectories are bit-identical to `Dense`; only the byte meter
+    /// shrinks once iterates sparsify under the prox.
+    Auto,
+}
+
+impl WireMode {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<WireMode> {
+        match s {
+            "dense" => Ok(WireMode::Dense),
+            "auto" | "sparse" => Ok(WireMode::Auto),
+            _ => Err(Error::Config(format!(
+                "unknown wire mode {s:?} (expected \"dense\" or \"auto\")"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            WireMode::Dense => "dense",
+            WireMode::Auto => "auto",
+        }
+    }
+}
+
 /// Failure-handling mode of the coordinator (see `DESIGN.md` §11).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum RunMode {
@@ -247,6 +285,11 @@ pub struct PscopeConfig {
     /// produce bit-identical trajectories and byte-meter totals for the
     /// same seed/config/partition.
     pub transport: TransportKind,
+    /// Wire encoding of vector-bearing data frames: `Dense` (default,
+    /// the legacy layout byte-for-byte) or `Auto` (per-payload
+    /// dense-vs-sparse selection; same trajectory bits, fewer metered
+    /// bytes once iterates sparsify).
+    pub wire: WireMode,
     /// Dataset source spec (`dataset` key): a synth preset name, a LibSVM
     /// path, or a `pscope ingest` shard directory — resolved by
     /// [`DataSource::resolve`](crate::data::source::DataSource::resolve).
@@ -293,6 +336,7 @@ impl Default for PscopeConfig {
             grad_threads: 1,
             partition: "uniform".into(),
             transport: TransportKind::InProc,
+            wire: WireMode::Dense,
             dataset: None,
             mode: RunMode::Strict,
             heartbeat_ms: 250,
@@ -408,6 +452,7 @@ impl PscopeConfig {
                     self.partition = name.to_string();
                 }
                 "transport" => self.transport = TransportKind::parse(v.as_str_or()?)?,
+                "wire" => self.wire = WireMode::parse(v.as_str_or()?)?,
                 "dataset" => self.dataset = Some(v.as_str_or()?.to_string()),
                 "mode" => self.mode = RunMode::parse(v.as_str_or()?)?,
                 "heartbeat_ms" => self.heartbeat_ms = v.as_usize_or()? as u64,
@@ -587,5 +632,23 @@ mod tests {
         c.apply_toml("transport = \"tcp\"\n").unwrap();
         assert_eq!(c.transport, TransportKind::Tcp);
         assert!(c.apply_toml("transport = \"udp\"\n").is_err());
+    }
+
+    #[test]
+    fn wire_mode_parse_and_toml() {
+        assert_eq!(WireMode::parse("dense").unwrap(), WireMode::Dense);
+        assert_eq!(WireMode::parse("auto").unwrap(), WireMode::Auto);
+        assert_eq!(WireMode::parse("sparse").unwrap(), WireMode::Auto);
+        let err = WireMode::parse("gzip").unwrap_err();
+        assert!(format!("{err}").contains("unknown wire mode"), "{err}");
+        for mode in [WireMode::Dense, WireMode::Auto] {
+            assert_eq!(WireMode::parse(mode.name()).unwrap(), mode);
+        }
+        // dense is the default — every legacy config byte-accounts unchanged
+        let mut c = PscopeConfig::default();
+        assert_eq!(c.wire, WireMode::Dense);
+        c.apply_toml("wire = \"auto\"\n").unwrap();
+        assert_eq!(c.wire, WireMode::Auto);
+        assert!(c.apply_toml("wire = \"rle\"\n").is_err());
     }
 }

@@ -72,7 +72,7 @@ use crate::error::{Error, Result};
 use crate::linalg::{scale, zero};
 use crate::loss::Objective;
 use crate::metrics::{Timer, Trace, TracePoint};
-use crate::net::transport::{in_proc_pair, MasterTransport};
+use crate::net::transport::{in_proc_pair_mode, MasterTransport};
 use crate::net::{ByteMeter, NetModel, SimSender};
 use crate::partition::Partition;
 use crate::rng::Rng;
@@ -464,7 +464,7 @@ pub fn train_with_opts(
 
     let meter = ByteMeter::new();
     let root_rng = Rng::new(cfg.seed);
-    let (mut master_t, worker_ts) = in_proc_pair(p, meter.clone());
+    let (mut master_t, worker_ts) = in_proc_pair_mode(p, meter.clone(), cfg.wire);
 
     let mut run: Option<MasterRun> = None;
     let scope_result: Result<()> = std::thread::scope(|scope| {

@@ -12,11 +12,22 @@
 //! i.e. `O(1)` rounds and `O(p·d)` bytes per epoch — the communication
 //! claim the benches verify against the minibatch baselines' `O(n/b)`
 //! rounds. The constants below define the accounting; both wires charge
-//! it identically: the in-process transport meters `wire_bytes()` per
+//! it identically: the in-process transport meters `wire_bytes_for()` per
 //! message through [`crate::net::SimSender`], and the TCP transport's
 //! binary frames ([`crate::net::frame`]) encode each message in *exactly*
-//! `wire_bytes()` bytes, so the meter fed by real traffic reports the
+//! `wire_bytes_for()` bytes, so the meter fed by real traffic reports the
 //! same totals (`tests/net_accounting.rs` pins the identity).
+//!
+//! Under [`WireMode::Auto`] the three vector-bearing frames (`Broadcast`,
+//! `FullGrad`, `LocalIterate`) self-select a sparse `(idx, val-bits)`
+//! layout per payload when it is strictly smaller than the dense one
+//! (pSCOPE iterates are L1-sparse by construction, so this is the
+//! dominant wire saving); the selection rule lives here
+//! ([`sparse_nnz`]) so the modeled charge and the actual encoder can
+//! never disagree. `ShardGrad` always ships dense — gradient sums touch
+//! every active feature.
+
+use crate::config::WireMode;
 
 /// Fixed per-message header charge (type tag + epoch + worker id + len).
 pub const MSG_HEADER_BYTES: u64 = 24;
@@ -25,6 +36,47 @@ pub const MSG_HEADER_BYTES: u64 = 24;
 #[inline]
 pub fn vec_bytes(len: usize) -> u64 {
     MSG_HEADER_BYTES + 8 * len as u64
+}
+
+/// Size of the *sparse* arm of a vector part: `u8` arm tag + `u64 d` +
+/// `u64 nnz` + `nnz × (u32 idx | u64 val-bits)`. Always ≢ 0 (mod 8)
+/// (it is `1 + 4·nnz` mod 8 ∈ {1, 5}), while the dense arm is `8·len`
+/// ≡ 0 — the structural property the decoder disambiguates on.
+#[inline]
+pub fn sparse_vec_part_bytes(nnz: usize) -> u64 {
+    17 + 12 * nnz as u64
+}
+
+/// Encode-time arm selection, shared by the byte accounting and the
+/// actual encoder ([`crate::net::frame`]): `Some(nnz)` iff the sparse
+/// arm of `v` is **strictly** smaller than the dense arm (ties go
+/// dense). An entry is nonzero iff its *bit pattern* is nonzero, so an
+/// explicit `-0.0` is stored and round-trips exactly. Vectors whose
+/// indices do not fit `u32` always go dense.
+#[inline]
+pub fn sparse_nnz(v: &[f64]) -> Option<usize> {
+    if v.len() > u32::MAX as usize {
+        return None;
+    }
+    let nnz = v.iter().filter(|x| x.to_bits() != 0).count();
+    if sparse_vec_part_bytes(nnz) < 8 * v.len() as u64 {
+        Some(nnz)
+    } else {
+        None
+    }
+}
+
+/// Wire size of a vector payload under `mode`: the dense charge, or the
+/// smaller of the two arms when the mode allows self-selection.
+#[inline]
+pub fn vec_bytes_for(v: &[f64], mode: WireMode) -> u64 {
+    match mode {
+        WireMode::Dense => vec_bytes(v.len()),
+        WireMode::Auto => match sparse_nnz(v) {
+            Some(nnz) => MSG_HEADER_BYTES + sparse_vec_part_bytes(nnz),
+            None => vec_bytes(v.len()),
+        },
+    }
 }
 
 /// Master → worker.
@@ -49,11 +101,19 @@ pub enum ToWorker {
 }
 
 impl ToWorker {
-    /// Payload size for the byte meter.
+    /// Payload size for the byte meter (the legacy dense layout —
+    /// shorthand for `wire_bytes_for(WireMode::Dense)`).
     pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes_for(WireMode::Dense)
+    }
+
+    /// Payload size for the byte meter under `mode`. Equal to the exact
+    /// encoded frame length of
+    /// [`encode_to_worker_mode`](crate::net::frame::encode_to_worker_mode).
+    pub fn wire_bytes_for(&self, mode: WireMode) -> u64 {
         match self {
-            ToWorker::Broadcast { w, .. } => vec_bytes(w.len()),
-            ToWorker::FullGrad { z, .. } => vec_bytes(z.len()),
+            ToWorker::Broadcast { w, .. } => vec_bytes_for(w, mode),
+            ToWorker::FullGrad { z, .. } => vec_bytes_for(z, mode),
             ToWorker::Stop => MSG_HEADER_BYTES,
         }
     }
@@ -112,11 +172,21 @@ pub enum ToMaster {
 }
 
 impl ToMaster {
-    /// Payload size for the byte meter.
+    /// Payload size for the byte meter (the legacy dense layout —
+    /// shorthand for `wire_bytes_for(WireMode::Dense)`).
     pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes_for(WireMode::Dense)
+    }
+
+    /// Payload size for the byte meter under `mode`. Equal to the exact
+    /// encoded frame length of
+    /// [`encode_to_master_mode`](crate::net::frame::encode_to_master_mode).
+    /// `ShardGrad` is dense in every mode: it carries a gradient *sum*
+    /// over the shard, which touches every active feature.
+    pub fn wire_bytes_for(&self, mode: WireMode) -> u64 {
         match self {
             ToMaster::ShardGrad { zsum, .. } => vec_bytes(zsum.len()) + 8,
-            ToMaster::LocalIterate { u, .. } => vec_bytes(u.len()) + 16,
+            ToMaster::LocalIterate { u, .. } => vec_bytes_for(u, mode) + 16,
             ToMaster::WorkerDown { .. } => MSG_HEADER_BYTES,
             ToMaster::Heartbeat { .. } => MSG_HEADER_BYTES,
         }
@@ -169,5 +239,68 @@ mod tests {
             .sum();
         let ideal = 4 * p as u64 * d as u64 * 8;
         assert!(per_epoch >= ideal && per_epoch < ideal + 1000);
+    }
+
+    #[test]
+    fn sparse_selection_rule() {
+        // all-zero vector: sparse arm is 17 bytes vs 8d dense
+        let zeros = vec![0.0; 100];
+        assert_eq!(sparse_nnz(&zeros), Some(0));
+        // fully dense vector: sparse arm (17 + 12d) always loses
+        let dense: Vec<f64> = (0..100).map(|i| i as f64 + 1.0).collect();
+        assert_eq!(sparse_nnz(&dense), None);
+        // -0.0 has a nonzero bit pattern: stored explicitly, counted as nnz
+        assert_eq!(sparse_nnz(&[-0.0, 0.0, 0.0, 0.0, 0.0]), Some(1));
+        // exact breakeven goes dense (ties never flip the legacy bytes):
+        // 17 + 12·nnz < 8·len  ⇔  nnz < (8·len − 17)/12
+        let len = 25; // 8·25 = 200; sparse(15) = 197 < 200; sparse(16) = 209
+        let mut v = vec![0.0; len];
+        for x in v.iter_mut().take(15) {
+            *x = 1.0;
+        }
+        assert_eq!(sparse_nnz(&v), Some(15));
+        v[15] = 1.0;
+        assert_eq!(sparse_nnz(&v), None);
+        // the sparse part length is never ≡ 0 (mod 8) — the structural
+        // property the decoder uses to tell the arms apart
+        for nnz in 0..64 {
+            assert_ne!(sparse_vec_part_bytes(nnz) % 8, 0, "nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_for_modes() {
+        let sparse_w = {
+            let mut v = vec![0.0; 100];
+            v[3] = 1.5;
+            v[97] = -2.0;
+            v
+        };
+        let b = ToWorker::Broadcast { epoch: 0, w: sparse_w.clone() };
+        assert_eq!(b.wire_bytes_for(WireMode::Dense), 24 + 800);
+        assert_eq!(b.wire_bytes_for(WireMode::Auto), 24 + 17 + 2 * 12);
+        assert_eq!(b.wire_bytes(), b.wire_bytes_for(WireMode::Dense));
+        // LocalIterate compresses too (+16 scalar tail in both modes)...
+        let li = ToMaster::LocalIterate {
+            worker: 0,
+            epoch: 0,
+            u: sparse_w.clone(),
+            compute_s: 0.0,
+            materializations: 0,
+        };
+        assert_eq!(li.wire_bytes_for(WireMode::Auto), 24 + 17 + 2 * 12 + 16);
+        // ...but ShardGrad never does: gradient sums are dense
+        let sg = ToMaster::ShardGrad { worker: 0, epoch: 0, zsum: sparse_w, count: 1 };
+        assert_eq!(sg.wire_bytes_for(WireMode::Auto), sg.wire_bytes());
+        // header-only frames are mode-independent
+        assert_eq!(ToWorker::Stop.wire_bytes_for(WireMode::Auto), 24);
+        assert_eq!(
+            ToMaster::Heartbeat { worker: 1, epoch: 2 }.wire_bytes_for(WireMode::Auto),
+            24
+        );
+        // a dense payload under auto charges exactly the dense bytes
+        let dense: Vec<f64> = (0..50).map(|i| i as f64 + 0.5).collect();
+        let fg = ToWorker::FullGrad { epoch: 1, z: dense };
+        assert_eq!(fg.wire_bytes_for(WireMode::Auto), fg.wire_bytes());
     }
 }

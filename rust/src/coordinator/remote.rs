@@ -57,7 +57,7 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use crate::config::{PscopeConfig, RunMode, WorkerBackend};
+use crate::config::{PscopeConfig, RunMode, WireMode, WorkerBackend};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::elastic::{self, ElasticOpts};
 use crate::coordinator::worker::{run_worker, Worker};
@@ -87,8 +87,12 @@ use crate::rng::{splitmix64, Rng};
 /// introduced the `Heartbeat` wire frame (tag 7) for elastic liveness;
 /// v6 introduced the serve-pool protocol — the `JobSetup`/`JobDone`
 /// control frames (tags 102/103) and the 16-byte pool banner used by
-/// `pscope serve` — with the `RunSpec` byte layout itself unchanged.
-pub(crate) const SPEC_VERSION: u64 = 6;
+/// `pscope serve` — with the `RunSpec` byte layout itself unchanged;
+/// v7 added the two-arm vector part to the Broadcast/FullGrad/
+/// LocalIterate frames (encode-time dense-or-sparse selection, see
+/// [`crate::net::frame`]) and the wire-mode byte to the spec tail, so
+/// both sides of a run always charge the same per-mode `wire_bytes_for`.
+pub(crate) const SPEC_VERSION: u64 = 7;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -157,6 +161,10 @@ pub struct RunSpec {
     /// Heartbeat interval in milliseconds (elastic mode only; clamped to
     /// ≥ 10 on the worker side).
     pub heartbeat_ms: u64,
+    /// Frame encoding mode for the vector-bearing data frames. Shipped in
+    /// the spec so master and workers always encode — and charge the
+    /// meter — identically; `Dense` is the legacy byte-exact layout.
+    pub wire: WireMode,
 }
 
 impl RunSpec {
@@ -202,6 +210,7 @@ impl RunSpec {
             artifact_dir: artifact_dir.map(str::to_string),
             mode: cfg.mode,
             heartbeat_ms: cfg.heartbeat_ms,
+            wire: cfg.wire,
         })
     }
 
@@ -256,6 +265,12 @@ impl RunSpec {
             RunMode::Elastic => 1,
         });
         b.extend_from_slice(&self.heartbeat_ms.to_le_bytes());
+        // v7 tail: the wire mode, one byte, appended last for the same
+        // fixed-offset reason as the v5 tail
+        b.push(match self.wire {
+            WireMode::Dense => 0,
+            WireMode::Auto => 1,
+        });
         b
     }
 
@@ -313,6 +328,11 @@ impl RunSpec {
             t => return Err(Error::Protocol(format!("bad run mode tag {t}"))),
         };
         let heartbeat_ms = c.u64()?;
+        let wire = match c.u8()? {
+            0 => WireMode::Dense,
+            1 => WireMode::Auto,
+            t => return Err(Error::Protocol(format!("bad wire mode tag {t}"))),
+        };
         c.done()?;
         Ok(RunSpec {
             source,
@@ -332,6 +352,7 @@ impl RunSpec {
             artifact_dir: if artifact_dir.is_empty() { None } else { Some(artifact_dir) },
             mode,
             heartbeat_ms,
+            wire,
         })
     }
 }
@@ -651,7 +672,8 @@ pub fn serve_worker_with(addr: &str, opts: &WorkerOpts) -> Result<()> {
     // Data plane: block on the master's pace (objective evaluation between
     // epochs can take arbitrarily long; EOF covers master death).
     stream.set_read_timeout(None)?;
-    let mut transport = TcpWorker::new(stream, k).with_fault(opts.fault.clone());
+    let mut transport =
+        TcpWorker::new(stream, k).with_fault(opts.fault.clone()).with_wire(spec.wire);
     if spec.mode == RunMode::Elastic {
         let interval = Duration::from_millis(spec.heartbeat_ms.max(10));
         transport.start_heartbeat(interval)?;
@@ -709,7 +731,8 @@ impl MasterEndpoint {
         let d = ds.d();
         let meter = ByteMeter::new();
         let mut transport =
-            TcpMaster::accept(&self.listener, part.p(), meter.clone(), &spec.encode(), timeout)?;
+            TcpMaster::accept(&self.listener, part.p(), meter.clone(), &spec.encode(), timeout)?
+                .with_wire(spec.wire);
         let master_result = run_master(&mut transport, &obj, d, cfg, net, &ds.name);
         transport.shutdown();
         let r = master_result?;
@@ -754,7 +777,8 @@ impl MasterEndpoint {
         let obj = preflight(ds, part, cfg, spec)?;
         let meter = ByteMeter::new();
         let mut transport =
-            TcpMaster::accept(&self.listener, part.p(), meter.clone(), &spec.encode(), timeout)?;
+            TcpMaster::accept(&self.listener, part.p(), meter.clone(), &spec.encode(), timeout)?
+                .with_wire(spec.wire);
         let master_result =
             elastic::run_master_elastic(&mut transport, &obj, ds, part, cfg, opts, net, resume);
         transport.shutdown();
@@ -789,6 +813,14 @@ pub(crate) fn preflight<'a>(
         cfg,
         spec.artifact_dir.as_deref().map(std::path::Path::new),
     )?;
+    if spec.wire != cfg.wire {
+        return Err(Error::Config(format!(
+            "job spec wire mode ({}) disagrees with this run ({}) — build the spec with \
+             RunSpec::derive on the same (ds, part, cfg)",
+            spec.wire.name(),
+            cfg.wire.name()
+        )));
+    }
     if spec.p != p
         || spec.shard_digests.len() != p
         || spec.m_inner != m_inner
@@ -975,6 +1007,7 @@ mod tests {
             artifact_dir: None,
             mode: RunMode::Strict,
             heartbeat_ms: 250,
+            wire: WireMode::Dense,
         }
     }
 
@@ -992,6 +1025,10 @@ mod tests {
         elastic_spec.mode = RunMode::Elastic;
         elastic_spec.heartbeat_ms = 125;
         assert_eq!(RunSpec::decode(&elastic_spec.encode()).unwrap(), elastic_spec);
+        // and the v7 tail (wire mode)
+        let mut auto_spec = spec_fixture();
+        auto_spec.wire = WireMode::Auto;
+        assert_eq!(RunSpec::decode(&auto_spec.encode()).unwrap(), auto_spec);
         // every source kind survives the wire
         let mut file_spec = spec_fixture();
         file_spec.source = DataSource::LibsvmFile { path: "data/real.libsvm".into() };
@@ -1044,11 +1081,17 @@ mod tests {
         let mut bad_source = good.clone();
         bad_source[tag_base + 3] = 0x7F; // source tag follows the backend byte
         assert!(RunSpec::decode(&bad_source).is_err(), "bad source tag accepted");
-        // the run-mode tag sits 9 bytes from the end (u8 mode + u64 heartbeat)
+        // the run-mode tag sits 10 bytes from the end (u8 mode + u64
+        // heartbeat + u8 wire mode)
         let mut bad_mode = good.clone();
-        let mode_off = bad_mode.len() - 9;
+        let mode_off = bad_mode.len() - 10;
         bad_mode[mode_off] = 0x7F;
         assert!(RunSpec::decode(&bad_mode).is_err(), "bad mode tag accepted");
+        // the wire-mode tag is the final byte of the v7 tail
+        let mut bad_wire = good.clone();
+        let wire_off = bad_wire.len() - 1;
+        bad_wire[wire_off] = 0x7F;
+        assert!(RunSpec::decode(&bad_wire).is_err(), "bad wire tag accepted");
         // a digest table whose length disagrees with p is a protocol error
         let mut short_table = spec_fixture();
         short_table.shard_digests.pop();

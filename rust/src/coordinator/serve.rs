@@ -27,7 +27,7 @@
 //!    the cold-start gap) a warm start seeded by a converged neighbor
 //!    stops at epoch 0 — the λ-path speedup becomes a plain epoch count.
 //!
-//! ## Wire protocol (SPEC_VERSION 6)
+//! ## Wire protocol (SPEC_VERSION 7)
 //!
 //! ```text
 //! worker ── connect ─────────────────> master   (accept order assigns ids)
@@ -530,7 +530,7 @@ fn run_one_job(
         for s in &pool.streams {
             clones.push(s.try_clone()?);
         }
-        from_streams(clones, pool.peers.clone(), meter.clone())
+        from_streams(clones, pool.peers.clone(), meter.clone()).map(|t| t.with_wire(spec.wire))
     })();
     let mut tm = match build {
         Ok(t) => t,
@@ -1051,7 +1051,7 @@ fn run_pool_job(
     // trajectory.
     let mut wk = worker_from_shard(&spec, k, shard_ds)?;
     frame::write_frame(stream, &frame::encode_control(frame::TAG_READY, k as u64, &[]))?;
-    let mut transport = TcpWorker::new(stream.try_clone()?, k);
+    let mut transport = TcpWorker::new(stream.try_clone()?, k).with_wire(spec.wire);
     run_worker(&mut transport, &mut wk, spec.eta, spec.m_inner)?;
     stats.jobs_done += 1;
     frame::write_frame(

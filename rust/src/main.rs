@@ -35,7 +35,7 @@ use std::time::Duration;
 
 use pscope::cli::{flag, switch, Args, Command, FlagSpec};
 use pscope::config::sweep::SweepManifest;
-use pscope::config::{Model, PscopeConfig, RegKind, RunMode, TransportKind, WorkerBackend};
+use pscope::config::{Model, PscopeConfig, RegKind, RunMode, TransportKind, WireMode, WorkerBackend};
 use pscope::coordinator::checkpoint::{self, Checkpoint};
 use pscope::coordinator::elastic::ElasticOpts;
 use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec, WorkerOpts};
@@ -105,6 +105,11 @@ fn train_flags() -> Vec<FlagSpec> {
         flag("checkpoint-dir", "elastic: directory for iterate checkpoints", None),
         flag("checkpoint-every", "elastic: epochs between checkpoints (0 = off)", Some("1")),
         flag("heartbeat-ms", "elastic: worker heartbeat interval", Some("250")),
+        flag(
+            "wire",
+            "frame encoding: dense (legacy bytes) | auto (sparse when smaller)",
+            Some("dense"),
+        ),
         flag("suspect-after-ms", "elastic: silent worker becomes SUSPECT after", Some("1000")),
         flag("offline-after-ms", "elastic: silent worker becomes OFFLINE after", Some("10000")),
         switch("resume", "elastic: resume from the latest checkpoint in --checkpoint-dir"),
@@ -162,6 +167,9 @@ fn build_job(args: &Args) -> Result<Job> {
     }
     if let Some(m) = args.get("mode") {
         cfg.mode = RunMode::parse(m)?;
+    }
+    if let Some(w) = args.get("wire") {
+        cfg.wire = WireMode::parse(w)?;
     }
     cfg.heartbeat_ms = args.get_parse("heartbeat-ms", cfg.heartbeat_ms)?;
     cfg.suspect_after_ms = args.get_parse("suspect-after-ms", cfg.suspect_after_ms)?;

@@ -2,13 +2,13 @@
 //!
 //! Little-endian, length-prefixed frames. The encoded size of every
 //! data-plane message is **exactly** its
-//! [`wire_bytes()`](crate::coordinator::protocol::ToWorker::wire_bytes)
-//! charge, so the byte meter fed by real frames over TCP reports the same
-//! totals as the modeled in-process accounting — the meter stops being a
-//! model and becomes ground truth (`tests/net_accounting.rs` pins the two
-//! to the byte).
+//! [`wire_bytes_for()`](crate::coordinator::protocol::ToWorker::wire_bytes_for)
+//! charge for the encoding mode in force, so the byte meter fed by real
+//! frames over TCP reports the same totals as the modeled in-process
+//! accounting — the meter stops being a model and becomes ground truth
+//! (`tests/net_accounting.rs` pins the two to the byte).
 //!
-//! ## Frame layout
+//! ## Frame layout (SPEC_VERSION 7)
 //!
 //! | offset | size | field                                             |
 //! |--------|------|---------------------------------------------------|
@@ -23,11 +23,12 @@
 //!
 //! | tag | message        | payload                                        |
 //! |-----|----------------|------------------------------------------------|
-//! | 1   | `Broadcast`    | `len·8` bytes of `f64` (`w`)                   |
-//! | 2   | `FullGrad`     | `len·8` bytes of `f64` (`z`)                   |
+//! | 1   | `Broadcast`    | vector part (`w`; dense or sparse, see below)  |
+//! | 2   | `FullGrad`     | vector part (`z`; dense or sparse, see below)  |
 //! | 3   | `Stop`         | empty                                          |
 //! | 4   | `ShardGrad`    | `u64` count, then `len·8` bytes of `f64`       |
-//! | 5   | `LocalIterate` | `f64` compute_s, `u64` materializations, `f64`s|
+//! | 5   | `LocalIterate` | `f64` compute_s, `u64` materializations, then a|
+//! |     |                | vector part (`u`; dense or sparse, see below)  |
 //! | 6   | `WorkerDown`   | empty                                          |
 //! | 7   | `Heartbeat`    | empty (elastic liveness beacon, unmetered)     |
 //! | 100 | `Setup`        | opaque job spec (control plane, unmetered)     |
@@ -35,11 +36,38 @@
 //! | 102 | `JobSetup`     | job idx + RunSpec + optional warm-start `w0`   |
 //! | 103 | `JobDone`      | cumulative worker pool stats (serve mode)      |
 //!
-//! Floats travel as raw IEEE-754 bit patterns (`f64::to_le_bytes`), so
-//! NaN payloads, signed zeros, subnormals and ±inf all round-trip
-//! bit-exactly (`tests/frame_codec_props.rs`):
+//! ## Vector parts: the dense and sparse arms (v7)
+//!
+//! The three vector-bearing frames (`Broadcast`, `FullGrad`,
+//! `LocalIterate`) carry their vector as a **vector part** with two
+//! on-wire arms, selected *per payload at encode time* by whichever is
+//! smaller ([`protocol::sparse_nnz`]):
+//!
+//! | arm    | layout                                                  |
+//! |--------|---------------------------------------------------------|
+//! | dense  | `len · 8` bytes of raw `f64` bits (the legacy layout)   |
+//! | sparse | `u8` arm tag = 1, `u64 d`, `u64 nnz`, then `nnz ×`      |
+//! |        | (`u32` index, `u64` value bits), indices strictly ↑     |
+//!
+//! Sparse-arm byte offsets within the vector part: tag at 0, `d` at 1,
+//! `nnz` at 9, entry `i`'s index at `17 + 12·i` and value bits at
+//! `21 + 12·i`; total `17 + 12·nnz` bytes. That total is ≡ 1 or 5
+//! (mod 8) — never 0 — while the dense arm is always ≡ 0 (mod 8), so
+//! the decoder disambiguates structurally with no mode negotiation.
+//! Under [`WireMode::Dense`] (the default) the encoder always emits the
+//! dense arm, byte-for-byte the pre-v7 layout; `ShardGrad` is dense in
+//! every mode (gradient sums touch every active feature). The decoder
+//! accepts both arms regardless of mode and validates sparse indices
+//! loudly: out-of-range, unsorted or duplicate indices, a bad `nnz`, or
+//! a length mismatch are all [`Error::Protocol`].
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`f64::to_le_bytes`) in
+//! both arms, so NaN payloads, signed zeros, subnormals and ±inf all
+//! round-trip bit-exactly (`tests/frame_codec_props.rs`) — a sparse-arm
+//! run is bit-identical to a dense run, only smaller on the wire:
 //!
 //! ```
+//! use pscope::config::WireMode;
 //! use pscope::coordinator::protocol::ToWorker;
 //! use pscope::net::frame;
 //!
@@ -54,13 +82,19 @@
 //!     }
 //!     other => panic!("wrong variant {other:?}"),
 //! }
+//! // the identity holds per mode: a sparse payload shrinks under Auto
+//! let sparse = ToWorker::Broadcast { epoch: 4, w: vec![0.0; 64] };
+//! let auto = frame::encode_to_worker_mode(&sparse, WireMode::Auto);
+//! assert_eq!(auto.len() as u64, sparse.wire_bytes_for(WireMode::Auto));
+//! assert!(auto.len() < frame::encode_to_worker(&sparse).len());
 //! # Ok::<(), pscope::error::Error>(())
 //! ```
 
 use std::io::{Read, Write};
 use std::time::Instant;
 
-use crate::coordinator::protocol::{ToMaster, ToWorker, MSG_HEADER_BYTES};
+use crate::config::WireMode;
+use crate::coordinator::protocol::{self, ToMaster, ToWorker, MSG_HEADER_BYTES};
 use crate::error::{Error, Result};
 
 /// Tag for [`ToWorker::Broadcast`].
@@ -102,6 +136,14 @@ pub const TAG_CONTROL_MIN: u32 = 100;
 
 /// Header size in bytes (`== MSG_HEADER_BYTES`).
 pub const FRAME_HEADER_BYTES: usize = MSG_HEADER_BYTES as usize;
+
+/// First byte of a sparse-arm vector part (v7). The dense arm has no
+/// prefix byte — it is the legacy raw-`f64` layout, kept byte-identical
+/// so `--wire dense` pins every pre-v7 frame exactly. The two arms are
+/// told apart by part length mod 8 (sparse ≡ 1 or 5, dense ≡ 0), and
+/// this tag is then required so a corrupt length fails loudly instead of
+/// being misread as data.
+pub const SPARSE_VEC_TAG: u8 = 1;
 
 /// Hard cap on a single frame; anything larger is treated as stream
 /// corruption rather than an allocation request (1 GiB ≈ a 134M-feature
@@ -190,10 +232,20 @@ pub fn read_frame_deadline<R: Read>(r: &mut R, deadline: Option<Instant>) -> Res
             "bad frame length {len} (valid: {FRAME_HEADER_BYTES}..={MAX_FRAME_BYTES})"
         )));
     }
-    let mut frame = vec![0u8; len as usize];
+    // The `len` field is untrusted until the payload actually arrives:
+    // grow the buffer in bounded chunks as bytes come in rather than
+    // preallocating `len` up front, so a corrupt or hostile length field
+    // costs one chunk before the stream runs dry, not a near-1-GiB
+    // allocation (mirrors the ShardReader per-entry discipline).
+    const READ_CHUNK: usize = 64 * 1024;
+    let total = len as usize;
+    let mut frame = vec![0u8; total.min(READ_CHUNK)];
     frame[..4].copy_from_slice(&head);
     let mut got = 4usize;
-    while got < frame.len() {
+    while got < total {
+        if got == frame.len() {
+            frame.resize(total.min(got + READ_CHUNK), 0);
+        }
         match r.read(&mut frame[got..]) {
             Ok(0) => return Err(Error::Protocol("connection closed mid-frame".into())),
             Ok(k) => got += k,
@@ -233,25 +285,54 @@ fn push_f64s(buf: &mut Vec<u8>, v: &[f64]) {
     }
 }
 
+/// Append `v` as a vector part, picking the arm per the shared selection
+/// rule ([`protocol::sparse_nnz`]) so the encoder and the byte
+/// accounting can never disagree on which arm a payload takes.
+fn push_vec_part(buf: &mut Vec<u8>, v: &[f64], mode: WireMode) {
+    if mode == WireMode::Auto {
+        if let Some(nnz) = protocol::sparse_nnz(v) {
+            buf.reserve(17 + 12 * nnz);
+            buf.push(SPARSE_VEC_TAG);
+            buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&(nnz as u64).to_le_bytes());
+            for (i, x) in v.iter().enumerate() {
+                if x.to_bits() != 0 {
+                    buf.extend_from_slice(&(i as u32).to_le_bytes());
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            return;
+        }
+    }
+    push_f64s(buf, v);
+}
+
 fn seal(mut buf: Vec<u8>) -> Vec<u8> {
     let len = u32::try_from(buf.len()).expect("frame exceeds u32 length");
     buf[0..4].copy_from_slice(&len.to_le_bytes());
     buf
 }
 
-/// Encode a master → worker message; `encoded.len() == msg.wire_bytes()`.
+/// Encode a master → worker message with the legacy dense-only layout;
+/// `encoded.len() == msg.wire_bytes()`.
 pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
+    encode_to_worker_mode(msg, WireMode::Dense)
+}
+
+/// Encode a master → worker message under `mode`;
+/// `encoded.len() == msg.wire_bytes_for(mode)`.
+pub fn encode_to_worker_mode(msg: &ToWorker, mode: WireMode) -> Vec<u8> {
     let buf = match msg {
         ToWorker::Broadcast { epoch, w } => {
             let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 8 * w.len());
             push_header(&mut b, TAG_BROADCAST, *epoch as u64, 0);
-            push_f64s(&mut b, w);
+            push_vec_part(&mut b, w, mode);
             b
         }
         ToWorker::FullGrad { epoch, z } => {
             let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 8 * z.len());
             push_header(&mut b, TAG_FULL_GRAD, *epoch as u64, 0);
-            push_f64s(&mut b, z);
+            push_vec_part(&mut b, z, mode);
             b
         }
         ToWorker::Stop => {
@@ -261,12 +342,21 @@ pub fn encode_to_worker(msg: &ToWorker) -> Vec<u8> {
         }
     };
     let buf = seal(buf);
-    debug_assert_eq!(buf.len() as u64, msg.wire_bytes());
+    debug_assert_eq!(buf.len() as u64, msg.wire_bytes_for(mode));
     buf
 }
 
-/// Encode a worker → master message; `encoded.len() == msg.wire_bytes()`.
+/// Encode a worker → master message with the legacy dense-only layout;
+/// `encoded.len() == msg.wire_bytes()`.
 pub fn encode_to_master(msg: &ToMaster) -> Vec<u8> {
+    encode_to_master_mode(msg, WireMode::Dense)
+}
+
+/// Encode a worker → master message under `mode`;
+/// `encoded.len() == msg.wire_bytes_for(mode)`. `ShardGrad` stays dense
+/// in every mode: gradient sums touch every active feature, so the
+/// sparse arm would only ever lose there.
+pub fn encode_to_master_mode(msg: &ToMaster, mode: WireMode) -> Vec<u8> {
     let buf = match msg {
         ToMaster::ShardGrad { worker, epoch, zsum, count } => {
             let mut b = Vec::with_capacity(FRAME_HEADER_BYTES + 8 + 8 * zsum.len());
@@ -280,7 +370,7 @@ pub fn encode_to_master(msg: &ToMaster) -> Vec<u8> {
             push_header(&mut b, TAG_LOCAL_ITERATE, *epoch as u64, *worker as u64);
             b.extend_from_slice(&compute_s.to_le_bytes());
             b.extend_from_slice(&materializations.to_le_bytes());
-            push_f64s(&mut b, u);
+            push_vec_part(&mut b, u, mode);
             b
         }
         ToMaster::WorkerDown { worker } => {
@@ -295,7 +385,7 @@ pub fn encode_to_master(msg: &ToMaster) -> Vec<u8> {
         }
     };
     let buf = seal(buf);
-    debug_assert_eq!(buf.len() as u64, msg.wire_bytes());
+    debug_assert_eq!(buf.len() as u64, msg.wire_bytes_for(mode));
     buf
 }
 
@@ -362,6 +452,82 @@ fn expect_vec_payload(payload: &[u8], skip: usize, tag: u32) -> Result<&[u8]> {
     Ok(&payload[skip..])
 }
 
+/// Decode a two-arm vector part (the payload after `skip` scalar bytes).
+/// A part length ≡ 0 (mod 8) is the dense arm; anything else must be a
+/// well-formed sparse arm, validated loudly — indices out of range,
+/// unsorted or duplicated, an `nnz` exceeding `d`, or a length that
+/// disagrees with `nnz` are all [`Error::Protocol`], never silent
+/// misreads.
+fn decode_vec_part(payload: &[u8], skip: usize, tag: u32) -> Result<Vec<f64>> {
+    if payload.len() < skip {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: bad payload length {}",
+            payload.len()
+        )));
+    }
+    let part = &payload[skip..];
+    if part.len() % 8 == 0 {
+        return Ok(rd_f64s(part));
+    }
+    // part is non-empty here (an empty part is the dense arm above)
+    if part[0] != SPARSE_VEC_TAG {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: bad vector part ({} bytes is neither dense nor sparse-tagged)",
+            part.len()
+        )));
+    }
+    if part.len() < 17 {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: truncated sparse vector part ({} bytes)",
+            part.len()
+        )));
+    }
+    let d64 = rd_u64(part, 1);
+    // Cap before allocating: a dense vector of this dimension must fit in
+    // a frame, so a larger claim is corruption, not an allocation request.
+    if d64 > MAX_FRAME_BYTES as u64 / 8 {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: sparse dimension {d64} exceeds the frame cap"
+        )));
+    }
+    let d = d64 as usize;
+    let nnz64 = rd_u64(part, 9);
+    if nnz64 > d64 {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: sparse nnz {nnz64} exceeds dimension {d}"
+        )));
+    }
+    let nnz = nnz64 as usize;
+    if part.len() as u64 != 17 + 12 * nnz64 {
+        return Err(Error::Protocol(format!(
+            "tag {tag}: sparse part length {} != {} implied by nnz {nnz}",
+            part.len(),
+            17 + 12 * nnz64
+        )));
+    }
+    let mut v = vec![0.0f64; d];
+    let mut prev: Option<u32> = None;
+    for i in 0..nnz {
+        let off = 17 + 12 * i;
+        let idx = rd_u32(part, off);
+        if idx as usize >= d {
+            return Err(Error::Protocol(format!(
+                "tag {tag}: sparse index {idx} out of range (d = {d})"
+            )));
+        }
+        if let Some(p) = prev {
+            if idx <= p {
+                return Err(Error::Protocol(format!(
+                    "tag {tag}: sparse indices not strictly increasing ({p} then {idx})"
+                )));
+            }
+        }
+        prev = Some(idx);
+        v[idx as usize] = rd_f64(part, off + 4);
+    }
+    Ok(v)
+}
+
 /// Decode a master → worker frame.
 pub fn decode_to_worker(frame: &[u8]) -> Result<ToWorker> {
     let (tag, epoch, _worker, payload) = parts(frame)?;
@@ -370,11 +536,11 @@ pub fn decode_to_worker(frame: &[u8]) -> Result<ToWorker> {
     match tag {
         TAG_BROADCAST => Ok(ToWorker::Broadcast {
             epoch,
-            w: rd_f64s(expect_vec_payload(payload, 0, tag)?),
+            w: decode_vec_part(payload, 0, tag)?,
         }),
         TAG_FULL_GRAD => Ok(ToWorker::FullGrad {
             epoch,
-            z: rd_f64s(expect_vec_payload(payload, 0, tag)?),
+            z: decode_vec_part(payload, 0, tag)?,
         }),
         TAG_STOP => Ok(ToWorker::Stop),
         other => Err(Error::Protocol(format!(
@@ -401,13 +567,13 @@ pub fn decode_to_master(frame: &[u8]) -> Result<ToMaster> {
             })
         }
         TAG_LOCAL_ITERATE => {
-            let rest = expect_vec_payload(payload, 16, tag)?;
+            let u = decode_vec_part(payload, 16, tag)?;
             Ok(ToMaster::LocalIterate {
                 worker,
                 epoch,
                 compute_s: rd_f64(payload, 0),
                 materializations: rd_u64(payload, 8),
-                u: rd_f64s(rest),
+                u,
             })
         }
         TAG_WORKER_DOWN => Ok(ToMaster::WorkerDown { worker }),
@@ -527,5 +693,132 @@ mod tests {
         // data decoders refuse control tags
         assert!(decode_to_worker(&f).is_err());
         assert!(decode_to_master(&f).is_err());
+    }
+
+    #[test]
+    fn sparse_arm_roundtrip_bit_exact_and_smaller() {
+        let mut w = vec![0.0f64; 100];
+        w[3] = f64::from_bits(0x7FF8_DEAD_BEEF_0001); // NaN with payload
+        w[7] = -0.0; // nonzero bits: stored explicitly in the sparse arm
+        w[99] = 1.5;
+        let msg = ToWorker::Broadcast { epoch: 2, w: w.clone() };
+        let auto = encode_to_worker_mode(&msg, WireMode::Auto);
+        let dense = encode_to_worker(&msg);
+        assert_eq!(auto.len() as u64, msg.wire_bytes_for(WireMode::Auto));
+        assert_eq!(dense.len() as u64, msg.wire_bytes());
+        assert!(auto.len() < dense.len());
+        // the decoder is mode-blind: both arms decode to identical bits
+        for buf in [&auto, &dense] {
+            match decode_to_worker(buf).unwrap() {
+                ToWorker::Broadcast { epoch, w: back } => {
+                    assert_eq!(epoch, 2);
+                    assert_eq!(back.len(), w.len());
+                    for (a, b) in back.iter().zip(&w) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn local_iterate_sparse_arm_keeps_scalars() {
+        let mut u = vec![0.0f64; 40];
+        u[11] = -2.25;
+        let msg = ToMaster::LocalIterate {
+            worker: 4,
+            epoch: 6,
+            u: u.clone(),
+            compute_s: 0.75,
+            materializations: 3,
+        };
+        let auto = encode_to_master_mode(&msg, WireMode::Auto);
+        assert_eq!(auto.len() as u64, msg.wire_bytes_for(WireMode::Auto));
+        match decode_to_master(&auto).unwrap() {
+            ToMaster::LocalIterate { worker, epoch, u: back, compute_s, materializations } => {
+                assert_eq!((worker, epoch, materializations), (4, 6, 3));
+                assert_eq!(compute_s, 0.75);
+                assert_eq!(back, u);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_payload_is_byte_identical_across_modes() {
+        let z: Vec<f64> = (0..16).map(|i| i as f64 + 0.5).collect();
+        let msg = ToWorker::FullGrad { epoch: 1, z };
+        assert_eq!(encode_to_worker_mode(&msg, WireMode::Auto), encode_to_worker(&msg));
+        // ShardGrad never takes the sparse arm, even when mostly zero
+        let sg = ToMaster::ShardGrad { worker: 1, epoch: 2, zsum: vec![0.0; 64], count: 9 };
+        assert_eq!(encode_to_master_mode(&sg, WireMode::Auto), encode_to_master(&sg));
+        // the empty vector is the dense arm (0 bytes beats the 17-byte stub)
+        let empty = ToWorker::Broadcast { epoch: 0, w: vec![] };
+        assert_eq!(encode_to_worker_mode(&empty, WireMode::Auto), encode_to_worker(&empty));
+    }
+
+    /// Hand-assemble a sparse-arm Broadcast with full control over the
+    /// `d`/`nnz` fields and entry list, for decoder-validation tests.
+    fn raw_sparse_broadcast(d: u64, nnz_field: u64, entries: &[(u32, u64)]) -> Vec<u8> {
+        let mut b = Vec::new();
+        push_header(&mut b, TAG_BROADCAST, 0, 0);
+        b.push(SPARSE_VEC_TAG);
+        b.extend_from_slice(&d.to_le_bytes());
+        b.extend_from_slice(&nnz_field.to_le_bytes());
+        for (i, bits) in entries {
+            b.extend_from_slice(&i.to_le_bytes());
+            b.extend_from_slice(&bits.to_le_bytes());
+        }
+        seal(b)
+    }
+
+    #[test]
+    fn sparse_decode_rejects_malformed_parts() {
+        let bits = 1.0f64.to_bits();
+        let cases: [(&str, Vec<u8>); 6] = [
+            ("unsorted", raw_sparse_broadcast(10, 2, &[(5, bits), (3, bits)])),
+            ("duplicate", raw_sparse_broadcast(10, 2, &[(3, bits), (3, bits)])),
+            ("idx >= d", raw_sparse_broadcast(10, 1, &[(10, bits)])),
+            ("nnz > d", raw_sparse_broadcast(1, 2, &[(0, bits), (1, bits)])),
+            ("len != nnz implied", raw_sparse_broadcast(10, 3, &[(1, bits)])),
+            ("d beyond frame cap", raw_sparse_broadcast(u64::MAX, 0, &[])),
+        ];
+        for (what, frame) in cases {
+            match decode_to_worker(&frame) {
+                Err(Error::Protocol(_)) => {}
+                other => panic!("{what}: expected Error::Protocol, got {other:?}"),
+            }
+        }
+        // a non-multiple-of-8 part whose first byte is not the sparse tag
+        let mut b = Vec::new();
+        push_header(&mut b, TAG_BROADCAST, 0, 0);
+        b.extend_from_slice(&[7u8; 17]);
+        assert!(matches!(decode_to_worker(&seal(b)), Err(Error::Protocol(_))));
+        // and the guards don't reject a well-formed part
+        let ok = raw_sparse_broadcast(10, 2, &[(3, bits), (5, bits)]);
+        match decode_to_worker(&ok).unwrap() {
+            ToWorker::Broadcast { w, .. } => {
+                assert_eq!(w.len(), 10);
+                assert_eq!((w[3], w[5]), (1.0, 1.0));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_len_field_fails_without_matching_alloc() {
+        // The header claims a maximal frame but the stream carries only a
+        // few bytes: the read must fail on stream exhaustion after at
+        // most one chunk of incremental buffer growth — never a ~1 GiB
+        // preallocation driven by the untrusted length field.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAX_FRAME_BYTES.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 36]);
+        let mut cur = std::io::Cursor::new(&bytes[..]);
+        match read_frame(&mut cur) {
+            Err(Error::Protocol(m)) => assert!(m.contains("mid-frame"), "{m}"),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
     }
 }

@@ -12,8 +12,10 @@
 //! * [`TcpMaster`] / [`TcpWorker`] — real `std::net` sockets speaking the
 //!   [`crate::net::frame`] binary codec. The byte meter is fed by actual
 //!   frame sizes, which the codec guarantees equal the modeled
-//!   `wire_bytes()` charges, so the two modes report identical
-//!   communication totals for identical runs.
+//!   `wire_bytes_for()` charges for the configured
+//!   [`WireMode`], so the two modes report identical communication totals
+//!   for identical runs (the in-process meter charges the same
+//!   `wire_bytes_for()` figure at send time).
 //!
 //! ## Failure mapping
 //!
@@ -33,6 +35,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::config::WireMode;
 use crate::coordinator::protocol::{ToMaster, ToWorker};
 use crate::error::{Error, Result};
 use crate::net::frame::{self, FrameRead};
@@ -102,6 +105,7 @@ pub struct InProcMaster {
     to_worker: Vec<SimSender<ToWorker>>,
     from_workers: Receiver<ToMaster>,
     meter: Arc<ByteMeter>,
+    wire: WireMode,
     io_s: f64,
 }
 
@@ -109,6 +113,7 @@ pub struct InProcMaster {
 pub struct InProcWorker {
     rx: Receiver<ToWorker>,
     tx: SimSender<ToMaster>,
+    wire: WireMode,
 }
 
 impl InProcWorker {
@@ -127,13 +132,25 @@ impl InProcWorker {
 /// (≤ 2 data messages + 1 `WorkerDown` per worker), so no worker send can
 /// ever block against an aborting master.
 pub fn in_proc_pair(p: usize, meter: Arc<ByteMeter>) -> (InProcMaster, Vec<InProcWorker>) {
+    in_proc_pair_mode(p, meter, WireMode::Dense)
+}
+
+/// [`in_proc_pair`] with an explicit [`WireMode`]: both endpoints charge
+/// the meter `wire_bytes_for(wire)` per message — the exact length the
+/// TCP codec would put on the wire in that mode — so the simulated and
+/// real transports stay byte-identical under `--wire auto` too.
+pub fn in_proc_pair_mode(
+    p: usize,
+    meter: Arc<ByteMeter>,
+    wire: WireMode,
+) -> (InProcMaster, Vec<InProcWorker>) {
     let (to_master_tx, to_master_rx) = sim_channel::<ToMaster>(meter.clone(), 4 * p);
     let mut workers = Vec::with_capacity(p);
     let mut to_worker = Vec::with_capacity(p);
     for _ in 0..p {
         let (tx, rx) = sim_channel::<ToWorker>(meter.clone(), 4);
         to_worker.push(tx);
-        workers.push(InProcWorker { rx, tx: to_master_tx.clone() });
+        workers.push(InProcWorker { rx, tx: to_master_tx.clone(), wire });
     }
     // `to_master_tx` drops here: workers hold the only remaining sender
     // clones, so the master observes a closed channel the moment the last
@@ -143,6 +160,7 @@ pub fn in_proc_pair(p: usize, meter: Arc<ByteMeter>) -> (InProcMaster, Vec<InPro
         to_worker,
         from_workers: to_master_rx,
         meter,
+        wire,
         io_s: 0.0,
     };
     (master, workers)
@@ -155,7 +173,7 @@ impl MasterTransport for InProcMaster {
 
     fn send(&mut self, worker: usize, msg: ToWorker) -> Result<()> {
         let t = Instant::now();
-        let bytes = msg.wire_bytes();
+        let bytes = msg.wire_bytes_for(self.wire);
         let r = self.to_worker[worker].send(msg, bytes);
         self.io_s += t.elapsed().as_secs_f64();
         r.map_err(|_| Error::Protocol(format!("worker {worker} died (channel closed)")))
@@ -207,7 +225,7 @@ impl WorkerTransport for InProcWorker {
     }
 
     fn send(&mut self, msg: ToMaster) -> Result<()> {
-        let bytes = msg.wire_bytes();
+        let bytes = msg.wire_bytes_for(self.wire);
         self.tx
             .send(msg, bytes)
             .map_err(|_| Error::Protocol("master gone".into()))
@@ -242,6 +260,7 @@ pub struct TcpMaster {
     /// `JobDone` lands here when it races the reader teardown at the end
     /// of a served job; outside serve mode the buffer stays empty.
     ctrl: Arc<Mutex<Vec<(usize, Vec<u8>)>>>,
+    wire: WireMode,
     io_s: f64,
     down: bool,
 }
@@ -382,6 +401,7 @@ pub(crate) fn from_streams(
         stop,
         meter,
         ctrl,
+        wire: WireMode::Dense,
         io_s: 0.0,
         down: false,
     })
@@ -402,6 +422,15 @@ impl TcpMaster {
     ) -> Result<TcpMaster> {
         let (streams, peers) = accept_streams(listener, p, spec, timeout)?;
         from_streams(streams, peers, meter)
+    }
+
+    /// Set the encoding mode for master→worker data frames (default:
+    /// [`WireMode::Dense`], the legacy layout). The worker side must run
+    /// the same mode for the modeled accounting to match — callers take
+    /// it from the shared `RunSpec`, which both sides decode.
+    pub fn with_wire(mut self, wire: WireMode) -> Self {
+        self.wire = wire;
+        self
     }
 
     /// End one served job without severing the connections: send every
@@ -516,7 +545,7 @@ impl MasterTransport for TcpMaster {
 
     fn send(&mut self, worker: usize, msg: ToWorker) -> Result<()> {
         let t = Instant::now();
-        let buf = frame::encode_to_worker(&msg);
+        let buf = frame::encode_to_worker_mode(&msg, self.wire);
         // Meter before the write attempt, matching SimSender::send (which
         // records even when the peer is gone) — keeps failure-path
         // accounting identical across transports.
@@ -707,6 +736,7 @@ pub struct TcpWorker {
     stream: TcpStream,
     worker: usize,
     fault: FaultPlan,
+    wire: WireMode,
     /// `Some` once heartbeats run: every write goes through this lock.
     shared_writer: Option<Arc<Mutex<TcpStream>>>,
     /// Last *completed* epoch, published to the beater thread.
@@ -722,6 +752,7 @@ impl TcpWorker {
             stream,
             worker,
             fault: FaultPlan::none(),
+            wire: WireMode::Dense,
             shared_writer: None,
             hb_epoch: Arc::new(AtomicU64::new(0)),
             hb_stop: Arc::new(AtomicBool::new(false)),
@@ -732,6 +763,14 @@ impl TcpWorker {
     /// Attach a fault-injection plan (tests / chaos CI).
     pub fn with_fault(mut self, fault: FaultPlan) -> Self {
         self.fault = fault;
+        self
+    }
+
+    /// Set the encoding mode for worker→master data frames (default:
+    /// [`WireMode::Dense`]). Sourced from the decoded `RunSpec` so both
+    /// sides of a run always agree.
+    pub fn with_wire(mut self, wire: WireMode) -> Self {
+        self.wire = wire;
         self
     }
 
@@ -791,7 +830,7 @@ impl TcpWorker {
     /// Write one encoded data frame, through the shared write lock when
     /// the beater is running.
     fn write_msg(&mut self, msg: &ToMaster) -> Result<()> {
-        let buf = frame::encode_to_master(msg);
+        let buf = frame::encode_to_master_mode(msg, self.wire);
         let r = match &self.shared_writer {
             Some(ws) => {
                 let mut w = ws
@@ -887,6 +926,36 @@ mod tests {
         ws[1].send(up).unwrap();
         assert!(matches!(m.recv().unwrap(), ToMaster::WorkerDown { worker: 1 }));
         assert_eq!(meter.snapshot(), (bytes + up_bytes, 2));
+    }
+
+    #[test]
+    fn in_proc_auto_mode_charges_sparse_wire_bytes() {
+        let meter = ByteMeter::new();
+        let (mut m, mut ws) = in_proc_pair_mode(1, meter.clone(), WireMode::Auto);
+        let mut w = vec![0.0; 50];
+        w[7] = 1.0;
+        let msg = ToWorker::Broadcast { epoch: 0, w };
+        let auto_bytes = msg.wire_bytes_for(WireMode::Auto);
+        assert!(auto_bytes < msg.wire_bytes());
+        m.send(0, msg).unwrap();
+        assert!(matches!(ws[0].recv().unwrap(), ToWorker::Broadcast { .. }));
+        // the charge is the sparse frame's exact on-wire length
+        assert_eq!(meter.snapshot(), (auto_bytes, 1));
+        // and the worker→master direction charges per-mode too
+        let mut u = vec![0.0; 50];
+        u[3] = 2.0;
+        let up = ToMaster::LocalIterate {
+            worker: 0,
+            epoch: 0,
+            u,
+            compute_s: 0.0,
+            materializations: 0,
+        };
+        let up_bytes = up.wire_bytes_for(WireMode::Auto);
+        assert!(up_bytes < up.wire_bytes());
+        ws[0].send(up).unwrap();
+        assert!(matches!(m.recv().unwrap(), ToMaster::LocalIterate { .. }));
+        assert_eq!(meter.snapshot(), (auto_bytes + up_bytes, 2));
     }
 
     #[test]

@@ -2,10 +2,15 @@
 //! roundtrip for every `ToWorker`/`ToMaster` variant — including NaN
 //! payloads, ±inf, signed zeros and arbitrary bit patterns — and the
 //! frame-length == `wire_bytes()` identity that makes the TCP byte meter
-//! equal the modeled accounting.
+//! equal the modeled accounting. The v7 sparse arm gets the same
+//! treatment under `WireMode::Auto`: bit-exact roundtrips through the
+//! mode-blind decoder, the per-mode length identity, every-prefix
+//! truncation rejection, and loud `Error::Protocol` rejection of
+//! unsorted / duplicate / out-of-range sparse indices.
 
-use pscope::config::{Model, PscopeConfig};
+use pscope::config::{Model, PscopeConfig, WireMode};
 use pscope::coordinator::protocol::{ToMaster, ToWorker};
+use pscope::error::Error;
 use pscope::coordinator::remote::RunSpec;
 use pscope::coordinator::serve::{
     decode_job_done, decode_job_setup, encode_job_done, encode_job_setup, PoolWorkerStats,
@@ -35,6 +40,23 @@ fn arb_vec(rng: &mut Rng, shrink: u32) -> Vec<f64> {
     let cap = 64usize >> shrink.min(3);
     let len = rng.below(cap + 1);
     (0..len).map(|_| arb_f64(rng)).collect()
+}
+
+/// Mostly-zero vector: the payload shape the sparse arm exists for. The
+/// planted entries still draw from [`arb_f64`], so NaN payloads, ±0.0
+/// and arbitrary bit patterns travel through the sparse arm too.
+fn arb_sparse_vec(rng: &mut Rng, shrink: u32) -> Vec<f64> {
+    let cap = 96usize >> shrink.min(3);
+    let len = rng.below(cap + 1);
+    let mut v = vec![0.0f64; len];
+    if len == 0 {
+        return v;
+    }
+    for _ in 0..rng.below(len / 3 + 1) {
+        let i = rng.below(len);
+        v[i] = arb_f64(rng);
+    }
+    v
 }
 
 /// Bitwise comparison (NaN-safe — `==` would reject equal NaNs).
@@ -199,6 +221,132 @@ fn prop_framed_streams_roundtrip_and_reject_truncation() {
                 }
                 Err(_) => return prop::that(true, ""),
             }
+        }
+    });
+}
+
+#[test]
+fn prop_auto_mode_roundtrip_and_length_identity() {
+    prop::check("auto-mode codec", 300, |rng, shrink| {
+        // bias toward sparse payloads so the sparse arm is actually
+        // exercised; dense/empty/full-density vectors still appear
+        let v = if rng.below(3) == 0 { arb_vec(rng, shrink) } else { arb_sparse_vec(rng, shrink) };
+        let epoch = rng.below(1 << 20);
+        let msg = match rng.below(2) {
+            0 => ToWorker::Broadcast { epoch, w: v.clone() },
+            _ => ToWorker::FullGrad { epoch, z: v.clone() },
+        };
+        let auto = msg.wire_bytes_for(WireMode::Auto);
+        let buf = frame::encode_to_worker_mode(&msg, WireMode::Auto);
+        if buf.len() as u64 != auto {
+            return prop::that(
+                false,
+                format!("encoded {} bytes != wire_bytes_for(Auto) {auto} for {msg:?}", buf.len()),
+            );
+        }
+        if auto > msg.wire_bytes() {
+            return prop::that(false, format!("auto charge {auto} exceeds dense for {msg:?}"));
+        }
+        let back = match frame::decode_to_worker(&buf) {
+            Ok(b) => b,
+            Err(e) => return prop::that(false, format!("decode failed: {e} for {msg:?}")),
+        };
+        if !same_to_worker(&msg, &back) {
+            return prop::that(false, format!("roundtrip mismatch: {msg:?} vs {back:?}"));
+        }
+        // the worker→master leg with the same vector as the local iterate
+        let up = ToMaster::LocalIterate {
+            worker: rng.below(64),
+            epoch,
+            u: v,
+            compute_s: arb_f64(rng),
+            materializations: rng.next_u64(),
+        };
+        let up_auto = up.wire_bytes_for(WireMode::Auto);
+        let ubuf = frame::encode_to_master_mode(&up, WireMode::Auto);
+        if ubuf.len() as u64 != up_auto {
+            return prop::that(
+                false,
+                format!("encoded {} != wire_bytes_for(Auto) {up_auto} for {up:?}", ubuf.len()),
+            );
+        }
+        match frame::decode_to_master(&ubuf) {
+            Ok(b) => prop::that(
+                same_to_master(&up, &b),
+                format!("roundtrip mismatch: {up:?} vs {b:?}"),
+            ),
+            Err(e) => prop::that(false, format!("decode failed: {e} for {up:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_auto_frame_rejects_every_truncation() {
+    prop::check("auto-frame truncation", 200, |rng, shrink| {
+        let mut w = arb_sparse_vec(rng, shrink);
+        if w.len() < 8 {
+            w = vec![0.0; 8];
+        }
+        let msg = ToWorker::Broadcast { epoch: rng.below(1 << 20), w };
+        let buf = frame::encode_to_worker_mode(&msg, WireMode::Auto);
+        // every strict prefix must fail: the header's length field no
+        // longer matches the bytes on hand, so neither the stream reader
+        // nor the decoder can be fooled into a silent prefix-read
+        let cut = rng.below(buf.len());
+        if frame::decode_to_worker(&buf[..cut]).is_ok() {
+            return prop::that(false, format!("prefix of {cut}/{} bytes decoded", buf.len()));
+        }
+        let mut cur = std::io::Cursor::new(&buf[..cut]);
+        match frame::read_frame(&mut cur) {
+            Ok(FrameRead::Frame(_)) => {
+                prop::that(false, format!("truncated frame ({cut}/{} bytes) read", buf.len()))
+            }
+            // an empty stream is a clean EOF; any other cut is mid-frame
+            Ok(FrameRead::Eof) => prop::that(cut == 0, format!("cut {cut} read as clean EOF")),
+            Ok(FrameRead::TimedOut) => prop::that(false, "cursor cannot time out".to_string()),
+            Err(_) => prop::that(true, ""),
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_index_corruption_is_protocol_error() {
+    prop::check("sparse index validation", 200, |rng, _shrink| {
+        // exactly two nonzeros, planted in separate halves so their
+        // indices are strictly increasing and the sparse arm always wins
+        let len = 32 + rng.below(64);
+        let mut v = vec![0.0f64; len];
+        let i = rng.below(len / 2);
+        let j = len / 2 + rng.below(len - len / 2);
+        v[i] = 1.0 + rng.range(0.0, 1.0);
+        v[j] = -1.0 - rng.range(0.0, 1.0);
+        let msg = ToWorker::Broadcast { epoch: 0, w: v };
+        let mut buf = frame::encode_to_worker_mode(&msg, WireMode::Auto);
+        if (buf.len() - 24) % 8 == 0 {
+            return prop::that(false, "expected the sparse arm".to_string());
+        }
+        // entry 0's index lives at frame offset 24 (header) + 17 (sparse
+        // preamble); entry 1's one 12-byte stride later
+        let e0 = 24 + 17;
+        let e1 = e0 + 12;
+        let mode = rng.below(3);
+        match mode {
+            // duplicate: entry 0 repeats entry 1's index
+            0 => buf[e0..e0 + 4].copy_from_slice(&(j as u32).to_le_bytes()),
+            // unsorted: swap the two indices (strictly decreasing)
+            1 => {
+                buf[e0..e0 + 4].copy_from_slice(&(j as u32).to_le_bytes());
+                buf[e1..e1 + 4].copy_from_slice(&(i as u32).to_le_bytes());
+            }
+            // out of range: idx == d
+            _ => buf[e0..e0 + 4].copy_from_slice(&(len as u32).to_le_bytes()),
+        }
+        match frame::decode_to_worker(&buf) {
+            Err(Error::Protocol(_)) => prop::that(true, ""),
+            other => prop::that(
+                false,
+                format!("corruption mode {mode}: expected Error::Protocol, got {other:?}"),
+            ),
         }
     });
 }

@@ -7,10 +7,10 @@
 
 use std::time::{Duration, Instant};
 
-use pscope::config::{Model, PscopeConfig};
+use pscope::config::{Model, PscopeConfig, WireMode};
 use pscope::coordinator::protocol::{vec_bytes, MSG_HEADER_BYTES};
 use pscope::coordinator::remote::{serve_worker, MasterEndpoint, RunSpec};
-use pscope::coordinator::train_with;
+use pscope::coordinator::{train_with, train_with_opts};
 use pscope::data::source::DataSource;
 use pscope::data::synth;
 use pscope::loss::Reg;
@@ -222,6 +222,88 @@ fn killed_tcp_worker_is_protocol_error_within_timeout_not_hang() {
     impostor.join().unwrap();
     // the surviving worker drains on Stop/EOF — a clean exit, not an error
     survivor.join().unwrap().unwrap();
+}
+
+// ---- sparse wire (SPEC_VERSION 7): --wire auto parity -------------------
+
+/// Bit-identical w / objectives / epoch count comparisons between two runs.
+fn assert_same_trajectory(
+    a: &pscope::coordinator::TrainOutput,
+    b: &pscope::coordinator::TrainOutput,
+    what: &str,
+) {
+    assert_eq!(a.w.len(), b.w.len(), "{what}: dimension");
+    for j in 0..a.w.len() {
+        assert_eq!(a.w[j].to_bits(), b.w[j].to_bits(), "{what}: coord {j}");
+    }
+    assert_eq!(a.epochs_run, b.epochs_run, "{what}: epoch count");
+    assert_eq!(a.trace.points.len(), b.trace.points.len(), "{what}: trace shape");
+    for (x, y) in a.trace.points.iter().zip(&b.trace.points) {
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{what}: epoch {}", x.epoch);
+    }
+}
+
+#[test]
+fn tcp_auto_wire_is_bit_identical_to_dense_and_strictly_cheaper() {
+    // The sparse arm is a pure re-encoding: a `--wire auto` run over real
+    // TCP must walk the exact trajectory of the legacy `--wire dense`
+    // InProc run (same seed/partition), while the byte meter strictly
+    // shrinks — the cold start alone guarantees it (w0 = 0 makes the
+    // first Broadcast all-zero, 17 bytes sparse vs 8·d dense), and the
+    // large lam1 keeps later iterates sparse too.
+    let (data_seed, part_seed, p, epochs) = (29u64, 1u64, 2usize, 4usize);
+    let ds = synth::tiny(data_seed).generate();
+    let mk = |wire: WireMode| PscopeConfig {
+        p,
+        outer_iters: epochs,
+        reg: Reg { lam1: 5e-2, lam2: 1e-3 },
+        seed: 5,
+        wire,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, p, part_seed);
+    let dense = train_with(&ds, &part, &mk(WireMode::Dense), None, NetModel::ten_gbe()).unwrap();
+    let auto_ip = train_with(&ds, &part, &mk(WireMode::Auto), None, NetModel::ten_gbe()).unwrap();
+    let auto_tcp = tcp_train(&ds, &part, &mk(WireMode::Auto), data_seed, part_seed);
+
+    assert_same_trajectory(&dense, &auto_ip, "inproc auto vs inproc dense");
+    assert_same_trajectory(&dense, &auto_tcp, "tcp auto vs inproc dense");
+    // InProc charges wire_bytes_for(Auto); TCP counts actual frame bytes.
+    // The codec's length identity makes them the same meter.
+    assert_eq!(auto_ip.comm, auto_tcp.comm, "auto-mode meter differs across transports");
+    // strictly fewer bytes, same message count
+    assert!(
+        auto_tcp.comm.0 < dense.comm.0,
+        "auto {} bytes !< dense {} bytes",
+        auto_tcp.comm.0,
+        dense.comm.0
+    );
+    assert_eq!(auto_tcp.comm.1, dense.comm.1, "auto changed the message count");
+}
+
+#[test]
+fn auto_wire_costs_dense_bytes_on_dense_iterates() {
+    // With a dense warm start and lam1 ≈ 0 no vector ever sparsifies, so
+    // encode-time selection picks the dense arm for every frame and the
+    // auto run is byte-for-byte the dense run — compression never costs.
+    let ds = synth::tiny(31).generate();
+    let d = ds.d();
+    let mk = |wire: WireMode| PscopeConfig {
+        p: 2,
+        outer_iters: 3,
+        reg: Reg { lam1: 1e-9, lam2: 1e-3 },
+        seed: 5,
+        wire,
+        ..PscopeConfig::for_dataset("tiny", Model::Logistic)
+    };
+    let part = Partitioner::Uniform.split(&ds, 2, 1);
+    let w0: Vec<f64> = (0..d).map(|j| 0.1 + 0.01 * j as f64).collect();
+    let net = NetModel::ten_gbe();
+    let dense =
+        train_with_opts(&ds, &part, &mk(WireMode::Dense), None, net, Some(&w0)).unwrap();
+    let auto = train_with_opts(&ds, &part, &mk(WireMode::Auto), None, net, Some(&w0)).unwrap();
+    assert_same_trajectory(&dense, &auto, "auto vs dense, dense iterates");
+    assert_eq!(auto.comm, dense.comm, "auto charged different bytes on dense payloads");
 }
 
 #[test]
