@@ -7,6 +7,9 @@
 //! * `lazy_advance` scalar cost (phase decomposition, O(log k));
 //! * shard-gradient kernel, serial and parallel (the deterministic blocked
 //!   reduction — bit-exact at every thread count);
+//! * the `--precision fast` tier (DESIGN.md §14): the f32 dense inner
+//!   epoch and f32 blocked gradient vs their exact-f64 twins — the
+//!   two-tier rows EXPERIMENTS.md walks through;
 //! * coordinator protocol overhead: one full epoch at M = 0 (pure
 //!   broadcast/reduce) vs the per-epoch compute at the default M;
 //! * PJRT inner-epoch artifact execution (when `artifacts/` exists).
@@ -22,7 +25,7 @@ use pscope::data::synth;
 use pscope::loss::{Objective, Reg};
 use pscope::net::NetModel;
 use pscope::optim::lazy::{lazy_advance, lazy_inner_epoch, lazy_inner_epoch_ws, LazyStats};
-use pscope::optim::svrg::dense_inner_epoch;
+use pscope::optim::svrg::{dense_inner_epoch, dense_inner_epoch_fast_ws};
 use pscope::optim::workspace::EpochWorkspace;
 use pscope::partition::Partitioner;
 use pscope::rng::Rng;
@@ -61,7 +64,7 @@ fn main() {
     let _ = lazy_inner_epoch(
         &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg, m, &mut rng, &mut stats,
     );
-    table.row_timed(
+    table.row_stats(
         &[
             format!("lazy inner epoch (M={m}, d={})", ds.d()),
             human_time(t_lazy.median),
@@ -71,15 +74,36 @@ fn main() {
                 100.0 * stats.savings()
             ),
         ],
-        t_lazy.median,
+        &t_lazy,
     );
-    table.row_timed(
+    table.row_stats(
         &[
             format!("dense inner epoch (M={m}, d={})", ds.d()),
             human_time(t_dense.median),
             format!("recovery-rule speedup {:.1}x", t_dense.median / t_lazy.median),
         ],
-        t_dense.median,
+        &t_dense,
+    );
+
+    // ---- fast tier: the same dense epoch through the f32 kernels ----
+    let mut ws_fast = EpochWorkspace::new();
+    let t_fast = time_fn(s(1), s(3), || {
+        let mut rng = Rng::new(7);
+        std::hint::black_box(dense_inner_epoch_fast_ws(
+            &ds, pscope::loss::Loss::Logistic, &w, &z, eta, reg, m, &mut rng,
+            &mut ws_fast,
+        ));
+    });
+    table.row_stats(
+        &[
+            format!("dense inner epoch, fast tier (M={m})"),
+            human_time(t_fast.median),
+            format!(
+                "{:.2}x vs exact dense (--precision fast, tolerance-pinned)",
+                t_dense.median / t_fast.median
+            ),
+        ],
+        &t_fast,
     );
 
     // ---- workspace reuse: zero-allocation steady state ----
@@ -92,7 +116,7 @@ fn main() {
             &mut stats, &mut ws,
         ));
     });
-    table.row_timed(
+    table.row_stats(
         &[
             "lazy epoch, reused EpochWorkspace".into(),
             human_time(t_ws.median),
@@ -102,7 +126,7 @@ fn main() {
                 ws.allocations()
             ),
         ],
-        t_ws.median,
+        &t_ws,
     );
 
     // ---- lazy_advance scalar ----
@@ -113,13 +137,13 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    table.row_timed(
+    table.row_stats(
         &[
             "lazy_advance x10k (k~1000)".into(),
             human_time(t_adv.median),
             format!("{:.0} ns/advance", t_adv.median / 10_000.0 * 1e9),
         ],
-        t_adv.median,
+        &t_adv,
     );
 
     // ---- prox kernels: per-regularizer vector prox over a d-sized
@@ -148,13 +172,13 @@ fn main() {
                 preg.prox_vec(&mut buf, step);
                 std::hint::black_box(&buf);
             });
-            table.row_timed(
+            table.row_stats(
                 &[
                     format!("prox kernel {name} (d={dprox})"),
                     human_time(t_prox.median),
                     format!("{:.2} Gcoord/s", dprox as f64 / t_prox.median / 1e9),
                 ],
-                t_prox.median,
+                &t_prox,
             );
         }
     }
@@ -166,20 +190,21 @@ fn main() {
         obj.shard_grad_sum_into(&w, &mut g, 1, &mut scratch);
         std::hint::black_box(&g);
     });
-    table.row_timed(
+    table.row_stats(
         &[
             format!("shard grad serial (nnz={})", ds.nnz()),
             human_time(t_grad.median),
             format!("{:.0} Mnnz/s", ds.nnz() as f64 / t_grad.median / 1e6),
         ],
-        t_grad.median,
+        &t_grad,
     );
+    let mut t_par_last = t_grad;
     for threads in [2usize, 4] {
         let t_par = time_fn(s(1), s(9), || {
             obj.shard_grad_sum_into(&w, &mut g, threads, &mut scratch);
             std::hint::black_box(&g);
         });
-        table.row_timed(
+        table.row_stats(
             &[
                 format!("shard grad parallel t={threads}"),
                 human_time(t_par.median),
@@ -188,8 +213,39 @@ fn main() {
                     t_grad.median / t_par.median
                 ),
             ],
-            t_par.median,
+            &t_par,
         );
+        t_par_last = t_par;
+    }
+
+    // ---- fast tier: the same blocked gradient through the f32 kernels ----
+    {
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let mut scratch32: Vec<f32> = Vec::new();
+        for (threads, t_exact) in [(1usize, t_grad), (4usize, t_par_last)] {
+            let t_fg = time_fn(s(1), s(9), || {
+                pscope::loss::shard_grad_sum_blocked_f32(
+                    &ds,
+                    pscope::loss::Loss::Logistic,
+                    &w32,
+                    &mut g,
+                    threads,
+                    &mut scratch32,
+                );
+                std::hint::black_box(&g);
+            });
+            table.row_stats(
+                &[
+                    format!("shard grad fast tier t={threads}"),
+                    human_time(t_fg.median),
+                    format!(
+                        "{:.2}x vs exact t={threads} (--precision fast, f64 carry)",
+                        t_exact.median / t_fg.median
+                    ),
+                ],
+                &t_fg,
+            );
+        }
     }
 
     // ---- coordinator protocol overhead ----
@@ -211,15 +267,15 @@ fn main() {
         let cfg = mk(0); // default M = 2n/p
         std::hint::black_box(train_with(&ds, &part, &cfg, None, NetModel::zero()).unwrap());
     });
-    table.row_timed(
+    table.row_stats(
         &[
             "3 epochs, M=1 (protocol+grad)".into(),
             human_time(t_proto.median),
             "coordination floor".into(),
         ],
-        t_proto.median,
+        &t_proto,
     );
-    table.row_timed(
+    table.row_stats(
         &[
             "3 epochs, M=2n/p (default)".into(),
             human_time(t_epoch.median),
@@ -228,7 +284,7 @@ fn main() {
                 100.0 * t_proto.median / t_epoch.median
             ),
         ],
-        t_epoch.median,
+        &t_epoch,
     );
 
     // ---- warm vs cold start along a λ path (the serve-pool payoff) ----
@@ -271,15 +327,15 @@ fn main() {
                 train_with_opts(&ds, &part, &cfg_lo, None, NetModel::zero(), Some(&w_hi)).unwrap(),
             );
         });
-        table.row_timed(
+        table.row_stats(
             &[
                 "λ-path cold start (λ=1e-4, half-gap stop)".into(),
                 human_time(t_cold.median),
                 format!("{} epochs from zeros", cold.epochs_run),
             ],
-            t_cold.median,
+            &t_cold,
         );
-        table.row_timed(
+        table.row_stats(
             &[
                 "λ-path warm start (w0 from λ=1e-3)".into(),
                 human_time(t_warm.median),
@@ -289,7 +345,7 @@ fn main() {
                     t_cold.median / t_warm.median
                 ),
             ],
-            t_warm.median,
+            &t_warm,
         );
     }
 
@@ -322,13 +378,13 @@ fn main() {
             let t_dec = time_fn(s(3), s(11), || {
                 std::hint::black_box(frame::decode_to_worker(&buf).unwrap());
             });
-            table.row_timed(
+            table.row_stats(
                 &[
                     format!("wire encode {name} (d={dcodec})"),
                     human_time(t_enc.median),
                     format!("decode {}, {} B/frame", human_time(t_dec.median), buf.len()),
                 ],
-                t_enc.median,
+                &t_enc,
             );
         }
 
@@ -375,13 +431,13 @@ fn main() {
                     .unwrap(),
             );
         });
-        table.row_timed(
+        table.row_stats(
             &[
                 "2 epochs via PJRT artifact (2048x64, M=512)".into(),
                 human_time(t_xla.median),
                 "includes per-run client + compile".into(),
             ],
-            t_xla.median,
+            &t_xla,
         );
     } else {
         table.row(&[

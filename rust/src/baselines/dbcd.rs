@@ -62,11 +62,13 @@ impl DistSolver for Dbcd {
         let mut trace = Trace::new(self.name(), &ds.name);
         let mut w = vec![0.0; ds.d()];
         let mut v = vec![0.0; n];
-        // round-loop scratch, allocated once and re-zeroed (the only
-        // steady-state allocation left is the small `picks` working set)
+        // round-loop scratch, allocated once and re-zeroed — including the
+        // `picks` working set, so the timed direction phase performs no
+        // steady-state allocations
         let mut dw = vec![0.0; ds.d()];
         let mut dv_total = vec![0.0; n];
         let mut dv = vec![0.0; n];
+        let mut picks_buf: Vec<usize> = Vec::new();
         let mut times: Vec<f64> = Vec::with_capacity(opts.p);
         trace.push(clock.point(0, obj.value(&w)));
         for round in 0..opts.max_rounds {
@@ -79,16 +81,19 @@ impl DistSolver for Dbcd {
                 crate::linalg::zero(&mut dv);
                 let ws = ((block.len() as f64 * self.working_frac).ceil() as usize)
                     .clamp(1, block.len());
-                let picks: Vec<usize> = if ws >= block.len() {
-                    block.clone()
+                let picks: &[usize] = if ws >= block.len() {
+                    block
                 } else {
-                    rng.sample_distinct(block.len(), ws)
-                        .into_iter()
-                        .map(|i| block[i])
-                        .collect()
+                    // same RNG stream and working set as the allocating
+                    // `sample_distinct(..).map(|i| block[i])` form
+                    rng.sample_distinct_into(block.len(), ws, &mut picks_buf);
+                    for slot in picks_buf.iter_mut() {
+                        *slot = block[*slot];
+                    }
+                    &picks_buf
                 };
                 {
-                    for &j in &picks {
+                    for &j in picks {
                         let col = csc.col(j);
                         if col.nnz() == 0 {
                             continue;

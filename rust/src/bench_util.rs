@@ -8,9 +8,11 @@
 //!   with a CSV dump under `bench_out/` so every figure's data is
 //!   regenerable and diffable, **plus** a machine-readable
 //!   `bench_out/BENCH_<slug>.json` with the stable schema
-//!   `{"bench": ..., "rows": [{"name", "median_ns", "notes"}]}` — the
-//!   per-PR perf trajectory CI tracks (rows added with [`Table::row_timed`]
-//!   carry a numeric `median_ns`; plain [`Table::row`] rows carry `null`).
+//!   `{"bench": ..., "rows": [{"name", "median_ns", "min_ns", "p90_ns",
+//!   "notes"}]}` — the per-PR perf trajectory CI tracks (rows added with
+//!   [`Table::row_stats`] carry all three timings, [`Table::row_timed`]
+//!   rows carry `median_ns` only, plain [`Table::row`] rows carry
+//!   `null`s; see EXPERIMENTS.md for how to read the spread).
 //!
 //! `cargo bench` binaries (`rust/benches/*.rs`, `harness = false`) are
 //! plain `main()`s built on these.
@@ -61,6 +63,9 @@ pub struct TimingStats {
     pub median: f64,
     /// Median absolute deviation.
     pub mad: f64,
+    /// Fastest sample — the best-case floor a perf regression cannot
+    /// explain away as scheduler noise.
+    pub min: f64,
     /// 10th percentile.
     pub p10: f64,
     /// 90th percentile.
@@ -119,6 +124,7 @@ pub fn time_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> TimingSta
     TimingStats {
         median,
         mad: devs[devs.len() / 2],
+        min: times[0],
         p10: q(0.1),
         p90: q(0.9),
         samples: times.len(),
@@ -134,6 +140,9 @@ pub struct Table {
     /// Per-row primary timing in nanoseconds (`None` for untimed rows);
     /// parallel to `rows`.
     medians_ns: Vec<Option<f64>>,
+    /// Per-row `(min_ns, p90_ns)` spread (`None` for rows added with
+    /// [`Table::row`] or [`Table::row_timed`]); parallel to `rows`.
+    spreads_ns: Vec<Option<(f64, f64)>>,
 }
 
 impl Table {
@@ -144,6 +153,7 @@ impl Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
             medians_ns: Vec::new(),
+            spreads_ns: Vec::new(),
         }
     }
 
@@ -152,13 +162,24 @@ impl Table {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
         self.medians_ns.push(None);
+        self.spreads_ns.push(None);
     }
 
     /// Append a row carrying a primary timing (`median_s` in seconds,
-    /// recorded as `median_ns` in the JSON dump).
+    /// recorded as `median_ns` in the JSON dump). The `min_ns`/`p90_ns`
+    /// fields stay `null`; prefer [`Table::row_stats`] where a full
+    /// [`TimingStats`] is in hand.
     pub fn row_timed(&mut self, cells: &[String], median_s: f64) {
         self.row(cells);
         *self.medians_ns.last_mut().unwrap() = Some(median_s * 1e9);
+    }
+
+    /// Append a row carrying a full timing summary: `median_ns` plus the
+    /// `min_ns`/`p90_ns` spread in the JSON dump, so CI can tell a median
+    /// shift from plain sample noise (EXPERIMENTS.md).
+    pub fn row_stats(&mut self, cells: &[String], st: &TimingStats) {
+        self.row_timed(cells, st.median);
+        *self.spreads_ns.last_mut().unwrap() = Some((st.min * 1e9, st.p90 * 1e9));
     }
 
     /// Render aligned text.
@@ -219,16 +240,18 @@ impl Table {
     }
 
     /// Machine-readable form: stable schema
-    /// `{"bench", "title", "rows": [{"name", "median_ns", "notes"}]}`.
-    /// `name` is the first cell, `notes` the remaining cells joined with
-    /// `"; "`, `median_ns` the [`Table::row_timed`] timing or `null`.
+    /// `{"bench", "title", "rows": [{"name", "median_ns", "min_ns",
+    /// "p90_ns", "notes"}]}`. `name` is the first cell, `notes` the
+    /// remaining cells joined with `"; "`, `median_ns` the
+    /// [`Table::row_timed`]/[`Table::row_stats`] timing or `null`, and
+    /// `min_ns`/`p90_ns` the [`Table::row_stats`] spread or `null`.
     pub fn json_value(&self) -> Json {
         use std::collections::BTreeMap;
         let rows: Vec<Json> = self
             .rows
             .iter()
-            .zip(&self.medians_ns)
-            .map(|(row, med)| {
+            .zip(self.medians_ns.iter().zip(&self.spreads_ns))
+            .map(|(row, (med, spread))| {
                 let mut m = BTreeMap::new();
                 m.insert(
                     "name".to_string(),
@@ -237,6 +260,14 @@ impl Table {
                 m.insert(
                     "median_ns".to_string(),
                     med.map(Json::Num).unwrap_or(Json::Null),
+                );
+                m.insert(
+                    "min_ns".to_string(),
+                    spread.map(|(mn, _)| Json::Num(mn)).unwrap_or(Json::Null),
+                );
+                m.insert(
+                    "p90_ns".to_string(),
+                    spread.map(|(_, p90)| Json::Num(p90)).unwrap_or(Json::Null),
                 );
                 m.insert(
                     "notes".to_string(),
@@ -270,6 +301,7 @@ mod tests {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(st.median > 0.0);
+        assert!(st.min <= st.p10);
         assert!(st.p10 <= st.median && st.median <= st.p90);
         assert_eq!(st.samples, 9);
     }
@@ -304,15 +336,34 @@ mod tests {
         let mut t = Table::new("demo bench", &["benchmark", "median", "notes"]);
         t.row_timed(&["lazy epoch".into(), "1.500ms".into(), "8.2 Msteps/s".into()], 1.5e-3);
         t.row(&["skipped thing".into(), "—".into(), "n/a".into()]);
+        let st = TimingStats {
+            median: 2e-3,
+            mad: 1e-5,
+            min: 1.8e-3,
+            p10: 1.9e-3,
+            p90: 2.4e-3,
+            samples: 9,
+        };
+        t.row_stats(&["dense epoch".into(), "2.000ms".into(), "fast tier".into()], &st);
         let j = t.json_value();
         assert_eq!(j.get("bench").unwrap().as_str(), Some("demo_bench"));
         let rows = j.get("rows").unwrap().as_arr().unwrap();
-        assert_eq!(rows.len(), 2);
+        assert_eq!(rows.len(), 3);
         assert_eq!(rows[0].get("name").unwrap().as_str(), Some("lazy epoch"));
         let ns = rows[0].get("median_ns").unwrap().as_f64().unwrap();
         assert!((ns - 1.5e6).abs() < 1e-6, "median_ns {ns}");
         assert_eq!(rows[0].get("notes").unwrap().as_str(), Some("1.500ms; 8.2 Msteps/s"));
+        // row_timed rows carry the median only — spread stays null
+        assert_eq!(rows[0].get("min_ns"), Some(&crate::json::Json::Null));
+        assert_eq!(rows[0].get("p90_ns"), Some(&crate::json::Json::Null));
         assert_eq!(rows[1].get("median_ns"), Some(&crate::json::Json::Null));
+        // row_stats rows carry the full min/median/p90 triple
+        let med = rows[2].get("median_ns").unwrap().as_f64().unwrap();
+        let mn = rows[2].get("min_ns").unwrap().as_f64().unwrap();
+        let p90 = rows[2].get("p90_ns").unwrap().as_f64().unwrap();
+        assert!((med - 2e6).abs() < 1e-6, "median_ns {med}");
+        assert!((mn - 1.8e6).abs() < 1e-6, "min_ns {mn}");
+        assert!((p90 - 2.4e6).abs() < 1e-6, "p90_ns {p90}");
         // round-trips through the in-crate parser
         let parsed = crate::json::Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed, j);

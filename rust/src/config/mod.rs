@@ -202,6 +202,43 @@ impl WireMode {
     }
 }
 
+/// Numeric tier of the worker hot paths (see `DESIGN.md` §14).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f64 everywhere. Default — bit-for-bit identical to every
+    /// historical trajectory; all parity/accounting guarantees live here.
+    #[default]
+    Exact,
+    /// f32 inner-epoch iterate and f32 shard-gradient partials with f64
+    /// carry at epoch boundaries. Deterministic for a fixed seed/config,
+    /// but pinned only by tolerance (per-epoch objectives rel ≤ 1e-5 vs
+    /// `Exact`), never by bits. Regularizers without a scalar prox kernel
+    /// (group Lasso) and the lazy sparse engine fall back to the exact
+    /// path.
+    Fast,
+}
+
+impl Precision {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "exact" => Ok(Precision::Exact),
+            "fast" => Ok(Precision::Fast),
+            _ => Err(Error::Config(format!(
+                "unknown precision {s:?} (expected \"exact\" or \"fast\")"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Fast => "fast",
+        }
+    }
+}
+
 /// Failure-handling mode of the coordinator (see `DESIGN.md` §11).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum RunMode {
@@ -290,6 +327,11 @@ pub struct PscopeConfig {
     /// dense-vs-sparse selection; same trajectory bits, fewer metered
     /// bytes once iterates sparsify).
     pub wire: WireMode,
+    /// Numeric tier of the worker hot paths: `Exact` (default, bit-for-bit
+    /// the historical f64 trajectories) or `Fast` (f32 inner-epoch iterate
+    /// + f32 gradient partials with f64 carry; tolerance-pinned, see
+    /// `DESIGN.md` §14).
+    pub precision: Precision,
     /// Dataset source spec (`dataset` key): a synth preset name, a LibSVM
     /// path, or a `pscope ingest` shard directory — resolved by
     /// [`DataSource::resolve`](crate::data::source::DataSource::resolve).
@@ -337,6 +379,7 @@ impl Default for PscopeConfig {
             partition: "uniform".into(),
             transport: TransportKind::InProc,
             wire: WireMode::Dense,
+            precision: Precision::Exact,
             dataset: None,
             mode: RunMode::Strict,
             heartbeat_ms: 250,
@@ -453,6 +496,7 @@ impl PscopeConfig {
                 }
                 "transport" => self.transport = TransportKind::parse(v.as_str_or()?)?,
                 "wire" => self.wire = WireMode::parse(v.as_str_or()?)?,
+                "precision" => self.precision = Precision::parse(v.as_str_or()?)?,
                 "dataset" => self.dataset = Some(v.as_str_or()?.to_string()),
                 "mode" => self.mode = RunMode::parse(v.as_str_or()?)?,
                 "heartbeat_ms" => self.heartbeat_ms = v.as_usize_or()? as u64,
@@ -650,5 +694,22 @@ mod tests {
         c.apply_toml("wire = \"auto\"\n").unwrap();
         assert_eq!(c.wire, WireMode::Auto);
         assert!(c.apply_toml("wire = \"rle\"\n").is_err());
+    }
+
+    #[test]
+    fn precision_parse_and_toml() {
+        assert_eq!(Precision::parse("exact").unwrap(), Precision::Exact);
+        assert_eq!(Precision::parse("fast").unwrap(), Precision::Fast);
+        let err = Precision::parse("f16").unwrap_err();
+        assert!(format!("{err}").contains("unknown precision"), "{err}");
+        for tier in [Precision::Exact, Precision::Fast] {
+            assert_eq!(Precision::parse(tier.name()).unwrap(), tier);
+        }
+        // exact is the default — every legacy config stays bit-identical
+        let mut c = PscopeConfig::default();
+        assert_eq!(c.precision, Precision::Exact);
+        c.apply_toml("precision = \"fast\"\n").unwrap();
+        assert_eq!(c.precision, Precision::Fast);
+        assert!(c.apply_toml("precision = \"f32\"\n").is_err());
     }
 }

@@ -294,6 +294,11 @@ pub fn run_master_from<T: MasterTransport>(
     let mut sim_wall_s = 0.0f64;
     let mut z = vec![0.0; d];
     let mut u_mean = vec![0.0; d];
+    // reduce buffers are hoisted out of the epoch loop (and reset to None
+    // in place each round) so the timed region performs no per-epoch
+    // allocations beyond the protocol messages themselves
+    let mut zsums: Vec<Option<(Vec<f64>, usize)>> = vec![None; p];
+    let mut us: Vec<Option<Vec<f64>>> = vec![None; p];
     for t_epoch in 0..cfg.outer_iters {
         let timer = Timer::start();
         for k in 0..p {
@@ -302,7 +307,7 @@ pub fn run_master_from<T: MasterTransport>(
         // reduce shard gradients — buffered per worker and reduced in
         // worker order so the f64 sum is deterministic regardless of
         // message arrival order
-        let mut zsums: Vec<Option<(Vec<f64>, usize)>> = vec![None; p];
+        zsums.fill(None);
         let mut seen = 0usize;
         while seen < p {
             match transport.recv()? {
@@ -335,7 +340,7 @@ pub fn run_master_from<T: MasterTransport>(
             transport.send(k, protocol::ToWorker::FullGrad { epoch: t_epoch, z: z.clone() })?;
         }
         // collect local iterates (same deterministic-order reduce)
-        let mut us: Vec<Option<Vec<f64>>> = vec![None; p];
+        us.fill(None);
         let mut seen = 0usize;
         let mut max_worker_s = 0.0f64;
         while seen < p {
@@ -476,11 +481,13 @@ pub fn train_with_opts(
             let rt = artifact_dir.clone();
             let reg = prox;
             let backend = cfg.backend;
+            let precision = cfg.precision;
             handles.push(scope.spawn(move || -> Result<()> {
                 let mut guard = DownGuard { tx: wt.down_sender(), worker: k, armed: true };
                 let result = (|| {
                     let mut wk = Worker::new(k, shard, loss, reg, backend, rng, rt)
-                        .with_grad_threads(grad_threads);
+                        .with_grad_threads(grad_threads)
+                        .with_precision(precision);
                     run_worker(&mut wt, &mut wk, eta, m_inner)
                 })();
                 if result.is_ok() {

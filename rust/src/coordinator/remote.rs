@@ -57,7 +57,7 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use crate::config::{PscopeConfig, RunMode, WireMode, WorkerBackend};
+use crate::config::{Precision, PscopeConfig, RunMode, WireMode, WorkerBackend};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::elastic::{self, ElasticOpts};
 use crate::coordinator::worker::{run_worker, Worker};
@@ -91,8 +91,11 @@ use crate::rng::{splitmix64, Rng};
 /// v7 added the two-arm vector part to the Broadcast/FullGrad/
 /// LocalIterate frames (encode-time dense-or-sparse selection, see
 /// [`crate::net::frame`]) and the wire-mode byte to the spec tail, so
-/// both sides of a run always charge the same per-mode `wire_bytes_for`.
-pub(crate) const SPEC_VERSION: u64 = 7;
+/// both sides of a run always charge the same per-mode `wire_bytes_for`;
+/// v8 added the precision-tier byte to the spec tail (exact/fast, see
+/// `DESIGN.md` §14), so every worker of a run computes in the same tier
+/// as the master planned.
+pub(crate) const SPEC_VERSION: u64 = 8;
 
 /// Everything a worker process needs to reconstruct its side of a run.
 ///
@@ -165,6 +168,10 @@ pub struct RunSpec {
     /// the spec so master and workers always encode — and charge the
     /// meter — identically; `Dense` is the legacy byte-exact layout.
     pub wire: WireMode,
+    /// Numeric tier of the worker hot paths (`DESIGN.md` §14). Shipped in
+    /// the spec so all workers of a run compute in the tier the master
+    /// planned; `Exact` is the legacy bit-for-bit contract.
+    pub precision: Precision,
 }
 
 impl RunSpec {
@@ -211,6 +218,7 @@ impl RunSpec {
             mode: cfg.mode,
             heartbeat_ms: cfg.heartbeat_ms,
             wire: cfg.wire,
+            precision: cfg.precision,
         })
     }
 
@@ -265,11 +273,17 @@ impl RunSpec {
             RunMode::Elastic => 1,
         });
         b.extend_from_slice(&self.heartbeat_ms.to_le_bytes());
-        // v7 tail: the wire mode, one byte, appended last for the same
-        // fixed-offset reason as the v5 tail
+        // v7 tail: the wire mode, one byte, appended after the v5 tail
+        // for the same fixed-offset reason
         b.push(match self.wire {
             WireMode::Dense => 0,
             WireMode::Auto => 1,
+        });
+        // v8 tail: the precision tier, one byte, appended last for the
+        // same fixed-offset reason as the v5/v7 tails
+        b.push(match self.precision {
+            Precision::Exact => 0,
+            Precision::Fast => 1,
         });
         b
     }
@@ -333,6 +347,11 @@ impl RunSpec {
             1 => WireMode::Auto,
             t => return Err(Error::Protocol(format!("bad wire mode tag {t}"))),
         };
+        let precision = match c.u8()? {
+            0 => Precision::Exact,
+            1 => Precision::Fast,
+            t => return Err(Error::Protocol(format!("bad precision tag {t}"))),
+        };
         c.done()?;
         Ok(RunSpec {
             source,
@@ -353,6 +372,7 @@ impl RunSpec {
             mode,
             heartbeat_ms,
             wire,
+            precision,
         })
     }
 }
@@ -535,7 +555,8 @@ pub fn worker_from_shard(spec: &RunSpec, k: usize, shard_ds: Dataset) -> Result<
         rng,
         spec.artifact_dir.clone().map(PathBuf::from),
     )
-    .with_grad_threads(spec.grad_threads.max(1)))
+    .with_grad_threads(spec.grad_threads.max(1))
+    .with_precision(spec.precision))
 }
 
 /// Connect with exponential backoff: 10 ms doubling to a 2 s cap, plus a
@@ -821,6 +842,14 @@ pub(crate) fn preflight<'a>(
             cfg.wire.name()
         )));
     }
+    if spec.precision != cfg.precision {
+        return Err(Error::Config(format!(
+            "job spec precision tier ({}) disagrees with this run ({}) — build the spec \
+             with RunSpec::derive on the same (ds, part, cfg)",
+            spec.precision.name(),
+            cfg.precision.name()
+        )));
+    }
     if spec.p != p
         || spec.shard_digests.len() != p
         || spec.m_inner != m_inner
@@ -1008,6 +1037,7 @@ mod tests {
             mode: RunMode::Strict,
             heartbeat_ms: 250,
             wire: WireMode::Dense,
+            precision: Precision::Exact,
         }
     }
 
@@ -1029,6 +1059,10 @@ mod tests {
         let mut auto_spec = spec_fixture();
         auto_spec.wire = WireMode::Auto;
         assert_eq!(RunSpec::decode(&auto_spec.encode()).unwrap(), auto_spec);
+        // and the v8 tail (precision tier)
+        let mut fast_spec = spec_fixture();
+        fast_spec.precision = Precision::Fast;
+        assert_eq!(RunSpec::decode(&fast_spec.encode()).unwrap(), fast_spec);
         // every source kind survives the wire
         let mut file_spec = spec_fixture();
         file_spec.source = DataSource::LibsvmFile { path: "data/real.libsvm".into() };
@@ -1081,17 +1115,22 @@ mod tests {
         let mut bad_source = good.clone();
         bad_source[tag_base + 3] = 0x7F; // source tag follows the backend byte
         assert!(RunSpec::decode(&bad_source).is_err(), "bad source tag accepted");
-        // the run-mode tag sits 10 bytes from the end (u8 mode + u64
-        // heartbeat + u8 wire mode)
+        // the run-mode tag sits 11 bytes from the end (u8 mode + u64
+        // heartbeat + u8 wire mode + u8 precision)
         let mut bad_mode = good.clone();
-        let mode_off = bad_mode.len() - 10;
+        let mode_off = bad_mode.len() - 11;
         bad_mode[mode_off] = 0x7F;
         assert!(RunSpec::decode(&bad_mode).is_err(), "bad mode tag accepted");
-        // the wire-mode tag is the final byte of the v7 tail
+        // the wire-mode tag is the second-to-last byte (v7 tail)
         let mut bad_wire = good.clone();
-        let wire_off = bad_wire.len() - 1;
+        let wire_off = bad_wire.len() - 2;
         bad_wire[wire_off] = 0x7F;
         assert!(RunSpec::decode(&bad_wire).is_err(), "bad wire tag accepted");
+        // the precision tag is the final byte (v8 tail)
+        let mut bad_precision = good.clone();
+        let precision_off = bad_precision.len() - 1;
+        bad_precision[precision_off] = 0x7F;
+        assert!(RunSpec::decode(&bad_precision).is_err(), "bad precision tag accepted");
         // a digest table whose length disagrees with p is a protocol error
         let mut short_table = spec_fixture();
         short_table.shard_digests.pop();

@@ -27,7 +27,7 @@
 //!    the cold-start gap) a warm start seeded by a converged neighbor
 //!    stops at epoch 0 — the λ-path speedup becomes a plain epoch count.
 //!
-//! ## Wire protocol (SPEC_VERSION 7)
+//! ## Wire protocol (introduced at SPEC_VERSION 6; layout unchanged since)
 //!
 //! ```text
 //! worker ── connect ─────────────────> master   (accept order assigns ids)

@@ -33,7 +33,7 @@
 
 use std::path::PathBuf;
 
-use crate::config::WorkerBackend;
+use crate::config::{Precision, WorkerBackend};
 use crate::coordinator::protocol::{ToMaster, ToWorker};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -41,7 +41,7 @@ use crate::loss::{Loss, ProxReg, SmoothLoss};
 use crate::metrics::ThreadCpuTimer;
 use crate::net::transport::WorkerTransport;
 use crate::optim::lazy::{lazy_inner_epoch_ws, LazyStats};
-use crate::optim::svrg::dense_inner_epoch_ws;
+use crate::optim::svrg::{dense_inner_epoch_fast_ws, dense_inner_epoch_ws};
 use crate::optim::workspace::EpochWorkspace;
 use crate::rng::Rng;
 use crate::runtime::{Input, XlaRuntime};
@@ -124,6 +124,12 @@ pub struct Worker {
     /// Threads for the epoch-start shard-gradient pass (bit-exact at any
     /// count; see [`crate::loss::shard_grad_sum_blocked`]).
     pub grad_threads: usize,
+    /// Numeric tier (DESIGN.md §14). `Exact` (default) is bit-for-bit the
+    /// historical f64 path; `Fast` routes the dense inner epoch and the
+    /// shard gradient through the f32 kernels with f64 carry. The lazy
+    /// sparse engine and the Xla backend ignore the knob (lazy stays
+    /// exact; Xla is already its own f32 contract).
+    pub precision: Precision,
     /// Artifact directory (Xla backend only). The PJRT client is created
     /// lazily *inside* the worker thread: the xla crate's client/executable
     /// handles are not Send, so every worker owns a private runtime.
@@ -200,6 +206,7 @@ impl Worker {
             lazy_stats: LazyStats::default(),
             workspace: EpochWorkspace::new(),
             grad_threads: 1,
+            precision: Precision::Exact,
             artifact_dir,
             runtime: None,
             xla_cache: None,
@@ -212,6 +219,12 @@ impl Worker {
         self
     }
 
+    /// Set the numeric tier (builder style; default [`Precision::Exact`]).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Shard gradient sum `Σ_{i∈D_k} h'(xᵢᵀw) xᵢ` (Algorithm 1 line 12).
     ///
     /// Accumulates in the workspace (zero steady-state allocations beyond
@@ -221,7 +234,14 @@ impl Worker {
         match self.backend {
             WorkerBackend::RustSparse | WorkerBackend::RustDense => {
                 let obj = crate::loss::Objective::new(&self.shard, self.loss, self.reg);
-                Ok(self.workspace.shard_grad_sum(&obj, w, self.grad_threads).to_vec())
+                Ok(match self.precision {
+                    Precision::Exact => {
+                        self.workspace.shard_grad_sum(&obj, w, self.grad_threads).to_vec()
+                    }
+                    Precision::Fast => {
+                        self.workspace.shard_grad_sum_fast(&obj, w, self.grad_threads).to_vec()
+                    }
+                })
             }
             WorkerBackend::Xla => self.xla_shard_grad(w),
         }
@@ -262,18 +282,32 @@ impl Worker {
                 )
                 .to_vec())
             }
-            WorkerBackend::RustSparse | WorkerBackend::RustDense => Ok(dense_inner_epoch_ws(
-                &self.shard,
-                self.loss,
-                w_t,
-                z,
-                eta,
-                self.reg,
-                m,
-                &mut self.rng,
-                &mut self.workspace,
-            )
-            .to_vec()),
+            WorkerBackend::RustSparse | WorkerBackend::RustDense => Ok(match self.precision {
+                Precision::Exact => dense_inner_epoch_ws(
+                    &self.shard,
+                    self.loss,
+                    w_t,
+                    z,
+                    eta,
+                    self.reg,
+                    m,
+                    &mut self.rng,
+                    &mut self.workspace,
+                )
+                .to_vec(),
+                Precision::Fast => dense_inner_epoch_fast_ws(
+                    &self.shard,
+                    self.loss,
+                    w_t,
+                    z,
+                    eta,
+                    self.reg,
+                    m,
+                    &mut self.rng,
+                    &mut self.workspace,
+                )
+                .to_vec(),
+            }),
             WorkerBackend::Xla => self.xla_inner_epoch(w_t, z, eta, m),
         }
     }

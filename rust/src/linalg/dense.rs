@@ -1,28 +1,25 @@
 //! Dense vector kernels used on the coordinator hot path.
 //!
-//! Free functions over slices, written so LLVM auto-vectorizes them (plain
-//! indexed loops over equal-length slices, no iterator chains in the hot
-//! ones). These carry the master-side O(d) work: averaging local iterates,
-//! gradient reductions, objective evaluation.
+//! Free functions over slices. The arithmetic lives in
+//! [`crate::linalg::kernels`] (4-lane unrolled, in-order tails,
+//! reduction order preserved — bit-identical to the plain loops these
+//! wrapped historically); this module keeps the public names and the
+//! composite helpers. These carry the master-side O(d) work: averaging
+//! local iterates, gradient reductions, objective evaluation.
+
+use super::kernels;
 
 /// `y += a * x`.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
-    assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += a * x[i];
-    }
+    kernels::axpy(a, x, y);
 }
 
-/// Dot product.
+/// Dot product (one sequential accumulator — see
+/// [`crate::linalg::kernels::dot`] for the bit-exactness contract).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
-    assert_eq!(x.len(), y.len());
-    let mut s = 0.0;
-    for i in 0..x.len() {
-        s += x[i] * y[i];
-    }
-    s
+    kernels::dot(x, y)
 }
 
 /// Squared L2 norm.
@@ -46,9 +43,7 @@ pub fn nrm1(x: &[f64]) -> f64 {
 /// `x *= a` in place.
 #[inline]
 pub fn scale(x: &mut [f64], a: f64) {
-    for v in x.iter_mut() {
-        *v *= a;
-    }
+    kernels::scale(x, a);
 }
 
 /// Euclidean distance squared.

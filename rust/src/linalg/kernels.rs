@@ -1,0 +1,748 @@
+//! Vector-shaped hot-path kernels: the one place the crate's inner-loop
+//! arithmetic lives (DESIGN.md §14).
+//!
+//! Two tiers share this module:
+//!
+//! * **Exact tier** (the default): every kernel here is *provably
+//!   bit-identical* to the plain scalar loop it replaced — unrolling only
+//!   amortizes loop control, it never reassociates an f64 reduction (the
+//!   dot kernels keep ONE sequential accumulator) and never changes an
+//!   elementwise op sequence. The branch-free soft threshold is proven
+//!   equal to the branchy form for every input (see
+//!   [`soft_threshold_bf`]); the nonnegative prox deliberately keeps the
+//!   select form (`f64::max(-0.0, 0.0)` has an unspecified sign, the
+//!   select does not). These kernels are the *only* implementation — the
+//!   legacy entry points in [`super::dense`] / [`super::sparse`] /
+//!   [`super::prox`] forward here.
+//! * **Fast tier** (`--precision fast`): f32 elementwise passes for the
+//!   dense inner epoch and the blocked shard gradient, with f64 carry at
+//!   every epoch boundary. Deterministic (fixed accumulator shapes), but
+//!   not bit-comparable to the exact tier — pinned by tolerance instead
+//!   (`tests/precision_tiers.rs`).
+//!
+//! With `--features simd` on x86_64 the fused elementwise passes take an
+//! AVX path when the CPU has it (runtime-detected, scalar-unrolled
+//! fallback otherwise, zero new deps). AVX `mul/sub/add` are IEEE-exact
+//! and `vmaxpd/vminpd` return the **second** operand on equal-or-NaN, so
+//! the SIMD arms are bit-identical to their scalar forms — the `simd`
+//! feature is tier-neutral and safe in exact mode (pinned by the parity
+//! tests below, which CI runs with the feature on).
+
+/// 4-lane unrolled dense dot. ONE sequential accumulator — the adds
+/// happen in exactly the order of the plain `for` loop, so the result is
+/// bit-identical to the pre-kernel implementation for every input.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut s = 0.0;
+    let mut i = 0;
+    while i + 4 <= n {
+        // sequential: each add depends on the previous — this is loop
+        // control amortization, NOT a multi-accumulator reassociation
+        s += x[i] * y[i];
+        s += x[i + 1] * y[i + 1];
+        s += x[i + 2] * y[i + 2];
+        s += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    while i < n {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// 4-lane unrolled `y += a * x` with an in-order tail. Elementwise, so
+/// unrolling is trivially bit-identical.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        y[i] += a * x[i];
+        y[i + 1] += a * x[i + 1];
+        y[i + 2] += a * x[i + 2];
+        y[i + 3] += a * x[i + 3];
+        i += 4;
+    }
+    while i < n {
+        y[i] += a * x[i];
+        i += 1;
+    }
+}
+
+/// 4-lane unrolled `x *= a` (elementwise, bit-identical to the plain loop).
+#[inline]
+pub fn scale(x: &mut [f64], a: f64) {
+    let n = x.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        x[i] *= a;
+        x[i + 1] *= a;
+        x[i + 2] *= a;
+        x[i + 3] *= a;
+        i += 4;
+    }
+    while i < n {
+        x[i] *= a;
+        i += 1;
+    }
+}
+
+/// Sparse gather dot `Σ val[k] · w[idx[k]]`, 4-lane unrolled with ONE
+/// sequential accumulator (same op order as the zip loop it replaces).
+#[inline]
+pub fn gather_dot(idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let nnz = idx.len();
+    let mut s = 0.0;
+    let mut k = 0;
+    while k + 4 <= nnz {
+        s += val[k] * w[idx[k] as usize];
+        s += val[k + 1] * w[idx[k + 1] as usize];
+        s += val[k + 2] * w[idx[k + 2] as usize];
+        s += val[k + 3] * w[idx[k + 3] as usize];
+        k += 4;
+    }
+    while k < nnz {
+        s += val[k] * w[idx[k] as usize];
+        k += 1;
+    }
+    s
+}
+
+/// Sparse scatter `w[idx[k]] += a · val[k]`, 4-lane unrolled. Indices are
+/// strictly increasing (CSR invariant), so the four lanes never alias and
+/// the store order per coordinate is unchanged.
+#[inline]
+pub fn scatter_axpy(idx: &[u32], val: &[f64], a: f64, w: &mut [f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    let nnz = idx.len();
+    let mut k = 0;
+    while k + 4 <= nnz {
+        w[idx[k] as usize] += a * val[k];
+        w[idx[k + 1] as usize] += a * val[k + 1];
+        w[idx[k + 2] as usize] += a * val[k + 2];
+        w[idx[k + 3] as usize] += a * val[k + 3];
+        k += 4;
+    }
+    while k < nnz {
+        w[idx[k] as usize] += a * val[k];
+        k += 1;
+    }
+}
+
+/// Branch-free scalar soft threshold, bit-identical to the branchy form
+/// for every `v` when `t ≥ +0.0` (which `η·λ` always is):
+///
+/// ```text
+/// soft_threshold(v, t) = max(v − t, 0) + min(v + t, 0)
+/// ```
+///
+/// Proof sketch (round-to-nearest, gradual underflow):
+/// * `v > t`: `fl(v−t) > 0` (two distinct floats never subtract to zero —
+///   near-equal cases are exact by Sterbenz), so the max passes it
+///   through; `fl(v+t) > 0` so the min contributes `+0`, and `x + 0 = x`
+///   exactly for `x > 0`. Result `fl(v−t)`, the branchy answer.
+/// * `v < −t`: symmetric — result `fl(v+t)`.
+/// * `−t ≤ v ≤ t`: both terms are zeros. The min's argument `fl(v+t)`
+///   can only be `−0` when `v` and `t` are both `−0` (excluded by
+///   `t ≥ +0`), so the min term is `+0`; `±0 + (+0) = +0` in
+///   round-to-nearest, matching the branchy `0.0` — even when the max
+///   term is an (unspecified-sign) zero.
+/// * `v = NaN`: both comparisons in the branchy form are false → `0.0`;
+///   here `f64::max(NaN, 0.0) = 0.0` and `f64::min(NaN, 0.0) = 0.0` →
+///   `+0`. Identical.
+#[inline(always)]
+pub fn soft_threshold_bf(v: f64, t: f64) -> f64 {
+    debug_assert!(!(t < 0.0), "threshold must be non-negative");
+    (v - t).max(0.0) + (v + t).min(0.0)
+}
+
+/// Fused affine pass `u[j] = decay·u[j] − eta·z[j]` (the off-support dense
+/// inner-epoch update for block-separable regularizers). Elementwise.
+#[inline]
+pub fn fused_affine(u: &mut [f64], z: &[f64], decay: f64, eta: f64) {
+    assert_eq!(u.len(), z.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx") {
+        // Safety: AVX presence just checked.
+        unsafe { avx::fused_affine(u, z, decay, eta) };
+        return;
+    }
+    fused_affine_scalar(u, z, decay, eta);
+}
+
+#[inline]
+fn fused_affine_scalar(u: &mut [f64], z: &[f64], decay: f64, eta: f64) {
+    let n = u.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        u[j] = decay * u[j] - eta * z[j];
+        u[j + 1] = decay * u[j + 1] - eta * z[j + 1];
+        u[j + 2] = decay * u[j + 2] - eta * z[j + 2];
+        u[j + 3] = decay * u[j + 3] - eta * z[j + 3];
+        j += 4;
+    }
+    while j < n {
+        u[j] = decay * u[j] - eta * z[j];
+        j += 1;
+    }
+}
+
+/// Fused affine + soft-threshold pass:
+/// `u[j] = soft_threshold(decay·u[j] − eta·z[j], thr)` — the dense inner
+/// epoch's whole-vector sweep for L1/elastic-net, branch-free so it
+/// autovectorizes (and takes the AVX path under `--features simd`).
+#[inline]
+pub fn fused_affine_soft(u: &mut [f64], z: &[f64], decay: f64, eta: f64, thr: f64) {
+    assert_eq!(u.len(), z.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx") {
+        // Safety: AVX presence just checked.
+        unsafe { avx::fused_affine_soft(u, z, decay, eta, thr) };
+        return;
+    }
+    fused_affine_soft_scalar(u, z, decay, eta, thr);
+}
+
+#[inline]
+fn fused_affine_soft_scalar(u: &mut [f64], z: &[f64], decay: f64, eta: f64, thr: f64) {
+    let n = u.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        u[j] = soft_threshold_bf(decay * u[j] - eta * z[j], thr);
+        u[j + 1] = soft_threshold_bf(decay * u[j + 1] - eta * z[j + 1], thr);
+        u[j + 2] = soft_threshold_bf(decay * u[j + 2] - eta * z[j + 2], thr);
+        u[j + 3] = soft_threshold_bf(decay * u[j + 3] - eta * z[j + 3], thr);
+        j += 4;
+    }
+    while j < n {
+        u[j] = soft_threshold_bf(decay * u[j] - eta * z[j], thr);
+        j += 1;
+    }
+}
+
+/// Fused affine + nonnegative-prox pass:
+/// `u[j] = max(decay·u[j] − eta·z[j] − thr, 0)` via the select form (the
+/// branchy `if s > 0` — `f64::max(−0.0, +0.0)` has an unspecified sign,
+/// the select always yields `+0.0`; the AVX arm may use `vmaxpd` because
+/// the intrinsic returns its *second* operand on equal-or-NaN, which
+/// matches the select exactly).
+#[inline]
+pub fn fused_affine_nonneg(u: &mut [f64], z: &[f64], decay: f64, eta: f64, thr: f64) {
+    assert_eq!(u.len(), z.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx") {
+        // Safety: AVX presence just checked.
+        unsafe { avx::fused_affine_nonneg(u, z, decay, eta, thr) };
+        return;
+    }
+    fused_affine_nonneg_scalar(u, z, decay, eta, thr);
+}
+
+#[inline]
+fn fused_affine_nonneg_scalar(u: &mut [f64], z: &[f64], decay: f64, eta: f64, thr: f64) {
+    #[inline(always)]
+    fn step(u: f64, z: f64, decay: f64, eta: f64, thr: f64) -> f64 {
+        let s = (decay * u - eta * z) - thr;
+        if s > 0.0 {
+            s
+        } else {
+            0.0
+        }
+    }
+    let n = u.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        u[j] = step(u[j], z[j], decay, eta, thr);
+        u[j + 1] = step(u[j + 1], z[j + 1], decay, eta, thr);
+        u[j + 2] = step(u[j + 2], z[j + 2], decay, eta, thr);
+        u[j + 3] = step(u[j + 3], z[j + 3], decay, eta, thr);
+        j += 4;
+    }
+    while j < n {
+        u[j] = step(u[j], z[j], decay, eta, thr);
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast tier (f32): deterministic, tolerance-pinned — never on the default
+// path. f64 carry happens at the callers' epoch boundaries.
+// ---------------------------------------------------------------------------
+
+/// f32 scalar soft threshold (branch-free; the same proof as
+/// [`soft_threshold_bf`] holds verbatim in f32).
+#[inline(always)]
+pub fn soft_threshold_bf_f32(v: f32, t: f32) -> f32 {
+    (v - t).max(0.0) + (v + t).min(0.0)
+}
+
+/// Fast-tier fused affine + soft-threshold sweep over the f32 iterate.
+#[inline]
+pub fn fused_affine_soft_f32(u: &mut [f32], z: &[f32], decay: f32, eta: f32, thr: f32) {
+    assert_eq!(u.len(), z.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx") {
+        // Safety: AVX presence just checked.
+        unsafe { avx::fused_affine_soft_f32(u, z, decay, eta, thr) };
+        return;
+    }
+    let n = u.len();
+    let mut j = 0;
+    while j + 8 <= n {
+        let mut lane = 0;
+        while lane < 8 {
+            u[j + lane] = soft_threshold_bf_f32(decay * u[j + lane] - eta * z[j + lane], thr);
+            lane += 1;
+        }
+        j += 8;
+    }
+    while j < n {
+        u[j] = soft_threshold_bf_f32(decay * u[j] - eta * z[j], thr);
+        j += 1;
+    }
+}
+
+/// Fast-tier fused affine + nonnegative-prox sweep (select form).
+#[inline]
+pub fn fused_affine_nonneg_f32(u: &mut [f32], z: &[f32], decay: f32, eta: f32, thr: f32) {
+    assert_eq!(u.len(), z.len());
+    for j in 0..u.len() {
+        let s = (decay * u[j] - eta * z[j]) - thr;
+        u[j] = if s > 0.0 { s } else { 0.0 };
+    }
+}
+
+/// Fast-tier support dot: gather from the f32 iterate but multiply and
+/// accumulate in f64 (each `w[j]` promotes exactly), so the per-step
+/// variance-reduction coefficient keeps f64 accuracy.
+#[inline]
+pub fn gather_dot_f32w(idx: &[u32], val: &[f64], w: &[f32]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let mut s = 0.0f64;
+    for (&j, &v) in idx.iter().zip(val.iter()) {
+        s += v * w[j as usize] as f64;
+    }
+    s
+}
+
+/// Fast-tier f32 row dot for the blocked gradient: 4 independent f32
+/// accumulators with a FIXED combine order `(s0+s1)+(s2+s3)` and an
+/// in-order tail into `s0` — deterministic (the shape never depends on
+/// thread count or data), just not comparable to the exact tier.
+#[inline]
+pub fn row_dot_f32(idx: &[u32], val: &[f64], w: &[f32]) -> f32 {
+    debug_assert_eq!(idx.len(), val.len());
+    let nnz = idx.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut k = 0;
+    while k + 4 <= nnz {
+        s0 += val[k] as f32 * w[idx[k] as usize];
+        s1 += val[k + 1] as f32 * w[idx[k + 1] as usize];
+        s2 += val[k + 2] as f32 * w[idx[k + 2] as usize];
+        s3 += val[k + 3] as f32 * w[idx[k + 3] as usize];
+        k += 4;
+    }
+    while k < nnz {
+        s0 += val[k] as f32 * w[idx[k] as usize];
+        k += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// Fast-tier f32 scatter `w[idx[k]] += a · val[k]`.
+#[inline]
+pub fn scatter_axpy_f32(idx: &[u32], val: &[f64], a: f32, w: &mut [f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&j, &v) in idx.iter().zip(val.iter()) {
+        w[j as usize] += a * v as f32;
+    }
+}
+
+/// The explicitly-vectorized arms (`--features simd`, x86_64 only).
+///
+/// Only elementwise ops (`mul/sub/add/max/min` — never FMA, never a
+/// horizontal reduction), so every lane computes exactly the scalar op
+/// sequence: bit-identical by IEEE 754, tier-neutral, exact-mode-safe.
+/// `vmaxpd/vminpd` return the second operand when the comparison is false
+/// (equal values, NaN) — the constant `0.0`/broadcast operand is always
+/// passed second so zero-sign and NaN handling match the scalar forms.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn fused_affine(u: &mut [f64], z: &[f64], decay: f64, eta: f64) {
+        let n = u.len();
+        let dv = _mm256_set1_pd(decay);
+        let ev = _mm256_set1_pd(eta);
+        let mut j = 0;
+        while j + 4 <= n {
+            let uv = _mm256_loadu_pd(u.as_ptr().add(j));
+            let zv = _mm256_loadu_pd(z.as_ptr().add(j));
+            let s = _mm256_sub_pd(_mm256_mul_pd(dv, uv), _mm256_mul_pd(ev, zv));
+            _mm256_storeu_pd(u.as_mut_ptr().add(j), s);
+            j += 4;
+        }
+        while j < n {
+            u[j] = decay * u[j] - eta * z[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn fused_affine_soft(
+        u: &mut [f64],
+        z: &[f64],
+        decay: f64,
+        eta: f64,
+        thr: f64,
+    ) {
+        let n = u.len();
+        let dv = _mm256_set1_pd(decay);
+        let ev = _mm256_set1_pd(eta);
+        let tv = _mm256_set1_pd(thr);
+        let zero = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 <= n {
+            let uv = _mm256_loadu_pd(u.as_ptr().add(j));
+            let zv = _mm256_loadu_pd(z.as_ptr().add(j));
+            let s = _mm256_sub_pd(_mm256_mul_pd(dv, uv), _mm256_mul_pd(ev, zv));
+            // max(s - t, 0) + min(s + t, 0); zero passed second (see above)
+            let hi = _mm256_max_pd(_mm256_sub_pd(s, tv), zero);
+            let lo = _mm256_min_pd(_mm256_add_pd(s, tv), zero);
+            _mm256_storeu_pd(u.as_mut_ptr().add(j), _mm256_add_pd(hi, lo));
+            j += 4;
+        }
+        while j < n {
+            u[j] = super::soft_threshold_bf(decay * u[j] - eta * z[j], thr);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn fused_affine_nonneg(
+        u: &mut [f64],
+        z: &[f64],
+        decay: f64,
+        eta: f64,
+        thr: f64,
+    ) {
+        let n = u.len();
+        let dv = _mm256_set1_pd(decay);
+        let ev = _mm256_set1_pd(eta);
+        let tv = _mm256_set1_pd(thr);
+        let zero = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 <= n {
+            let uv = _mm256_loadu_pd(u.as_ptr().add(j));
+            let zv = _mm256_loadu_pd(z.as_ptr().add(j));
+            let s = _mm256_sub_pd(_mm256_sub_pd(_mm256_mul_pd(dv, uv), _mm256_mul_pd(ev, zv)), tv);
+            // vmaxpd(s, +0) == the select form: second operand on ties/NaN
+            _mm256_storeu_pd(u.as_mut_ptr().add(j), _mm256_max_pd(s, zero));
+            j += 4;
+        }
+        while j < n {
+            let s = (decay * u[j] - eta * z[j]) - thr;
+            u[j] = if s > 0.0 { s } else { 0.0 };
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn fused_affine_soft_f32(
+        u: &mut [f32],
+        z: &[f32],
+        decay: f32,
+        eta: f32,
+        thr: f32,
+    ) {
+        let n = u.len();
+        let dv = _mm256_set1_ps(decay);
+        let ev = _mm256_set1_ps(eta);
+        let tv = _mm256_set1_ps(thr);
+        let zero = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let uv = _mm256_loadu_ps(u.as_ptr().add(j));
+            let zv = _mm256_loadu_ps(z.as_ptr().add(j));
+            let s = _mm256_sub_ps(_mm256_mul_ps(dv, uv), _mm256_mul_ps(ev, zv));
+            let hi = _mm256_max_ps(_mm256_sub_ps(s, tv), zero);
+            let lo = _mm256_min_ps(_mm256_add_ps(s, tv), zero);
+            _mm256_storeu_ps(u.as_mut_ptr().add(j), _mm256_add_ps(hi, lo));
+            j += 8;
+        }
+        while j < n {
+            u[j] = super::soft_threshold_bf_f32(decay * u[j] - eta * z[j], thr);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// The pre-kernel reference loops, kept verbatim for bit-parity tests.
+    mod reference {
+        pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+            let mut s = 0.0;
+            for i in 0..x.len() {
+                s += x[i] * y[i];
+            }
+            s
+        }
+        pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+            for i in 0..x.len() {
+                y[i] += a * x[i];
+            }
+        }
+        pub fn gather_dot(idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+            let mut s = 0.0;
+            for (&j, &v) in idx.iter().zip(val.iter()) {
+                s += v * w[j as usize];
+            }
+            s
+        }
+        pub fn soft_threshold(v: f64, t: f64) -> f64 {
+            if v > t {
+                v - t
+            } else if v < -t {
+                v + t
+            } else {
+                0.0
+            }
+        }
+    }
+
+    fn adversarial_scalars() -> Vec<f64> {
+        let mut vs = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            -0.5,
+            1e-300,
+            -1e-300,
+            f64::MIN_POSITIVE,
+            -f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            -5e-324,
+            f64::MAX,
+            -f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            0.1,
+            -0.1,
+            0.1 + 1e-17,
+        ];
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let b = (rng.below(1 << 16) as f64 / 32768.0) - 1.0;
+            vs.push(b * 10f64.powi(rng.below(40) as i32 - 20));
+        }
+        vs
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| (rng.below(1 << 16) as f64 / 32768.0) - 1.0)
+            .collect()
+    }
+
+    #[test]
+    fn dot_bitwise_matches_reference_every_length() {
+        let mut rng = Rng::new(1);
+        for n in 0..40 {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            assert_eq!(dot(&x, &y).to_bits(), reference::dot(&x, &y).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_scale_bitwise_match_reference_every_length() {
+        let mut rng = Rng::new(2);
+        for n in 0..40 {
+            let x = rand_vec(&mut rng, n);
+            let y0 = rand_vec(&mut rng, n);
+            let mut got = y0.clone();
+            axpy(0.37, &x, &mut got);
+            let mut want = y0.clone();
+            reference::axpy(0.37, &x, &mut want);
+            assert_eq!(got, want, "axpy n={n}");
+            let mut got = y0.clone();
+            scale(&mut got, -1.73);
+            let want: Vec<f64> = y0.iter().map(|v| v * -1.73).collect();
+            assert_eq!(got, want, "scale n={n}");
+        }
+    }
+
+    #[test]
+    fn gather_scatter_bitwise_match_reference() {
+        let mut rng = Rng::new(3);
+        for nnz in 0..20 {
+            let d = 64;
+            let mut idx: Vec<u32> = (0..d as u32).collect();
+            // deterministic distinct increasing subset
+            let mut chosen = Vec::new();
+            for _ in 0..nnz {
+                let pick = rng.below(idx.len());
+                chosen.push(idx.remove(pick));
+            }
+            chosen.sort_unstable();
+            let val = rand_vec(&mut rng, nnz);
+            let w = rand_vec(&mut rng, d);
+            assert_eq!(
+                gather_dot(&chosen, &val, &w).to_bits(),
+                reference::gather_dot(&chosen, &val, &w).to_bits(),
+                "nnz={nnz}"
+            );
+            let mut got = w.clone();
+            scatter_axpy(&chosen, &val, 0.81, &mut got);
+            let mut want = w.clone();
+            for (&j, &v) in chosen.iter().zip(val.iter()) {
+                want[j as usize] += 0.81 * v;
+            }
+            assert_eq!(got, want, "scatter nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn branch_free_soft_threshold_bitwise_matches_branchy() {
+        let vs = adversarial_scalars();
+        let ts = [0.0, 1e-300, 5e-324, 0.1, 1.0, 1e10, f64::INFINITY];
+        for &v in &vs {
+            for &t in &ts {
+                let got = soft_threshold_bf(v, t);
+                let want = reference::soft_threshold(v, t);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "v={v:e} t={t:e}: bf {got:e} vs branchy {want:e}"
+                );
+                // the exact boundary v = ±t as well
+                for &s in &[t, -t] {
+                    let got = soft_threshold_bf(s, t);
+                    let want = reference::soft_threshold(s, t);
+                    assert_eq!(got.to_bits(), want.to_bits(), "boundary v={s:e} t={t:e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_passes_bitwise_match_per_coordinate_forms() {
+        let mut rng = Rng::new(4);
+        let (decay, eta, thr) = (0.9991, 0.03, 2.5e-4);
+        for n in [0usize, 1, 3, 4, 7, 8, 16, 33, 100] {
+            let u0 = rand_vec(&mut rng, n);
+            let z = rand_vec(&mut rng, n);
+
+            let mut got = u0.clone();
+            fused_affine(&mut got, &z, decay, eta);
+            let want: Vec<f64> = (0..n).map(|j| decay * u0[j] - eta * z[j]).collect();
+            assert_eq!(got, want, "affine n={n}");
+
+            let mut got = u0.clone();
+            fused_affine_soft(&mut got, &z, decay, eta, thr);
+            let want: Vec<f64> = (0..n)
+                .map(|j| reference::soft_threshold(decay * u0[j] - eta * z[j], thr))
+                .collect();
+            for j in 0..n {
+                assert_eq!(got[j].to_bits(), want[j].to_bits(), "soft n={n} j={j}");
+            }
+
+            let mut got = u0.clone();
+            fused_affine_nonneg(&mut got, &z, decay, eta, thr);
+            let want: Vec<f64> = (0..n)
+                .map(|j| {
+                    let s = (decay * u0[j] - eta * z[j]) - thr;
+                    if s > 0.0 {
+                        s
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            for j in 0..n {
+                assert_eq!(got[j].to_bits(), want[j].to_bits(), "nonneg n={n} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_soft_handles_zero_signs_and_nan_lanes() {
+        // every lane position gets a sign-of-zero / NaN / boundary case so
+        // the 4-wide (and AVX) arms cover them in-lane, not just in tails
+        let u0 = vec![0.0, -0.0, f64::NAN, 1.0, -1.0, 2.5e-4, -2.5e-4, 0.0];
+        let z = vec![0.0; 8];
+        let mut got = u0.clone();
+        fused_affine_soft(&mut got, &z, 1.0, 0.0, 2.5e-4);
+        for j in 0..8 {
+            let want = reference::soft_threshold(1.0 * u0[j] - 0.0 * z[j], 2.5e-4);
+            assert_eq!(got[j].to_bits(), want.to_bits(), "lane {j}");
+        }
+    }
+
+    #[test]
+    fn f32_soft_threshold_matches_branchy_f32() {
+        let branchy = |v: f32, t: f32| -> f32 {
+            if v > t {
+                v - t
+            } else if v < -t {
+                v + t
+            } else {
+                0.0
+            }
+        };
+        let vs = [0.0f32, -0.0, 1.0, -1.0, 0.25, -0.25, f32::NAN, f32::INFINITY, 1e-40];
+        for &v in &vs {
+            for &t in &[0.0f32, 0.25, 1.0] {
+                assert_eq!(
+                    soft_threshold_bf_f32(v, t).to_bits(),
+                    branchy(v, t).to_bits(),
+                    "v={v:e} t={t:e}"
+                );
+            }
+        }
+        let mut rng = Rng::new(5);
+        let u0: Vec<f32> = (0..37).map(|_| (rng.below(1 << 16) as f32 / 32768.0) - 1.0).collect();
+        let z: Vec<f32> = (0..37).map(|_| (rng.below(1 << 16) as f32 / 32768.0) - 1.0).collect();
+        let mut got = u0.clone();
+        fused_affine_soft_f32(&mut got, &z, 0.999, 0.03, 1e-3);
+        for j in 0..37 {
+            let want = branchy(0.999f32 * u0[j] - 0.03f32 * z[j], 1e-3);
+            assert_eq!(got[j].to_bits(), want.to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn fast_dots_are_deterministic_and_close() {
+        let mut rng = Rng::new(6);
+        let d = 50;
+        let idx: Vec<u32> = (0..d as u32).step_by(3).collect();
+        let val = rand_vec(&mut rng, idx.len());
+        let w64 = rand_vec(&mut rng, d);
+        let w32: Vec<f32> = w64.iter().map(|&v| v as f32).collect();
+        let exact = gather_dot(&idx, &val, &w64);
+        let promoted = gather_dot_f32w(&idx, &val, &w32);
+        let fast = row_dot_f32(&idx, &val, &w32) as f64;
+        assert!((promoted - exact).abs() <= 1e-6 * (1.0 + exact.abs()));
+        assert!((fast - exact).abs() <= 1e-5 * (1.0 + exact.abs()));
+        // determinism: identical bits on re-run
+        assert_eq!(row_dot_f32(&idx, &val, &w32), row_dot_f32(&idx, &val, &w32));
+        let mut a = w32.clone();
+        let mut b = w32.clone();
+        scatter_axpy_f32(&idx, &val, 0.5, &mut a);
+        scatter_axpy_f32(&idx, &val, 0.5, &mut b);
+        assert_eq!(a, b);
+    }
+}

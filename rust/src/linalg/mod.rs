@@ -1,11 +1,19 @@
 //! Sparse / dense linear-algebra substrate.
 //!
-//! Everything the engine touches is `f64` — the rust reference/production
+//! Everything on the default path is `f64` — the rust reference/production
 //! path keeps full precision so benchmark suboptimality gaps down to 1e-12
-//! are meaningful; conversion to `f32` happens only at the PJRT artifact
-//! boundary ([`crate::runtime`]).
+//! are meaningful. `f32` appears in exactly two opt-in places: the PJRT
+//! artifact boundary ([`crate::runtime`]) and the `--precision fast` tier's
+//! inner-epoch passes ([`kernels`], DESIGN.md §14); the default
+//! `--precision exact` tier never touches it.
+//!
+//! The hot-loop arithmetic itself lives in [`kernels`]: unrolled,
+//! reduction-order-preserving implementations that [`dense`], [`sparse`]
+//! and [`prox`] forward to (bit-identical to the historical plain loops —
+//! the parity proofs are in the kernel module's tests).
 
 pub mod dense;
+pub mod kernels;
 pub mod prox;
 pub mod sparse;
 

@@ -21,18 +21,18 @@
 //! dispatch (hoisted branch) instead of recomputing `η·λ` per coordinate.
 
 /// Scalar soft threshold: `prox_{t|.|}(v) = sign(v) * max(|v| - t, 0)`.
+///
+/// Branch-free (`max(v−t, 0) + min(v+t, 0)`), proven bit-identical to the
+/// historical branchy form for every input with `t ≥ 0` — see
+/// [`crate::linalg::kernels::soft_threshold_bf`] for the proof and the
+/// bit-parity test.
 #[inline(always)]
 pub fn soft_threshold(v: f64, t: f64) -> f64 {
-    if v > t {
-        v - t
-    } else if v < -t {
-        v + t
-    } else {
-        0.0
-    }
+    crate::linalg::kernels::soft_threshold_bf(v, t)
 }
 
-/// In-place vector soft threshold.
+/// In-place vector soft threshold (branch-free per coordinate, so the
+/// loop autovectorizes).
 #[inline]
 pub fn soft_threshold_vec(v: &mut [f64], t: f64) {
     for x in v.iter_mut() {
@@ -114,6 +114,23 @@ impl ScalarProx {
         match self {
             ScalarProx::Soft { thr } => soft_threshold(v, thr),
             ScalarProx::NonnegSoft { thr } => nonneg_soft_threshold(v, thr),
+        }
+    }
+
+    /// Whole-vector fused pass `u[j] = apply(decay·u[j] − eta·z[j])`: one
+    /// enum dispatch per sweep instead of per coordinate, forwarding to
+    /// the vector-shaped kernels ([`crate::linalg::kernels`]) — same
+    /// per-coordinate op order, hence bit-identical to looping
+    /// [`Self::apply`] over the vector.
+    #[inline]
+    pub fn fused_affine_pass(self, u: &mut [f64], z: &[f64], decay: f64, eta: f64) {
+        match self {
+            ScalarProx::Soft { thr } => {
+                crate::linalg::kernels::fused_affine_soft(u, z, decay, eta, thr)
+            }
+            ScalarProx::NonnegSoft { thr } => {
+                crate::linalg::kernels::fused_affine_nonneg(u, z, decay, eta, thr)
+            }
         }
     }
 }

@@ -24,24 +24,20 @@ impl<'a> SparseRow<'a> {
 
     /// Sparse dot with a dense vector.
     ///
-    /// Zip-based iteration over the parallel `(idx, val)` slices lets LLVM
-    /// drop the per-element bounds checks on both (only the gather into
-    /// `w` keeps one); the accumulation order is unchanged.
+    /// Forwards to [`crate::linalg::kernels::gather_dot`]: 4-lane unrolled
+    /// with ONE sequential accumulator, so the accumulation order (hence
+    /// every bit of the result) matches the historical zip loop.
     #[inline]
     pub fn dot(&self, w: &[f64]) -> f64 {
-        let mut s = 0.0;
-        for (&j, &v) in self.idx.iter().zip(self.val.iter()) {
-            s += v * w[j as usize];
-        }
-        s
+        crate::linalg::kernels::gather_dot(self.idx, self.val, w)
     }
 
-    /// `w[idx] += a * val` scatter-add (same zip idiom as [`Self::dot`]).
+    /// `w[idx] += a * val` scatter-add
+    /// ([`crate::linalg::kernels::scatter_axpy`], same per-coordinate op
+    /// order as the historical zip loop).
     #[inline]
     pub fn axpy_into(&self, a: f64, w: &mut [f64]) {
-        for (&j, &v) in self.idx.iter().zip(self.val.iter()) {
-            w[j as usize] += a * v;
-        }
+        crate::linalg::kernels::scatter_axpy(self.idx, self.val, a, w);
     }
 
     /// Squared L2 norm of the row.

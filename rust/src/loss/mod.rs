@@ -107,6 +107,29 @@ impl SmoothLoss {
         }
     }
 
+    /// f32 derivative for the fast tier (`--precision fast`): the
+    /// [`Self::hprime`] formulas evaluated in f32. Deterministic for a
+    /// fixed build; never on the default exact path (DESIGN.md §14).
+    #[inline(always)]
+    pub fn hprime_f32(self, a: f32, y: f32) -> f32 {
+        match self {
+            SmoothLoss::Logistic => -y / (1.0 + (y * a).exp()),
+            SmoothLoss::Squared => a - y,
+            SmoothLoss::Huber { delta } => {
+                let delta = delta as f32;
+                (a - y).clamp(-delta, delta)
+            }
+            SmoothLoss::SquaredHinge => {
+                let m = 1.0 - y * a;
+                if m > 0.0 {
+                    -y * m
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
     /// Upper bound on `h''` (1/4 for logistic, 1 for the rest) — enters
     /// the smoothness constant and scales the partition engine's
     /// curvature sketches.
@@ -632,11 +655,113 @@ pub fn shard_grad_sum_blocked(
 }
 
 /// Accumulate rows `[lo, hi)` of the shard gradient into `acc` (row order).
+///
+/// Phase-split for vector shape: all the row dots (gathers) run first
+/// into a stack coefficient array, then all the scatters run in the same
+/// row order — each row's coefficient and its accumulation position in
+/// `acc` are exactly the interleaved loop's, so the output is
+/// bit-identical (the fixed [`GRAD_BLOCK_ROWS`] reduction order is
+/// untouched). Callers never pass more than one block.
 fn grad_block(ds: &Dataset, loss: Loss, w: &[f64], lo: usize, hi: usize, acc: &mut [f64]) {
-    for i in lo..hi {
-        let row = ds.x.row(i);
-        let c = loss.hprime(row.dot(w), ds.y[i]);
-        row.axpy_into(c, acc);
+    debug_assert!(hi - lo <= GRAD_BLOCK_ROWS);
+    let mut coeffs = [0.0f64; GRAD_BLOCK_ROWS];
+    let rows = hi - lo;
+    for (k, c) in coeffs[..rows].iter_mut().enumerate() {
+        let row = ds.x.row(lo + k);
+        *c = loss.hprime(row.dot(w), ds.y[lo + k]);
+    }
+    for (k, &c) in coeffs[..rows].iter().enumerate() {
+        ds.x.row(lo + k).axpy_into(c, acc);
+    }
+}
+
+/// Fast-tier (`--precision fast`) sibling of [`shard_grad_sum_blocked`]:
+/// per-block row dots and scatters in f32 over a demoted `w`, f32 block
+/// partials merged (promoted per element) into the f64 accumulator in the
+/// SAME fixed ascending-block order. The reduction tree still depends
+/// only on `n`, so every thread count is bit-identical *within* the fast
+/// tier; vs the exact tier the contract is tolerance, not bits
+/// (DESIGN.md §14).
+pub fn shard_grad_sum_blocked_f32(
+    ds: &Dataset,
+    loss: Loss,
+    w: &[f32],
+    g: &mut [f64],
+    threads: usize,
+    scratch: &mut Vec<f32>,
+) {
+    let n = ds.n();
+    let d = ds.d();
+    assert_eq!(w.len(), d);
+    assert_eq!(g.len(), d);
+    crate::linalg::zero(g);
+    if n == 0 || d == 0 {
+        return;
+    }
+    let merge = |g: &mut [f64], p: &[f32]| {
+        for (gv, &pv) in g.iter_mut().zip(p.iter()) {
+            *gv += pv as f64;
+        }
+    };
+    let nb = n.div_ceil(GRAD_BLOCK_ROWS);
+    let block_range = |blk: usize| (blk * GRAD_BLOCK_ROWS, ((blk + 1) * GRAD_BLOCK_ROWS).min(n));
+    let t = threads.max(1).min(nb);
+    if t == 1 {
+        // serial (covers nb == 1): same tree, one reusable f32 partial
+        if scratch.len() < d {
+            scratch.resize(d, 0.0);
+        }
+        for blk in 0..nb {
+            let (lo, hi) = block_range(blk);
+            let partial = &mut scratch[..d];
+            partial.fill(0.0);
+            grad_block_f32(ds, loss, w, lo, hi, partial);
+            merge(g, partial);
+        }
+        return;
+    }
+    let run = (nb / t).clamp(1, GRAD_BLOCKS_PER_THREAD);
+    let wave_blocks = t * run;
+    if scratch.len() < wave_blocks * d {
+        scratch.resize(wave_blocks * d, 0.0);
+    }
+    let mut b = 0usize;
+    while b < nb {
+        let wave = wave_blocks.min(nb - b);
+        std::thread::scope(|s| {
+            for (ti, tchunk) in scratch[..wave * d].chunks_mut(run * d).enumerate() {
+                let b0 = b + ti * run;
+                s.spawn(move || {
+                    for (bi, partial) in tchunk.chunks_mut(d).enumerate() {
+                        let (lo, hi) = block_range(b0 + bi);
+                        partial.fill(0.0);
+                        grad_block_f32(ds, loss, w, lo, hi, partial);
+                    }
+                });
+            }
+        });
+        // merge in ascending block order — the fixed part of the tree
+        for partial in scratch[..wave * d].chunks(d) {
+            merge(g, partial);
+        }
+        b += wave;
+    }
+}
+
+/// f32 block accumulation (fast tier): same phase split as [`grad_block`],
+/// fixed 4-accumulator row dots ([`crate::linalg::kernels::row_dot_f32`]).
+fn grad_block_f32(ds: &Dataset, loss: Loss, w: &[f32], lo: usize, hi: usize, acc: &mut [f32]) {
+    debug_assert!(hi - lo <= GRAD_BLOCK_ROWS);
+    let mut coeffs = [0.0f32; GRAD_BLOCK_ROWS];
+    let rows = hi - lo;
+    for (k, c) in coeffs[..rows].iter_mut().enumerate() {
+        let row = ds.x.row(lo + k);
+        let a = crate::linalg::kernels::row_dot_f32(row.idx, row.val, w);
+        *c = loss.hprime_f32(a, ds.y[lo + k] as f32);
+    }
+    for (k, &c) in coeffs[..rows].iter().enumerate() {
+        let row = ds.x.row(lo + k);
+        crate::linalg::kernels::scatter_axpy_f32(row.idx, row.val, c, acc);
     }
 }
 
@@ -885,5 +1010,80 @@ mod tests {
         let mut zt = vec![0.0; ds.d()];
         o.data_grad_into_threaded(&w, &mut zt, 4, &mut scratch);
         assert_eq!(z, zt);
+    }
+
+    /// The plain serial accumulation the seed used — the semantic
+    /// reference for the boundary-shape tests below.
+    fn serial_row_sum(ds: &Dataset, loss: Loss, w: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; ds.d()];
+        for i in 0..ds.n() {
+            let row = ds.x.row(i);
+            let c = loss.hprime(row.dot(w), ds.y[i]);
+            row.axpy_into(c, &mut g);
+        }
+        g
+    }
+
+    #[test]
+    fn blocked_grad_boundary_more_threads_than_blocks() {
+        // n = 100 << GRAD_BLOCK_ROWS: a single block, so ANY thread count
+        // (including 64 > block count) must be bit-identical to the plain
+        // serial row sum
+        let ds = synth::tiny(61).with_n(100).generate();
+        let o = obj(&ds, Loss::Logistic);
+        let w = vec![0.03; ds.d()];
+        let want = serial_row_sum(&ds, Loss::Logistic, &w);
+        let mut scratch = Vec::new();
+        for t in [1usize, 2, 64] {
+            let mut g = vec![0.0; ds.d()];
+            o.shard_grad_sum_into(&w, &mut g, t, &mut scratch);
+            assert_eq!(want, g, "threads={t} diverged on single-block n=100");
+        }
+    }
+
+    #[test]
+    fn blocked_grad_boundary_exact_block_multiple() {
+        // n an exact multiple of GRAD_BLOCK_ROWS (no ragged tail block):
+        // every thread count pins the serial blocked reduction bit-for-bit
+        let ds = synth::tiny(62).with_n(2 * GRAD_BLOCK_ROWS).generate();
+        let o = obj(&ds, Loss::Logistic);
+        let w = vec![0.02; ds.d()];
+        let mut scratch = Vec::new();
+        let mut serial = vec![0.0; ds.d()];
+        o.shard_grad_sum_into(&w, &mut serial, 1, &mut scratch);
+        for t in [2usize, 7, 64] {
+            let mut par = vec![0.0; ds.d()];
+            o.shard_grad_sum_into(&w, &mut par, t, &mut scratch);
+            assert_eq!(serial, par, "threads={t} diverged on n=2*GRAD_BLOCK_ROWS");
+        }
+    }
+
+    #[test]
+    fn fast_blocked_grad_is_thread_invariant_and_close_to_exact() {
+        let ds = synth::tiny(63).with_n(3 * GRAD_BLOCK_ROWS / 2).generate();
+        let o = obj(&ds, Loss::Logistic);
+        let w = vec![0.03; ds.d()];
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let mut scratch32 = Vec::new();
+        let mut serial = vec![0.0; ds.d()];
+        shard_grad_sum_blocked_f32(&ds, Loss::Logistic, &w32, &mut serial, 1, &mut scratch32);
+        // deterministic at every thread count (the fast tier keeps the
+        // fixed ascending-block reduction order)
+        for t in [2usize, 7, 64] {
+            let mut par = vec![0.0; ds.d()];
+            shard_grad_sum_blocked_f32(&ds, Loss::Logistic, &w32, &mut par, t, &mut scratch32);
+            assert_eq!(serial, par, "fast tier threads={t} diverged");
+        }
+        // and tolerance-close to the exact tier
+        let exact = o.shard_grad_sum(&w);
+        let scale = exact.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for j in 0..ds.d() {
+            assert!(
+                (serial[j] - exact[j]).abs() <= 1e-4 * scale,
+                "coord {j}: fast {} vs exact {}",
+                serial[j],
+                exact[j]
+            );
+        }
     }
 }

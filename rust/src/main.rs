@@ -35,7 +35,9 @@ use std::time::Duration;
 
 use pscope::cli::{flag, switch, Args, Command, FlagSpec};
 use pscope::config::sweep::SweepManifest;
-use pscope::config::{Model, PscopeConfig, RegKind, RunMode, TransportKind, WireMode, WorkerBackend};
+use pscope::config::{
+    Model, Precision, PscopeConfig, RegKind, RunMode, TransportKind, WireMode, WorkerBackend,
+};
 use pscope::coordinator::checkpoint::{self, Checkpoint};
 use pscope::coordinator::elastic::ElasticOpts;
 use pscope::coordinator::remote::{self, MasterEndpoint, RunSpec, WorkerOpts};
@@ -110,6 +112,11 @@ fn train_flags() -> Vec<FlagSpec> {
             "frame encoding: dense (legacy bytes) | auto (sparse when smaller)",
             Some("dense"),
         ),
+        flag(
+            "precision",
+            "numeric tier: exact (bit-for-bit f64) | fast (f32 inner epoch, f64 carry)",
+            Some("exact"),
+        ),
         flag("suspect-after-ms", "elastic: silent worker becomes SUSPECT after", Some("1000")),
         flag("offline-after-ms", "elastic: silent worker becomes OFFLINE after", Some("10000")),
         switch("resume", "elastic: resume from the latest checkpoint in --checkpoint-dir"),
@@ -170,6 +177,9 @@ fn build_job(args: &Args) -> Result<Job> {
     }
     if let Some(w) = args.get("wire") {
         cfg.wire = WireMode::parse(w)?;
+    }
+    if let Some(pr) = args.get("precision") {
+        cfg.precision = Precision::parse(pr)?;
     }
     cfg.heartbeat_ms = args.get_parse("heartbeat-ms", cfg.heartbeat_ms)?;
     cfg.suspect_after_ms = args.get_parse("suspect-after-ms", cfg.suspect_after_ms)?;

@@ -30,5 +30,5 @@ pub mod workspace;
 
 pub use fista::{fista, FistaOpts, FistaResult};
 pub use lazy::{lazy_inner_epoch, lazy_inner_epoch_ws, LazyStats};
-pub use svrg::{dense_inner_epoch, dense_inner_epoch_ws};
+pub use svrg::{dense_inner_epoch, dense_inner_epoch_fast_ws, dense_inner_epoch_ws};
 pub use workspace::EpochWorkspace;

@@ -69,8 +69,12 @@ pub fn dense_inner_epoch_ws<'ws>(
     assert!(decay > 0.0, "eta*lam1 must be < 1");
 
     ws.ensure_dims(d, n);
+    ws.ensure_support(d);
     let u = &mut ws.u[..d];
     let cw = &mut ws.cw[..n];
+    // post-step support values, computed from the pre-sweep iterate (the
+    // dense sweep below would otherwise overwrite them before they're read)
+    let usup = &mut ws.usup[..d];
 
     u.copy_from_slice(w_t);
     // h'(x_i . w_t) is constant during the epoch — precompute per row.
@@ -87,32 +91,132 @@ pub fn dense_inner_epoch_ws<'ws>(
         let row = shard.x.row(i);
         let coeff = loss.hprime(row.dot(u), shard.y[i]) - cw[i];
         // dense update: every coordinate decays, shifts by -eta*z and
-        // (on the row support) by -eta*coeff*x_ij, then proxes.
+        // (on the row support) by -eta*coeff*x_ij, then proxes. The
+        // historical merge-cursor loop is restructured into vector shape —
+        // value-identical per coordinate: (1) compute the nnz post-step
+        // support values from the OLD u with the original expression,
+        // (2) run the whole-vector fused sweep (the off-support
+        // expression), (3) overwrite the support entries.
         match kernel {
             Some(kernel) => {
-                let mut k = 0usize;
-                for j in 0..d {
+                for (k, (&j, &v)) in row.idx.iter().zip(row.val.iter()).enumerate() {
+                    let j = j as usize;
                     let mut g = z[j];
-                    if k < row.idx.len() && row.idx[k] as usize == j {
-                        g += coeff * row.val[k];
-                        k += 1;
-                    }
-                    u[j] = kernel.apply(decay * u[j] - eta * g);
+                    g += coeff * v;
+                    usup[k] = kernel.apply(decay * u[j] - eta * g);
+                }
+                kernel.fused_affine_pass(u, z, decay, eta);
+                for (k, &j) in row.idx.iter().enumerate() {
+                    u[j as usize] = usup[k];
                 }
             }
             None => {
-                let mut k = 0usize;
-                for j in 0..d {
+                for (k, (&j, &v)) in row.idx.iter().zip(row.val.iter()).enumerate() {
+                    let j = j as usize;
                     let mut g = z[j];
-                    if k < row.idx.len() && row.idx[k] as usize == j {
-                        g += coeff * row.val[k];
-                        k += 1;
-                    }
-                    u[j] = decay * u[j] - eta * g;
+                    g += coeff * v;
+                    usup[k] = decay * u[j] - eta * g;
+                }
+                crate::linalg::kernels::fused_affine(u, z, decay, eta);
+                for (k, &j) in row.idx.iter().enumerate() {
+                    u[j as usize] = usup[k];
                 }
                 reg.prox_vec(u, eta);
             }
         }
+    }
+    &ws.u[..d]
+}
+
+/// Fast-tier (`--precision fast`) dense inner epoch: the whole-vector
+/// affine+prox sweep runs in f32 over the workspace's `u32f`/`z32` pads,
+/// while everything accuracy-critical stays f64 — the anchor activations
+/// `cw`, the per-step variance-reduction coefficient (support dot
+/// promoted per element), the nnz support updates, and the returned
+/// iterate (promoted back, so the epoch boundary carries f64). Same
+/// sampling stream as [`dense_inner_epoch_ws`] (one `rng.below(n)` per
+/// step).
+///
+/// Deterministic, but NOT bit-comparable to the exact tier — the contract
+/// is per-epoch objective agreement to rel ≤ 1e-5 (DESIGN.md §14, pinned
+/// by `tests/precision_tiers.rs`). Regularizers without a scalar kernel
+/// (group Lasso) have no f32 sweep and fall back to the exact engine.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_inner_epoch_fast_ws<'ws>(
+    shard: &Dataset,
+    loss: Loss,
+    w_t: &[f64],
+    z: &[f64],
+    eta: f64,
+    reg: impl Into<ProxReg>,
+    m_steps: usize,
+    rng: &mut Rng,
+    ws: &'ws mut EpochWorkspace,
+) -> &'ws [f64] {
+    use crate::linalg::kernels;
+    use crate::linalg::ScalarProx;
+
+    let reg: ProxReg = reg.into();
+    let kernel = match reg.scalar_kernel(eta) {
+        Some(k) => k,
+        // block-separable prox (group Lasso): no scalar f32 sweep exists —
+        // run the exact dense engine (same sampling stream, so the run
+        // stays trajectory-deterministic)
+        None => return dense_inner_epoch_ws(shard, loss, w_t, z, eta, reg, m_steps, rng, ws),
+    };
+    let d = shard.d();
+    let n = shard.n();
+    assert!(n > 0, "empty shard");
+    assert_eq!(w_t.len(), d);
+    assert_eq!(z.len(), d);
+    let decay = 1.0 - eta * reg.ridge();
+    assert!(decay > 0.0, "eta*lam1 must be < 1");
+
+    ws.ensure_fast_epoch(d, n);
+    {
+        let u32 = &mut ws.u32f[..d];
+        let z32 = &mut ws.z32[..d];
+        let cw = &mut ws.cw[..n];
+        let usup = &mut ws.usup[..d];
+
+        for j in 0..d {
+            u32[j] = w_t[j] as f32;
+            z32[j] = z[j] as f32;
+        }
+        // anchor activations from the f64 w_t — identical to the exact tier
+        for (i, c) in cw.iter_mut().enumerate() {
+            *c = loss.hprime(shard.x.row(i).dot(w_t), shard.y[i]);
+        }
+
+        let decay32 = decay as f32;
+        let eta32 = eta as f32;
+        for _ in 0..m_steps {
+            let i = rng.below(n);
+            let row = shard.x.row(i);
+            let a = kernels::gather_dot_f32w(row.idx, row.val, u32);
+            let coeff = loss.hprime(a, shard.y[i]) - cw[i];
+            // support post-values in f64 from the old u32 (promoted exact)
+            for (k, (&j, &v)) in row.idx.iter().zip(row.val.iter()).enumerate() {
+                let j = j as usize;
+                let g = z[j] + coeff * v;
+                usup[k] = kernel.apply(decay * (u32[j] as f64) - eta * g);
+            }
+            match kernel {
+                ScalarProx::Soft { thr } => {
+                    kernels::fused_affine_soft_f32(u32, z32, decay32, eta32, thr as f32)
+                }
+                ScalarProx::NonnegSoft { thr } => {
+                    kernels::fused_affine_nonneg_f32(u32, z32, decay32, eta32, thr as f32)
+                }
+            }
+            for (k, &j) in row.idx.iter().enumerate() {
+                u32[j as usize] = usup[k] as f32;
+            }
+        }
+    }
+    // f64 carry out: promotion is exact
+    for j in 0..d {
+        ws.u[j] = ws.u32f[j] as f64;
     }
     &ws.u[..d]
 }
@@ -228,6 +332,78 @@ mod tests {
         for j in 0..ds.d() {
             assert!((u[j] - want[j]).abs() < 1e-15, "coord {j}: {} vs {}", u[j], want[j]);
         }
+    }
+
+    #[test]
+    fn fast_tier_tracks_exact_within_tolerance_and_is_deterministic() {
+        // multi-epoch drift stays inside the §14 contract on a tiny
+        // problem, for both a Soft and a NonnegSoft kernel
+        for (seed, reg) in [
+            (34u64, ProxReg::from(Reg { lam1: 1e-3, lam2: 1e-3 })),
+            (35u64, ProxReg::NonnegL1 { lam: 1e-3 }),
+        ] {
+            let ds = synth::tiny(seed).generate();
+            let obj = Objective::new(&ds, Loss::Logistic, reg);
+            let eta = 0.2 / obj.smoothness();
+            let mut we = vec![0.0; ds.d()];
+            let mut wf = vec![0.0; ds.d()];
+            let mut re = Rng::new(9);
+            let mut rf = Rng::new(9);
+            let mut wse = EpochWorkspace::new();
+            let mut wsf = EpochWorkspace::new();
+            for ep in 0..4 {
+                let ze = obj.data_grad(&we);
+                we = dense_inner_epoch_ws(
+                    &ds, Loss::Logistic, &we, &ze, eta, reg, 2 * ds.n(), &mut re, &mut wse,
+                )
+                .to_vec();
+                let zf = obj.data_grad(&wf);
+                wf = dense_inner_epoch_fast_ws(
+                    &ds, Loss::Logistic, &wf, &zf, eta, reg, 2 * ds.n(), &mut rf, &mut wsf,
+                )
+                .to_vec();
+                let (pe, pf) = (obj.value(&we), obj.value(&wf));
+                assert!(
+                    (pe - pf).abs() <= 1e-5 * (1.0 + pe.abs()),
+                    "epoch {ep}: fast-tier objective drifted: exact {pe} vs fast {pf}"
+                );
+            }
+            // determinism: a second fast run is bit-identical
+            let w0 = vec![0.0; ds.d()];
+            let z0 = obj.data_grad(&w0);
+            let mut r1 = Rng::new(10);
+            let mut r2 = Rng::new(10);
+            let mut ws1 = EpochWorkspace::new();
+            let mut ws2 = EpochWorkspace::new();
+            let a = dense_inner_epoch_fast_ws(
+                &ds, Loss::Logistic, &w0, &z0, eta, reg, ds.n(), &mut r1, &mut ws1,
+            )
+            .to_vec();
+            let b = dense_inner_epoch_fast_ws(
+                &ds, Loss::Logistic, &w0, &z0, eta, reg, ds.n(), &mut r2, &mut ws2,
+            )
+            .to_vec();
+            assert_eq!(a, b, "fast tier must be run-to-run deterministic");
+        }
+    }
+
+    #[test]
+    fn fast_tier_group_reg_falls_back_to_exact_bitwise() {
+        // no scalar kernel -> the fast engine IS the exact engine
+        let (ds, w, z) = setup(Loss::Squared);
+        let reg = ProxReg::GroupLasso { lam: 1e-2, group: 7 };
+        let mut r1 = Rng::new(12);
+        let mut r2 = Rng::new(12);
+        let mut ws1 = EpochWorkspace::new();
+        let mut ws2 = EpochWorkspace::new();
+        let m = 2 * ds.n();
+        let exact =
+            dense_inner_epoch_ws(&ds, Loss::Squared, &w, &z, 0.1, reg, m, &mut r1, &mut ws1)
+                .to_vec();
+        let fast =
+            dense_inner_epoch_fast_ws(&ds, Loss::Squared, &w, &z, 0.1, reg, m, &mut r2, &mut ws2)
+                .to_vec();
+        assert_eq!(exact, fast);
     }
 
     #[test]

@@ -57,6 +57,13 @@ pub struct EpochWorkspace {
     /// Shifted data gradient `z − c·w_t` for the SCOPE-correction
     /// re-parameterization.
     pub(crate) zshift: Vec<f64>,
+    /// Post-step support values for the dense engine's restructured hot
+    /// loop (computed from the pre-sweep iterate, written back after the
+    /// whole-vector pass).
+    pub(crate) usup: Vec<f64>,
+    /// f32 per-block partials for the fast-tier blocked gradient
+    /// ([`crate::loss::shard_grad_sum_blocked_f32`] grows this).
+    pub(crate) partials32: Vec<f32>,
     /// f32 pad of `w` (PJRT artifact boundary).
     pub(crate) w32: Vec<f32>,
     /// f32 pad of `z`.
@@ -74,6 +81,19 @@ fn grow_f64(buf: &mut Vec<f64>, len: usize, allocs: &mut u64) {
     if buf.len() < len {
         *allocs += 1;
         buf.resize(len, 0.0);
+    }
+}
+
+fn grow_f32(buf: &mut Vec<f32>, len: usize, allocs: &mut u64) {
+    if buf.len() < len {
+        if buf.capacity() >= len {
+            // length-only growth into already-reserved capacity (the PJRT
+            // pads reserve) is not an allocation event
+            buf.resize(len, 0.0);
+        } else {
+            *allocs += 1;
+            buf.resize(len, 0.0);
+        }
     }
 }
 
@@ -102,6 +122,23 @@ impl EpochWorkspace {
     /// Grow the gradient accumulator to `d`.
     pub(crate) fn ensure_grad(&mut self, d: usize) {
         grow_f64(&mut self.grad, d, &mut self.allocs);
+    }
+
+    /// Grow the dense engine's support scratch to `d` (its own method, NOT
+    /// part of [`Self::ensure_dims`] — the growth-event accounting pinned
+    /// by `buffers_grow_once` counts that method's buffers exactly).
+    pub(crate) fn ensure_support(&mut self, d: usize) {
+        grow_f64(&mut self.usup, d, &mut self.allocs);
+    }
+
+    /// Grow everything the fast-tier dense epoch needs: the exact-tier
+    /// dims plus the f32 iterate/gradient pads at full length `d` (the
+    /// PJRT path only reserves `u32f` capacity; the fast sweep indexes it).
+    pub(crate) fn ensure_fast_epoch(&mut self, d: usize, n: usize) {
+        self.ensure_dims(d, n);
+        self.ensure_support(d);
+        grow_f32(&mut self.z32, d, &mut self.allocs);
+        grow_f32(&mut self.u32f, d, &mut self.allocs);
     }
 
     /// Grow the PJRT pad buffers (`d_pad` floats, `m` sampled indices).
@@ -174,6 +211,38 @@ impl EpochWorkspace {
         // that growth in the allocation counter so the zero-allocation
         // invariant covers the gradient path too
         if self.partials.len() > partials_before {
+            self.allocs += 1;
+        }
+        &self.grad[..d]
+    }
+
+    /// Fast-tier (`--precision fast`) blocked shard-gradient sum: the
+    /// per-block row dots and scatters run in f32 over a demoted `w`, the
+    /// block partials merge into the f64 accumulator in the SAME fixed
+    /// ascending-block order as the exact kernel — deterministic at every
+    /// thread count, tolerance-pinned vs the exact tier (DESIGN.md §14).
+    pub fn shard_grad_sum_fast<'a>(
+        &'a mut self,
+        obj: &Objective<'_>,
+        w: &[f64],
+        threads: usize,
+    ) -> &'a [f64] {
+        let d = obj.ds.d();
+        self.ensure_grad(d);
+        grow_f32(&mut self.w32, d, &mut self.allocs);
+        for (pad, &v) in self.w32[..d].iter_mut().zip(w.iter()) {
+            *pad = v as f32;
+        }
+        let partials_before = self.partials32.len();
+        crate::loss::shard_grad_sum_blocked_f32(
+            obj.ds,
+            obj.loss,
+            &self.w32[..d],
+            &mut self.grad[..d],
+            threads,
+            &mut self.partials32,
+        );
+        if self.partials32.len() > partials_before {
             self.allocs += 1;
         }
         &self.grad[..d]

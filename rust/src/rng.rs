@@ -129,17 +129,27 @@ impl Rng {
     /// Sample `k` distinct indices from [0, n) (Floyd's algorithm, order
     /// randomized). Panics if `k > n`.
     pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        self.sample_distinct_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Self::sample_distinct`] into a caller-owned buffer (cleared
+    /// first), so hot loops reuse the index allocation across calls.
+    /// Consumes the identical RNG stream and produces the identical
+    /// sample as the allocating form.
+    pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
         assert!(k <= n, "sample_distinct: k={k} > n={n}");
         let mut set = std::collections::HashSet::with_capacity(k);
-        let mut out = Vec::with_capacity(k);
+        out.clear();
+        out.reserve(k);
         for j in (n - k)..n {
             let t = self.below(j + 1);
             let v = if set.contains(&t) { j } else { t };
             set.insert(v);
             out.push(v);
         }
-        self.shuffle(&mut out);
-        out
+        self.shuffle(out);
     }
 
     /// Geometric-ish power-law sample over [0, n): index `i` with weight
@@ -239,6 +249,20 @@ mod tests {
             assert_eq!(set.len(), k);
             assert!(s.iter().all(|&i| i < 50));
         }
+    }
+
+    #[test]
+    fn sample_distinct_into_matches_allocating_form() {
+        let mut a = Rng::new(29);
+        let mut b = Rng::new(29);
+        let mut buf = Vec::new();
+        for k in [1, 7, 20, 50] {
+            let owned = a.sample_distinct(50, k);
+            b.sample_distinct_into(50, k, &mut buf);
+            assert_eq!(owned, buf, "k={k}");
+        }
+        // the streams stay in lockstep afterwards too
+        assert_eq!(a.below(1 << 30), b.below(1 << 30));
     }
 
     #[test]
